@@ -1,0 +1,37 @@
+//! Shared bench configuration.
+//!
+//! Benches default to a reduced window (40 s profile + 40 s eval) so the
+//! whole suite finishes in minutes; set `CROSSROI_FULL=1` for the paper's
+//! full 60 s + 120 s windows.
+
+use crossroi::config::Config;
+
+/// The scenario/system configuration all benches run against.
+pub fn bench_config() -> Config {
+    let mut cfg = Config::paper();
+    if std::env::var("CROSSROI_FULL").ok().as_deref() != Some("1") {
+        cfg.scenario.profile_secs = 40.0;
+        cfg.scenario.eval_secs = 40.0;
+    }
+    cfg
+}
+
+/// A shorter eval for parameter sweeps (figs 9-11).
+pub fn sweep_config() -> Config {
+    let mut cfg = bench_config();
+    if std::env::var("CROSSROI_FULL").ok().as_deref() != Some("1") {
+        cfg.scenario.eval_secs = 25.0;
+    }
+    cfg
+}
+
+/// Load the PJRT runtime or exit with a hint.
+pub fn load_runtime(cfg: &Config) -> crossroi::runtime::Runtime {
+    match crossroi::runtime::Runtime::load(&cfg.system.artifacts_dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("cannot load artifacts: {e:#}\nrun `make artifacts` first");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! Figure 11 — network/latency tradeoff vs streaming segment length.
+//!
+//! Expected shape (paper): longer segments compress better (network ↓
+//! monotonically) but queue longer at the camera (latency ↑ roughly
+//! linearly past the 1 s sweet spot); the paper picks 1 s.
+
+mod common;
+
+use crossroi::bench::{fmt, Table};
+use crossroi::coordinator::{baseline_reference, run_method, Method, RuntimeInfer};
+use crossroi::sim::Scenario;
+
+fn main() {
+    let cfg = common::sweep_config();
+    let scenario = Scenario::build(&cfg.scenario);
+    let rt = common::load_runtime(&cfg);
+    let infer = RuntimeInfer(&rt);
+    let lengths = [0.4, 1.0, 2.0, 4.0];
+
+    let (reference, _) = baseline_reference(&scenario, &cfg.system, &infer).unwrap();
+    let mut table = Table::new(&[
+        "segment s", "net Mbps", "e2e s", "cam s", "net-lat s", "srv s",
+    ]);
+    let mut series = Vec::new();
+    for &len in &lengths {
+        let mut sys = cfg.system.clone();
+        sys.segment_secs = len;
+        let r = run_method(&scenario, &sys, &infer, &Method::CrossRoi, Some(&reference)).unwrap();
+        table.row(vec![
+            fmt(len, 1),
+            fmt(r.network_mbps_total, 3),
+            fmt(r.latency.total(), 3),
+            fmt(r.latency.camera, 3),
+            fmt(r.latency.network, 3),
+            fmt(r.latency.server, 3),
+        ]);
+        series.push((len, r));
+    }
+    table.print("Fig. 11 — segment length: network vs latency tradeoff");
+    let net_monotone = series.windows(2).all(|w| {
+        w[1].1.network_mbps_total <= w[0].1.network_mbps_total * 1.02
+    });
+    println!(
+        "\nshape: network decreases with segment length: {}",
+        if net_monotone { "OK" } else { "VIOLATED" }
+    );
+    println!("       camera-side latency grows with segment length (queueing)");
+}

@@ -1,0 +1,111 @@
+//! Figure 8 — full ablation: Baseline / No-Filters / No-Merging /
+//! No-RoIInf / CrossRoI over the online window, reporting all four §5.1.2
+//! metrics plus the Fig. 8b missed-vehicle distribution.
+//!
+//! Expected shape (paper): CrossRoI least network (−42 % vs Baseline) and
+//! least latency (−25 %), highest server Hz and camera fps, accuracy
+//! ≥ 99 %; No-Filters slightly worse network than CrossRoI; No-Merging
+//! worse network than CrossRoI; No-RoIInf lower server Hz than CrossRoI.
+
+mod common;
+
+use crossroi::bench::{fmt, Table};
+use crossroi::coordinator::{run_ablation, Method, RuntimeInfer};
+use crossroi::sim::Scenario;
+
+fn main() {
+    let cfg = common::bench_config();
+    let scenario = Scenario::build(&cfg.scenario);
+    let rt = common::load_runtime(&cfg);
+    let infer = RuntimeInfer(&rt);
+    let methods = [
+        Method::Baseline,
+        Method::NoFilters,
+        Method::NoMerging,
+        Method::NoRoiInf,
+        Method::CrossRoi,
+    ];
+    println!(
+        "eval window: {:.0} s x {} cams @ {} fps, segment {} s, link {} Mbps",
+        cfg.scenario.eval_secs,
+        cfg.scenario.n_cameras,
+        cfg.scenario.fps,
+        cfg.system.segment_secs,
+        cfg.system.bandwidth_mbps
+    );
+    let reports = run_ablation(&scenario, &cfg.system, &infer, &methods).unwrap();
+
+    // fig 8a/c/d/e/f summary
+    let mut table = Table::new(&[
+        "method", "accuracy", "net Mbps", "srv Hz", "cam fps", "e2e s", "cam s", "net s",
+        "srv s", "|M| tiles",
+    ]);
+    for r in &reports {
+        table.row(vec![
+            r.method.clone(),
+            fmt(r.accuracy, 4),
+            fmt(r.network_mbps_total, 2),
+            fmt(r.server_hz, 1),
+            fmt(r.camera_fps, 1),
+            fmt(r.latency.total(), 3),
+            fmt(r.latency.camera, 3),
+            fmt(r.latency.network, 3),
+            fmt(r.latency.server, 3),
+            r.mask_tiles.to_string(),
+        ]);
+    }
+    table.print("Fig. 8 (a,c,d,e,f) — ablation summary");
+
+    // fig 8c per-camera network bars
+    let mut net = Table::new(&["method", "C1", "C2", "C3", "C4", "C5", "total"]);
+    for r in &reports {
+        let mut row = vec![r.method.clone()];
+        for c in 0..5 {
+            row.push(fmt(r.network_mbps_per_cam.get(c).copied().unwrap_or(0.0), 3));
+        }
+        row.push(fmt(r.network_mbps_total, 3));
+        net.row(row);
+    }
+    net.print("Fig. 8c — per-camera network overhead (Mbps)");
+
+    // fig 8b missed-vehicle distribution for CrossRoI
+    if let Some(cross) = reports.iter().find(|r| r.method == "CrossRoI") {
+        let max_missed = cross.missed_per_frame.iter().copied().max().unwrap_or(0);
+        let mut hist = Table::new(&["missed vehicles", "#frames"]);
+        for k in 0..=max_missed {
+            let count = cross.missed_per_frame.iter().filter(|&&m| m == k).count();
+            hist.row(vec![k.to_string(), count.to_string()]);
+        }
+        hist.print("Fig. 8b — CrossRoI missed-vehicle distribution per timestamp");
+        println!(
+            "\nCrossRoI: {} total appearances in reference window",
+            cross.total_appearances
+        );
+    }
+
+    // shape assertions printed for EXPERIMENTS.md
+    let get = |name: &str| reports.iter().find(|r| r.method == name).unwrap();
+    let base = get("Baseline");
+    let cross = get("CrossRoI");
+    println!("\nshape checks:");
+    println!(
+        "  network reduction vs Baseline: {:.0}% (paper 42-65%)",
+        100.0 * (1.0 - cross.network_mbps_total / base.network_mbps_total)
+    );
+    println!(
+        "  latency reduction vs Baseline: {:.0}% (paper 25-34%)",
+        100.0 * (1.0 - cross.latency.total() / base.latency.total())
+    );
+    println!(
+        "  server speedup vs No-RoIInf: {:.2}x (paper ~1.18x)",
+        cross.server_hz / get("No-RoIInf").server_hz
+    );
+    println!(
+        "  net: CrossRoI {} < No-Filters {} ; CrossRoI {} < No-Merging {}",
+        fmt(cross.network_mbps_total, 2),
+        fmt(get("No-Filters").network_mbps_total, 2),
+        fmt(cross.network_mbps_total, 2),
+        fmt(get("No-Merging").network_mbps_total, 2),
+    );
+    println!("  accuracy: CrossRoI {:.4} (paper 0.999)", cross.accuracy);
+}

@@ -1,0 +1,49 @@
+//! Figure 9 — sensitivity to the SVM filter's kernel non-linearity γ:
+//! accuracy, network overhead and end-to-end latency per γ.
+//!
+//! Expected shape (paper): accuracy, network and latency all *increase*
+//! with γ — a small γ underfits, removes many negatives (including true
+//! ones), shrinks masks (cheap but lossy); a huge γ memorizes, removes
+//! nothing (expensive but safe).  Note our γ grid centers near 1 because
+//! features are pre-scaled to O(1) (the paper's 1e-4 is on 1080p pixels).
+
+mod common;
+
+use crossroi::bench::{fmt, Table};
+use crossroi::coordinator::{baseline_reference, run_method, Method, RuntimeInfer};
+use crossroi::sim::Scenario;
+
+fn main() {
+    let cfg = common::sweep_config();
+    let scenario = Scenario::build(&cfg.scenario);
+    let rt = common::load_runtime(&cfg);
+    let infer = RuntimeInfer(&rt);
+    let gammas = [0.01, 0.1, 1.0, 10.0, 100.0];
+
+    let (reference, _) = baseline_reference(&scenario, &cfg.system, &infer).unwrap();
+    let mut table = Table::new(&["gamma", "accuracy", "net Mbps", "e2e s", "|M| tiles"]);
+    let mut series = Vec::new();
+    for &g in &gammas {
+        let mut sys = cfg.system.clone();
+        sys.svm_gamma = g;
+        let r = run_method(&scenario, &sys, &infer, &Method::CrossRoi, Some(&reference)).unwrap();
+        table.row(vec![
+            format!("{g}"),
+            fmt(r.accuracy, 4),
+            fmt(r.network_mbps_total, 3),
+            fmt(r.latency.total(), 3),
+            r.mask_tiles.to_string(),
+        ]);
+        series.push((g, r));
+    }
+    table.print("Fig. 9 — sensitivity to SVM γ");
+    let first = &series.first().unwrap().1;
+    let last = &series.last().unwrap().1;
+    println!(
+        "\nshape: mask tiles {} (γ={}) -> {} (γ={}); paper: net & accuracy increase with γ",
+        first.mask_tiles,
+        series.first().unwrap().0,
+        last.mask_tiles,
+        series.last().unwrap().0
+    );
+}

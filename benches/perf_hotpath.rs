@@ -1,0 +1,116 @@
+//! Hot-path microbenchmarks for the §Perf pass (EXPERIMENTS.md):
+//! L3 codec encode, renderer, DES, detector post-processing, and the real
+//! PJRT executables (dense + every RoI capacity).
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use crossroi::bench::{time_it, Table};
+use crossroi::codec::SegmentEncoder;
+use crossroi::config::Config;
+use crossroi::net::Des;
+use crossroi::runtime::{decode_objectness, Runtime};
+use crossroi::sim::Scenario;
+use crossroi::util::geometry::IRect;
+
+fn main() {
+    let cfg = Config::test_small();
+    let scenario = Scenario::build(&cfg.scenario);
+    let renderer = scenario.renderer();
+    let mut table = Table::new(&["component", "per-iter", "iters", "notes"]);
+
+    // renderer
+    let t = time_it(3, 50, 5.0, || {
+        std::hint::black_box(renderer.render(0, 10));
+    });
+    table.row(vec![
+        "render frame".into(),
+        t.per_iter_display(),
+        t.iters.to_string(),
+        "320x192 background+vehicles+noise".into(),
+    ]);
+
+    // codec: full-frame segment (10 frames)
+    let frames: Vec<_> = (0..10).map(|i| renderer.render(0, i)).collect();
+    let t = time_it(1, 20, 10.0, || {
+        let mut enc = SegmentEncoder::new(&[IRect::new(0, 0, 320, 192)], 6.0);
+        std::hint::black_box(enc.encode_segment(&frames));
+    });
+    table.row(vec![
+        "encode 10-frame segment (full)".into(),
+        t.per_iter_display(),
+        t.iters.to_string(),
+        format!("{:.1} fps", 10.0 / t.mean_secs),
+    ]);
+
+    // codec: quarter-frame RoI
+    let t = time_it(1, 20, 10.0, || {
+        let mut enc = SegmentEncoder::new(&[IRect::new(64, 48, 160, 96)], 6.0);
+        std::hint::black_box(enc.encode_segment(&frames));
+    });
+    table.row(vec![
+        "encode 10-frame segment (25% RoI)".into(),
+        t.per_iter_display(),
+        t.iters.to_string(),
+        format!("{:.1} fps", 10.0 / t.mean_secs),
+    ]);
+
+    // DES throughput
+    let t = time_it(1, 10, 5.0, || {
+        let mut des: Des<u64> = Des::new();
+        for i in 0..10_000 {
+            des.at(i as f64 * 0.001, i);
+        }
+        while let Some((_, e)) = des.pop() {
+            std::hint::black_box(e);
+        }
+    });
+    table.row(vec![
+        "DES 10k events".into(),
+        t.per_iter_display(),
+        t.iters.to_string(),
+        format!("{:.1} M events/s", 10_000.0 / t.mean_secs / 1e6),
+    ]);
+
+    // postproc
+    let grid: Vec<f32> = (0..240).map(|i| if i % 7 == 0 { 0.8 } else { 0.0 }).collect();
+    let t = time_it(10, 1000, 2.0, || {
+        std::hint::black_box(decode_objectness(&grid, 12, 20, 16, 0.25));
+    });
+    table.row(vec![
+        "postproc decode".into(),
+        t.per_iter_display(),
+        t.iters.to_string(),
+        "12x20 grid".into(),
+    ]);
+
+    // PJRT executables (skipped when artifacts are absent)
+    match Runtime::load("artifacts") {
+        Err(e) => println!("(skipping PJRT benches: {e:#})"),
+        Ok(rt) => {
+            let frame = renderer.render(0, 10).to_f32();
+            let t = time_it(3, 50, 10.0, || {
+                std::hint::black_box(rt.infer_full(&frame).unwrap());
+            });
+            table.row(vec![
+                "HLO dense detector".into(),
+                t.per_iter_display(),
+                t.iters.to_string(),
+                format!("{:.1} Hz", 1.0 / t.mean_secs),
+            ]);
+            for &k in &[8usize, 16, 32, 60] {
+                let blocks: Vec<i32> = (0..k as i32).collect();
+                let t = time_it(3, 50, 10.0, || {
+                    std::hint::black_box(rt.infer_roi(&frame, &blocks).unwrap());
+                });
+                table.row(vec![
+                    format!("HLO RoI detector K={k}"),
+                    t.per_iter_display(),
+                    t.iters.to_string(),
+                    format!("{:.1} Hz, {} active blocks", 1.0 / t.mean_secs, k),
+                ]);
+            }
+        }
+    }
+
+    table.print("perf_hotpath — per-component timings");
+}

@@ -1,0 +1,48 @@
+//! §4.4 claims — SBNet speedup vs RoI area and the dense crossover:
+//! sweep the number of active blocks through every compiled RoI capacity
+//! and compare against the dense detector.
+//!
+//! Expected shape (paper): 1.5–2.5× speedup at 10–20 % RoI coverage;
+//! gather/scatter overhead makes RoI *slower* than dense near full-frame
+//! coverage (why CrossRoI loads both models and routes by RoI area).
+
+mod common;
+
+use crossroi::bench::{fmt, time_it, Table};
+use crossroi::sim::Scenario;
+
+fn main() {
+    let cfg = common::sweep_config();
+    let scenario = Scenario::build(&cfg.scenario);
+    let renderer = scenario.renderer();
+    let rt = common::load_runtime(&cfg);
+    let frame = renderer.render(0, 5).to_f32();
+
+    let dense = time_it(3, 40, 8.0, || {
+        std::hint::black_box(rt.infer_full(&frame).unwrap());
+    });
+    println!(
+        "dense detector: {} ({:.1} Hz)",
+        dense.per_iter_display(),
+        1.0 / dense.mean_secs
+    );
+
+    let mut table = Table::new(&[
+        "active blocks", "coverage %", "per-frame", "Hz", "speedup vs dense",
+    ]);
+    for &n in &[4usize, 8, 12, 16, 24, 32, 48, 60] {
+        let blocks: Vec<i32> = (0..n as i32).collect();
+        let t = time_it(3, 40, 8.0, || {
+            std::hint::black_box(rt.infer_roi(&frame, &blocks).unwrap());
+        });
+        table.row(vec![
+            format!("{n} (K={})", rt.capacity_for(n).unwrap_or(60)),
+            fmt(100.0 * n as f64 / 60.0, 0),
+            t.per_iter_display(),
+            fmt(1.0 / t.mean_secs, 1),
+            fmt(dense.mean_secs / t.mean_secs, 2),
+        ]);
+    }
+    table.print("SBNet RoI variant vs dense (measured on the PJRT executables)");
+    println!("\nexpected shape: speedup > 1.5x below ~20% coverage, < 1x near 100% (crossover)");
+}

@@ -1,0 +1,74 @@
+//! Table 2 — characterization of raw ReID results: TP/FP/FN/TN counts for
+//! every (source, destination) camera pair over the profile window, plus
+//! the same matrix after the tandem filters (showing what they remove).
+//!
+//! Expected shape (paper): FN ≫ FP per pair, TN dominant, true > false in
+//! both classes (observation O2); after filtering, FP ≈ 0 and FN sharply
+//! reduced.
+
+mod common;
+
+use crossroi::bench::Table;
+use crossroi::filters::TandemFilters;
+use crossroi::reid::error_model::{ErrorModelParams, RawReid};
+use crossroi::reid::labels;
+use crossroi::sim::Scenario;
+
+fn print_matrix(title: &str, m: &[Vec<labels::PairCounts>]) {
+    let n = m.len();
+    let headers: Vec<String> = std::iter::once("S\\D".to_string())
+        .chain((0..n).map(|d| format!("C{} TP/FP/FN/TN", d + 1)))
+        .collect();
+    let mut table = Table::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    for s in 0..n {
+        let mut row = vec![format!("C{}", s + 1)];
+        for d in 0..n {
+            if s == d {
+                row.push("-".into());
+            } else {
+                let c = m[s][d];
+                row.push(format!("{}/{}/{}/{}", c.tp, c.fp, c.fn_, c.tn));
+            }
+        }
+        table.row(row);
+    }
+    table.print(title);
+}
+
+fn main() {
+    let cfg = common::bench_config();
+    let scenario = Scenario::build(&cfg.scenario);
+    let raw = RawReid::generate(&scenario, scenario.profile_range(), &ErrorModelParams::default());
+    println!(
+        "profile window: {} frames, {} raw ReID records",
+        scenario.profile_range().len(),
+        raw.len()
+    );
+
+    let before = labels::characterize_all(&raw);
+    print_matrix("Table 2 — raw ReID characterization (before filters)", &before);
+
+    let (clean, report) = TandemFilters::default().apply(&raw);
+    let after = labels::characterize_all(&clean);
+    print_matrix("Table 2b — after tandem filters (this repo's addition)", &after);
+    println!(
+        "\nfilters: {} pairs fit, {} FP decoupled, {} FN removed, {} -> {} records",
+        report.pairs_fit,
+        report.fp_rewritten,
+        report.fn_removed,
+        raw.len(),
+        clean.len()
+    );
+
+    // shape checks mirroring the paper's observations (§4.2.1)
+    let sum = |f: fn(&labels::PairCounts) -> usize, m: &[Vec<labels::PairCounts>]| -> usize {
+        m.iter().flat_map(|r| r.iter()).map(f).sum()
+    };
+    let (tp, fp) = (sum(|c| c.tp, &before), sum(|c| c.fp, &before));
+    let (fn_, tn) = (sum(|c| c.fn_, &before), sum(|c| c.tn, &before));
+    println!("\nshape (raw): TP={tp} FP={fp} FN={fn_} TN={tn}");
+    println!("  O2 true positives > false positives: {}", if tp > fp { "OK" } else { "VIOLATED" });
+    println!("  O2 true negatives > false negatives: {}", if tn > fn_ { "OK" } else { "note: heavy-overlap rig" });
+    let (fp2, fn2) = (sum(|c| c.fp, &after), sum(|c| c.fn_, &after));
+    println!("shape (filtered): FP {fp} -> {fp2}, FN {fn_} -> {fn2}");
+}

@@ -1,0 +1,65 @@
+//! Table 4 — Reducto vs CrossRoI-Reducto at accuracy targets
+//! {1.00, 0.95, 0.90, 0.85}: accuracy achieved, frames reduced, network,
+//! server throughput and end-to-end latency.
+//!
+//! Expected shape (paper): both meet their targets; CrossRoI-Reducto
+//! dominates Reducto at every target (−40…−48 % network, 1.18–1.45×
+//! throughput, −23…−26 % latency); target 1.00 degenerates to
+//! Baseline / plain CrossRoI.
+
+mod common;
+
+use crossroi::bench::{fmt, Table};
+use crossroi::coordinator::{baseline_reference, run_method, Method, RuntimeInfer};
+use crossroi::sim::Scenario;
+
+fn main() {
+    let cfg = common::bench_config();
+    let scenario = Scenario::build(&cfg.scenario);
+    let rt = common::load_runtime(&cfg);
+    let infer = RuntimeInfer(&rt);
+    let targets = [1.0, 0.95, 0.90, 0.85];
+
+    let (reference, _) = baseline_reference(&scenario, &cfg.system, &infer).unwrap();
+
+    let mut table = Table::new(&[
+        "system", "target", "acc achieved", "frames reduced", "net Mbps", "srv Hz", "e2e s",
+    ]);
+    let mut rows: Vec<(String, f64, crossroi::coordinator::MethodReport)> = Vec::new();
+    for &t in &targets {
+        for (name, method) in [
+            ("Reducto", Method::Reducto(t)),
+            ("CrossRoI-Reducto", Method::CrossRoiReducto(t)),
+        ] {
+            let r = run_method(&scenario, &cfg.system, &infer, &method, Some(&reference)).unwrap();
+            table.row(vec![
+                name.to_string(),
+                fmt(t, 2),
+                fmt(r.accuracy, 3),
+                format!("{}/{}", r.frames_reduced, r.frames_total),
+                fmt(r.network_mbps_total, 2),
+                fmt(r.server_hz, 1),
+                fmt(r.latency.total(), 3),
+            ]);
+            rows.push((name.to_string(), t, r));
+        }
+    }
+    table.print("Table 4 — Reducto vs CrossRoI-Reducto");
+
+    println!("\nshape checks (CrossRoI-Reducto vs Reducto at each target):");
+    for &t in &targets {
+        let red = &rows.iter().find(|(n, tt, _)| n == "Reducto" && *tt == t).unwrap().2;
+        let cr = &rows
+            .iter()
+            .find(|(n, tt, _)| n == "CrossRoI-Reducto" && *tt == t)
+            .unwrap()
+            .2;
+        println!(
+            "  target {:.2}: net {:+.1}% (paper -40..-48%), srv {:.2}x (paper 1.18-1.45x), e2e {:+.1}% (paper -23..-26%)",
+            t,
+            100.0 * (cr.network_mbps_total / red.network_mbps_total - 1.0),
+            cr.server_hz / red.server_hz,
+            100.0 * (cr.latency.total() / red.latency.total() - 1.0),
+        );
+    }
+}

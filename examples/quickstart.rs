@@ -1,0 +1,42 @@
+//! Quickstart: build the paper scene, run the offline phase, then run the
+//! full CrossRoI method against the Baseline on a short online window.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Prints the offline mask summary and the two method rows (network,
+//! throughput, latency, accuracy).
+
+use crossroi::config::Config;
+use crossroi::coordinator::{self, Method, RuntimeInfer};
+use crossroi::runtime::Runtime;
+use crossroi::sim::Scenario;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::paper();
+    // keep the quickstart quick: 30 s profile + 20 s eval
+    cfg.scenario.profile_secs = 30.0;
+    cfg.scenario.eval_secs = 20.0;
+
+    println!("building scenario ({} cameras, {:.0} s)...", cfg.scenario.n_cameras, cfg.scenario.total_secs());
+    let scenario = Scenario::build(&cfg.scenario);
+    println!("  {} ground-truth boxes", scenario.total_boxes());
+
+    println!("loading AOT artifacts from {:?}...", cfg.system.artifacts_dir);
+    let rt = Runtime::load(&cfg.system.artifacts_dir)?;
+    let infer = RuntimeInfer(&rt);
+
+    let plan = coordinator::build_plan(&scenario, &cfg.scenario, &cfg.system, &Method::CrossRoi);
+    println!(
+        "offline: |M| = {} tiles, coverage {:.1}%, {} regions total",
+        plan.masks.total_size(),
+        100.0 * (0..cfg.scenario.n_cameras).map(|c| plan.masks.coverage(c)).sum::<f64>()
+            / cfg.scenario.n_cameras as f64,
+        plan.groups.iter().map(|g| g.len()).sum::<usize>()
+    );
+
+    for method in [Method::Baseline, Method::CrossRoi] {
+        let report = coordinator::run_method(&scenario, &cfg.system, &infer, &method, None)?;
+        println!("{}", report.row());
+    }
+    Ok(())
+}

@@ -1,0 +1,34 @@
+//! CrossRoI-Reducto integration (Fig. 12 / Table 4): spatial RoI masks
+//! first, then temporal frame filtering, compared against plain Reducto at
+//! one accuracy target.
+//!
+//!     make artifacts && cargo run --release --example reducto_integration [target]
+
+use crossroi::config::Config;
+use crossroi::coordinator::{baseline_reference, run_method, Method, RuntimeInfer};
+use crossroi::runtime::Runtime;
+use crossroi::sim::Scenario;
+
+fn main() -> anyhow::Result<()> {
+    let target: f64 = std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(0.9);
+    let mut cfg = Config::paper();
+    cfg.scenario.profile_secs = 40.0;
+    cfg.scenario.eval_secs = 40.0;
+
+    println!("accuracy target {target}");
+    let scenario = Scenario::build(&cfg.scenario);
+    let rt = Runtime::load(&cfg.system.artifacts_dir)?;
+    let infer = RuntimeInfer(&rt);
+
+    let (reference, baseline) = baseline_reference(&scenario, &cfg.system, &infer)?;
+    println!("{}", baseline.row());
+    for method in [Method::Reducto(target), Method::CrossRoiReducto(target)] {
+        let r = run_method(&scenario, &cfg.system, &infer, &method, Some(&reference))?;
+        println!("{}", r.row());
+        println!(
+            "  target {:.2} -> achieved {:.3}; frames reduced {}/{}",
+            target, r.accuracy, r.frames_reduced, r.frames_total
+        );
+    }
+    Ok(())
+}

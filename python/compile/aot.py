@@ -1,0 +1,96 @@
+"""AOT entry point: lower the L2 detector variants to HLO text artifacts.
+
+Run once at build time (``make artifacts``); the rust runtime loads the
+resulting ``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and
+executes them on the PJRT CPU client.  Python is never on the request path.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids that the image's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Also emits ``meta.json`` describing the geometry contract so the rust side
+can assert it matches its compiled-in constants.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_full() -> str:
+    spec = jax.ShapeDtypeStruct((model.FRAME_H, model.FRAME_W, 3), jnp.float32)
+    fn = lambda f: (model.detector_full(f),)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def lower_roi(capacity: int) -> str:
+    fspec = jax.ShapeDtypeStruct((model.FRAME_H, model.FRAME_W, 3), jnp.float32)
+    ispec = jax.ShapeDtypeStruct((capacity,), jnp.int32)
+    fn = lambda f, i: (model.detector_roi(f, i),)
+    return to_hlo_text(jax.jit(fn).lower(fspec, ispec))
+
+
+def meta() -> dict:
+    return {
+        "frame_h": model.FRAME_H,
+        "frame_w": model.FRAME_W,
+        "channels": model.CHANNELS,
+        "block": model.BLOCK,
+        "cell": model.CELL,
+        "halo": model.HALO,
+        "grid_bh": model.GRID_BH,
+        "grid_bw": model.GRID_BW,
+        "n_blocks": model.N_BLOCKS,
+        "cells_h": model.CELLS_H,
+        "cells_w": model.CELLS_W,
+        "cells_per_block": model.CELLS_PER_BLOCK,
+        "roi_capacities": list(model.ROI_CAPACITIES),
+        "objectness_threshold": model.OBJECTNESS_THRESHOLD,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    path = os.path.join(args.out_dir, "detector_full.hlo.txt")
+    text = lower_full()
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+    for k in model.ROI_CAPACITIES:
+        path = os.path.join(args.out_dir, f"detector_roi_k{k}.hlo.txt")
+        text = lower_roi(k)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    path = os.path.join(args.out_dir, "meta.json")
+    with open(path, "w") as f:
+        json.dump(meta(), f, indent=2)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Everything here is built on ``lax.conv_general_dilated`` / plain jnp ops —
+no Pallas — and serves as the reference the kernels are allclose-checked
+against in ``python/tests/`` (pytest + hypothesis sweeps over shapes).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv3x3_valid(x, w, b, *, relu: bool = True):
+    """Reference dense 3x3 VALID conv on HWC input.
+
+    x: (H+2, W+2, Cin), w: (3, 3, Cin, Cout), b: (Cout,) -> (H, W, Cout).
+    """
+    lhs = x[None].transpose(0, 3, 1, 2)          # NCHW
+    rhs = w.transpose(3, 2, 0, 1)                # OIHW
+    out = jax.lax.conv_general_dilated(
+        lhs, rhs, window_strides=(1, 1), padding="VALID"
+    )
+    out = out[0].transpose(1, 2, 0) + b
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def block_conv3x3(x_blocks, w, b, *, relu: bool = True):
+    """Reference for kernels.sbnet.block_conv3x3 (vmap of dense conv)."""
+    return jax.vmap(lambda x: conv3x3_valid(x, w, b, relu=relu))(x_blocks)
+
+
+def detector_block_stack(x_blocks, params, *, cell: int = 16):
+    """Reference for kernels.sbnet.detector_block_stack."""
+
+    def one(x):
+        y = conv3x3_valid(x, params["w1"], params["b1"])
+        y = conv3x3_valid(y, params["w2"], params["b2"])
+        y = conv3x3_valid(y, params["w3"], params["b3"])
+        score = (y @ params["head"])[..., 0]
+        h, wd = score.shape
+        return score.reshape(h // cell, cell, wd // cell, cell).mean(axis=(1, 3))
+
+    return jax.vmap(one)(x_blocks)
+
+
+def detector_full(frame, params, *, cell: int = 16):
+    """Reference full-frame detector: pad 3, 3x conv3x3+ReLU, head, pool.
+
+    frame: (H, W, 3) -> (H/cell, W/cell) objectness cells.
+    """
+    x = jnp.pad(frame, ((3, 3), (3, 3), (0, 0)))
+    y = conv3x3_valid(x, params["w1"], params["b1"])
+    y = conv3x3_valid(y, params["w2"], params["b2"])
+    y = conv3x3_valid(y, params["w3"], params["b3"])
+    score = (y @ params["head"])[..., 0]
+    h, wd = score.shape
+    return score.reshape(h // cell, cell, wd // cell, cell).mean(axis=(1, 3))

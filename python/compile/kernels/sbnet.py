@@ -1,0 +1,148 @@
+"""L1 — Pallas sparse-block convolution kernels (SBNet-style, TPU rethink).
+
+The paper accelerates RoI-restricted CNN inference with SBNet [36], a CUDA
+kernel that *gathers* active spatial blocks, runs dense convolution on the
+stacked blocks, and *scatters* results back.  On the TPU-shaped Pallas side
+the idea maps onto the kernel **grid**: each active block is one grid step,
+``BlockSpec`` stages that block (plus conv halo) HBM->VMEM, and the 3x3
+convolution is expressed as nine shifted ``dot_general`` contractions so the
+MXU systolic array does the arithmetic (the CUDA version leans on WMMA
+fragments instead).  Gather / scatter of block indices stays in XLA around
+the kernel, mirroring SBNet's gather/scatter modules (see model.py).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin used by the
+rust runtime cannot execute Mosaic custom-calls, and interpret-mode lowers
+the kernel body to plain HLO that any backend runs.  Real-TPU VMEM / MXU
+estimates live in DESIGN.md §2.
+
+Correctness oracle: ``ref.py`` (pure jnp / lax.conv); checked by pytest +
+hypothesis in ``python/tests/``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv3x3_body(x, w, b, *, relu: bool):
+    """Dense 3x3 VALID conv on one block, unrolled as 9 MXU contractions.
+
+    x: (H+2, W+2, Cin) float32, w: (3, 3, Cin, Cout), b: (Cout,).
+    Returns (H, W, Cout).
+    """
+    h = x.shape[0] - 2
+    wd = x.shape[1] - 2
+    cout = w.shape[3]
+    acc = jnp.zeros((h, wd, cout), dtype=jnp.float32)
+    for dy in range(3):
+        for dx in range(3):
+            patch = x[dy : dy + h, dx : dx + wd, :]
+            # (H, W, Cin) @ (Cin, Cout) -> (H, W, Cout): an MXU-friendly
+            # contraction over the channel dimension.
+            acc = acc + jax.lax.dot_general(
+                patch,
+                w[dy, dx],
+                dimension_numbers=(((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+    acc = acc + b
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    return acc
+
+
+def _block_conv_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    x = x_ref[...][0]  # (H+2, W+2, Cin) — leading block dim is 1
+    o_ref[...] = _conv3x3_body(x, w_ref[...], b_ref[...], relu=relu)[None]
+
+
+def block_conv3x3(x_blocks, w, b, *, relu: bool = True):
+    """Sparse-block 3x3 VALID convolution.
+
+    x_blocks: (K, H+2, W+2, Cin) — K gathered active blocks with 1px halo.
+    w: (3, 3, Cin, Cout); b: (Cout,).
+    Returns (K, H, W, Cout); ReLU applied when ``relu``.
+
+    Grid = (K,): one grid step per active block, i.e. compute scales with
+    the number of active blocks — the SBNet property the paper exploits.
+    """
+    k, hp, wp, cin = x_blocks.shape
+    h, wd = hp - 2, wp - 2
+    cout = w.shape[3]
+    kernel = functools.partial(_block_conv_kernel, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((3, 3, cin, cout), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, wd, cout), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, h, wd, cout), jnp.float32),
+        interpret=True,
+    )(x_blocks, w, b)
+
+
+def _fused_stack_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref,
+                        hw_ref, o_ref, *, cell: int):
+    """Fused 3-conv + head + cell-pool stack for one block.
+
+    Input block carries a halo of 3 (one per conv layer); each VALID conv
+    peels one pixel per side.  After the head (1x1 projection) the block is
+    mean-pooled into (H/cell, W/cell) objectness cells.  Fusing the stack
+    keeps every intermediate in VMEM — one HBM round-trip per block instead
+    of four (the perf-pass optimization recorded in EXPERIMENTS.md §Perf).
+    """
+    x = x_ref[...][0]
+    y = _conv3x3_body(x, w1_ref[...], b1_ref[...], relu=True)
+    y = _conv3x3_body(y, w2_ref[...], b2_ref[...], relu=True)
+    y = _conv3x3_body(y, w3_ref[...], b3_ref[...], relu=True)
+    # head: 1x1 projection to a scalar objectness score per pixel
+    score = jax.lax.dot_general(
+        y, hw_ref[...],
+        dimension_numbers=(((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[..., 0]
+    h, wd = score.shape
+    pooled = score.reshape(h // cell, cell, wd // cell, cell).mean(axis=(1, 3))
+    o_ref[...] = pooled[None]
+
+
+def detector_block_stack(x_blocks, params, *, cell: int = 16):
+    """Fused SBNet block stack: 3x conv3x3+ReLU -> 1x1 head -> cell pooling.
+
+    x_blocks: (K, H+6, W+6, Cin) — gathered blocks with halo 3.
+    params: dict with w1,b1,w2,b2,w3,b3 (conv layers) and head (C3, 1).
+    Returns (K, H/cell, W/cell) objectness cells.
+    """
+    k, hp, wp, cin = x_blocks.shape
+    h, wd = hp - 6, wp - 6
+    assert h % cell == 0 and wd % cell == 0, (h, wd, cell)
+    w1, b1 = params["w1"], params["b1"]
+    w2, b2 = params["w2"], params["b2"]
+    w3, b3 = params["w3"], params["b3"]
+    hw = params["head"]
+    c1, c2, c3 = w1.shape[3], w2.shape[3], w3.shape[3]
+    kernel = functools.partial(_fused_stack_kernel, cell=cell)
+    return pl.pallas_call(
+        kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((3, 3, cin, c1), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((c1,), lambda i: (0,)),
+            pl.BlockSpec((3, 3, c1, c2), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((c2,), lambda i: (0,)),
+            pl.BlockSpec((3, 3, c2, c3), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((c3,), lambda i: (0,)),
+            pl.BlockSpec((c3, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h // cell, wd // cell), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, h // cell, wd // cell), jnp.float32),
+        interpret=True,
+    )(x_blocks, w1, b1, w2, b2, w3, b3, hw)

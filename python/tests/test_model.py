@@ -1,0 +1,144 @@
+"""L2 model invariants: RoI variant vs dense variant vs oracle.
+
+The key contract for the rust runtime: scattering the RoI variant's per-block
+cells into the (CELLS_H, CELLS_W) grid reproduces the dense detector exactly
+on the active blocks, for any set of active blocks.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+hypothesis.settings.register_profile(
+    "model", deadline=None, max_examples=10,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow],
+)
+hypothesis.settings.load_profile("model")
+
+
+def random_frame(seed: int):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.uniform(key, (model.FRAME_H, model.FRAME_W, 3))
+
+
+def synthetic_scene(vehicles):
+    """Gray road + saturated colored rectangles (the renderer's content model)."""
+    frame = jnp.full((model.FRAME_H, model.FRAME_W, 3), 0.45)
+    for (y, x, h, w, color) in vehicles:
+        patch = jnp.broadcast_to(jnp.asarray(color), (h, w, 3))
+        frame = jax.lax.dynamic_update_slice(frame, patch, (y, x, 0))
+    return frame
+
+
+def pad_ids(ids, capacity):
+    ids = list(ids)
+    assert len(ids) <= capacity
+    return jnp.asarray(ids + [-1] * (capacity - len(ids)), jnp.int32)
+
+
+def scatter_cells(ids, cells):
+    """Rust-side scatter, reimplemented: (K,2,2) -> (CELLS_H, CELLS_W)."""
+    grid = np.zeros((model.CELLS_H, model.CELLS_W), np.float32)
+    cpb = model.CELLS_PER_BLOCK
+    for k, bid in enumerate(np.asarray(ids)):
+        if bid < 0:
+            continue
+        by, bx = divmod(int(bid), model.GRID_BW)
+        grid[by * cpb:(by + 1) * cpb, bx * cpb:(bx + 1) * cpb] = cells[k]
+    return grid
+
+
+@hypothesis.given(
+    seed=st.integers(0, 2**31 - 1),
+    nblocks=st.integers(1, 8),
+    cap=st.sampled_from([8, 16]),
+)
+def test_roi_matches_dense_on_active_blocks(seed, nblocks, cap):
+    rng = np.random.RandomState(seed)
+    ids = rng.choice(model.N_BLOCKS, size=min(nblocks, cap), replace=False)
+    frame = random_frame(seed)
+    dense = np.asarray(model.detector_full(frame))
+    cells = np.asarray(model.detector_roi(frame, pad_ids(ids, cap)))
+    scattered = scatter_cells(pad_ids(ids, cap), cells)
+    cpb = model.CELLS_PER_BLOCK
+    for bid in ids:
+        by, bx = divmod(int(bid), model.GRID_BW)
+        np.testing.assert_allclose(
+            scattered[by * cpb:(by + 1) * cpb, bx * cpb:(bx + 1) * cpb],
+            dense[by * cpb:(by + 1) * cpb, bx * cpb:(bx + 1) * cpb],
+            rtol=1e-4, atol=1e-5,
+        )
+
+
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+def test_roi_kernel_matches_oracle(seed):
+    rng = np.random.RandomState(seed)
+    ids = pad_ids(rng.choice(model.N_BLOCKS, size=6, replace=False), 8)
+    frame = random_frame(seed)
+    got = np.asarray(model.detector_roi(frame, ids))
+    want = np.asarray(model.detector_roi_ref(frame, ids))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_padded_ids_produce_zero_cells():
+    frame = random_frame(3)
+    ids = pad_ids([5], 8)
+    cells = np.asarray(model.detector_roi(frame, ids))
+    assert np.all(cells[1:] == 0.0)
+
+
+def test_vehicle_lights_up_objectness():
+    """A saturated vehicle rectangle drives its cells above the threshold,
+    gray road stays at exactly zero (bias clamps sensor noise)."""
+    frame = synthetic_scene([(64, 128, 32, 48, (0.85, 0.15, 0.12))])
+    obj = np.asarray(model.detector_full(frame))
+    cy, cx = 64 // model.CELL + 1, 128 // model.CELL + 1
+    assert obj[cy, cx] > model.OBJECTNESS_THRESHOLD
+    assert obj[0, 0] == 0.0
+
+
+def test_gray_content_is_silent():
+    """Road, lane markings (white) and shadows (dark gray) score zero."""
+    frame = synthetic_scene([
+        (32, 32, 16, 64, (1.0, 1.0, 1.0)),   # lane marking
+        (96, 96, 24, 24, (0.2, 0.2, 0.2)),   # shadow
+    ])
+    obj = np.asarray(model.detector_full(frame))
+    assert obj.max() == 0.0
+
+
+def test_black_masked_region_is_silent():
+    """Non-RoI regions arrive as black pixels after cropping: no detections."""
+    frame = jnp.zeros((model.FRAME_H, model.FRAME_W, 3))
+    obj = np.asarray(model.detector_full(frame))
+    assert obj.max() == 0.0
+
+
+def test_noise_robustness():
+    """Gaussian sensor noise on gray road stays under the threshold."""
+    key = jax.random.PRNGKey(11)
+    frame = 0.45 + 0.02 * jax.random.normal(key, (model.FRAME_H, model.FRAME_W, 3))
+    obj = np.asarray(model.detector_full(frame))
+    assert obj.max() < model.OBJECTNESS_THRESHOLD
+
+
+def test_geometry_contract():
+    assert model.FRAME_H % model.BLOCK == 0
+    assert model.FRAME_W % model.BLOCK == 0
+    assert model.BLOCK % model.CELL == 0
+    assert model.N_BLOCKS == model.GRID_BH * model.GRID_BW
+    assert max(model.ROI_CAPACITIES) == model.N_BLOCKS
+
+
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+def test_dense_im2col_matches_lax_conv_oracle(seed):
+    """The serving dense formulation (im2col, §Perf L2) equals the
+    lax.conv oracle."""
+    frame = random_frame(seed)
+    got = np.asarray(model.detector_full(frame))
+    want = np.asarray(model.detector_full_ref(frame))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

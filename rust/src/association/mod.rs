@@ -1,0 +1,8 @@
+//! Cross-camera region association (§3.2): frame tiling, appearance
+//! regions, and the lookup table (Table 1) that feeds the RoI optimizer.
+
+pub mod table;
+pub mod tiles;
+
+pub use table::{AssociationTable, Constraint};
+pub use tiles::{GlobalTile, Tiling};

@@ -1,0 +1,168 @@
+//! The region-association lookup table (§3.2, Table 1): for every
+//! (object, timestamp) occurrence, the collection of its appearance
+//! regions across cameras — the constraints of the RoI optimization.
+//!
+//! Identical constraints repeat heavily over a profile window (the same
+//! physical spot produces the same region sets), so constraints are
+//! deduplicated with multiplicities; the optimizer only sees unique ones.
+
+use std::collections::HashMap;
+
+use crate::association::tiles::{GlobalTile, Tiling};
+use crate::reid::records::ReidStream;
+
+/// One optimization constraint: the appearance regions `R^k_{t_m}` of one
+/// object occurrence; at least one region must be fully inside the mask.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Constraint {
+    /// Each region is a sorted list of global tiles.
+    pub regions: Vec<Vec<GlobalTile>>,
+}
+
+impl Constraint {
+    fn canonical(mut regions: Vec<Vec<GlobalTile>>) -> Constraint {
+        for r in regions.iter_mut() {
+            r.sort_unstable();
+            r.dedup();
+        }
+        regions.sort();
+        regions.dedup();
+        Constraint { regions }
+    }
+}
+
+/// The deduplicated association table.
+#[derive(Debug, Clone)]
+pub struct AssociationTable {
+    pub tiling: Tiling,
+    pub constraints: Vec<Constraint>,
+    /// Occurrence count of each unique constraint.
+    pub multiplicity: Vec<usize>,
+    /// Total raw (object, timestamp) occurrences before dedup.
+    pub total_occurrences: usize,
+}
+
+impl AssociationTable {
+    /// Build from a (filtered) ReID stream: occurrences are grouped by
+    /// `(frame, raw_id)`; each camera where the id appears contributes one
+    /// appearance region.
+    pub fn build(stream: &ReidStream, tiling: &Tiling) -> AssociationTable {
+        let mut unique: HashMap<Constraint, usize> = HashMap::new();
+        let mut total = 0usize;
+        for frame in 0..stream.n_frames {
+            // group this frame's records by raw id
+            let mut groups: HashMap<u32, Vec<Vec<GlobalTile>>> = HashMap::new();
+            for cam in 0..stream.n_cameras {
+                for rec in stream.at(cam, frame) {
+                    let region = tiling.appearance_region(cam, &rec.bbox);
+                    if !region.is_empty() {
+                        groups.entry(rec.raw_id).or_default().push(region);
+                    }
+                }
+            }
+            for (_, regions) in groups {
+                total += 1;
+                let c = Constraint::canonical(regions);
+                *unique.entry(c).or_insert(0) += 1;
+            }
+        }
+        let mut constraints = Vec::with_capacity(unique.len());
+        let mut multiplicity = Vec::with_capacity(unique.len());
+        let mut entries: Vec<(Constraint, usize)> = unique.into_iter().collect();
+        // deterministic order
+        entries.sort_by(|a, b| a.0.regions.cmp(&b.0.regions));
+        for (c, m) in entries {
+            constraints.push(c);
+            multiplicity.push(m);
+        }
+        AssociationTable {
+            tiling: tiling.clone(),
+            constraints,
+            multiplicity,
+            total_occurrences: total,
+        }
+    }
+
+    pub fn n_constraints(&self) -> usize {
+        self.constraints.len()
+    }
+
+    /// All distinct tiles referenced by any region.
+    pub fn candidate_tiles(&self) -> Vec<GlobalTile> {
+        let mut tiles: Vec<GlobalTile> = self
+            .constraints
+            .iter()
+            .flat_map(|c| c.regions.iter().flatten().copied())
+            .collect();
+        tiles.sort_unstable();
+        tiles.dedup();
+        tiles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reid::records::RawDetection;
+    use crate::util::geometry::Rect;
+
+    fn tiling() -> Tiling {
+        Tiling::new(2, 320, 192, 16)
+    }
+
+    fn det(cam: usize, frame: usize, raw_id: u32, x: f64, y: f64) -> RawDetection {
+        RawDetection { cam, frame, bbox: Rect::new(x, y, 16.0, 16.0), raw_id, true_id: raw_id }
+    }
+
+    #[test]
+    fn single_camera_occurrence_single_region() {
+        let s = ReidStream::new(2, 1, vec![det(0, 0, 1, 16.0, 16.0)]);
+        let t = AssociationTable::build(&s, &tiling());
+        assert_eq!(t.n_constraints(), 1);
+        assert_eq!(t.constraints[0].regions.len(), 1);
+        assert_eq!(t.total_occurrences, 1);
+    }
+
+    #[test]
+    fn cross_camera_appearance_merges_into_one_constraint() {
+        // same raw id in both cameras at the same frame -> one constraint
+        // with two alternative regions (the paper's R^1_{t1} example)
+        let s = ReidStream::new(2, 1, vec![det(0, 0, 7, 0.0, 0.0), det(1, 0, 7, 160.0, 96.0)]);
+        let t = AssociationTable::build(&s, &tiling());
+        assert_eq!(t.n_constraints(), 1);
+        assert_eq!(t.constraints[0].regions.len(), 2);
+    }
+
+    #[test]
+    fn repeats_deduplicate_with_multiplicity() {
+        let recs: Vec<RawDetection> =
+            (0..10).map(|f| det(0, f, 1, 32.0, 32.0)).collect();
+        let s = ReidStream::new(2, 10, recs);
+        let t = AssociationTable::build(&s, &tiling());
+        assert_eq!(t.n_constraints(), 1);
+        assert_eq!(t.multiplicity[0], 10);
+        assert_eq!(t.total_occurrences, 10);
+    }
+
+    #[test]
+    fn different_ids_stay_separate() {
+        let s = ReidStream::new(2, 1, vec![det(0, 0, 1, 0.0, 0.0), det(0, 0, 2, 160.0, 96.0)]);
+        let t = AssociationTable::build(&s, &tiling());
+        assert_eq!(t.n_constraints(), 2);
+        assert_eq!(t.candidate_tiles().len(), 2);
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        let recs = vec![
+            det(0, 0, 1, 0.0, 0.0),
+            det(1, 0, 1, 50.0, 50.0),
+            det(0, 1, 2, 100.0, 100.0),
+        ];
+        let s = ReidStream::new(2, 2, recs);
+        let a = AssociationTable::build(&s, &tiling());
+        let b = AssociationTable::build(&s, &tiling());
+        assert_eq!(a.constraints, b.constraints);
+        assert_eq!(a.multiplicity, b.multiplicity);
+    }
+}

@@ -1,0 +1,157 @@
+//! Frame tiling (§3.1): tiles `G_{i,j}` are the smallest spatial unit of a
+//! RoI mask.  Global tile ids flatten (camera, tile) so the optimizer works
+//! over one index space.
+
+use crate::util::geometry::{IRect, Rect};
+
+/// A tile identified globally across all cameras.
+pub type GlobalTile = u32;
+
+/// Tiling geometry for a fleet of (equal-resolution) cameras.
+#[derive(Debug, Clone)]
+pub struct Tiling {
+    pub n_cameras: usize,
+    pub frame_w: u32,
+    pub frame_h: u32,
+    pub tile_px: u32,
+    pub tiles_x: u32,
+    pub tiles_y: u32,
+}
+
+impl Tiling {
+    pub fn new(n_cameras: usize, frame_w: u32, frame_h: u32, tile_px: u32) -> Tiling {
+        assert!(frame_w % tile_px == 0 && frame_h % tile_px == 0,
+                "frame {frame_w}x{frame_h} not a multiple of tile {tile_px}");
+        Tiling {
+            n_cameras,
+            frame_w,
+            frame_h,
+            tile_px,
+            tiles_x: frame_w / tile_px,
+            tiles_y: frame_h / tile_px,
+        }
+    }
+
+    /// Tiles per camera.
+    pub fn per_camera(&self) -> u32 {
+        self.tiles_x * self.tiles_y
+    }
+
+    /// Total global tiles.
+    pub fn total(&self) -> u32 {
+        self.per_camera() * self.n_cameras as u32
+    }
+
+    /// Global id of tile (tx, ty) in `cam`.
+    pub fn tile_id(&self, cam: usize, tx: u32, ty: u32) -> GlobalTile {
+        debug_assert!(tx < self.tiles_x && ty < self.tiles_y);
+        cam as u32 * self.per_camera() + ty * self.tiles_x + tx
+    }
+
+    /// Inverse of [`Self::tile_id`]: (cam, tx, ty).
+    pub fn tile_pos(&self, id: GlobalTile) -> (usize, u32, u32) {
+        let cam = id / self.per_camera();
+        let rem = id % self.per_camera();
+        (cam as usize, rem % self.tiles_x, rem / self.tiles_x)
+    }
+
+    /// Camera owning a global tile.
+    pub fn camera_of(&self, id: GlobalTile) -> usize {
+        (id / self.per_camera()) as usize
+    }
+
+    /// Pixel rectangle of a tile.
+    pub fn tile_rect(&self, id: GlobalTile) -> IRect {
+        let (_, tx, ty) = self.tile_pos(id);
+        IRect::new(tx * self.tile_px, ty * self.tile_px, self.tile_px, self.tile_px)
+    }
+
+    /// Appearance region (§3.2): the least set of tiles covering a bbox.
+    /// Returns a sorted list of global tile ids; empty if the bbox is empty.
+    pub fn appearance_region(&self, cam: usize, bbox: &Rect) -> Vec<GlobalTile> {
+        if bbox.is_empty() {
+            return Vec::new();
+        }
+        let t = self.tile_px as f64;
+        let tx0 = (bbox.left / t).floor().max(0.0) as u32;
+        let ty0 = (bbox.top / t).floor().max(0.0) as u32;
+        let tx1 = (((bbox.right() - 1e-9) / t).floor() as u32).min(self.tiles_x - 1);
+        let ty1 = (((bbox.bottom() - 1e-9) / t).floor() as u32).min(self.tiles_y - 1);
+        let mut out = Vec::with_capacity(((tx1 - tx0 + 1) * (ty1 - ty0 + 1)) as usize);
+        for ty in ty0..=ty1 {
+            for tx in tx0..=tx1 {
+                out.push(self.tile_id(cam, tx, ty));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiling() -> Tiling {
+        Tiling::new(5, 320, 192, 16)
+    }
+
+    #[test]
+    fn geometry() {
+        let t = tiling();
+        assert_eq!(t.tiles_x, 20);
+        assert_eq!(t.tiles_y, 12);
+        assert_eq!(t.per_camera(), 240);
+        assert_eq!(t.total(), 1200);
+    }
+
+    #[test]
+    fn id_roundtrip() {
+        let t = tiling();
+        for cam in 0..5 {
+            for ty in [0u32, 5, 11] {
+                for tx in [0u32, 7, 19] {
+                    let id = t.tile_id(cam, tx, ty);
+                    assert_eq!(t.tile_pos(id), (cam, tx, ty));
+                    assert_eq!(t.camera_of(id), cam);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_rect_pixels() {
+        let t = tiling();
+        let id = t.tile_id(1, 3, 2);
+        let r = t.tile_rect(id);
+        assert_eq!((r.x, r.y, r.w, r.h), (48, 32, 16, 16));
+    }
+
+    #[test]
+    fn appearance_region_covers_bbox() {
+        let t = tiling();
+        // bbox spanning tiles (1..=3, 0..=1)
+        let r = Rect::new(20.0, 5.0, 40.0, 20.0);
+        let region = t.appearance_region(0, &r);
+        assert_eq!(region.len(), 6);
+        assert!(region.contains(&t.tile_id(0, 1, 0)));
+        assert!(region.contains(&t.tile_id(0, 3, 1)));
+    }
+
+    #[test]
+    fn appearance_region_exact_tile() {
+        let t = tiling();
+        // exactly one tile
+        let r = Rect::new(16.0, 16.0, 16.0, 16.0);
+        let region = t.appearance_region(2, &r);
+        assert_eq!(region, vec![t.tile_id(2, 1, 1)]);
+    }
+
+    #[test]
+    fn appearance_region_clamps_to_frame() {
+        let t = tiling();
+        let r = Rect::new(310.0, 180.0, 50.0, 50.0);
+        let region = t.appearance_region(0, &r);
+        assert_eq!(region, vec![t.tile_id(0, 19, 11)]);
+        assert!(t.appearance_region(0, &Rect::new(5.0, 5.0, 0.0, 0.0)).is_empty());
+    }
+}

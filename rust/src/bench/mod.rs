@@ -1,0 +1,138 @@
+//! Bench harness (criterion is unavailable offline — DESIGN.md §3).
+//!
+//! `cargo bench` runs our `harness = false` bench binaries; each uses
+//! [`time_it`] for microbenchmarks and [`Table`] to print the paper-shaped
+//! rows (Tables 2–4, Figs 8–11).
+
+use std::time::Instant;
+
+/// Timing summary of a microbenchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+}
+
+impl Timing {
+    pub fn per_iter_display(&self) -> String {
+        let s = self.mean_secs;
+        if s >= 1.0 {
+            format!("{s:.3} s")
+        } else if s >= 1e-3 {
+            format!("{:.3} ms", s * 1e3)
+        } else {
+            format!("{:.1} µs", s * 1e6)
+        }
+    }
+}
+
+/// Time `f` with warmup; `target_secs` bounds total measurement time.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, target_secs: f64, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    let start = Instant::now();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+        if start.elapsed().as_secs_f64() > target_secs {
+            break;
+        }
+    }
+    let n = times.len().max(1);
+    Timing {
+        iters: n,
+        mean_secs: times.iter().sum::<f64>() / n as f64,
+        min_secs: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_secs: times.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+/// A simple aligned-column table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self, title: &str) {
+        println!("\n=== {title} ===");
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let cols: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = widths[i]))
+                .collect();
+            println!("  {}", cols.join("  "));
+        };
+        line(&self.headers);
+        println!("  {}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Format a float with fixed decimals (bench-table convenience).
+pub fn fmt(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_measures() {
+        let t = time_it(1, 10, 5.0, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(t.iters >= 1);
+        assert!(t.mean_secs >= 0.0);
+        assert!(t.min_secs <= t.mean_secs);
+        assert!(t.mean_secs <= t.max_secs.max(1e-12));
+    }
+
+    #[test]
+    fn table_rows_must_match_headers() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print("test");
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn timing_display_units() {
+        let t = Timing { iters: 1, mean_secs: 2.0, min_secs: 2.0, max_secs: 2.0 };
+        assert!(t.per_iter_display().ends_with(" s"));
+        let t = Timing { iters: 1, mean_secs: 2e-3, min_secs: 0.0, max_secs: 0.0 };
+        assert!(t.per_iter_display().ends_with(" ms"));
+        let t = Timing { iters: 1, mean_secs: 2e-6, min_secs: 0.0, max_secs: 0.0 };
+        assert!(t.per_iter_display().ends_with(" µs"));
+    }
+}

@@ -1,0 +1,131 @@
+//! Command-line argument parsing (clap is unavailable offline).
+//!
+//! Subcommand + `--flag value` / `--flag` conventions, with typed lookups
+//! and an auto-generated usage string.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// Parsed command line: a subcommand, flags and positional args.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Which flags take a value (everything else is a boolean switch).
+pub const VALUE_FLAGS: &[&str] = &[
+    "config", "artifacts", "seed", "segment-secs", "svm-gamma", "ransac-theta",
+    "reducto-target", "eval-secs", "profile-secs", "cameras", "method", "out",
+    "bandwidth-mbps", "qp",
+];
+
+impl Args {
+    /// Parse `std::env::args()`-style input (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(input: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = input.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                let name = name.to_string();
+                if let Some(eq) = name.find('=') {
+                    out.flags.insert(name[..eq].to_string(), name[eq + 1..].to_string());
+                } else if VALUE_FLAGS.contains(&name.as_str()) {
+                    let v = it
+                        .next()
+                        .with_context(|| format!("flag --{name} expects a value"))?;
+                    out.flags.insert(name, v);
+                } else {
+                    out.switches.push(name);
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn f64_flag(&self, name: &str) -> Result<Option<f64>> {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(
+                v.parse::<f64>().with_context(|| format!("--{name} {v:?} is not a number"))?,
+            )),
+        }
+    }
+
+    pub fn u64_flag(&self, name: &str) -> Result<Option<u64>> {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(
+                v.parse::<u64>().with_context(|| format!("--{name} {v:?} is not an integer"))?,
+            )),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// Error on unknown switches (catch typos).
+    pub fn ensure_known_switches(&self, known: &[&str]) -> Result<()> {
+        for s in &self.switches {
+            if !known.contains(&s.as_str()) {
+                bail!("unknown flag --{s}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_flags_positional() {
+        let a = parse("offline --seed 42 --verbose extra1 extra2");
+        assert_eq!(a.subcommand.as_deref(), Some("offline"));
+        assert_eq!(a.flag("seed"), Some("42"));
+        assert!(a.switch("verbose"));
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --svm-gamma=0.5");
+        assert_eq!(a.f64_flag("svm-gamma").unwrap(), Some(0.5));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let e = Args::parse(vec!["run".to_string(), "--seed".to_string()]);
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn typed_flag_errors() {
+        let a = parse("run --seed abc");
+        assert!(a.u64_flag("seed").is_err());
+        assert!(a.u64_flag("missing").unwrap().is_none());
+    }
+
+    #[test]
+    fn unknown_switch_detection() {
+        let a = parse("run --bogus");
+        assert!(a.ensure_known_switches(&["verbose"]).is_err());
+        assert!(a.ensure_known_switches(&["bogus"]).is_ok());
+    }
+}

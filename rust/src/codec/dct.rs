@@ -1,0 +1,175 @@
+//! 8×8 DCT-II / DCT-III (separable, precomputed basis) and quantization.
+
+use super::BLOCK;
+use once_cell::sync::Lazy;
+
+/// Precomputed orthonormal DCT-II basis: `BASIS[k][n] = c_k cos(...)`.
+static BASIS: Lazy<[[f32; BLOCK]; BLOCK]> = Lazy::new(|| {
+    let mut b = [[0.0f32; BLOCK]; BLOCK];
+    let n = BLOCK as f32;
+    for k in 0..BLOCK {
+        let ck = if k == 0 { (1.0 / n).sqrt() } else { (2.0 / n).sqrt() };
+        for x in 0..BLOCK {
+            b[k][x] =
+                ck * ((std::f32::consts::PI / n) * (x as f32 + 0.5) * k as f32).cos();
+        }
+    }
+    b
+});
+
+/// Forward 8×8 DCT (rows then columns), in place on a row-major block.
+pub fn forward(block: &mut [f32; BLOCK * BLOCK]) {
+    let b = &*BASIS;
+    let mut tmp = [0.0f32; BLOCK * BLOCK];
+    // rows
+    for y in 0..BLOCK {
+        for k in 0..BLOCK {
+            let mut acc = 0.0;
+            for x in 0..BLOCK {
+                acc += b[k][x] * block[y * BLOCK + x];
+            }
+            tmp[y * BLOCK + k] = acc;
+        }
+    }
+    // cols
+    for k in 0..BLOCK {
+        for x in 0..BLOCK {
+            let mut acc = 0.0;
+            for y in 0..BLOCK {
+                acc += b[k][y] * tmp[y * BLOCK + x];
+            }
+            block[k * BLOCK + x] = acc;
+        }
+    }
+}
+
+/// Inverse 8×8 DCT, in place.
+pub fn inverse(block: &mut [f32; BLOCK * BLOCK]) {
+    let b = &*BASIS;
+    let mut tmp = [0.0f32; BLOCK * BLOCK];
+    // cols (transpose of forward)
+    for y in 0..BLOCK {
+        for x in 0..BLOCK {
+            let mut acc = 0.0;
+            for k in 0..BLOCK {
+                acc += b[k][y] * block[k * BLOCK + x];
+            }
+            tmp[y * BLOCK + x] = acc;
+        }
+    }
+    // rows
+    for y in 0..BLOCK {
+        for x in 0..BLOCK {
+            let mut acc = 0.0;
+            for k in 0..BLOCK {
+                acc += b[k][x] * tmp[y * BLOCK + k];
+            }
+            block[y * BLOCK + x] = acc;
+        }
+    }
+}
+
+/// JPEG-flavoured luma quantization weights (flat-ish, frequency-rising).
+const QWEIGHT: [f32; BLOCK * BLOCK] = {
+    let mut w = [0.0f32; BLOCK * BLOCK];
+    let mut y = 0;
+    while y < BLOCK {
+        let mut x = 0;
+        while x < BLOCK {
+            w[y * BLOCK + x] = 1.0 + 0.45 * (x + y) as f32;
+            x += 1;
+        }
+        y += 1;
+    }
+    w
+};
+
+/// Quantize DCT coefficients with quality parameter `qp` (≥ 1; higher ⇒
+/// coarser).  Returns integer levels.
+pub fn quantize(coeffs: &[f32; BLOCK * BLOCK], qp: f32) -> [i32; BLOCK * BLOCK] {
+    let mut out = [0i32; BLOCK * BLOCK];
+    for i in 0..BLOCK * BLOCK {
+        let step = QWEIGHT[i] * qp;
+        out[i] = (coeffs[i] / step).round() as i32;
+    }
+    out
+}
+
+/// Dequantize levels back to coefficient space.
+pub fn dequantize(levels: &[i32; BLOCK * BLOCK], qp: f32) -> [f32; BLOCK * BLOCK] {
+    let mut out = [0.0f32; BLOCK * BLOCK];
+    for i in 0..BLOCK * BLOCK {
+        out[i] = levels[i] as f32 * QWEIGHT[i] * qp;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_block() -> [f32; 64] {
+        let mut b = [0.0f32; 64];
+        for (i, v) in b.iter_mut().enumerate() {
+            *v = ((i * 7919) % 255) as f32 - 128.0;
+        }
+        b
+    }
+
+    #[test]
+    fn dct_roundtrip_is_identity() {
+        let src = sample_block();
+        let mut b = src;
+        forward(&mut b);
+        inverse(&mut b);
+        for (a, b) in src.iter().zip(b.iter()) {
+            assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn dct_preserves_energy() {
+        // orthonormal transform: Parseval
+        let src = sample_block();
+        let mut b = src;
+        forward(&mut b);
+        let e_in: f32 = src.iter().map(|x| x * x).sum();
+        let e_out: f32 = b.iter().map(|x| x * x).sum();
+        assert!((e_in - e_out).abs() / e_in < 1e-4);
+    }
+
+    #[test]
+    fn flat_block_is_dc_only() {
+        let mut b = [42.0f32; 64];
+        forward(&mut b);
+        assert!((b[0] - 42.0 * 8.0).abs() < 1e-3);
+        for &c in &b[1..] {
+            assert!(c.abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn quantization_error_bounded_by_step() {
+        let src = sample_block();
+        let mut c = src;
+        forward(&mut c);
+        for qp in [1.0f32, 4.0, 12.0] {
+            let q = quantize(&c, qp);
+            let d = dequantize(&q, qp);
+            for i in 0..64 {
+                let step = (1.0 + 0.45 * ((i % 8) + (i / 8)) as f32) * qp;
+                assert!((c[i] - d[i]).abs() <= step / 2.0 + 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn coarser_qp_zeroes_more() {
+        let src = sample_block();
+        let mut c = src;
+        forward(&mut c);
+        let nz = |qp: f32| quantize(&c, qp).iter().filter(|&&l| l != 0).count();
+        assert!(nz(1.0) >= nz(6.0));
+        assert!(nz(6.0) >= nz(20.0));
+    }
+}

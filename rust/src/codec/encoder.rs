@@ -1,0 +1,460 @@
+//! Region/segment encoder: YCbCr 4:2:0 planes, per-macroblock intra/inter
+//! decision, transform + quantize + entropy cost, reconstruction loop.
+//!
+//! A [`RegionStream`] encodes one independently-decodable region (a tile
+//! group); a [`SegmentEncoder`] drives all regions of a camera over one
+//! streaming segment (GOP = segment: the first frame is intra so every
+//! segment stands alone, which is what makes segment length the
+//! latency/size tradeoff of Fig. 11).
+
+use super::{dct, entropy, motion, BLOCK, MB, REGION_HEADER_BYTES, SEGMENT_HEADER_BYTES};
+use crate::sim::render::Frame;
+use crate::util::geometry::IRect;
+
+/// YCbCr 4:2:0 planes (luma at `w × h`, chroma at half resolution).
+#[derive(Debug, Clone)]
+pub struct Planes {
+    pub w: usize,
+    pub h: usize,
+    pub y: Vec<f32>,
+    pub cb: Vec<f32>,
+    pub cr: Vec<f32>,
+}
+
+impl Planes {
+    pub fn new_black(w: usize, h: usize) -> Planes {
+        Planes {
+            w,
+            h,
+            y: vec![0.0; w * h],
+            cb: vec![128.0; (w / 2) * (h / 2)],
+            cr: vec![128.0; (w / 2) * (h / 2)],
+        }
+    }
+
+    /// Extract a region from an RGB frame, padded (edge-replicated) to a
+    /// macroblock multiple, converted to YCbCr with 4:2:0 subsampling.
+    pub fn from_frame_region(frame: &Frame, region: IRect) -> Planes {
+        let w = pad_to(region.w as usize, MB);
+        let h = pad_to(region.h as usize, MB);
+        let mut y = vec![0.0f32; w * h];
+        let mut cbf = vec![0.0f32; w * h];
+        let mut crf = vec![0.0f32; w * h];
+        for py in 0..h {
+            let sy = (region.y as usize + py.min(region.h as usize - 1)).min(frame.h as usize - 1);
+            for px in 0..w {
+                let sx =
+                    (region.x as usize + px.min(region.w as usize - 1)).min(frame.w as usize - 1);
+                let [r, g, b] = frame.get(sx as u32, sy as u32);
+                let (rf, gf, bf) = (r as f32, g as f32, b as f32);
+                y[py * w + px] = 0.299 * rf + 0.587 * gf + 0.114 * bf;
+                cbf[py * w + px] = 128.0 - 0.168_736 * rf - 0.331_264 * gf + 0.5 * bf;
+                crf[py * w + px] = 128.0 + 0.5 * rf - 0.418_688 * gf - 0.081_312 * bf;
+            }
+        }
+        // 2x2 average subsample
+        let cw = w / 2;
+        let ch = h / 2;
+        let mut cb = vec![0.0f32; cw * ch];
+        let mut cr = vec![0.0f32; cw * ch];
+        for cy in 0..ch {
+            for cx in 0..cw {
+                let mut sb = 0.0;
+                let mut sr = 0.0;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        sb += cbf[(cy * 2 + dy) * w + cx * 2 + dx];
+                        sr += crf[(cy * 2 + dy) * w + cx * 2 + dx];
+                    }
+                }
+                cb[cy * cw + cx] = sb / 4.0;
+                cr[cy * cw + cx] = sr / 4.0;
+            }
+        }
+        Planes { w, h, y, cb, cr }
+    }
+
+    /// Luma PSNR against another plane set (dB).
+    pub fn psnr_luma(&self, other: &Planes) -> f64 {
+        assert_eq!(self.y.len(), other.y.len());
+        let mse: f64 = self
+            .y
+            .iter()
+            .zip(&other.y)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / self.y.len() as f64;
+        if mse <= 1e-9 {
+            99.0
+        } else {
+            10.0 * (255.0f64 * 255.0 / mse).log10()
+        }
+    }
+}
+
+fn pad_to(v: usize, m: usize) -> usize {
+    v.div_ceil(m) * m
+}
+
+/// One independently-decodable region stream.
+pub struct RegionStream {
+    pub region: IRect,
+    qp: f32,
+    prev: Option<Planes>,
+}
+
+/// Outcome of encoding one frame of one region.
+#[derive(Debug, Clone, Copy)]
+pub struct FrameStats {
+    pub bits: u64,
+    pub intra_mbs: usize,
+    pub inter_mbs: usize,
+}
+
+impl RegionStream {
+    pub fn new(region: IRect, qp: f32) -> RegionStream {
+        assert!(region.w > 0 && region.h > 0, "empty region");
+        RegionStream { region, qp, prev: None }
+    }
+
+    /// Reset the reference (segment boundary: next frame will be intra).
+    pub fn reset_gop(&mut self) {
+        self.prev = None;
+    }
+
+    pub fn last_recon(&self) -> Option<&Planes> {
+        self.prev.as_ref()
+    }
+
+    /// Encode one frame; updates the reconstruction reference.
+    pub fn encode_frame(&mut self, frame: &Frame) -> FrameStats {
+        let cur = Planes::from_frame_region(frame, self.region);
+        let mut recon = Planes::new_black(cur.w, cur.h);
+        let mut stats = FrameStats { bits: 0, intra_mbs: 0, inter_mbs: 0 };
+        let mut prev_dc = [0i32; 3]; // per-plane DC predictor
+
+        let n_mbx = cur.w / MB;
+        let n_mby = cur.h / MB;
+        for mby in 0..n_mby {
+            for mbx in 0..n_mbx {
+                let (bx, by) = (mbx * MB, mby * MB);
+                // ---- mode decision on luma ----
+                let (mode_inter, mv) = match &self.prev {
+                    None => (false, (0, 0)),
+                    Some(prev) => {
+                        let cur_plane = motion::Plane { w: cur.w, h: cur.h, data: &cur.y };
+                        let prev_plane = motion::Plane { w: prev.w, h: prev.h, data: &prev.y };
+                        let (dx, dy, sad) =
+                            motion::three_step_search(&cur_plane, &prev_plane, bx, by);
+                        // intra activity: deviation from the MB mean
+                        let mean = mb_mean(&cur.y, cur.w, bx, by);
+                        let intra_sad = mb_sad_to(&cur.y, cur.w, bx, by, mean);
+                        (sad < 0.9 * intra_sad + 64.0, (dx, dy))
+                    }
+                };
+                stats.bits += entropy::MODE_BITS as u64;
+                if mode_inter {
+                    stats.inter_mbs += 1;
+                    stats.bits += entropy::mv_bits(mv.0, mv.1) as u64;
+                } else {
+                    stats.intra_mbs += 1;
+                }
+
+                // ---- luma: four 8x8 blocks ----
+                for sub in 0..4 {
+                    let ox = bx + (sub % 2) * BLOCK;
+                    let oy = by + (sub / 2) * BLOCK;
+                    let bits = self.code_block(
+                        &cur.y,
+                        cur.w,
+                        &mut recon.y,
+                        ox,
+                        oy,
+                        mode_inter,
+                        mv,
+                        0,
+                        &mut prev_dc[0],
+                    );
+                    stats.bits += bits as u64;
+                }
+                // ---- chroma: one 8x8 block per plane (4:2:0) ----
+                let (cx, cy) = (bx / 2, by / 2);
+                let cmv = (mv.0 / 2, mv.1 / 2);
+                let cw = cur.w / 2;
+                let bits_cb = {
+                    let (cur_cb, prev_ref) = (&cur.cb, 1);
+                    let b = self.code_block(
+                        cur_cb,
+                        cw,
+                        &mut recon.cb,
+                        cx,
+                        cy,
+                        mode_inter,
+                        cmv,
+                        prev_ref,
+                        &mut prev_dc[1],
+                    );
+                    b
+                };
+                let bits_cr = self.code_block(
+                    &cur.cr,
+                    cw,
+                    &mut recon.cr,
+                    cx,
+                    cy,
+                    mode_inter,
+                    cmv,
+                    2,
+                    &mut prev_dc[2],
+                );
+                stats.bits += (bits_cb + bits_cr) as u64;
+            }
+        }
+        self.prev = Some(recon);
+        stats
+    }
+
+    /// Transform-code one 8×8 block of `plane_sel` (0=Y,1=Cb,2=Cr) at
+    /// (ox, oy); writes the reconstruction and returns the bit cost.
+    #[allow(clippy::too_many_arguments)]
+    fn code_block(
+        &self,
+        cur: &[f32],
+        w: usize,
+        recon_out: &mut [f32],
+        ox: usize,
+        oy: usize,
+        inter: bool,
+        mv: (i32, i32),
+        plane_sel: usize,
+        prev_dc: &mut i32,
+    ) -> u32 {
+        let mut residual = [0.0f32; BLOCK * BLOCK];
+        let mut pred = [0.0f32; BLOCK * BLOCK];
+        // build prediction
+        if inter {
+            let prev = self.prev.as_ref().expect("inter without reference");
+            let (pw, pdata) = match plane_sel {
+                0 => (prev.w, &prev.y),
+                1 => (prev.w / 2, &prev.cb),
+                _ => (prev.w / 2, &prev.cr),
+            };
+            let ph = pdata.len() / pw;
+            for y in 0..BLOCK {
+                for x in 0..BLOCK {
+                    let sx = (ox as i32 + x as i32 + mv.0).clamp(0, pw as i32 - 1) as usize;
+                    let sy = (oy as i32 + y as i32 + mv.1).clamp(0, ph as i32 - 1) as usize;
+                    pred[y * BLOCK + x] = pdata[sy * pw + sx];
+                }
+            }
+        } else {
+            let flat = if plane_sel == 0 { 128.0 } else { 128.0 };
+            pred = [flat; BLOCK * BLOCK];
+        }
+        for y in 0..BLOCK {
+            for x in 0..BLOCK {
+                residual[y * BLOCK + x] = cur[(oy + y) * w + ox + x] - pred[y * BLOCK + x];
+            }
+        }
+        dct::forward(&mut residual);
+        let levels = dct::quantize(&residual, self.qp);
+        let (bits, dc) = entropy::block_bits(&levels, *prev_dc);
+        *prev_dc = dc;
+        // reconstruction
+        let mut deq = dct::dequantize(&levels, self.qp);
+        dct::inverse(&mut deq);
+        for y in 0..BLOCK {
+            for x in 0..BLOCK {
+                recon_out[(oy + y) * w + ox + x] =
+                    (pred[y * BLOCK + x] + deq[y * BLOCK + x]).clamp(0.0, 255.0);
+            }
+        }
+        bits
+    }
+}
+
+fn mb_mean(plane: &[f32], w: usize, bx: usize, by: usize) -> f32 {
+    let mut acc = 0.0;
+    for y in 0..MB {
+        for x in 0..MB {
+            acc += plane[(by + y) * w + bx + x];
+        }
+    }
+    acc / (MB * MB) as f32
+}
+
+fn mb_sad_to(plane: &[f32], w: usize, bx: usize, by: usize, target: f32) -> f32 {
+    let mut acc = 0.0;
+    for y in 0..MB {
+        for x in 0..MB {
+            acc += (plane[(by + y) * w + bx + x] - target).abs();
+        }
+    }
+    acc
+}
+
+/// Encoded output of one camera segment.
+#[derive(Debug, Clone)]
+pub struct EncodedSegment {
+    pub bytes: usize,
+    pub n_frames: usize,
+    /// Bits per region (diagnostics / Table 3).
+    pub region_bits: Vec<u64>,
+}
+
+/// Drives all regions of one camera over streaming segments.
+pub struct SegmentEncoder {
+    streams: Vec<RegionStream>,
+}
+
+impl SegmentEncoder {
+    pub fn new(regions: &[IRect], qp: f64) -> SegmentEncoder {
+        SegmentEncoder {
+            streams: regions.iter().map(|&r| RegionStream::new(r, qp as f32)).collect(),
+        }
+    }
+
+    pub fn n_regions(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Encode one segment (GOP): resets references so the segment is
+    /// independently decodable, then codes every frame of every region.
+    pub fn encode_segment(&mut self, frames: &[Frame]) -> EncodedSegment {
+        for s in self.streams.iter_mut() {
+            s.reset_gop();
+        }
+        let mut region_bits = vec![0u64; self.streams.len()];
+        for frame in frames {
+            for (ri, s) in self.streams.iter_mut().enumerate() {
+                let st = s.encode_frame(frame);
+                region_bits[ri] += st.bits;
+            }
+        }
+        let payload: u64 = region_bits.iter().sum();
+        let bytes = (payload as usize).div_ceil(8)
+            + self.streams.len() * frames.len() * REGION_HEADER_BYTES
+            + SEGMENT_HEADER_BYTES;
+        EncodedSegment { bytes, n_frames: frames.len(), region_bits }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::sim::Scenario;
+
+    fn frames(n: usize) -> Vec<Frame> {
+        let sc = Scenario::build(&Config::test_small().scenario);
+        let r = sc.renderer();
+        (0..n).map(|i| r.render(0, i)).collect()
+    }
+
+    #[test]
+    fn planes_shape_and_padding() {
+        let f = Frame::new(320, 192);
+        let p = Planes::from_frame_region(&f, IRect::new(0, 0, 50, 30));
+        assert_eq!(p.w, 64); // padded to MB multiple
+        assert_eq!(p.h, 32);
+        assert_eq!(p.cb.len(), 32 * 16);
+    }
+
+    #[test]
+    fn gray_conversion() {
+        let mut f = Frame::new(32, 32);
+        for y in 0..32 {
+            for x in 0..32 {
+                f.set(x, y, [100, 100, 100]);
+            }
+        }
+        let p = Planes::from_frame_region(&f, IRect::new(0, 0, 32, 32));
+        assert!((p.y[0] - 100.0).abs() < 0.5);
+        assert!((p.cb[0] - 128.0).abs() < 0.5);
+        assert!((p.cr[0] - 128.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn p_frames_are_smaller_than_i_frames() {
+        let fs = frames(5);
+        let mut rs = RegionStream::new(IRect::new(0, 0, 320, 192), 6.0);
+        let i_bits = rs.encode_frame(&fs[0]).bits;
+        let p_bits = rs.encode_frame(&fs[1]).bits;
+        assert!(
+            (p_bits as f64) < 0.8 * i_bits as f64,
+            "P frame {p_bits} not much smaller than I frame {i_bits}"
+        );
+    }
+
+    #[test]
+    fn reconstruction_quality_reasonable() {
+        let fs = frames(2);
+        let region = IRect::new(0, 0, 320, 192);
+        let mut rs = RegionStream::new(region, 4.0);
+        rs.encode_frame(&fs[0]);
+        let orig = Planes::from_frame_region(&fs[0], region);
+        let psnr = orig.psnr_luma(rs.last_recon().unwrap());
+        assert!(psnr > 30.0, "PSNR too low: {psnr}");
+    }
+
+    #[test]
+    fn lower_qp_better_quality_bigger_size() {
+        let fs = frames(1);
+        let region = IRect::new(0, 0, 320, 192);
+        let mut hi = RegionStream::new(region, 2.0);
+        let mut lo = RegionStream::new(region, 12.0);
+        let bits_hi = hi.encode_frame(&fs[0]).bits;
+        let bits_lo = lo.encode_frame(&fs[0]).bits;
+        assert!(bits_hi > bits_lo);
+        let orig = Planes::from_frame_region(&fs[0], region);
+        let p_hi = orig.psnr_luma(hi.last_recon().unwrap());
+        let p_lo = orig.psnr_luma(lo.last_recon().unwrap());
+        assert!(p_hi > p_lo, "{p_hi} vs {p_lo}");
+    }
+
+    #[test]
+    fn tiled_encoding_is_larger_than_whole_frame() {
+        // Table 3's mechanism: independent tiles degrade compression
+        let fs = frames(6);
+        let mut whole = SegmentEncoder::new(&[IRect::new(0, 0, 320, 192)], 6.0);
+        let tiles: Vec<IRect> = (0..4)
+            .flat_map(|ty| (0..4).map(move |tx| IRect::new(tx * 80, ty * 48, 80, 48)))
+            .collect();
+        let mut tiled = SegmentEncoder::new(&tiles, 6.0);
+        let a = whole.encode_segment(&fs);
+        let b = tiled.encode_segment(&fs);
+        assert!(
+            b.bytes > a.bytes,
+            "tiled {} should exceed whole-frame {}",
+            b.bytes,
+            a.bytes
+        );
+    }
+
+    #[test]
+    fn segment_reset_makes_first_frame_intra() {
+        let fs = frames(3);
+        let mut enc = SegmentEncoder::new(&[IRect::new(0, 0, 160, 96)], 6.0);
+        let s1 = enc.encode_segment(&fs);
+        let s2 = enc.encode_segment(&fs);
+        // identical input segments → identical sizes (reference was reset)
+        assert_eq!(s1.bytes, s2.bytes);
+    }
+
+    #[test]
+    fn longer_segments_compress_better_per_frame() {
+        let fs = frames(8);
+        let region = [IRect::new(0, 0, 320, 192)];
+        let mut enc_short = SegmentEncoder::new(&region, 6.0);
+        let mut total_short = 0;
+        for chunk in fs.chunks(2) {
+            total_short += enc_short.encode_segment(chunk).bytes;
+        }
+        let mut enc_long = SegmentEncoder::new(&region, 6.0);
+        let total_long = enc_long.encode_segment(&fs).bytes;
+        assert!(
+            total_long < total_short,
+            "8-frame GOP {total_long} should beat 4x 2-frame GOPs {total_short}"
+        );
+    }
+}

@@ -1,0 +1,152 @@
+//! Entropy-coding bit-cost model: zig-zag scan + (run, level) coding with
+//! JPEG-style magnitude categories.  We never emit an actual bitstream —
+//! only its exact size matters to the system — but the cost model follows
+//! the real coders' structure, so sizes respond to content the right way.
+
+use super::BLOCK;
+
+/// Zig-zag scan order for an 8×8 block.
+pub const ZIGZAG: [usize; 64] = {
+    let mut order = [0usize; 64];
+    let mut idx = 0;
+    let mut s = 0; // anti-diagonal index
+    while s < 15 {
+        if s % 2 == 0 {
+            // up-right
+            let mut y = if s < 8 { s } else { 7 };
+            loop {
+                let x = s - y;
+                if x > 7 {
+                    break;
+                }
+                order[idx] = y * 8 + x;
+                idx += 1;
+                if y == 0 {
+                    break;
+                }
+                y -= 1;
+            }
+        } else {
+            // down-left
+            let mut x = if s < 8 { s } else { 7 };
+            loop {
+                let y = s - x;
+                if y > 7 {
+                    break;
+                }
+                order[idx] = y * 8 + x;
+                idx += 1;
+                if x == 0 {
+                    break;
+                }
+                x -= 1;
+            }
+        }
+        s += 1;
+    }
+    order
+};
+
+/// Bits to encode magnitude `v` (category + sign/value bits).
+#[inline]
+fn magnitude_bits(v: i32) -> u32 {
+    let a = v.unsigned_abs();
+    // category = position of highest set bit
+    32 - a.leading_zeros()
+}
+
+/// Bit cost of one quantized 8×8 block: DC differential + AC (run, level)
+/// pairs + end-of-block marker.
+pub fn block_bits(levels: &[i32; BLOCK * BLOCK], prev_dc: i32) -> (u32, i32) {
+    let dc = levels[0];
+    let diff = dc - prev_dc;
+    // DC: ~4-bit category code + magnitude bits
+    let mut bits = 4 + magnitude_bits(diff) + 1;
+    // AC: run-length of zeros + level
+    let mut run = 0u32;
+    for &zz in ZIGZAG.iter().skip(1) {
+        let v = levels[zz];
+        if v == 0 {
+            run += 1;
+        } else {
+            // (run, category) code ≈ 6 bits amortized + magnitude bits
+            bits += 6 + (run / 16) * 7 + magnitude_bits(v) + 1;
+            run = 0;
+        }
+    }
+    bits += 4; // EOB
+    (bits, dc)
+}
+
+/// Bit cost of a motion vector differential (signed exp-Golomb-ish).
+pub fn mv_bits(dx: i32, dy: i32) -> u32 {
+    let one = |v: i32| {
+        let m = if v <= 0 { (-2 * v) as u32 } else { (2 * v - 1) as u32 };
+        2 * (32 - (m + 1).leading_zeros()) - 1
+    };
+    one(dx) + one(dy)
+}
+
+/// Macroblock mode signalling cost.
+pub const MODE_BITS: u32 = 3;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zigzag_is_permutation() {
+        let mut seen = [false; 64];
+        for &i in &ZIGZAG {
+            assert!(!seen[i], "duplicate {i}");
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        // canonical prefix
+        assert_eq!(&ZIGZAG[..10], &[0, 1, 8, 16, 9, 2, 3, 10, 17, 24]);
+    }
+
+    #[test]
+    fn zero_block_is_cheap() {
+        let z = [0i32; 64];
+        let (bits, dc) = block_bits(&z, 0);
+        assert_eq!(dc, 0);
+        assert!(bits < 16, "zero block cost {bits}");
+    }
+
+    #[test]
+    fn denser_blocks_cost_more() {
+        let mut sparse = [0i32; 64];
+        sparse[0] = 10;
+        sparse[1] = 3;
+        let mut dense = sparse;
+        for i in 0..32 {
+            dense[i] = 5 - (i as i32 % 10);
+        }
+        let (b1, _) = block_bits(&sparse, 0);
+        let (b2, _) = block_bits(&dense, 0);
+        assert!(b2 > b1 * 2, "{b2} vs {b1}");
+    }
+
+    #[test]
+    fn dc_differential_helps() {
+        let mut b = [0i32; 64];
+        b[0] = 200;
+        let (cold, _) = block_bits(&b, 0);
+        let (warm, _) = block_bits(&b, 198);
+        assert!(warm < cold);
+    }
+
+    #[test]
+    fn larger_magnitudes_cost_more_bits() {
+        assert!(magnitude_bits(1) < magnitude_bits(100));
+        assert_eq!(magnitude_bits(0), 0);
+        assert_eq!(magnitude_bits(-1), 1);
+    }
+
+    #[test]
+    fn mv_bits_grow_with_length() {
+        assert!(mv_bits(0, 0) <= mv_bits(1, 0));
+        assert!(mv_bits(1, 1) < mv_bits(8, 8));
+    }
+}

@@ -1,0 +1,30 @@
+//! Block-transform video codec — the offline-friendly stand-in for ffmpeg's
+//! H.264 (DESIGN.md §3).
+//!
+//! Structure mirrors the standard hybrid codec the paper describes in §2.2:
+//! 16×16 macroblocks, 8×8 DCT + quantization + run-length entropy costing,
+//! motion-compensated P frames inside a GOP (= one streaming segment),
+//! 4:2:0 chroma.  Regions (tile groups) are encoded *independently* — the
+//! property CrossRoI's tile-grouping algorithm optimizes against, because
+//! motion compensation cannot reference across region boundaries and every
+//! region pays per-frame header overhead (Table 3's amplification).
+//!
+//! The encoder keeps a real reconstruction loop (dequant + IDCT), so PSNR
+//! against the source is measurable and sizes respond to quantization the
+//! way a real codec's do.
+
+pub mod dct;
+pub mod encoder;
+pub mod entropy;
+pub mod motion;
+
+pub use encoder::{EncodedSegment, RegionStream, SegmentEncoder};
+
+/// Macroblock size in pixels.
+pub const MB: usize = 16;
+/// Transform block size.
+pub const BLOCK: usize = 8;
+/// Per-region per-frame container/header overhead in bytes.
+pub const REGION_HEADER_BYTES: usize = 14;
+/// Per-segment container overhead in bytes.
+pub const SEGMENT_HEADER_BYTES: usize = 48;

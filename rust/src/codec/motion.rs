@@ -1,0 +1,169 @@
+//! Macroblock motion search (three-step search, SAD cost) confined to a
+//! region's reconstructed reference plane.
+//!
+//! The confinement is the point: independently-coded regions cannot
+//! reference pixels outside themselves, so finer tilings find worse
+//! predictions for objects crossing boundaries — the compression-efficacy
+//! degradation CrossRoI's tile-grouping fights (§2.2, Table 3).
+
+use super::MB;
+
+/// A single luma plane with dimensions (row-major f32).
+pub struct Plane<'a> {
+    pub w: usize,
+    pub h: usize,
+    pub data: &'a [f32],
+}
+
+impl<'a> Plane<'a> {
+    #[inline]
+    fn at(&self, x: usize, y: usize) -> f32 {
+        self.data[y * self.w + x]
+    }
+}
+
+/// Sum of absolute differences between the MB at (bx,by) in `cur` and the
+/// MB at (bx+dx, by+dy) in `reference`; `None` if displaced outside.
+/// `early_exit`: give up once the partial SAD exceeds it.
+pub fn sad(
+    cur: &Plane,
+    reference: &Plane,
+    bx: usize,
+    by: usize,
+    dx: i32,
+    dy: i32,
+    early_exit: f32,
+) -> Option<f32> {
+    let rx = bx as i32 + dx;
+    let ry = by as i32 + dy;
+    if rx < 0 || ry < 0 || rx as usize + MB > reference.w || ry as usize + MB > reference.h {
+        return None;
+    }
+    let (rx, ry) = (rx as usize, ry as usize);
+    let mut acc = 0.0f32;
+    for y in 0..MB {
+        for x in 0..MB {
+            acc += (cur.at(bx + x, by + y) - reference.at(rx + x, ry + y)).abs();
+        }
+        if acc > early_exit {
+            return Some(acc);
+        }
+    }
+    Some(acc)
+}
+
+/// Rate-distortion λ for MV cost in SAD units per MV grid step: longer
+/// vectors cost bits, so ties (and near-ties) resolve to the shorter MV.
+const MV_LAMBDA: f32 = 2.0;
+
+/// Three-step search around (0,0); returns (dx, dy, sad).  The selection
+/// score is `SAD + λ·(|dx|+|dy|)` (rate-distortion–style), the returned
+/// SAD is the raw distortion of the winner.
+pub fn three_step_search(
+    cur: &Plane,
+    reference: &Plane,
+    bx: usize,
+    by: usize,
+) -> (i32, i32, f32) {
+    let mv_cost = |dx: i32, dy: i32| MV_LAMBDA * (dx.abs() + dy.abs()) as f32;
+    let mut best = (0i32, 0i32);
+    let mut best_sad = sad(cur, reference, bx, by, 0, 0, f32::INFINITY)
+        .expect("zero MV must be valid");
+    let mut best_score = best_sad; // zero MV has zero cost
+    let mut step = 4i32;
+    while step >= 1 {
+        let center = best;
+        for dy in [-step, 0, step] {
+            for dx in [-step, 0, step] {
+                if dx == 0 && dy == 0 {
+                    continue;
+                }
+                let cand = (center.0 + dx, center.1 + dy);
+                let cost = mv_cost(cand.0, cand.1);
+                let budget = best_score - cost;
+                if budget <= 0.0 {
+                    continue;
+                }
+                if let Some(s) = sad(cur, reference, bx, by, cand.0, cand.1, budget) {
+                    if s + cost < best_score {
+                        best_score = s + cost;
+                        best_sad = s;
+                        best = cand;
+                    }
+                }
+            }
+        }
+        step /= 2;
+    }
+    (best.0, best.1, best_sad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gradient_plane(w: usize, h: usize, shift: i32) -> Vec<f32> {
+        let mut d = vec![0.0f32; w * h];
+        for y in 0..h {
+            for x in 0..w {
+                // a smooth, non-periodic texture translated by `shift`
+                // (smooth ⇒ SAD decreases toward the true displacement,
+                // so the three-step search can follow the gradient)
+                let sx = (x as i32 - shift) as f32;
+                let _ = y;
+                // x-only texture: SAD is monotone in |dx - true shift| and
+                // flat in dy, so the search is exactly analyzable
+                d[y * w + x] = 60.0 * (sx * 0.13).sin() + 20.0 * (sx * 0.021).sin();
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn finds_exact_translation() {
+        let w = 64;
+        let h = 48;
+        let prev = gradient_plane(w, h, 0);
+        let cur = gradient_plane(w, h, 3); // content moved right by 3
+        let p_prev = Plane { w, h, data: &prev };
+        let p_cur = Plane { w, h, data: &cur };
+        let (dx, dy, s) = three_step_search(&p_cur, &p_prev, 16, 16);
+        assert_eq!((dx, dy), (-3, 0));
+        assert!(s < 1e-3, "sad {s}");
+    }
+
+    #[test]
+    fn static_content_prefers_zero_mv() {
+        let w = 64;
+        let h = 48;
+        let a = gradient_plane(w, h, 0);
+        let p = Plane { w, h, data: &a };
+        let (dx, dy, s) = three_step_search(&p, &p, 32, 16);
+        assert_eq!((dx, dy, s), (0, 0, 0.0));
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        let w = 32;
+        let h = 32;
+        let a = gradient_plane(w, h, 0);
+        let p = Plane { w, h, data: &a };
+        assert!(sad(&p, &p, 0, 0, -1, 0, f32::INFINITY).is_none());
+        assert!(sad(&p, &p, 16, 16, 1, 0, f32::INFINITY).is_none());
+        assert!(sad(&p, &p, 16, 16, 0, 0, f32::INFINITY).is_some());
+    }
+
+    #[test]
+    fn confinement_blocks_cross_region_motion() {
+        // a narrow region cannot express the 8px shift that a wide one can:
+        // emulate by searching in a 16-wide reference (no room to displace)
+        let w = 16;
+        let h = 32;
+        let prev = gradient_plane(w, h, 0);
+        let cur = gradient_plane(w, h, 8);
+        let pp = Plane { w, h, data: &prev };
+        let pc = Plane { w, h, data: &cur };
+        let (_, _, s) = three_step_search(&pc, &pp, 0, 0);
+        assert!(s > 100.0, "confined search should not find the true motion");
+    }
+}

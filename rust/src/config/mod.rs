@@ -1,0 +1,285 @@
+//! Configuration system: typed scenario + system configs, a TOML-subset
+//! loader (`parser`), and presets matching the paper's evaluation setup
+//! (§5.1: 5 cameras, 10 fps, 60 s profile + 120 s eval, 30 Mbps / 10 ms,
+//! 64 px tiles ≙ 16 px at our 320x192 working resolution).
+
+pub mod parser;
+
+use anyhow::{bail, Context, Result};
+
+/// World/scenario configuration (the "dataset" knobs).
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    /// Master seed; every stochastic component forks from it.
+    pub seed: u64,
+    /// Number of cameras (paper scene: 5).
+    pub n_cameras: usize,
+    /// Frame rate.  The paper runs 10 fps at 1080p on 2× RTX 2080; this
+    /// testbed runs 320×192 on a CPU PJRT client, so the rate is scaled
+    /// to 5 fps to keep the Baseline *just above* the real-time line the
+    /// way the paper's was (52 Hz vs a 50 Hz requirement) — see
+    /// EXPERIMENTS.md §Scaling.
+    pub fps: f64,
+    /// Offline profiling window length in seconds (paper: first 60 s).
+    pub profile_secs: f64,
+    /// Online evaluation window length in seconds (paper: last 120 s).
+    pub eval_secs: f64,
+    /// Poisson vehicle arrival rate per approach arm (vehicles/s).
+    pub arrival_rate: f64,
+    /// Vehicle speed range (m/s).
+    pub speed_min: f64,
+    pub speed_max: f64,
+    /// Fraction of trucks (larger boxes).
+    pub truck_fraction: f64,
+    /// RoI mask tile size in pixels (§5.1.3; 16 px ≙ paper's 64 px @1080p).
+    pub tile_px: u32,
+    /// Sensor noise std (u8 scale / 255).
+    pub sensor_noise: f64,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            seed: 2021,
+            n_cameras: 5,
+            fps: 5.0,
+            profile_secs: 60.0,
+            eval_secs: 120.0,
+            arrival_rate: 0.12,
+            speed_min: 7.0,
+            speed_max: 13.0,
+            truck_fraction: 0.12,
+            tile_px: 16,
+            sensor_noise: 0.015,
+        }
+    }
+}
+
+impl ScenarioConfig {
+    pub fn total_secs(&self) -> f64 {
+        self.profile_secs + self.eval_secs
+    }
+
+    pub fn total_frames(&self) -> usize {
+        (self.total_secs() * self.fps).round() as usize
+    }
+
+    pub fn profile_frames(&self) -> usize {
+        (self.profile_secs * self.fps).round() as usize
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_cameras == 0 || self.n_cameras > 16 {
+            bail!("n_cameras must be in 1..=16, got {}", self.n_cameras);
+        }
+        if self.fps <= 0.0 {
+            bail!("fps must be positive");
+        }
+        if self.speed_min <= 0.0 || self.speed_max < self.speed_min {
+            bail!("invalid speed range");
+        }
+        if !(0.0..=1.0).contains(&self.truck_fraction) {
+            bail!("truck_fraction must be in [0,1]");
+        }
+        if self.tile_px == 0 {
+            bail!("tile_px must be positive");
+        }
+        Ok(())
+    }
+
+    /// Set a field by dotted key (used by the TOML loader and CLI overrides).
+    pub fn set(&mut self, key: &str, value: &parser::Value) -> Result<()> {
+        match key {
+            "seed" => self.seed = value.as_u64().context("seed")?,
+            "n_cameras" => self.n_cameras = value.as_u64().context("n_cameras")? as usize,
+            "fps" => self.fps = value.as_f64().context("fps")?,
+            "profile_secs" => self.profile_secs = value.as_f64().context("profile_secs")?,
+            "eval_secs" => self.eval_secs = value.as_f64().context("eval_secs")?,
+            "arrival_rate" => self.arrival_rate = value.as_f64().context("arrival_rate")?,
+            "speed_min" => self.speed_min = value.as_f64().context("speed_min")?,
+            "speed_max" => self.speed_max = value.as_f64().context("speed_max")?,
+            "truck_fraction" => self.truck_fraction = value.as_f64().context("truck_fraction")?,
+            "tile_px" => self.tile_px = value.as_u64().context("tile_px")? as u32,
+            "sensor_noise" => self.sensor_noise = value.as_f64().context("sensor_noise")?,
+            other => bail!("unknown scenario key {other:?}"),
+        }
+        Ok(())
+    }
+}
+
+/// System configuration (the pipeline knobs the paper sweeps).
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    /// Shared camera→server bandwidth in Mbps.  The paper emulates a
+    /// 30 Mbps WiFi for 1080p streams; our 320×192 streams carry ~1/17
+    /// the bitrate, so the default link is scaled to 1.8 Mbps to preserve
+    /// the paper's link utilization (≈0.85 for Baseline) and therefore
+    /// its queueing behaviour — see EXPERIMENTS.md §Scaling.
+    pub bandwidth_mbps: f64,
+    /// Round-trip time in ms (paper: 10).
+    pub rtt_ms: f64,
+    /// Streaming segment length in seconds (paper default: 1 s, Fig. 11).
+    pub segment_secs: f64,
+    /// Codec quantization parameter (higher ⇒ smaller/worse).
+    pub qp: f64,
+    /// SVM filter kernel non-linearity γ (Fig. 9 sweep).  The paper's
+    /// operating point is 1e-4 on 1080p-pixel features; ours is ~1 because
+    /// features are pre-scaled to O(1) (γ scales with 1/feature-scale²).
+    pub svm_gamma: f64,
+    /// RANSAC residual threshold multiplier θ (θ·MAD; Fig. 10 sweep; this
+    /// repo's operating point — see filters::ransac::RansacParams).
+    pub ransac_theta: f64,
+    /// Objectness threshold for the detector post-processor.
+    pub objectness_threshold: f64,
+    /// Directory with AOT HLO artifacts + meta.json.
+    pub artifacts_dir: String,
+    /// Reducto accuracy target; `None` disables frame filtering.
+    pub reducto_target: Option<f64>,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            bandwidth_mbps: 1.8,
+            rtt_ms: 10.0,
+            segment_secs: 1.0,
+            qp: 6.0,
+            svm_gamma: 1.0,
+            ransac_theta: 0.5,
+            objectness_threshold: 0.25,
+            artifacts_dir: "artifacts".to_string(),
+            reducto_target: None,
+        }
+    }
+}
+
+impl SystemConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.bandwidth_mbps <= 0.0 {
+            bail!("bandwidth must be positive");
+        }
+        if self.segment_secs <= 0.0 {
+            bail!("segment length must be positive");
+        }
+        if self.qp < 1.0 || self.qp > 50.0 {
+            bail!("qp out of range [1, 50]");
+        }
+        if let Some(t) = self.reducto_target {
+            if !(0.0..=1.0).contains(&t) {
+                bail!("reducto target must be in [0,1]");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn set(&mut self, key: &str, value: &parser::Value) -> Result<()> {
+        match key {
+            "bandwidth_mbps" => self.bandwidth_mbps = value.as_f64().context("bandwidth_mbps")?,
+            "rtt_ms" => self.rtt_ms = value.as_f64().context("rtt_ms")?,
+            "segment_secs" => self.segment_secs = value.as_f64().context("segment_secs")?,
+            "qp" => self.qp = value.as_f64().context("qp")?,
+            "svm_gamma" => self.svm_gamma = value.as_f64().context("svm_gamma")?,
+            "ransac_theta" => self.ransac_theta = value.as_f64().context("ransac_theta")?,
+            "objectness_threshold" => {
+                self.objectness_threshold = value.as_f64().context("objectness_threshold")?
+            }
+            "artifacts_dir" => {
+                self.artifacts_dir = value.as_str().context("artifacts_dir")?.to_string()
+            }
+            "reducto_target" => self.reducto_target = Some(value.as_f64().context("reducto_target")?),
+            other => bail!("unknown system key {other:?}"),
+        }
+        Ok(())
+    }
+}
+
+/// Full configuration = scenario + system.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub scenario: ScenarioConfig,
+    pub system: SystemConfig,
+}
+
+impl Config {
+    /// Paper evaluation preset (§5.1).
+    pub fn paper() -> Self {
+        Config::default()
+    }
+
+    /// Small, fast preset for unit/integration tests.
+    pub fn test_small() -> Self {
+        let mut c = Config::default();
+        c.scenario.profile_secs = 12.0;
+        c.scenario.eval_secs = 8.0;
+        c.scenario.arrival_rate = 0.25;
+        c
+    }
+
+    /// Parse a TOML-subset document into a config.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = parser::parse(text)?;
+        let mut cfg = Config::default();
+        for (section, key, value) in doc.entries() {
+            match section {
+                "scenario" => cfg.scenario.set(key, value)?,
+                "system" => cfg.system.set(key, value)?,
+                "" => bail!("top-level key {key:?} outside a section"),
+                other => bail!("unknown section {other:?}"),
+            }
+        }
+        cfg.scenario.validate()?;
+        cfg.system.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading config {path}"))?;
+        Config::from_toml(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        let c = Config::paper();
+        c.scenario.validate().unwrap();
+        c.system.validate().unwrap();
+        assert_eq!(c.scenario.total_frames(), 900); // 180 s at 5 fps
+        assert_eq!(c.scenario.profile_frames(), 300);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let cfg = Config::from_toml(
+            r#"
+            # paper-like scenario
+            [scenario]
+            seed = 7
+            n_cameras = 3
+            fps = 5.0
+
+            [system]
+            segment_secs = 2.0
+            svm_gamma = 1e-3
+            artifacts_dir = "artifacts"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.scenario.seed, 7);
+        assert_eq!(cfg.scenario.n_cameras, 3);
+        assert_eq!(cfg.system.segment_secs, 2.0);
+        assert!((cfg.system.svm_gamma - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        assert!(Config::from_toml("[scenario]\nbogus = 1").is_err());
+        assert!(Config::from_toml("[nope]\nx = 1").is_err());
+        assert!(Config::from_toml("[scenario]\nn_cameras = 0").is_err());
+        assert!(Config::from_toml("[system]\nqp = 99").is_err());
+    }
+}

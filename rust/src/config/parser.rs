@@ -1,0 +1,226 @@
+//! TOML-subset parser (the `toml` crate is unavailable offline).
+//!
+//! Supported: `[section]` headers, `key = value` with integers, floats
+//! (including scientific notation), booleans, quoted strings, arrays of
+//! scalars, `#` comments.  That covers every config this project reads;
+//! unsupported TOML (dotted keys, tables-in-arrays, multiline strings)
+//! fails loudly rather than misparsing.
+
+use anyhow::{bail, Result};
+
+/// A parsed scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Int(i) => Ok(*i as f64),
+            Value::Float(f) => Ok(*f),
+            other => bail!("expected number, got {other:?}"),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        match self {
+            Value::Int(i) if *i >= 0 => Ok(*i as u64),
+            other => bail!("expected non-negative integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+}
+
+/// A parsed document: ordered `(section, key, value)` triples.
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    entries: Vec<(String, String, Value)>,
+}
+
+impl Document {
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &str, &Value)> {
+        self.entries.iter().map(|(s, k, v)| (s.as_str(), k.as_str(), v))
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries
+            .iter()
+            .find(|(s, k, _)| s == section && k == key)
+            .map(|(_, _, v)| v)
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Document> {
+    let mut doc = Document::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: malformed section header {line:?}", lineno + 1);
+            };
+            section = name.trim().to_string();
+            if section.is_empty() {
+                bail!("line {}: empty section name", lineno + 1);
+            }
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected key = value, got {line:?}", lineno + 1);
+        };
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        doc.entries.push((section.clone(), key.to_string(), value));
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' inside a quoted string does not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    let s = s.trim();
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let Some(body) = body.strip_suffix(']') else {
+            bail!("unterminated array {s:?}");
+        };
+        let mut items = Vec::new();
+        for part in split_top_level(body) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let Some(body) = body.strip_suffix('"') else {
+            bail!("unterminated string {s:?}");
+        };
+        return Ok(Value::Str(body.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if !s.contains(['.', 'e', 'E']) {
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+/// Split on commas that are not nested in quotes (arrays are flat here).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+            top = 1          # comment
+            [a]
+            x = 42
+            y = -1.5e2
+            flag = true
+            name = "hello # not a comment"
+            arr = [1, 2.5, "three"]
+            [b]
+            x = 0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top"), Some(&Value::Int(1)));
+        assert_eq!(doc.get("a", "x"), Some(&Value::Int(42)));
+        assert_eq!(doc.get("a", "y"), Some(&Value::Float(-150.0)));
+        assert_eq!(doc.get("a", "flag"), Some(&Value::Bool(true)));
+        assert_eq!(
+            doc.get("a", "name").unwrap().as_str().unwrap(),
+            "hello # not a comment"
+        );
+        match doc.get("a", "arr").unwrap() {
+            Value::Arr(items) => assert_eq!(items.len(), 3),
+            other => panic!("expected array, got {other:?}"),
+        }
+        assert_eq!(doc.get("b", "x"), Some(&Value::Int(0)));
+    }
+
+    #[test]
+    fn errors_are_loud() {
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("key").is_err());
+        assert!(parse("k = ").is_err());
+        assert!(parse("k = \"unterminated").is_err());
+        assert!(parse("k = [1, 2").is_err());
+    }
+
+    #[test]
+    fn value_coercions() {
+        assert_eq!(Value::Int(3).as_f64().unwrap(), 3.0);
+        assert!(Value::Str("x".into()).as_f64().is_err());
+        assert!(Value::Int(-1).as_u64().is_err());
+    }
+}

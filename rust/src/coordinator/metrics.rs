@@ -1,0 +1,96 @@
+//! Metrics reported per method — one row of Fig. 8 / Table 4.
+
+/// End-to-end latency decomposition (Fig. 8f's stacked bars).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LatencyBreakdown {
+    /// Capture-to-encode-done (includes segment queueing — the dominant
+    /// term, §5.3.3).
+    pub camera: f64,
+    /// Encode-done to server arrival (link queueing + tx + propagation).
+    pub network: f64,
+    /// Arrival to inference completion (server queue + inference).
+    pub server: f64,
+}
+
+impl LatencyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.camera + self.network + self.server
+    }
+}
+
+/// Everything a method run produces.
+#[derive(Debug, Clone, Default)]
+pub struct MethodReport {
+    pub method: String,
+    // --- §5.1.2 metric 1: accuracy ---
+    pub accuracy: f64,
+    /// Missed unique vehicles per evaluated frame (Fig. 8b).
+    pub missed_per_frame: Vec<usize>,
+    /// Total vehicle appearances in the reference window.
+    pub total_appearances: usize,
+    // --- metric 2: network overhead ---
+    /// Average Mbps per camera over the eval window (Fig. 8c bars).
+    pub network_mbps_per_cam: Vec<f64>,
+    pub network_mbps_total: f64,
+    pub bytes_total: u64,
+    // --- metric 3: throughput ---
+    /// Server inference throughput in Hz (frames per second of inference
+    /// busy time, measured on the real executables).
+    pub server_hz: f64,
+    /// Camera-side encode throughput in fps (mean across cameras).
+    pub camera_fps: f64,
+    // --- metric 4: end-to-end latency ---
+    pub latency: LatencyBreakdown,
+    pub latency_p95: f64,
+    // --- diagnostics ---
+    /// Frames discarded by the frame filter (Table 4 "Frames Reduced").
+    pub frames_reduced: usize,
+    pub frames_total: usize,
+    /// |M| — mask tiles kept (0 for full-frame methods means "all").
+    pub mask_tiles: usize,
+    /// Mean mask coverage fraction across cameras.
+    pub mask_coverage: f64,
+    /// Regions per camera after grouping (diagnostic for §4.3).
+    pub regions_per_cam: Vec<usize>,
+    /// Wall-clock cost of running the method's offline phase (seconds).
+    pub offline_seconds: f64,
+}
+
+impl MethodReport {
+    /// One formatted row for the bench tables.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<18} acc={:.3} net={:6.2} Mbps  srv={:7.1} Hz  cam={:6.1} fps  e2e={:6.3} s (cam {:.3} / net {:.3} / srv {:.3})",
+            self.method,
+            self.accuracy,
+            self.network_mbps_total,
+            self.server_hz,
+            self.camera_fps,
+            self.latency.total(),
+            self.latency.camera,
+            self.latency.network,
+            self.latency.server,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_total() {
+        let l = LatencyBreakdown { camera: 1.0, network: 0.25, server: 0.5 };
+        assert!((l.total() - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_formats() {
+        let mut r = MethodReport::default();
+        r.method = "CrossRoI".to_string();
+        r.accuracy = 0.999;
+        let row = r.row();
+        assert!(row.contains("CrossRoI"));
+        assert!(row.contains("acc=0.999"));
+    }
+}

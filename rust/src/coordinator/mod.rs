@@ -1,0 +1,19 @@
+//! The L3 coordinator: CrossRoI's two-phase workflow (§4.1).
+//!
+//! [`offline`] runs modules ①–④ (ReID → tandem filters → region
+//! association → RoI optimization → tile grouping) over the profile
+//! window and produces each camera's plan; [`online`] drives the
+//! streaming pipeline (⑤ crop/group/encode/stream, ⑥ RoI-CNN inference)
+//! over the evaluation window, with real measured compute and a
+//! discrete-event network/queueing model, and scores the unique-vehicle
+//! query.  [`metrics`] defines the report every bench prints.
+
+pub mod metrics;
+pub mod offline;
+pub mod online;
+
+pub use metrics::{LatencyBreakdown, MethodReport};
+pub use offline::{build_plan, OfflinePlan};
+pub use online::{
+    baseline_reference, run_ablation, run_method, Infer, Method, NativeInfer, RuntimeInfer,
+};

@@ -1,0 +1,68 @@
+//! Bbox feature maps shared by the two filters: the paper feeds
+//! `<left, top, width, height>` 4-vectors, with "higher order features ...
+//! to make the filter fit ReID results better" (§4.2.2).
+
+use crate::util::geometry::Rect;
+
+/// Full degree-2 polynomial feature map of a bbox (15 features): constant,
+/// the 4 coordinates, and all 10 pairwise products.  The cross-camera bbox
+/// mapping is projective (a homography of the ground plane); a full
+/// quadratic is its 2nd-order Taylor expansion and fits it to a few pixels
+/// across the view.  Coordinates are pre-scaled to O(1) so the normal
+/// equations stay well-conditioned.
+pub fn poly2(b: &Rect) -> Vec<f64> {
+    let s = 0.01; // pixels -> O(1)
+    let v = [b.left * s, b.top * s, b.width * s, b.height * s];
+    let mut f = Vec::with_capacity(POLY2_DIM);
+    f.push(1.0);
+    f.extend_from_slice(&v);
+    for i in 0..4 {
+        for j in i..4 {
+            f.push(v[i] * v[j]);
+        }
+    }
+    f
+}
+
+/// Number of features produced by [`poly2`].
+pub const POLY2_DIM: usize = 15;
+
+/// Plain scaled 4-vector `[l, t, w, h]` (the SVM's input space).
+pub fn bbox4(b: &Rect) -> [f64; 4] {
+    let s = 0.01;
+    [b.left * s, b.top * s, b.width * s, b.height * s]
+}
+
+/// Target 4-vector for regression (same scaling as the inputs).
+pub fn target4(b: &Rect) -> [f64; 4] {
+    bbox4(b)
+}
+
+/// L1 residual between a predicted and an actual target vector.
+pub fn residual_l1(pred: &[f64], actual: &[f64; 4]) -> f64 {
+    pred.iter().zip(actual.iter()).map(|(p, a)| (p - a).abs()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poly2_shape_and_content() {
+        let b = Rect::new(100.0, 50.0, 30.0, 20.0);
+        let f = poly2(&b);
+        assert_eq!(f.len(), POLY2_DIM);
+        assert_eq!(f[0], 1.0);
+        assert!((f[1] - 1.0).abs() < 1e-12); // 100 * 0.01
+        assert!((f[5] - 1.0).abs() < 1e-12); // l²
+        assert!((f[6] - 0.5).abs() < 1e-12); // l·t
+        assert!((f[14] - 0.04).abs() < 1e-12); // h²
+    }
+
+    #[test]
+    fn residual_zero_for_exact() {
+        let b = Rect::new(10.0, 20.0, 30.0, 40.0);
+        let t = target4(&b);
+        assert_eq!(residual_l1(&t.to_vec(), &t), 0.0);
+    }
+}

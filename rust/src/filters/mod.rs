@@ -1,0 +1,18 @@
+//! Statistical ReID filters (§4.2) — the paper's answer to error-prone
+//! ReID: a tandem of a RANSAC **regression filter** (removes false
+//! positives by learning the physical cross-camera bbox mapping, O1) and an
+//! RBF-**SVM filter** (removes false negatives by classifying the
+//! positive/negative regions of each camera pair in bbox feature space).
+//!
+//! Both are reimplementations of the sklearn modules the paper uses
+//! (RANSACRegressor with polynomial features; SVC with RBF kernel trained
+//! by SMO) — see DESIGN.md §3.
+
+pub mod features;
+pub mod ransac;
+pub mod svm;
+pub mod tandem;
+
+pub use ransac::{RansacFit, RansacParams};
+pub use svm::{Svm, SvmParams};
+pub use tandem::{FilterReport, TandemFilters};

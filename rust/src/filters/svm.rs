@@ -1,0 +1,310 @@
+//! RBF-kernel soft-margin SVM trained with (simplified) SMO — the second
+//! tandem filter (§4.2.3).
+//!
+//! The paper trains *and applies* the SVM on the same samples: it is a
+//! data filter, not a generalizing classifier.  Negative samples that land
+//! in the positive region (`f(x) > 0`) are the false negatives to remove;
+//! γ controls kernel non-linearity exactly as in Fig. 9 (tiny γ ⇒ nearly
+//! linear boundary, many negative outliers; huge γ ⇒ memorizes everything,
+//! no outliers).
+
+use crate::util::rng::Rng;
+
+/// SVM hyperparameters.
+#[derive(Debug, Clone)]
+pub struct SvmParams {
+    /// RBF kernel width γ (paper default 1e-4 after the Fig. 9 sweep —
+    /// note the paper's bboxes are 1080p-scale while ours are pre-scaled
+    /// to O(1) features, so sweeps here cover a γ grid around 1).
+    pub gamma: f64,
+    /// Soft-margin C (negative class; the positive class is weighted).
+    pub c: f64,
+    /// Positive-class C multiplier.  `None` ⇒ "balanced": n_neg / n_pos,
+    /// the sklearn `class_weight="balanced"` convention — the positive
+    /// class is the scarce one (O2) and must not be drowned by the false
+    /// negatives contaminating its region.
+    pub pos_weight: Option<f64>,
+    /// SMO convergence tolerance.
+    pub tol: f64,
+    /// Max passes without alpha changes before declaring convergence.
+    pub max_passes: usize,
+    /// Hard cap on SMO iterations.
+    pub max_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for SvmParams {
+    fn default() -> Self {
+        SvmParams {
+            gamma: 1.0,
+            c: 4.0,
+            pos_weight: None,
+            tol: 1e-3,
+            max_passes: 4,
+            max_iters: 40_000,
+            seed: 0x5F4,
+        }
+    }
+}
+
+/// A trained SVM (stores its own training set — it is applied back onto
+/// exactly those samples).
+pub struct Svm {
+    x: Vec<Vec<f64>>,
+    y: Vec<f64>,
+    alpha: Vec<f64>,
+    b: f64,
+    gamma: f64,
+}
+
+fn rbf(a: &[f64], b: &[f64], gamma: f64) -> f64 {
+    let d2: f64 = a.iter().zip(b).map(|(p, q)| (p - q) * (p - q)).sum();
+    (-gamma * d2).exp()
+}
+
+impl Svm {
+    /// Train on `(x, y)` with y ∈ {+1, −1} using simplified SMO.
+    pub fn train(x: Vec<Vec<f64>>, y: Vec<f64>, params: &SvmParams) -> Svm {
+        assert_eq!(x.len(), y.len());
+        assert!(y.iter().all(|&v| v == 1.0 || v == -1.0), "labels must be ±1");
+        let n = x.len();
+        let mut alpha = vec![0.0f64; n];
+        let mut b = 0.0f64;
+        if n == 0 {
+            return Svm { x, y, alpha, b, gamma: params.gamma };
+        }
+        let mut rng = Rng::new(params.seed).fork(n as u64);
+        // per-class soft-margin bound
+        let n_pos = y.iter().filter(|&&v| v > 0.0).count().max(1);
+        let n_neg = (n - n_pos).max(1);
+        let pos_w = params.pos_weight.unwrap_or(n_neg as f64 / n_pos as f64).max(1.0);
+        let c_of = |label: f64| if label > 0.0 { params.c * pos_w } else { params.c };
+
+        // precompute the kernel matrix when it fits (n ≤ ~3000)
+        let kmat: Option<Vec<f32>> = if n * n <= 9_000_000 {
+            let mut k = vec![0.0f32; n * n];
+            for i in 0..n {
+                for j in i..n {
+                    let v = rbf(&x[i], &x[j], params.gamma) as f32;
+                    k[i * n + j] = v;
+                    k[j * n + i] = v;
+                }
+            }
+            Some(k)
+        } else {
+            None
+        };
+        let kernel = |i: usize, j: usize, x: &[Vec<f64>]| -> f64 {
+            match &kmat {
+                Some(k) => k[i * n + j] as f64,
+                None => rbf(&x[i], &x[j], params.gamma),
+            }
+        };
+        let f = |i: usize, alpha: &[f64], b: f64, x: &[Vec<f64>], y: &[f64]| -> f64 {
+            let mut acc = b;
+            for j in 0..n {
+                if alpha[j] != 0.0 {
+                    acc += alpha[j] * y[j] * kernel(j, i, x);
+                }
+            }
+            acc
+        };
+
+        let mut passes = 0;
+        let mut iters = 0;
+        while passes < params.max_passes && iters < params.max_iters {
+            let mut changed = 0;
+            for i in 0..n {
+                iters += 1;
+                let ei = f(i, &alpha, b, &x, &y) - y[i];
+                let ci = c_of(y[i]);
+                let kkt_violated = (y[i] * ei < -params.tol && alpha[i] < ci)
+                    || (y[i] * ei > params.tol && alpha[i] > 0.0);
+                if !kkt_violated {
+                    continue;
+                }
+                // pick a random j != i
+                let mut j = rng.below(n - 1);
+                if j >= i {
+                    j += 1;
+                }
+                let cj = c_of(y[j]);
+                let ej = f(j, &alpha, b, &x, &y) - y[j];
+                let (ai_old, aj_old) = (alpha[i], alpha[j]);
+                let (lo, hi) = if y[i] != y[j] {
+                    ((aj_old - ai_old).max(0.0), (ci + aj_old - ai_old).min(cj))
+                } else {
+                    ((ai_old + aj_old - ci).max(0.0), (ai_old + aj_old).min(cj))
+                };
+                if (hi - lo).abs() < 1e-12 {
+                    continue;
+                }
+                let eta = 2.0 * kernel(i, j, &x) - kernel(i, i, &x) - kernel(j, j, &x);
+                if eta >= 0.0 {
+                    continue;
+                }
+                let mut aj = aj_old - y[j] * (ei - ej) / eta;
+                aj = aj.clamp(lo, hi);
+                if (aj - aj_old).abs() < 1e-6 {
+                    continue;
+                }
+                let ai = ai_old + y[i] * y[j] * (aj_old - aj);
+                alpha[i] = ai;
+                alpha[j] = aj;
+                let b1 = b - ei
+                    - y[i] * (ai - ai_old) * kernel(i, i, &x)
+                    - y[j] * (aj - aj_old) * kernel(i, j, &x);
+                let b2 = b - ej
+                    - y[i] * (ai - ai_old) * kernel(i, j, &x)
+                    - y[j] * (aj - aj_old) * kernel(j, j, &x);
+                b = if ai > 0.0 && ai < ci {
+                    b1
+                } else if aj > 0.0 && aj < cj {
+                    b2
+                } else {
+                    (b1 + b2) / 2.0
+                };
+                changed += 1;
+            }
+            if changed == 0 {
+                passes += 1;
+            } else {
+                passes = 0;
+            }
+        }
+        Svm { x, y, alpha, b, gamma: params.gamma }
+    }
+
+    /// Decision value for an arbitrary point.
+    pub fn decision(&self, p: &[f64]) -> f64 {
+        let mut acc = self.b;
+        for j in 0..self.x.len() {
+            if self.alpha[j] != 0.0 {
+                acc += self.alpha[j] * self.y[j] * rbf(&self.x[j], p, self.gamma);
+            }
+        }
+        acc
+    }
+
+    /// Decision values for the training samples themselves (the filter's
+    /// application mode).
+    pub fn train_decisions(&self) -> Vec<f64> {
+        (0..self.x.len()).map(|i| self.decision(&self.x[i])).collect()
+    }
+
+    /// Indices of *negative outliers*: training samples labelled −1 that
+    /// the model places in the positive region — the paper's false
+    /// negatives (§4.2.3).
+    pub fn negative_outliers(&self) -> Vec<usize> {
+        self.train_decisions()
+            .iter()
+            .enumerate()
+            .filter(|(i, &d)| self.y[*i] < 0.0 && d > 0.0)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn n_support(&self) -> usize {
+        self.alpha.iter().filter(|&&a| a > 1e-9).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 2-D toy set: positives in a disk around the origin, negatives in a
+    /// ring — plus some mislabelled negatives *inside* the disk.
+    fn toy(n: usize, planted: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let a = rng.range(0.0, std::f64::consts::TAU);
+            let r = rng.range(0.0, 0.8);
+            x.push(vec![r * a.cos(), r * a.sin()]);
+            y.push(1.0);
+        }
+        for _ in 0..n {
+            let a = rng.range(0.0, std::f64::consts::TAU);
+            let r = rng.range(1.6, 2.6);
+            x.push(vec![r * a.cos(), r * a.sin()]);
+            y.push(-1.0);
+        }
+        let mut idx = Vec::new();
+        for _ in 0..planted {
+            let a = rng.range(0.0, std::f64::consts::TAU);
+            let r = rng.range(0.0, 0.5);
+            x.push(vec![r * a.cos(), r * a.sin()]);
+            y.push(-1.0); // mislabelled: negative inside the positive disk
+            idx.push(x.len() - 1);
+        }
+        (x, y, idx)
+    }
+
+    #[test]
+    fn separable_data_classifies_cleanly() {
+        let (x, y, _) = toy(60, 0, 1);
+        let svm = Svm::train(x.clone(), y.clone(), &SvmParams::default());
+        let correct = svm
+            .train_decisions()
+            .iter()
+            .zip(&y)
+            .filter(|(d, &l)| d.signum() == l)
+            .count();
+        assert!(correct as f64 / y.len() as f64 > 0.95, "{correct}/{}", y.len());
+        assert!(svm.n_support() > 0);
+    }
+
+    #[test]
+    fn finds_planted_negative_outliers() {
+        let (x, y, planted) = toy(80, 8, 2);
+        let svm = Svm::train(x, y, &SvmParams::default());
+        let outliers = svm.negative_outliers();
+        let found = planted.iter().filter(|i| outliers.contains(i)).count();
+        assert!(found >= 6, "found only {found}/8 planted FNs; outliers={outliers:?}");
+    }
+
+    #[test]
+    fn huge_gamma_memorizes_no_outliers() {
+        // the Fig. 9 right-end behaviour: overfit kernel finds no outliers
+        let (x, y, _) = toy(60, 6, 3);
+        let svm = Svm::train(
+            x,
+            y,
+            &SvmParams { gamma: 500.0, c: 100.0, ..Default::default() },
+        );
+        assert!(
+            svm.negative_outliers().len() <= 1,
+            "overfit SVM still flags {} outliers",
+            svm.negative_outliers().len()
+        );
+    }
+
+    #[test]
+    fn tiny_gamma_flags_more_than_huge() {
+        let (x, y, _) = toy(60, 6, 4);
+        let lo = Svm::train(x.clone(), y.clone(), &SvmParams { gamma: 0.05, ..Default::default() })
+            .negative_outliers()
+            .len();
+        let hi = Svm::train(x, y, &SvmParams { gamma: 500.0, c: 100.0, ..Default::default() })
+            .negative_outliers()
+            .len();
+        assert!(lo >= hi, "gamma sweep not monotone-ish: lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn empty_training_set() {
+        let svm = Svm::train(Vec::new(), Vec::new(), &SvmParams::default());
+        assert!(svm.negative_outliers().is_empty());
+        assert_eq!(svm.decision(&[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let (x, y, _) = toy(40, 4, 5);
+        let a = Svm::train(x.clone(), y.clone(), &SvmParams::default()).train_decisions();
+        let b = Svm::train(x, y, &SvmParams::default()).train_decisions();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,38 @@
+//! # CrossRoI — cross-camera region-of-interest optimization
+//!
+//! Reproduction of *"CrossRoI: Cross-camera Region of Interest Optimization
+//! for Efficient Real Time Video Analytics at Scale"* (MMSys 2021) as a
+//! three-layer rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator and every substrate the paper
+//!   depends on: traffic-world simulator, ReID error model, statistical
+//!   filters (RANSAC / SVM), region association, RoI set-cover optimizer,
+//!   tile grouping, block video codec, network discrete-event simulator,
+//!   streaming pipeline, Reducto frame filtering and the query/accuracy
+//!   machinery.
+//! * **L2 (python/compile/model.py)** — the detector compute graph, AOT
+//!   lowered to HLO text in `artifacts/`.
+//! * **L1 (python/compile/kernels/sbnet.py)** — the SBNet-style sparse-block
+//!   Pallas kernel inside that graph.
+//!
+//! The [`runtime`] module loads the AOT artifacts via the PJRT CPU client
+//! (`xla` crate) and executes them on the request path; Python is build-time
+//! only.  See `DESIGN.md` for the substitution table and experiment index.
+
+pub mod association;
+pub mod bench;
+pub mod cli;
+pub mod codec;
+pub mod config;
+pub mod coordinator;
+pub mod filters;
+pub mod net;
+pub mod query;
+pub mod reducto;
+pub mod reid;
+pub mod roi;
+pub mod runtime;
+pub mod sim;
+pub mod testing;
+pub mod tilegroup;
+pub mod util;

@@ -1,0 +1,196 @@
+//! `crossroi` — the CrossRoI leader binary.
+//!
+//! Subcommands:
+//!   offline   run the offline phase and print the mask/grouping summary
+//!   run       run one method end-to-end over the eval window
+//!   ablation  run the Fig. 8 ablation (all five methods)
+//!   info      print the resolved configuration and artifact status
+//!
+//! Examples:
+//!   crossroi offline --seed 7
+//!   crossroi run --method crossroi --segment-secs 1.0
+//!   crossroi run --method reducto --reducto-target 0.9
+//!   crossroi ablation --eval-secs 30
+//!   crossroi info
+
+use anyhow::{bail, Context, Result};
+
+use crossroi::cli::Args;
+use crossroi::config::Config;
+use crossroi::coordinator::{self, Method, NativeInfer, RuntimeInfer};
+use crossroi::runtime::Runtime;
+use crossroi::sim::Scenario;
+
+const USAGE: &str = "usage: crossroi <offline|run|ablation|info> [flags]
+flags:
+  --config <path>          TOML config file
+  --seed <n>               scenario seed
+  --cameras <n>            number of cameras
+  --profile-secs <s>       offline window length
+  --eval-secs <s>          online window length
+  --segment-secs <s>       streaming segment length
+  --svm-gamma <g>          SVM filter non-linearity
+  --ransac-theta <t>       RANSAC threshold multiplier
+  --method <name>          baseline|no-filters|no-merging|no-roiinf|crossroi|reducto|crossroi-reducto
+  --reducto-target <a>     frame-filter accuracy target (with reducto methods)
+  --artifacts <dir>        AOT artifact directory (default: artifacts)
+  --native                 use the native reference detector (no PJRT)
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        eprintln!("{USAGE}");
+        std::process::exit(1);
+    }
+}
+
+fn build_config(args: &Args) -> Result<Config> {
+    let mut cfg = match args.flag("config") {
+        Some(path) => Config::from_file(path)?,
+        None => Config::paper(),
+    };
+    if let Some(seed) = args.u64_flag("seed")? {
+        cfg.scenario.seed = seed;
+    }
+    if let Some(n) = args.u64_flag("cameras")? {
+        cfg.scenario.n_cameras = n as usize;
+    }
+    if let Some(v) = args.f64_flag("profile-secs")? {
+        cfg.scenario.profile_secs = v;
+    }
+    if let Some(v) = args.f64_flag("eval-secs")? {
+        cfg.scenario.eval_secs = v;
+    }
+    if let Some(v) = args.f64_flag("segment-secs")? {
+        cfg.system.segment_secs = v;
+    }
+    if let Some(v) = args.f64_flag("svm-gamma")? {
+        cfg.system.svm_gamma = v;
+    }
+    if let Some(v) = args.f64_flag("ransac-theta")? {
+        cfg.system.ransac_theta = v;
+    }
+    if let Some(v) = args.f64_flag("bandwidth-mbps")? {
+        cfg.system.bandwidth_mbps = v;
+    }
+    if let Some(v) = args.f64_flag("qp")? {
+        cfg.system.qp = v;
+    }
+    if let Some(dir) = args.flag("artifacts") {
+        cfg.system.artifacts_dir = dir.to_string();
+    }
+    cfg.scenario.validate()?;
+    cfg.system.validate()?;
+    Ok(cfg)
+}
+
+fn parse_method(args: &Args) -> Result<Method> {
+    let target = args.f64_flag("reducto-target")?.unwrap_or(0.9);
+    Ok(match args.flag("method").unwrap_or("crossroi") {
+        "baseline" => Method::Baseline,
+        "no-filters" => Method::NoFilters,
+        "no-merging" => Method::NoMerging,
+        "no-roiinf" => Method::NoRoiInf,
+        "crossroi" => Method::CrossRoi,
+        "reducto" => Method::Reducto(target),
+        "crossroi-reducto" => Method::CrossRoiReducto(target),
+        other => bail!("unknown method {other:?}"),
+    })
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    args.ensure_known_switches(&["native", "verbose"])?;
+    let cfg = build_config(&args)?;
+
+    match args.subcommand.as_deref() {
+        Some("info") => {
+            println!("scenario: {:?}", cfg.scenario);
+            println!("system:   {:?}", cfg.system);
+            match Runtime::load(&cfg.system.artifacts_dir) {
+                Ok(rt) => println!(
+                    "artifacts: OK ({} RoI variants, contract {}x{})",
+                    rt.contract.roi_capacities.len(),
+                    rt.contract.frame_w,
+                    rt.contract.frame_h
+                ),
+                Err(e) => println!("artifacts: UNAVAILABLE ({e:#})"),
+            }
+            Ok(())
+        }
+        Some("offline") => {
+            let scenario = Scenario::build(&cfg.scenario);
+            let method = parse_method(&args)?;
+            let plan =
+                coordinator::build_plan(&scenario, &cfg.scenario, &cfg.system, &method);
+            println!(
+                "offline phase for {} in {:.2} s: {} constraints",
+                method.name(),
+                plan.seconds,
+                plan.n_constraints
+            );
+            if let Some(r) = &plan.filter_report {
+                println!(
+                    "filters: {} pairs fit, {} FP decoupled, {} FN removed",
+                    r.pairs_fit, r.fp_rewritten, r.fn_removed
+                );
+            }
+            for cam in 0..scenario.cameras.len() {
+                println!(
+                    "  C{}: {:3} mask tiles ({:4.1}% of frame) -> {} regions, {} blocks",
+                    cam + 1,
+                    plan.masks.camera_size(cam),
+                    100.0 * plan.masks.coverage(cam),
+                    plan.groups[cam].len(),
+                    plan.blocks[cam].len()
+                );
+            }
+            println!("|M| = {} tiles total", plan.masks.total_size());
+            Ok(())
+        }
+        Some("run") => {
+            let scenario = Scenario::build(&cfg.scenario);
+            let method = parse_method(&args)?;
+            let report = if args.switch("native") {
+                coordinator::run_method(&scenario, &cfg.system, &NativeInfer, &method, None)?
+            } else {
+                let rt = Runtime::load(&cfg.system.artifacts_dir)
+                    .context("loading artifacts (or pass --native)")?;
+                coordinator::run_method(&scenario, &cfg.system, &RuntimeInfer(&rt), &method, None)?
+            };
+            println!("{}", report.row());
+            println!(
+                "  frames: {} total, {} filtered; mask {} tiles ({:.1}% mean coverage)",
+                report.frames_total,
+                report.frames_reduced,
+                report.mask_tiles,
+                100.0 * report.mask_coverage
+            );
+            Ok(())
+        }
+        Some("ablation") => {
+            let scenario = Scenario::build(&cfg.scenario);
+            let methods = [
+                Method::Baseline,
+                Method::NoFilters,
+                Method::NoMerging,
+                Method::NoRoiInf,
+                Method::CrossRoi,
+            ];
+            let reports = if args.switch("native") {
+                coordinator::run_ablation(&scenario, &cfg.system, &NativeInfer, &methods)?
+            } else {
+                let rt = Runtime::load(&cfg.system.artifacts_dir)
+                    .context("loading artifacts (or pass --native)")?;
+                coordinator::run_ablation(&scenario, &cfg.system, &RuntimeInfer(&rt), &methods)?
+            };
+            for r in &reports {
+                println!("{}", r.row());
+            }
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other:?}"),
+        None => bail!("missing subcommand"),
+    }
+}

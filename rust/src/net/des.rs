@@ -1,0 +1,162 @@
+//! A minimal discrete-event simulation engine.
+//!
+//! Generic over the user's event type: the engine owns the clock and the
+//! pending-event heap; the caller drains events in timestamp order and
+//! schedules follow-ups.  Ties break by insertion sequence, which makes
+//! runs bit-reproducible.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+struct Scheduled<E> {
+    time: f64,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl<E> Eq for Scheduled<E> {}
+
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The event queue + virtual clock.
+pub struct Des<E> {
+    now: f64,
+    seq: u64,
+    queue: BinaryHeap<Scheduled<E>>,
+    processed: u64,
+}
+
+impl<E> Des<E> {
+    pub fn new() -> Des<E> {
+        Des { now: 0.0, seq: 0, queue: BinaryHeap::new(), processed: 0 }
+    }
+
+    /// Current virtual time (seconds).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Number of events processed so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Schedule `event` at absolute time `time` (>= now, clamped).
+    pub fn at(&mut self, time: f64, event: E) {
+        let t = time.max(self.now);
+        self.queue.push(Scheduled { time: t, seq: self.seq, event });
+        self.seq += 1;
+    }
+
+    /// Schedule `event` after a delay.
+    pub fn after(&mut self, delay: f64, event: E) {
+        debug_assert!(delay >= 0.0, "negative delay {delay}");
+        self.at(self.now + delay.max(0.0), event);
+    }
+
+    /// Pop the next event, advancing the clock.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        let s = self.queue.pop()?;
+        self.now = s.time;
+        self.processed += 1;
+        Some((s.time, s.event))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+impl<E> Default for Des<E> {
+    fn default() -> Self {
+        Des::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut des: Des<u32> = Des::new();
+        des.at(3.0, 3);
+        des.at(1.0, 1);
+        des.at(2.0, 2);
+        let order: Vec<u32> = std::iter::from_fn(|| des.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+        assert_eq!(des.now(), 3.0);
+        assert_eq!(des.processed(), 3);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut des: Des<u32> = Des::new();
+        for i in 0..10 {
+            des.at(5.0, i);
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| des.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn after_is_relative_to_now() {
+        let mut des: Des<&str> = Des::new();
+        des.at(10.0, "a");
+        des.pop();
+        des.after(5.0, "b");
+        let (t, e) = des.pop().unwrap();
+        assert_eq!((t, e), (15.0, "b"));
+    }
+
+    #[test]
+    fn scheduling_in_the_past_is_clamped() {
+        let mut des: Des<&str> = Des::new();
+        des.at(10.0, "a");
+        des.pop();
+        des.at(3.0, "late");
+        let (t, _) = des.pop().unwrap();
+        assert_eq!(t, 10.0); // clamped to now, clock never goes backward
+    }
+
+    #[test]
+    fn interleaved_schedule_and_pop() {
+        // a chain: each event schedules the next
+        let mut des: Des<u32> = Des::new();
+        des.at(0.0, 0);
+        let mut fired = Vec::new();
+        while let Some((_, e)) = des.pop() {
+            fired.push(e);
+            if e < 5 {
+                des.after(1.0, e + 1);
+            }
+        }
+        assert_eq!(fired, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(des.now(), 5.0);
+    }
+}

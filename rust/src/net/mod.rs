@@ -1,0 +1,9 @@
+//! Network substrate: a deterministic discrete-event engine and a
+//! shared-link transport model (token-bucket bandwidth + RTT), replacing
+//! the paper's emulated 30 Mbps / 10 ms WiFi (§5.1.3, DESIGN.md §3).
+
+pub mod des;
+pub mod link;
+
+pub use des::Des;
+pub use link::SharedLink;

@@ -1,0 +1,236 @@
+//! Reducto-style frame filtering (§5.4) — the SotA temporal filter the
+//! paper integrates with (Fig. 12: RoI masks remove *spatial* redundancy,
+//! then the frame filter removes *temporal* redundancy).
+//!
+//! Faithful two-phase structure: offline, per-camera low-level
+//! frame-difference features are profiled against an accuracy target to
+//! pick a filtering threshold; online, frames whose difference against the
+//! last *sent* frame falls below the threshold are discarded and the
+//! server reuses the previous result (the standard Reducto behaviour).
+
+use crate::sim::render::Frame;
+use crate::sim::Scenario;
+use crate::util::geometry::IRect;
+
+/// Luma delta (0..255) for a pixel to count as "changed".
+const PIXEL_DELTA: f32 = 12.0;
+
+/// Candidate thresholds swept during profiling (fraction of changed
+/// pixels within the RoI area).
+const CANDIDATES: [f64; 10] =
+    [0.0, 0.002, 0.005, 0.01, 0.02, 0.03, 0.05, 0.08, 0.12, 0.2];
+
+/// Per-camera filtering thresholds learned offline.
+#[derive(Debug, Clone)]
+pub struct ReductoFilter {
+    pub thresholds: Vec<f64>,
+    /// Accuracy target the thresholds were tuned for.
+    pub target: f64,
+}
+
+/// The fraction of pixels inside `regions` whose luma changed by more
+/// than [`PIXEL_DELTA`] between two frames (the Reducto "area" feature).
+pub fn frame_diff(prev: &Frame, cur: &Frame, regions: &[IRect]) -> f64 {
+    let mut changed = 0u64;
+    let mut total = 0u64;
+    for r in regions {
+        let x1 = (r.x + r.w).min(cur.w);
+        let y1 = (r.y + r.h).min(cur.h);
+        for y in r.y.min(cur.h)..y1 {
+            for x in r.x.min(cur.w)..x1 {
+                total += 1;
+                if (cur.luma(x, y) - prev.luma(x, y)).abs() > PIXEL_DELTA {
+                    changed += 1;
+                }
+            }
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        changed as f64 / total as f64
+    }
+}
+
+/// Simulate keep/drop decisions for a diff sequence: frame 0 of each
+/// segment is always kept; a frame is kept when its diff against the last
+/// *kept* frame exceeds the threshold.  `diffs[i]` is against frame i-1's
+/// pixels, so the filter tracks a running accumulated diff.
+pub fn keep_decisions(diffs: &[f64], frames_per_segment: usize, threshold: f64) -> Vec<bool> {
+    let mut keep = vec![false; diffs.len()];
+    let mut acc = 0.0;
+    for i in 0..diffs.len() {
+        if i % frames_per_segment == 0 {
+            keep[i] = true;
+            acc = 0.0;
+            continue;
+        }
+        acc += diffs[i];
+        if acc > threshold {
+            keep[i] = true;
+            acc = 0.0;
+        }
+    }
+    keep
+}
+
+/// Offline profiling (one camera): sweep thresholds, return the largest
+/// one whose *unique-vehicle* accuracy proxy stays at or above `target`.
+///
+/// Accuracy proxy: for each profile frame, the vehicles "reported" are the
+/// ground-truth detections of the last kept frame; per-frame accuracy is
+/// `1 - |error|/|truth|` as in §5.1.2, averaged over the window.
+pub fn profile_camera(
+    scenario: &Scenario,
+    cam: usize,
+    diffs: &[f64],
+    frames: std::ops::Range<usize>,
+    frames_per_segment: usize,
+    target: f64,
+) -> f64 {
+    let frame_ids: Vec<usize> = frames.collect();
+    assert_eq!(frame_ids.len(), diffs.len());
+    let mut best = 0.0;
+    for &cand in CANDIDATES.iter() {
+        let keep = keep_decisions(diffs, frames_per_segment, cand);
+        let mut acc_sum = 0.0;
+        let mut n = 0usize;
+        let mut last_kept = 0usize;
+        for (i, &f) in frame_ids.iter().enumerate() {
+            if keep[i] {
+                last_kept = i;
+            }
+            let truth: Vec<u32> =
+                scenario.detections(cam, f).iter().map(|d| d.vehicle_id).collect();
+            if truth.is_empty() {
+                continue;
+            }
+            let reported: Vec<u32> = scenario
+                .detections(cam, frame_ids[last_kept])
+                .iter()
+                .map(|d| d.vehicle_id)
+                .collect();
+            let err = (truth.len() as f64 - reported.len() as f64).abs() / truth.len() as f64;
+            acc_sum += (1.0 - err).max(0.0);
+            n += 1;
+        }
+        let acc = if n == 0 { 1.0 } else { acc_sum / n as f64 };
+        if acc >= target && cand >= best {
+            best = cand;
+        }
+    }
+    best
+}
+
+impl ReductoFilter {
+    /// Profile all cameras of a scenario over `frames` using rendered
+    /// pixels restricted to `regions_per_cam` (full frame for plain
+    /// Reducto; the RoI groups for CrossRoI-Reducto, per Fig. 12).
+    pub fn profile(
+        scenario: &Scenario,
+        regions_per_cam: &[Vec<IRect>],
+        frames: std::ops::Range<usize>,
+        frames_per_segment: usize,
+        target: f64,
+    ) -> ReductoFilter {
+        let renderer = scenario.renderer();
+        let mut thresholds = Vec::with_capacity(scenario.cameras.len());
+        for cam in 0..scenario.cameras.len() {
+            let ids: Vec<usize> = frames.clone().collect();
+            let mut diffs = Vec::with_capacity(ids.len());
+            let mut prev: Option<Frame> = None;
+            for &f in &ids {
+                let cur = renderer.render(cam, f);
+                diffs.push(match &prev {
+                    None => 1.0,
+                    Some(p) => frame_diff(p, &cur, &regions_per_cam[cam]),
+                });
+                prev = Some(cur);
+            }
+            thresholds.push(profile_camera(
+                scenario,
+                cam,
+                &diffs,
+                frames.clone(),
+                frames_per_segment,
+                target,
+            ));
+        }
+        ReductoFilter { thresholds, target }
+    }
+
+    /// A disabled filter (keeps every frame) — target 1.0 degenerates to
+    /// this, as in Table 4's first row.  The threshold is negative so even
+    /// pixel-identical frames (zero diff) are kept.
+    pub fn disabled(n_cameras: usize) -> ReductoFilter {
+        ReductoFilter { thresholds: vec![-1.0; n_cameras], target: 1.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    #[test]
+    fn diff_zero_for_identical() {
+        let f = Frame::new(64, 64);
+        assert_eq!(frame_diff(&f, &f, &[IRect::new(0, 0, 64, 64)]), 0.0);
+    }
+
+    #[test]
+    fn diff_counts_changed_fraction() {
+        let a = Frame::new(64, 64);
+        let mut b = Frame::new(64, 64);
+        for y in 0..32 {
+            for x in 0..64 {
+                b.set(x, y, [200, 200, 200]);
+            }
+        }
+        let d = frame_diff(&a, &b, &[IRect::new(0, 0, 64, 64)]);
+        assert!((d - 0.5).abs() < 1e-9, "{d}");
+        // restricted to the unchanged half: zero
+        let d2 = frame_diff(&a, &b, &[IRect::new(0, 32, 64, 32)]);
+        assert_eq!(d2, 0.0);
+    }
+
+    #[test]
+    fn zero_threshold_keeps_everything_changing() {
+        let diffs = vec![1.0, 0.1, 0.1, 0.1];
+        let keep = keep_decisions(&diffs, 10, 0.0);
+        assert_eq!(keep, vec![true, true, true, true]);
+    }
+
+    #[test]
+    fn high_threshold_keeps_segment_heads_only() {
+        let diffs = vec![1.0, 0.01, 0.01, 0.01, 0.01, 0.01];
+        let keep = keep_decisions(&diffs, 3, 10.0);
+        assert_eq!(keep, vec![true, false, false, true, false, false]);
+    }
+
+    #[test]
+    fn accumulated_small_diffs_eventually_trigger() {
+        let diffs = vec![1.0, 0.04, 0.04, 0.04, 0.04];
+        let keep = keep_decisions(&diffs, 100, 0.1);
+        // 0.04+0.04 = 0.08 < 0.1; +0.04 = 0.12 > 0.1 -> kept, acc resets
+        assert_eq!(keep, vec![true, false, false, true, false]);
+    }
+
+    #[test]
+    fn lower_target_allows_higher_threshold() {
+        let cfg = Config::test_small();
+        let sc = Scenario::build(&cfg.scenario);
+        let full: Vec<Vec<IRect>> =
+            (0..5).map(|_| vec![IRect::new(0, 0, 320, 192)]).collect();
+        let strict = ReductoFilter::profile(&sc, &full, 0..60, 10, 0.999);
+        let loose = ReductoFilter::profile(&sc, &full, 0..60, 10, 0.85);
+        for cam in 0..5 {
+            assert!(
+                loose.thresholds[cam] >= strict.thresholds[cam],
+                "cam {cam}: loose {} < strict {}",
+                loose.thresholds[cam],
+                strict.thresholds[cam]
+            );
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Constant-velocity Kalman filtering of bbox tracks, used to fill
+//! occlusion dropouts in the ReID ground truth (§5.1.1: "we apply Kalman
+//! filter to fill the disappearance gaps in vehicles consecutive
+//! appearance").
+//!
+//! Each bbox is tracked as four independent `[value, velocity]` states
+//! (cx, cy, w, h); gaps are filled by pure prediction.
+
+use crate::util::geometry::Rect;
+
+/// 1-D constant-velocity Kalman filter.
+#[derive(Debug, Clone)]
+struct Kf1 {
+    x: f64,  // value
+    v: f64,  // velocity
+    p: [[f64; 2]; 2],
+    q: f64, // process noise
+    r: f64, // measurement noise
+}
+
+impl Kf1 {
+    fn new(x0: f64, q: f64, r: f64) -> Kf1 {
+        Kf1 { x: x0, v: 0.0, p: [[10.0, 0.0], [0.0, 10.0]], q, r }
+    }
+
+    /// Predict `dt` ahead.
+    fn predict(&mut self, dt: f64) {
+        self.x += self.v * dt;
+        // P = F P Fᵀ + Q
+        let [[p00, p01], [p10, p11]] = self.p;
+        self.p = [
+            [p00 + dt * (p10 + p01) + dt * dt * p11 + self.q * dt, p01 + dt * p11],
+            [p10 + dt * p11, p11 + self.q * dt],
+        ];
+    }
+
+    /// Measurement update.
+    fn update(&mut self, z: f64) {
+        let s = self.p[0][0] + self.r;
+        let k0 = self.p[0][0] / s;
+        let k1 = self.p[1][0] / s;
+        let innov = z - self.x;
+        self.x += k0 * innov;
+        self.v += k1 * innov;
+        let [[p00, p01], [p10, p11]] = self.p;
+        self.p = [
+            [(1.0 - k0) * p00, (1.0 - k0) * p01],
+            [p10 - k1 * p00, p11 - k1 * p01],
+        ];
+    }
+}
+
+/// A bbox observation at a frame index.
+#[derive(Debug, Clone, Copy)]
+pub struct Obs {
+    pub frame: usize,
+    pub bbox: Rect,
+}
+
+/// Fill missing frames inside a track with Kalman predictions.
+///
+/// `obs` must be sorted by frame and contain no duplicates.  Returns one
+/// bbox per frame in `[first, last]`; observed frames keep their (smoothed
+/// toward measurement) bbox, gap frames get the prediction.
+pub fn fill_gaps(obs: &[Obs]) -> Vec<Obs> {
+    if obs.is_empty() {
+        return Vec::new();
+    }
+    let b0 = obs[0].bbox;
+    let (cx0, cy0) = b0.center();
+    let mut ks = [
+        Kf1::new(cx0, 1.0, 4.0),
+        Kf1::new(cy0, 1.0, 4.0),
+        Kf1::new(b0.width, 0.5, 4.0),
+        Kf1::new(b0.height, 0.5, 4.0),
+    ];
+    let mut out = Vec::new();
+    let mut next_obs = 0usize;
+    for frame in obs[0].frame..=obs[obs.len() - 1].frame {
+        if frame > obs[0].frame {
+            for k in ks.iter_mut() {
+                k.predict(1.0);
+            }
+        }
+        if next_obs < obs.len() && obs[next_obs].frame == frame {
+            let b = obs[next_obs].bbox;
+            let (cx, cy) = b.center();
+            ks[0].update(cx);
+            ks[1].update(cy);
+            ks[2].update(b.width);
+            ks[3].update(b.height);
+            // keep the true measurement on observed frames
+            out.push(Obs { frame, bbox: b });
+            next_obs += 1;
+        } else {
+            let (cx, cy, w, h) = (ks[0].x, ks[1].x, ks[2].x.max(1.0), ks[3].x.max(1.0));
+            out.push(Obs { frame, bbox: Rect::new(cx - w / 2.0, cy - h / 2.0, w, h) });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moving_track(frames: &[usize]) -> Vec<Obs> {
+        // bbox moving right at 5 px/frame, constant size
+        frames
+            .iter()
+            .map(|&f| Obs { frame: f, bbox: Rect::new(10.0 + 5.0 * f as f64, 20.0, 30.0, 18.0) })
+            .collect()
+    }
+
+    #[test]
+    fn no_gaps_passthrough() {
+        let track = moving_track(&[0, 1, 2, 3]);
+        let filled = fill_gaps(&track);
+        assert_eq!(filled.len(), 4);
+        for (a, b) in filled.iter().zip(&track) {
+            assert_eq!(a.frame, b.frame);
+            assert_eq!(a.bbox, b.bbox);
+        }
+    }
+
+    #[test]
+    fn fills_gap_with_plausible_prediction() {
+        // frames 0..6 with 3 and 4 missing
+        let track = moving_track(&[0, 1, 2, 5, 6]);
+        let filled = fill_gaps(&track);
+        assert_eq!(filled.len(), 7);
+        let f3 = &filled[3];
+        let expect = 10.0 + 5.0 * 3.0;
+        assert!(
+            (f3.bbox.left - expect).abs() < 4.0,
+            "gap prediction off: {} vs {expect}",
+            f3.bbox.left
+        );
+        let f4 = &filled[4];
+        assert!((f4.bbox.left - (10.0 + 20.0)).abs() < 5.0);
+        // sizes stay near constant
+        assert!((f3.bbox.width - 30.0).abs() < 2.0);
+    }
+
+    #[test]
+    fn stationary_gap() {
+        let track: Vec<Obs> = [0usize, 1, 2, 6, 7]
+            .iter()
+            .map(|&f| Obs { frame: f, bbox: Rect::new(50.0, 50.0, 20.0, 20.0) })
+            .collect();
+        let filled = fill_gaps(&track);
+        assert_eq!(filled.len(), 8);
+        for o in &filled {
+            assert!((o.bbox.left - 50.0).abs() < 2.0);
+        }
+    }
+
+    #[test]
+    fn empty_track() {
+        assert!(fill_gaps(&[]).is_empty());
+    }
+
+    #[test]
+    fn single_observation() {
+        let track = moving_track(&[4]);
+        let filled = fill_gaps(&track);
+        assert_eq!(filled.len(), 1);
+        assert_eq!(filled[0].frame, 4);
+    }
+}

@@ -1,0 +1,128 @@
+//! Pairwise TP/FP/FN/TN characterization of raw ReID results (§4.2.1) —
+//! the machinery behind Table 2, also reused by the filter evaluation.
+
+use crate::reid::records::ReidStream;
+
+/// Counts of the four §4.2.1 label types for one (source, dest) pair.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PairCounts {
+    pub tp: usize,
+    pub fp: usize,
+    pub fn_: usize,
+    pub tn: usize,
+}
+
+impl PairCounts {
+    pub fn total(&self) -> usize {
+        self.tp + self.fp + self.fn_ + self.tn
+    }
+}
+
+/// Label every detection of `src` against `dst`:
+///
+/// * *positive*  — its raw id also appears in `dst` at the same frame;
+/// * *gt-positive* — its true id has a ground-truth appearance in `dst`.
+///
+/// TP: positive matched to the right vehicle; FP: positive matched to the
+/// wrong one (either §4.2.1 FP case); FN: not positive but gt-positive;
+/// TN: neither.
+pub fn characterize_pair(stream: &ReidStream, src: usize, dst: usize) -> PairCounts {
+    let mut counts = PairCounts::default();
+    for frame in 0..stream.n_frames {
+        // true ids present in dst this frame (ground-truth presence)
+        let dst_true: Vec<u32> = stream.at(dst, frame).map(|d| d.true_id).collect();
+        for det in stream.at(src, frame) {
+            let matched = stream.find_id(dst, frame, det.raw_id);
+            let gt_positive = dst_true.contains(&det.true_id);
+            match matched {
+                Some(m) => {
+                    if m.true_id == det.true_id {
+                        counts.tp += 1;
+                    } else {
+                        counts.fp += 1;
+                    }
+                }
+                None => {
+                    if gt_positive {
+                        counts.fn_ += 1;
+                    } else {
+                        counts.tn += 1;
+                    }
+                }
+            }
+        }
+    }
+    counts
+}
+
+/// The full N×N matrix (diagonal unused), i.e. Table 2.
+pub fn characterize_all(stream: &ReidStream) -> Vec<Vec<PairCounts>> {
+    let n = stream.n_cameras;
+    (0..n)
+        .map(|s| {
+            (0..n)
+                .map(|d| {
+                    if s == d {
+                        PairCounts::default()
+                    } else {
+                        characterize_pair(stream, s, d)
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reid::records::RawDetection;
+    use crate::util::geometry::Rect;
+
+    fn det(cam: usize, frame: usize, raw_id: u32, true_id: u32) -> RawDetection {
+        RawDetection { cam, frame, bbox: Rect::new(0.0, 0.0, 10.0, 10.0), raw_id, true_id }
+    }
+
+    #[test]
+    fn tp_when_ids_agree() {
+        let s = ReidStream::new(2, 1, vec![det(0, 0, 5, 5), det(1, 0, 5, 5)]);
+        let c = characterize_pair(&s, 0, 1);
+        assert_eq!(c, PairCounts { tp: 1, fp: 0, fn_: 0, tn: 0 });
+    }
+
+    #[test]
+    fn fp_when_matched_to_wrong_vehicle() {
+        // src vehicle 5 matched to raw id 5 in dst, but dst raw 5 is truly vehicle 9
+        let s = ReidStream::new(2, 1, vec![det(0, 0, 5, 5), det(1, 0, 5, 9)]);
+        let c = characterize_pair(&s, 0, 1);
+        assert_eq!(c.fp, 1);
+    }
+
+    #[test]
+    fn fn_when_identity_broken() {
+        // same true vehicle in both cams, different raw ids
+        let s = ReidStream::new(2, 1, vec![det(0, 0, 5, 5), det(1, 0, 77, 5)]);
+        let c = characterize_pair(&s, 0, 1);
+        assert_eq!(c.fn_, 1);
+        // reverse direction is symmetric here
+        let c2 = characterize_pair(&s, 1, 0);
+        assert_eq!(c2.fn_, 1);
+    }
+
+    #[test]
+    fn tn_when_truly_absent() {
+        let s = ReidStream::new(2, 1, vec![det(0, 0, 5, 5), det(1, 0, 6, 6)]);
+        let c = characterize_pair(&s, 0, 1);
+        assert_eq!(c, PairCounts { tp: 0, fp: 0, fn_: 1 * 0, tn: 1 });
+    }
+
+    #[test]
+    fn matrix_shape() {
+        let s = ReidStream::new(3, 1, vec![det(0, 0, 1, 1), det(1, 0, 1, 1), det(2, 0, 2, 2)]);
+        let m = characterize_all(&s);
+        assert_eq!(m.len(), 3);
+        assert_eq!(m[0][1].tp, 1);
+        assert_eq!(m[0][2].tn, 1);
+        assert_eq!(m[0][0].total(), 0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Re-identification substrate.
+//!
+//! The paper consumes an *error-prone* ReID stream (DiDi-MTMC) and never
+//! tries to improve it — CrossRoI's contribution is to clean it
+//! statistically.  We therefore substitute the ReID algorithm with a
+//! calibrated error-injection model over the simulator's ground truth
+//! (DESIGN.md §3): identity breaks (false negatives) dominate, wrong
+//! matches (false positives) are rarer, true negatives dwarf both —
+//! the Table 2 structure.
+//!
+//! Also here: the ground-truth augmentation of §5.1.1 (Kalman gap filling
+//! for occlusion dropouts) and the pairwise TP/FP/FN/TN characterization
+//! that regenerates Table 2.
+
+pub mod error_model;
+pub mod kalman;
+pub mod labels;
+pub mod records;
+
+pub use error_model::{ErrorModelParams, RawReid};
+pub use records::{RawDetection, ReidStream};

@@ -1,0 +1,145 @@
+//! ReID record types: the `<left, top, width, height, id>` tuples of
+//! §4.1.1, indexed for the per-frame / per-camera access patterns of the
+//! filters and the association builder.
+
+use crate::util::geometry::Rect;
+
+/// One raw ReID detection.
+///
+/// `raw_id` is what the (error-prone) ReID algorithm assigned; `true_id`
+/// is the simulator's ground-truth identity, carried along *only* for
+/// evaluation (Table 2, accuracy scoring) — the filters and optimizer
+/// never read it.
+#[derive(Debug, Clone, Copy)]
+pub struct RawDetection {
+    pub cam: usize,
+    pub frame: usize,
+    pub bbox: Rect,
+    pub raw_id: u32,
+    pub true_id: u32,
+}
+
+/// An indexed collection of raw detections over a profile window.
+#[derive(Debug, Clone)]
+pub struct ReidStream {
+    pub n_cameras: usize,
+    pub n_frames: usize,
+    records: Vec<RawDetection>,
+    /// `index[cam][frame]` → indices into `records`.
+    index: Vec<Vec<Vec<usize>>>,
+}
+
+impl ReidStream {
+    pub fn new(n_cameras: usize, n_frames: usize, records: Vec<RawDetection>) -> ReidStream {
+        let mut index = vec![vec![Vec::new(); n_frames]; n_cameras];
+        for (i, r) in records.iter().enumerate() {
+            assert!(r.cam < n_cameras && r.frame < n_frames, "record out of range");
+            index[r.cam][r.frame].push(i);
+        }
+        ReidStream { n_cameras, n_frames, records, index }
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn all(&self) -> &[RawDetection] {
+        &self.records
+    }
+
+    /// Detections of one camera at one frame.
+    pub fn at(&self, cam: usize, frame: usize) -> impl Iterator<Item = &RawDetection> {
+        self.index[cam][frame].iter().map(move |&i| &self.records[i])
+    }
+
+    /// Find a raw id in a camera at a frame (first match).
+    pub fn find_id(&self, cam: usize, frame: usize, raw_id: u32) -> Option<&RawDetection> {
+        self.at(cam, frame).find(|d| d.raw_id == raw_id)
+    }
+
+    /// Retain a subset (used by the SVM filter to drop false negatives).
+    /// The predicate sees records in their original insertion order.
+    pub fn filtered(&self, mut keep: impl FnMut(&RawDetection) -> bool) -> ReidStream {
+        let records: Vec<RawDetection> =
+            self.records.iter().copied().filter(|d| keep(d)).collect();
+        ReidStream::new(self.n_cameras, self.n_frames, records)
+    }
+
+    /// Apply an id-rewrite map (used by the regression filter to decouple
+    /// false-positive associations by assigning fresh ids).
+    pub fn with_rewrites(&self, rewrite: &std::collections::HashMap<usize, u32>) -> ReidStream {
+        let records: Vec<RawDetection> = self
+            .records
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                let mut d = *d;
+                if let Some(&new_id) = rewrite.get(&i) {
+                    d.raw_id = new_id;
+                }
+                d
+            })
+            .collect();
+        ReidStream::new(self.n_cameras, self.n_frames, records)
+    }
+
+    /// Largest raw id present (for allocating fresh ids).
+    pub fn max_raw_id(&self) -> u32 {
+        self.records.iter().map(|r| r.raw_id).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det(cam: usize, frame: usize, raw_id: u32, true_id: u32) -> RawDetection {
+        RawDetection {
+            cam,
+            frame,
+            bbox: Rect::new(10.0 * raw_id as f64, 5.0, 20.0, 15.0),
+            raw_id,
+            true_id,
+        }
+    }
+
+    #[test]
+    fn indexing() {
+        let s = ReidStream::new(
+            2,
+            3,
+            vec![det(0, 0, 1, 1), det(0, 0, 2, 2), det(1, 0, 1, 1), det(0, 2, 3, 3)],
+        );
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.at(0, 0).count(), 2);
+        assert_eq!(s.at(1, 0).count(), 1);
+        assert_eq!(s.at(1, 2).count(), 0);
+        assert!(s.find_id(0, 0, 2).is_some());
+        assert!(s.find_id(0, 0, 9).is_none());
+    }
+
+    #[test]
+    fn filtered_keeps_subset() {
+        let s = ReidStream::new(1, 2, vec![det(0, 0, 1, 1), det(0, 1, 2, 2)]);
+        let f = s.filtered(|d| d.raw_id == 2);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.at(0, 1).count(), 1);
+        assert_eq!(f.at(0, 0).count(), 0);
+    }
+
+    #[test]
+    fn rewrites_change_ids() {
+        let s = ReidStream::new(1, 1, vec![det(0, 0, 1, 1), det(0, 0, 2, 2)]);
+        let mut map = std::collections::HashMap::new();
+        map.insert(0usize, 99u32);
+        let r = s.with_rewrites(&map);
+        assert!(r.find_id(0, 0, 99).is_some());
+        assert!(r.find_id(0, 0, 1).is_none());
+        assert!(r.find_id(0, 0, 2).is_some());
+        assert_eq!(r.max_raw_id(), 99);
+    }
+}

@@ -1,0 +1,149 @@
+//! Per-camera RoI masks: the optimizer's global tile set split by camera,
+//! with conversions to pixel rectangles (codec cropping) and to detector
+//! block ids (RoI inference).
+
+use std::collections::HashSet;
+
+use crate::association::tiles::{GlobalTile, Tiling};
+use crate::util::geometry::IRect;
+
+/// RoI masks for the whole fleet.
+#[derive(Debug, Clone)]
+pub struct RoiMasks {
+    pub tiling: Tiling,
+    /// `tiles[cam]` = set of (tx, ty) in that camera's grid.
+    pub tiles: Vec<HashSet<(u32, u32)>>,
+}
+
+impl RoiMasks {
+    /// Split a global solution into per-camera masks.
+    pub fn from_solution(tiling: &Tiling, solution: &HashSet<GlobalTile>) -> RoiMasks {
+        let mut tiles = vec![HashSet::new(); tiling.n_cameras];
+        for &t in solution {
+            let (cam, tx, ty) = tiling.tile_pos(t);
+            tiles[cam].insert((tx, ty));
+        }
+        RoiMasks { tiling: tiling.clone(), tiles }
+    }
+
+    /// A full-frame mask (the Baseline methods).
+    pub fn full(tiling: &Tiling) -> RoiMasks {
+        let mut tiles = vec![HashSet::new(); tiling.n_cameras];
+        for mask in tiles.iter_mut() {
+            for ty in 0..tiling.tiles_y {
+                for tx in 0..tiling.tiles_x {
+                    mask.insert((tx, ty));
+                }
+            }
+        }
+        RoiMasks { tiling: tiling.clone(), tiles }
+    }
+
+    /// Number of mask tiles in one camera.
+    pub fn camera_size(&self, cam: usize) -> usize {
+        self.tiles[cam].len()
+    }
+
+    /// |M| — total tiles across cameras (the optimization objective).
+    pub fn total_size(&self) -> usize {
+        self.tiles.iter().map(|t| t.len()).sum()
+    }
+
+    /// Fraction of a camera's frame covered by its mask.
+    pub fn coverage(&self, cam: usize) -> f64 {
+        self.tiles[cam].len() as f64 / self.tiling.per_camera() as f64
+    }
+
+    /// Is a pixel inside the camera's mask?
+    pub fn contains_pixel(&self, cam: usize, x: u32, y: u32) -> bool {
+        let t = self.tiling.tile_px;
+        self.tiles[cam].contains(&(x / t, y / t))
+    }
+
+    /// Mask tiles of one camera as unit pixel rects (pre-grouping).
+    pub fn tile_rects(&self, cam: usize) -> Vec<IRect> {
+        let t = self.tiling.tile_px;
+        let mut v: Vec<(u32, u32)> = self.tiles[cam].iter().copied().collect();
+        v.sort_unstable();
+        v.into_iter().map(|(tx, ty)| IRect::new(tx * t, ty * t, t, t)).collect()
+    }
+
+    /// Detector block ids (block = `block_px` square, e.g. 32 px = 2×2
+    /// tiles) that intersect the camera's mask, sorted ascending.  This is
+    /// what the rust runtime feeds the RoI HLO variant.
+    pub fn active_blocks(&self, cam: usize, block_px: u32, frame_w: u32) -> Vec<i32> {
+        let t = self.tiling.tile_px;
+        let per_block = block_px / t;
+        let blocks_x = frame_w / block_px;
+        let mut out: HashSet<i32> = HashSet::new();
+        for &(tx, ty) in &self.tiles[cam] {
+            let bx = tx / per_block;
+            let by = ty / per_block;
+            out.insert((by * blocks_x + bx) as i32);
+        }
+        let mut v: Vec<i32> = out.into_iter().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiling() -> Tiling {
+        Tiling::new(2, 320, 192, 16)
+    }
+
+    #[test]
+    fn from_solution_splits_by_camera() {
+        let t = tiling();
+        let mut sol = HashSet::new();
+        sol.insert(t.tile_id(0, 1, 2));
+        sol.insert(t.tile_id(0, 2, 2));
+        sol.insert(t.tile_id(1, 5, 5));
+        let m = RoiMasks::from_solution(&t, &sol);
+        assert_eq!(m.camera_size(0), 2);
+        assert_eq!(m.camera_size(1), 1);
+        assert_eq!(m.total_size(), 3);
+        assert!(m.contains_pixel(0, 16, 32));
+        assert!(!m.contains_pixel(0, 0, 0));
+        assert!(m.contains_pixel(1, 80, 80));
+    }
+
+    #[test]
+    fn full_mask_covers_everything() {
+        let t = tiling();
+        let m = RoiMasks::full(&t);
+        assert_eq!(m.camera_size(0), 240);
+        assert!((m.coverage(0) - 1.0).abs() < 1e-12);
+        assert!(m.contains_pixel(0, 319, 191));
+        assert_eq!(m.active_blocks(0, 32, 320).len(), 60);
+    }
+
+    #[test]
+    fn active_blocks_merge_tiles() {
+        let t = tiling();
+        let mut sol = HashSet::new();
+        // four tiles of the same 32px block (block (0,0))
+        sol.insert(t.tile_id(0, 0, 0));
+        sol.insert(t.tile_id(0, 1, 0));
+        sol.insert(t.tile_id(0, 0, 1));
+        sol.insert(t.tile_id(0, 1, 1));
+        // one tile in block (5, 3): tiles (10..11, 6..7)
+        sol.insert(t.tile_id(0, 10, 6));
+        let m = RoiMasks::from_solution(&t, &sol);
+        let blocks = m.active_blocks(0, 32, 320);
+        assert_eq!(blocks, vec![0, 3 * 10 + 5]);
+    }
+
+    #[test]
+    fn tile_rects_are_pixel_tiles() {
+        let t = tiling();
+        let mut sol = HashSet::new();
+        sol.insert(t.tile_id(0, 3, 1));
+        let m = RoiMasks::from_solution(&t, &sol);
+        assert_eq!(m.tile_rects(0), vec![IRect::new(48, 16, 16, 16)]);
+        assert!(m.tile_rects(1).is_empty());
+    }
+}

@@ -1,0 +1,11 @@
+//! RoI mask optimization (§3.3, Eq. 1–2): choose the minimum set of tiles
+//! such that every object occurrence keeps at least one fully-included
+//! appearance region.  The paper solves this with Gurobi; we implement the
+//! solver ourselves (greedy + pruning, plus exact branch-and-bound for
+//! verification) — DESIGN.md §3.
+
+pub mod masks;
+pub mod setcover;
+
+pub use masks::RoiMasks;
+pub use setcover::{solve, solve_exact, Solution, SolverParams};

@@ -1,0 +1,341 @@
+//! The group-cover solver behind RoI mask generation.
+//!
+//! Problem (Eq. 1–2): pick a tile set `M` minimizing `|M|` such that every
+//! constraint has ≥ 1 region with all tiles in `M`.  (Each region is an
+//! AND over its tiles; regions of one constraint are OR-ed — a "minimum
+//! union of closed sets" / group Steiner-flavoured cover, NP-hard.)
+//!
+//! * [`solve`] — greedy density heuristic (best satisfied-per-new-tile
+//!   ratio) followed by redundant-tile pruning; scales to the full
+//!   profile-window instance.
+//! * [`solve_exact`] — branch-and-bound over constraint/region choices
+//!   with a union lower bound; exponential, used on small instances and in
+//!   tests to certify the greedy's quality.
+
+use std::collections::HashSet;
+
+use crate::association::table::AssociationTable;
+use crate::association::tiles::GlobalTile;
+
+/// Solver configuration.
+#[derive(Debug, Clone)]
+pub struct SolverParams {
+    /// Run the pruning pass after the greedy cover.
+    pub prune: bool,
+}
+
+impl Default for SolverParams {
+    fn default() -> Self {
+        SolverParams { prune: true }
+    }
+}
+
+/// A solved mask (global tile set).
+#[derive(Debug, Clone)]
+pub struct Solution {
+    pub tiles: HashSet<GlobalTile>,
+    /// Constraints that could not be satisfied (empty region lists only).
+    pub unsatisfiable: usize,
+}
+
+impl Solution {
+    pub fn size(&self) -> usize {
+        self.tiles.len()
+    }
+}
+
+fn region_satisfied(region: &[GlobalTile], m: &HashSet<GlobalTile>) -> bool {
+    region.iter().all(|t| m.contains(t))
+}
+
+fn constraint_satisfied(regions: &[Vec<GlobalTile>], m: &HashSet<GlobalTile>) -> bool {
+    regions.iter().any(|r| region_satisfied(r, m))
+}
+
+/// Greedy + prune solver.
+pub fn solve(table: &AssociationTable, params: &SolverParams) -> Solution {
+    let n = table.constraints.len();
+    let mut m: HashSet<GlobalTile> = HashSet::new();
+    let mut satisfied = vec![false; n];
+    let mut unsatisfiable = 0usize;
+    for (i, c) in table.constraints.iter().enumerate() {
+        if c.regions.is_empty() {
+            satisfied[i] = true;
+            unsatisfiable += 1;
+        }
+    }
+
+    loop {
+        // refresh satisfaction (a region may have become covered as a side
+        // effect of tiles added for other constraints)
+        for (i, c) in table.constraints.iter().enumerate() {
+            if !satisfied[i] && constraint_satisfied(&c.regions, &m) {
+                satisfied[i] = true;
+            }
+        }
+        let open: Vec<usize> = (0..n).filter(|&i| !satisfied[i]).collect();
+        if open.is_empty() {
+            break;
+        }
+        // candidate regions of open constraints, scored by
+        //   (# open constraints fully satisfied by adding it) / (# new tiles)
+        let mut best: Option<(f64, &Vec<GlobalTile>)> = None;
+        for &ci in &open {
+            for region in &table.constraints[ci].regions {
+                let new_tiles = region.iter().filter(|t| !m.contains(t)).count();
+                if new_tiles == 0 {
+                    continue; // would already have satisfied it
+                }
+                // count how many open constraints this region closes
+                let mut would: HashSet<GlobalTile> = HashSet::new();
+                would.extend(region.iter().copied());
+                let mut gain = 0usize;
+                for &cj in &open {
+                    let c = &table.constraints[cj];
+                    if c.regions.iter().any(|r| {
+                        r.iter().all(|t| m.contains(t) || would.contains(t))
+                    }) {
+                        gain += table.multiplicity[cj].max(1);
+                    }
+                }
+                let score = gain as f64 / new_tiles as f64;
+                if best.as_ref().map_or(true, |(s, _)| score > *s) {
+                    best = Some((score, region));
+                }
+            }
+        }
+        match best {
+            Some((_, region)) => {
+                m.extend(region.iter().copied());
+            }
+            None => {
+                // every open constraint has only empty/covered regions —
+                // cannot happen with non-empty regions, guard anyway
+                unsatisfiable += open.len();
+                break;
+            }
+        }
+    }
+
+    if params.prune {
+        prune(table, &mut m);
+    }
+    Solution { tiles: m, unsatisfiable }
+}
+
+/// Remove tiles whose removal keeps every constraint satisfied.
+fn prune(table: &AssociationTable, m: &mut HashSet<GlobalTile>) {
+    let mut tiles: Vec<GlobalTile> = m.iter().copied().collect();
+    tiles.sort_unstable();
+    // try removing rare tiles first (they are likelier to be redundant)
+    for t in tiles {
+        m.remove(&t);
+        let ok = table
+            .constraints
+            .iter()
+            .all(|c| c.regions.is_empty() || constraint_satisfied(&c.regions, m));
+        if !ok {
+            m.insert(t);
+        }
+    }
+}
+
+/// Exact branch-and-bound solver (small instances only).
+///
+/// Branches on the open constraint with fewest regions; bound = |M| (the
+/// union can only grow).  Panics if `table` exceeds `max_constraints`.
+pub fn solve_exact(table: &AssociationTable, max_constraints: usize) -> Solution {
+    assert!(
+        table.constraints.len() <= max_constraints,
+        "exact solver limited to {max_constraints} constraints"
+    );
+    let mut best: Option<HashSet<GlobalTile>> = None;
+    let mut m: HashSet<GlobalTile> = HashSet::new();
+    let mut unsat = 0usize;
+    let solvable: Vec<&crate::association::table::Constraint> = table
+        .constraints
+        .iter()
+        .filter(|c| {
+            if c.regions.is_empty() {
+                unsat += 1;
+                false
+            } else {
+                true
+            }
+        })
+        .collect();
+
+    fn dfs(
+        constraints: &[&crate::association::table::Constraint],
+        m: &mut HashSet<GlobalTile>,
+        best: &mut Option<HashSet<GlobalTile>>,
+    ) {
+        if let Some(b) = best {
+            if m.len() >= b.len() {
+                return; // bound
+            }
+        }
+        // next open constraint (fewest regions first for tighter branching)
+        let open = constraints
+            .iter()
+            .filter(|c| !constraint_satisfied(&c.regions, m))
+            .min_by_key(|c| c.regions.len());
+        match open {
+            None => {
+                *best = Some(m.clone());
+            }
+            Some(c) => {
+                let mut regions: Vec<&Vec<GlobalTile>> = c.regions.iter().collect();
+                // cheapest additions first
+                regions.sort_by_key(|r| r.iter().filter(|t| !m.contains(t)).count());
+                for region in regions {
+                    let added: Vec<GlobalTile> =
+                        region.iter().filter(|t| !m.contains(t)).copied().collect();
+                    for &t in &added {
+                        m.insert(t);
+                    }
+                    dfs(constraints, m, best);
+                    for &t in &added {
+                        m.remove(&t);
+                    }
+                }
+            }
+        }
+    }
+
+    dfs(&solvable, &mut m, &mut best);
+    Solution { tiles: best.unwrap_or_default(), unsatisfiable: unsat }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::association::table::Constraint;
+    use crate::association::tiles::Tiling;
+
+    fn table_from(regions: Vec<Vec<Vec<GlobalTile>>>) -> AssociationTable {
+        let n = regions.len();
+        AssociationTable {
+            tiling: Tiling::new(1, 320, 192, 16),
+            constraints: regions.into_iter().map(|r| Constraint { regions: r }).collect(),
+            multiplicity: vec![1; n],
+            total_occurrences: n,
+        }
+    }
+
+    fn check_valid(table: &AssociationTable, sol: &Solution) {
+        for c in &table.constraints {
+            if c.regions.is_empty() {
+                continue;
+            }
+            assert!(
+                constraint_satisfied(&c.regions, &sol.tiles),
+                "constraint {c:?} unsatisfied by {:?}",
+                sol.tiles
+            );
+        }
+    }
+
+    #[test]
+    fn picks_shared_region_over_two_singles() {
+        // the paper's O_1 example: object visible in both cameras — only
+        // one of the two regions needs inclusion; here region {1,2} also
+        // covers a second constraint, so it should win
+        let t = table_from(vec![
+            vec![vec![1, 2], vec![10, 11, 12, 13]],
+            vec![vec![1, 2]],
+        ]);
+        let sol = solve(&t, &SolverParams::default());
+        check_valid(&t, &sol);
+        assert_eq!(sol.size(), 2, "tiles: {:?}", sol.tiles);
+    }
+
+    #[test]
+    fn greedy_matches_exact_on_small_instances() {
+        let cases = vec![
+            vec![
+                vec![vec![1, 2, 3], vec![7, 8]],
+                vec![vec![2, 3], vec![9]],
+                vec![vec![7, 8], vec![1]],
+            ],
+            vec![
+                vec![vec![1], vec![2]],
+                vec![vec![2], vec![3]],
+                vec![vec![3], vec![1]],
+            ],
+            vec![
+                vec![vec![5, 6]],
+                vec![vec![6, 7]],
+                vec![vec![5, 7], vec![8, 9, 10]],
+            ],
+        ];
+        for regions in cases {
+            let t = table_from(regions);
+            let g = solve(&t, &SolverParams::default());
+            let e = solve_exact(&t, 16);
+            check_valid(&t, &g);
+            check_valid(&t, &e);
+            assert!(
+                g.size() <= e.size() + 1,
+                "greedy {} far from optimal {}",
+                g.size(),
+                e.size()
+            );
+            assert!(e.size() <= g.size());
+        }
+    }
+
+    #[test]
+    fn pruning_removes_redundant_tiles() {
+        // constraint B ⊂ A tiles: greedy may add extra; prune must trim to
+        // a minimal solution
+        let t = table_from(vec![vec![vec![1, 2, 3, 4]], vec![vec![2, 3]]]);
+        let sol = solve(&t, &SolverParams::default());
+        check_valid(&t, &sol);
+        assert_eq!(sol.size(), 4);
+    }
+
+    #[test]
+    fn multiplicity_biases_choice() {
+        // two alternative regions for c0: {1,2,3} also closes the heavy
+        // repeated constraint, {9} is cheaper alone
+        let mut t = table_from(vec![
+            vec![vec![1, 2, 3], vec![9]],
+            vec![vec![1, 2, 3]],
+        ]);
+        t.multiplicity = vec![1, 50];
+        let sol = solve(&t, &SolverParams::default());
+        check_valid(&t, &sol);
+        // {1,2,3} is forced by c1 anyway; c0 must not add {9} on top
+        assert_eq!(sol.size(), 3, "tiles {:?}", sol.tiles);
+    }
+
+    #[test]
+    fn empty_table() {
+        let t = table_from(vec![]);
+        let sol = solve(&t, &SolverParams::default());
+        assert_eq!(sol.size(), 0);
+        assert_eq!(solve_exact(&t, 8).size(), 0);
+    }
+
+    #[test]
+    fn unsatisfiable_counted() {
+        let t = table_from(vec![vec![], vec![vec![4]]]);
+        let sol = solve(&t, &SolverParams::default());
+        assert_eq!(sol.unsatisfiable, 1);
+        assert_eq!(sol.size(), 1);
+    }
+
+    #[test]
+    fn exact_is_optimal_on_triangle() {
+        // three constraints pairwise sharing tiles; optimum is 2 tiles
+        let t = table_from(vec![
+            vec![vec![1], vec![2]],
+            vec![vec![2], vec![3]],
+            vec![vec![3], vec![1]],
+        ]);
+        let e = solve_exact(&t, 8);
+        check_valid(&t, &e);
+        assert_eq!(e.size(), 2);
+    }
+}

@@ -1,0 +1,135 @@
+//! The PJRT client wrapper: one compiled executable per detector variant
+//! (dense full-frame + one RoI variant per padded block capacity K).
+//!
+//! The RoI path is the paper's SBNet pipeline (§4.4): the rust side
+//! supplies the frame and the active block ids (from the offline RoI
+//! masks), the L1 Pallas kernel inside the HLO does gather → conv stack →
+//! per-block cells, and [`Runtime::infer_roi`] scatters the cells back
+//! into the full objectness grid.  Like the paper, the runtime falls back
+//! to the dense model when the RoI covers (nearly) the whole frame — the
+//! gather/scatter overhead only pays off on sparse masks.
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::contract::Contract;
+
+/// Loaded detector executables.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    full: xla::PjRtLoadedExecutable,
+    /// (capacity K, executable), ascending by K.
+    roi: Vec<(usize, xla::PjRtLoadedExecutable)>,
+    pub contract: Contract,
+}
+
+impl Runtime {
+    /// Load and compile every artifact in `artifacts_dir`.
+    pub fn load(artifacts_dir: &str) -> Result<Runtime> {
+        let contract = Contract::load_verified(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let load = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = format!("{artifacts_dir}/{name}");
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).with_context(|| format!("compiling {path}"))
+        };
+        let full = load("detector_full.hlo.txt")?;
+        let mut roi = Vec::new();
+        for &k in &contract.roi_capacities {
+            roi.push((k, load(&format!("detector_roi_k{k}.hlo.txt"))?));
+        }
+        Ok(Runtime { client, full, roi, contract })
+    }
+
+    /// Dense full-frame inference: `frame` is HWC f32 in [0,1], length
+    /// `frame_h * frame_w * 3`.  Returns the (cells_h × cells_w)
+    /// objectness grid, row-major.
+    pub fn infer_full(&self, frame: &[f32]) -> Result<Vec<f32>> {
+        let c = &self.contract;
+        let expect = c.frame_h * c.frame_w * c.channels;
+        if frame.len() != expect {
+            bail!("frame length {} != {expect}", frame.len());
+        }
+        let x = xla::Literal::vec1(frame).reshape(&[
+            c.frame_h as i64,
+            c.frame_w as i64,
+            c.channels as i64,
+        ])?;
+        let result = self.full.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
+        let grid = result.to_tuple1()?.to_vec::<f32>()?;
+        if grid.len() != c.cells_h * c.cells_w {
+            bail!("unexpected objectness size {}", grid.len());
+        }
+        Ok(grid)
+    }
+
+    /// Pick the smallest compiled capacity ≥ `n`; None if n exceeds all.
+    pub fn capacity_for(&self, n: usize) -> Option<usize> {
+        self.roi.iter().map(|(k, _)| *k).find(|&k| k >= n)
+    }
+
+    /// RoI inference via the SBNet block variant.
+    ///
+    /// `blocks` are active block ids (ascending, each in `0..n_blocks`).
+    /// Returns the full objectness grid with inactive blocks at 0, plus
+    /// the capacity K actually used.  Falls back to [`Self::infer_full`]
+    /// when `blocks` exceeds every compiled capacity (never happens with
+    /// the shipped artifacts: max K = all blocks).
+    pub fn infer_roi(&self, frame: &[f32], blocks: &[i32]) -> Result<(Vec<f32>, usize)> {
+        let c = &self.contract;
+        let Some(k) = self.capacity_for(blocks.len()) else {
+            return Ok((self.infer_full(frame)?, c.n_blocks));
+        };
+        let exe = &self.roi.iter().find(|(cap, _)| *cap == k).unwrap().1;
+        let x = xla::Literal::vec1(frame).reshape(&[
+            c.frame_h as i64,
+            c.frame_w as i64,
+            c.channels as i64,
+        ])?;
+        let mut ids = blocks.to_vec();
+        debug_assert!(ids.windows(2).all(|w| w[0] < w[1]), "blocks must be ascending");
+        debug_assert!(ids.iter().all(|&b| (b as usize) < c.n_blocks));
+        ids.resize(k, -1);
+        let ids_lit = xla::Literal::vec1(&ids);
+        let result = exe.execute::<xla::Literal>(&[x, ids_lit])?[0][0].to_literal_sync()?;
+        let cells = result.to_tuple1()?.to_vec::<f32>()?;
+        let cpb = c.cells_per_block;
+        if cells.len() != k * cpb * cpb {
+            bail!("unexpected RoI cell tensor size {}", cells.len());
+        }
+        // scatter (K, cpb, cpb) -> (cells_h, cells_w)
+        let mut grid = vec![0.0f32; c.cells_h * c.cells_w];
+        for (slot, &bid) in ids.iter().enumerate() {
+            if bid < 0 {
+                continue;
+            }
+            let by = bid as usize / c.grid_bw;
+            let bx = bid as usize % c.grid_bw;
+            for cy in 0..cpb {
+                for cx in 0..cpb {
+                    grid[(by * cpb + cy) * c.cells_w + bx * cpb + cx] =
+                        cells[slot * cpb * cpb + cy * cpb + cx];
+                }
+            }
+        }
+        Ok((grid, k))
+    }
+}
+
+// Integration tests that exercise the actual artifacts live in
+// rust/tests/runtime_hlo.rs (they need `make artifacts` to have run).
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifacts_fail_loudly() {
+        let msg = match Runtime::load("/nonexistent-artifacts") {
+            Ok(_) => panic!("loading from a nonexistent dir succeeded"),
+            Err(e) => format!("{e:#}"),
+        };
+        assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+    }
+}

@@ -1,0 +1,139 @@
+//! The L2 ↔ L3 geometry contract.
+//!
+//! `python/compile/model.py` bakes these constants into the HLO artifacts;
+//! `aot.py` exports them to `artifacts/meta.json`; this module carries the
+//! rust copy and verifies the two agree at runtime load, so a drifted
+//! artifact set fails loudly instead of mis-decoding tensors.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json;
+
+/// Detector geometry (see model.py's module docstring).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Contract {
+    pub frame_h: usize,
+    pub frame_w: usize,
+    pub channels: usize,
+    pub block: usize,
+    pub cell: usize,
+    pub halo: usize,
+    pub grid_bh: usize,
+    pub grid_bw: usize,
+    pub n_blocks: usize,
+    pub cells_h: usize,
+    pub cells_w: usize,
+    pub cells_per_block: usize,
+    pub roi_capacities: Vec<usize>,
+    pub objectness_threshold: f64,
+}
+
+impl Contract {
+    /// The constants this crate was built against.
+    pub fn expected() -> Contract {
+        Contract {
+            frame_h: 192,
+            frame_w: 320,
+            channels: 3,
+            block: 32,
+            cell: 16,
+            halo: 3,
+            grid_bh: 6,
+            grid_bw: 10,
+            n_blocks: 60,
+            cells_h: 12,
+            cells_w: 20,
+            cells_per_block: 2,
+            roi_capacities: vec![8, 16, 32, 60],
+            objectness_threshold: 0.25,
+        }
+    }
+
+    /// Parse `meta.json` as emitted by aot.py.
+    pub fn from_meta_json(text: &str) -> Result<Contract> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("meta.json: {e}"))?;
+        let get = |k: &str| -> Result<usize> {
+            v.get(k).and_then(|j| j.as_usize()).with_context(|| format!("meta.json missing {k}"))
+        };
+        Ok(Contract {
+            frame_h: get("frame_h")?,
+            frame_w: get("frame_w")?,
+            channels: get("channels")?,
+            block: get("block")?,
+            cell: get("cell")?,
+            halo: get("halo")?,
+            grid_bh: get("grid_bh")?,
+            grid_bw: get("grid_bw")?,
+            n_blocks: get("n_blocks")?,
+            cells_h: get("cells_h")?,
+            cells_w: get("cells_w")?,
+            cells_per_block: get("cells_per_block")?,
+            roi_capacities: v
+                .get("roi_capacities")
+                .and_then(|j| j.as_arr())
+                .context("meta.json missing roi_capacities")?
+                .iter()
+                .map(|j| j.as_usize().context("bad capacity"))
+                .collect::<Result<Vec<_>>>()?,
+            objectness_threshold: v
+                .get("objectness_threshold")
+                .and_then(|j| j.as_f64())
+                .context("meta.json missing objectness_threshold")?,
+        })
+    }
+
+    /// Load and verify against [`Contract::expected`].
+    pub fn load_verified(artifacts_dir: &str) -> Result<Contract> {
+        let path = format!("{artifacts_dir}/meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path} — run `make artifacts` first"))?;
+        let got = Contract::from_meta_json(&text)?;
+        let want = Contract::expected();
+        if got != want {
+            bail!(
+                "artifact contract mismatch:\n  artifacts: {got:?}\n  crate:     {want:?}\n\
+                 regenerate with `make artifacts`"
+            );
+        }
+        Ok(got)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expected_is_self_consistent() {
+        let c = Contract::expected();
+        assert_eq!(c.frame_h % c.block, 0);
+        assert_eq!(c.frame_w % c.block, 0);
+        assert_eq!(c.block % c.cell, 0);
+        assert_eq!(c.n_blocks, c.grid_bh * c.grid_bw);
+        assert_eq!(c.cells_h, c.frame_h / c.cell);
+        assert_eq!(c.cells_w, c.frame_w / c.cell);
+        assert_eq!(*c.roi_capacities.last().unwrap(), c.n_blocks);
+        // matches the simulator's frame geometry
+        assert_eq!(c.frame_w as u32, crate::sim::FRAME_W);
+        assert_eq!(c.frame_h as u32, crate::sim::FRAME_H);
+    }
+
+    #[test]
+    fn parses_meta_json() {
+        let text = r#"{
+            "frame_h": 192, "frame_w": 320, "channels": 3, "block": 32,
+            "cell": 16, "halo": 3, "grid_bh": 6, "grid_bw": 10,
+            "n_blocks": 60, "cells_h": 12, "cells_w": 20,
+            "cells_per_block": 2, "roi_capacities": [8, 16, 32, 60],
+            "objectness_threshold": 0.25
+        }"#;
+        let c = Contract::from_meta_json(text).unwrap();
+        assert_eq!(c, Contract::expected());
+    }
+
+    #[test]
+    fn rejects_drifted_meta() {
+        let text = r#"{"frame_h": 128}"#;
+        assert!(Contract::from_meta_json(text).is_err());
+    }
+}

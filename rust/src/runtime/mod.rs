@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT-compiled detector HLO artifacts (produced
+//! once by `python/compile/aot.py`) and executes them on the request path.
+//! Python never runs here — the rust binary is self-contained after
+//! `make artifacts` (see /opt/xla-example/load_hlo for the pattern).
+
+pub mod client;
+pub mod contract;
+pub mod native;
+pub mod postproc;
+
+pub use client::Runtime;
+pub use contract::Contract;
+pub use postproc::{decode_objectness, Detection};

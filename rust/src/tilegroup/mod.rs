@@ -1,0 +1,163 @@
+//! Tile grouping (§4.3.2, Fig. 5): merge a RoI mask's fine tiles into few
+//! large rectangles so the codec's independent regions are as big as
+//! possible (better motion reference reuse, fewer per-region headers).
+//!
+//! Greedy, as in the paper: repeatedly take the **largest inscribed
+//! rectangle** of the remaining mask (maximal all-ones rectangle in a
+//! binary grid, histogram-stack DP, O(cells) per iteration) until every
+//! mask tile is covered.  Groups partition the mask exactly — no non-RoI
+//! tile is ever included.
+
+use crate::roi::masks::RoiMasks;
+use crate::util::geometry::IRect;
+
+/// Largest all-true rectangle in a binary grid (row-major `w × h`).
+/// Returns (x, y, w, h) in cells, or None if the grid is all false.
+pub fn largest_rectangle(grid: &[bool], w: usize, h: usize) -> Option<(usize, usize, usize, usize)> {
+    assert_eq!(grid.len(), w * h);
+    let mut heights = vec![0usize; w];
+    let mut best: Option<(usize, (usize, usize, usize, usize))> = None;
+    for y in 0..h {
+        for x in 0..w {
+            heights[x] = if grid[y * w + x] { heights[x] + 1 } else { 0 };
+        }
+        // largest rectangle in histogram via a monotonic stack
+        let mut stack: Vec<usize> = Vec::new(); // indices with increasing heights
+        for x in 0..=w {
+            let cur = if x < w { heights[x] } else { 0 };
+            while let Some(&top) = stack.last() {
+                if heights[top] <= cur {
+                    break;
+                }
+                stack.pop();
+                let hgt = heights[top];
+                let left = stack.last().map_or(0, |&l| l + 1);
+                let width = x - left;
+                let area = hgt * width;
+                if best.map_or(true, |(a, _)| area > a) {
+                    best = Some((area, (left, y + 1 - hgt, width, hgt)));
+                }
+            }
+            stack.push(x);
+        }
+    }
+    best.map(|(_, r)| r)
+}
+
+/// Greedy tile grouping of one camera's mask; returns pixel rectangles.
+pub fn group_camera(masks: &RoiMasks, cam: usize) -> Vec<IRect> {
+    let w = masks.tiling.tiles_x as usize;
+    let h = masks.tiling.tiles_y as usize;
+    let t = masks.tiling.tile_px;
+    let mut grid = vec![false; w * h];
+    for &(tx, ty) in &masks.tiles[cam] {
+        grid[ty as usize * w + tx as usize] = true;
+    }
+    let mut groups = Vec::new();
+    while let Some((x, y, rw, rh)) = largest_rectangle(&grid, w, h) {
+        groups.push(IRect::new(x as u32 * t, y as u32 * t, rw as u32 * t, rh as u32 * t));
+        for yy in y..y + rh {
+            for xx in x..x + rw {
+                grid[yy * w + xx] = false;
+            }
+        }
+    }
+    groups
+}
+
+/// Group every camera's mask.
+pub fn group_all(masks: &RoiMasks) -> Vec<Vec<IRect>> {
+    (0..masks.tiling.n_cameras).map(|c| group_camera(masks, c)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::association::tiles::Tiling;
+    use std::collections::HashSet;
+
+    fn masks_from(tiles: &[(u32, u32)]) -> RoiMasks {
+        let tiling = Tiling::new(1, 320, 192, 16);
+        let mut set = HashSet::new();
+        set.extend(tiles.iter().copied());
+        RoiMasks { tiling, tiles: vec![set] }
+    }
+
+    #[test]
+    fn histogram_rectangle_basics() {
+        // 4x3 grid with a 3x2 block of ones
+        #[rustfmt::skip]
+        let grid = [
+            false, true,  true,  true,
+            false, true,  true,  true,
+            true,  false, false, false,
+        ];
+        let r = largest_rectangle(&grid, 4, 3).unwrap();
+        assert_eq!(r, (1, 0, 3, 2));
+        assert!(largest_rectangle(&[false; 6], 3, 2).is_none());
+        let full = largest_rectangle(&[true; 6], 3, 2).unwrap();
+        assert_eq!(full, (0, 0, 3, 2));
+    }
+
+    #[test]
+    fn groups_partition_the_mask() {
+        // the Fig. 5 shape: an L of tiles
+        let tiles: Vec<(u32, u32)> = (0..4)
+            .flat_map(|x| (0..3).map(move |y| (x, y)))
+            .chain((0..2).map(|y| (4, y)))
+            .collect();
+        let m = masks_from(&tiles);
+        let groups = group_camera(&m, 0);
+        // exact cover: areas sum to tile count, no overlaps, all inside mask
+        let total_area: u64 = groups.iter().map(|g| g.area()).sum();
+        assert_eq!(total_area, tiles.len() as u64 * 16 * 16);
+        for g in &groups {
+            assert_eq!(g.x % 16, 0);
+            assert_eq!(g.w % 16, 0);
+            for ty in g.y / 16..(g.y + g.h) / 16 {
+                for tx in g.x / 16..(g.x + g.w) / 16 {
+                    assert!(tiles.contains(&(tx, ty)), "group covers non-mask tile {tx},{ty}");
+                }
+            }
+        }
+        // greedy takes the 4x3 block first
+        assert_eq!(groups[0], IRect::new(0, 0, 64, 48));
+        assert!(groups.len() <= 3, "too many groups: {groups:?}");
+    }
+
+    #[test]
+    fn single_tile_mask() {
+        let m = masks_from(&[(7, 4)]);
+        let groups = group_camera(&m, 0);
+        assert_eq!(groups, vec![IRect::new(112, 64, 16, 16)]);
+    }
+
+    #[test]
+    fn empty_mask_no_groups() {
+        let m = masks_from(&[]);
+        assert!(group_camera(&m, 0).is_empty());
+    }
+
+    #[test]
+    fn grouping_reduces_region_count() {
+        // a solid 6x4 block of 24 tiles must become exactly 1 group
+        let tiles: Vec<(u32, u32)> =
+            (2..8).flat_map(|x| (3..7).map(move |y| (x, y))).collect();
+        let m = masks_from(&tiles);
+        let groups = group_camera(&m, 0);
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0], IRect::new(32, 48, 96, 64));
+    }
+
+    #[test]
+    fn checkerboard_worst_case() {
+        let tiles: Vec<(u32, u32)> = (0..8)
+            .flat_map(|x| (0..6).map(move |y| (x, y)))
+            .filter(|(x, y)| (x + y) % 2 == 0)
+            .collect();
+        let m = masks_from(&tiles);
+        let groups = group_camera(&m, 0);
+        // no merging possible: one group per tile
+        assert_eq!(groups.len(), tiles.len());
+    }
+}

@@ -1,0 +1,237 @@
+//! 2-D geometry primitives shared by the simulator, ReID records, filters
+//! and the query matcher.  Bounding boxes use the paper's
+//! `<left, top, width, height>` convention (§4.1.1), pixels, y-down.
+
+/// Axis-aligned rectangle `<left, top, width, height>` in f64 pixels.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Rect {
+    pub left: f64,
+    pub top: f64,
+    pub width: f64,
+    pub height: f64,
+}
+
+impl Rect {
+    pub fn new(left: f64, top: f64, width: f64, height: f64) -> Self {
+        Rect { left, top, width, height }
+    }
+
+    /// From corner coordinates; empty if inverted.
+    pub fn from_corners(x0: f64, y0: f64, x1: f64, y1: f64) -> Self {
+        Rect::new(x0, y0, (x1 - x0).max(0.0), (y1 - y0).max(0.0))
+    }
+
+    pub fn right(&self) -> f64 {
+        self.left + self.width
+    }
+
+    pub fn bottom(&self) -> f64 {
+        self.top + self.height
+    }
+
+    pub fn area(&self) -> f64 {
+        self.width * self.height
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.width <= 0.0 || self.height <= 0.0
+    }
+
+    pub fn center(&self) -> (f64, f64) {
+        (self.left + self.width / 2.0, self.top + self.height / 2.0)
+    }
+
+    pub fn contains_point(&self, x: f64, y: f64) -> bool {
+        x >= self.left && x < self.right() && y >= self.top && y < self.bottom()
+    }
+
+    /// Intersection rectangle (possibly empty).
+    pub fn intersect(&self, other: &Rect) -> Rect {
+        Rect::from_corners(
+            self.left.max(other.left),
+            self.top.max(other.top),
+            self.right().min(other.right()),
+            self.bottom().min(other.bottom()),
+        )
+    }
+
+    /// Intersection-over-union.
+    pub fn iou(&self, other: &Rect) -> f64 {
+        let inter = self.intersect(other).area();
+        let union = self.area() + other.area() - inter;
+        if union <= 0.0 {
+            0.0
+        } else {
+            inter / union
+        }
+    }
+
+    /// Fraction of `self` covered by `other`.
+    pub fn coverage_by(&self, other: &Rect) -> f64 {
+        if self.area() <= 0.0 {
+            0.0
+        } else {
+            self.intersect(other).area() / self.area()
+        }
+    }
+
+    /// Clip to a `width x height` frame; may become empty.
+    pub fn clip_to_frame(&self, width: f64, height: f64) -> Rect {
+        self.intersect(&Rect::new(0.0, 0.0, width, height))
+    }
+
+    /// Smallest rectangle containing both.
+    pub fn union_bounds(&self, other: &Rect) -> Rect {
+        if self.is_empty() {
+            return *other;
+        }
+        if other.is_empty() {
+            return *self;
+        }
+        Rect::from_corners(
+            self.left.min(other.left),
+            self.top.min(other.top),
+            self.right().max(other.right()),
+            self.bottom().max(other.bottom()),
+        )
+    }
+}
+
+/// Integer pixel rectangle (used by the codec and tile grouping).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct IRect {
+    pub x: u32,
+    pub y: u32,
+    pub w: u32,
+    pub h: u32,
+}
+
+impl IRect {
+    pub fn new(x: u32, y: u32, w: u32, h: u32) -> Self {
+        IRect { x, y, w, h }
+    }
+
+    pub fn area(&self) -> u64 {
+        self.w as u64 * self.h as u64
+    }
+
+    pub fn to_rect(&self) -> Rect {
+        Rect::new(self.x as f64, self.y as f64, self.w as f64, self.h as f64)
+    }
+
+    pub fn contains(&self, px: u32, py: u32) -> bool {
+        px >= self.x && px < self.x + self.w && py >= self.y && py < self.y + self.h
+    }
+}
+
+/// A 2-D point / vector in world meters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Vec2 {
+    pub x: f64,
+    pub y: f64,
+}
+
+impl Vec2 {
+    pub fn new(x: f64, y: f64) -> Self {
+        Vec2 { x, y }
+    }
+
+    pub fn add(self, o: Vec2) -> Vec2 {
+        Vec2::new(self.x + o.x, self.y + o.y)
+    }
+
+    pub fn sub(self, o: Vec2) -> Vec2 {
+        Vec2::new(self.x - o.x, self.y - o.y)
+    }
+
+    pub fn scale(self, s: f64) -> Vec2 {
+        Vec2::new(self.x * s, self.y * s)
+    }
+
+    pub fn norm(self) -> f64 {
+        (self.x * self.x + self.y * self.y).sqrt()
+    }
+
+    pub fn normalized(self) -> Vec2 {
+        let n = self.norm();
+        if n == 0.0 {
+            Vec2::new(0.0, 0.0)
+        } else {
+            self.scale(1.0 / n)
+        }
+    }
+
+    /// Perpendicular (rotated +90°).
+    pub fn perp(self) -> Vec2 {
+        Vec2::new(-self.y, self.x)
+    }
+
+    pub fn dot(self, o: Vec2) -> f64 {
+        self.x * o.x + self.y * o.y
+    }
+
+    pub fn rotate(self, angle: f64) -> Vec2 {
+        let (s, c) = angle.sin_cos();
+        Vec2::new(c * self.x - s * self.y, s * self.x + c * self.y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iou_identity_and_disjoint() {
+        let a = Rect::new(0.0, 0.0, 10.0, 10.0);
+        assert!((a.iou(&a) - 1.0).abs() < 1e-12);
+        let b = Rect::new(20.0, 20.0, 5.0, 5.0);
+        assert_eq!(a.iou(&b), 0.0);
+    }
+
+    #[test]
+    fn iou_half_overlap() {
+        let a = Rect::new(0.0, 0.0, 10.0, 10.0);
+        let b = Rect::new(5.0, 0.0, 10.0, 10.0);
+        // inter 50, union 150
+        assert!((a.iou(&b) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn intersect_empty_when_disjoint() {
+        let a = Rect::new(0.0, 0.0, 4.0, 4.0);
+        let b = Rect::new(10.0, 10.0, 4.0, 4.0);
+        assert!(a.intersect(&b).is_empty());
+    }
+
+    #[test]
+    fn clip_to_frame() {
+        let r = Rect::new(-5.0, -5.0, 20.0, 20.0).clip_to_frame(10.0, 8.0);
+        assert_eq!(r, Rect::new(0.0, 0.0, 10.0, 8.0));
+    }
+
+    #[test]
+    fn coverage() {
+        let a = Rect::new(0.0, 0.0, 10.0, 10.0);
+        let b = Rect::new(0.0, 0.0, 5.0, 10.0);
+        assert!((b.coverage_by(&a) - 1.0).abs() < 1e-12);
+        assert!((a.coverage_by(&b) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn union_bounds() {
+        let a = Rect::new(0.0, 0.0, 2.0, 2.0);
+        let b = Rect::new(4.0, 4.0, 2.0, 2.0);
+        let u = a.union_bounds(&b);
+        assert_eq!(u, Rect::new(0.0, 0.0, 6.0, 6.0));
+    }
+
+    #[test]
+    fn vec2_ops() {
+        let v = Vec2::new(3.0, 4.0);
+        assert!((v.norm() - 5.0).abs() < 1e-12);
+        assert!((v.normalized().norm() - 1.0).abs() < 1e-12);
+        let r = Vec2::new(1.0, 0.0).rotate(std::f64::consts::FRAC_PI_2);
+        assert!((r.x).abs() < 1e-12 && (r.y - 1.0).abs() < 1e-12);
+        assert_eq!(v.perp().dot(v), 0.0);
+    }
+}

@@ -1,0 +1,212 @@
+//! Small dense linear algebra: just enough for the statistical filters —
+//! least-squares solves for the RANSAC regression filter (§4.2.2) and the
+//! DCT basis products in the codec.  Row-major `Mat` with Gaussian
+//! elimination; dimensions here are tiny (≤ ~30), so simplicity wins.
+
+/// Row-major dense matrix of f64.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out[(i, j)] += a * other[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|i| self.row(i).iter().zip(v).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    /// Solve `self * x = b` by Gaussian elimination with partial pivoting.
+    /// Returns None when singular (pivot below 1e-12).
+    pub fn solve(&self, b: &[f64]) -> Option<Vec<f64>> {
+        assert_eq!(self.rows, self.cols);
+        assert_eq!(self.rows, b.len());
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut x = b.to_vec();
+        for col in 0..n {
+            // pivot
+            let mut piv = col;
+            for r in col + 1..n {
+                if a[(r, col)].abs() > a[(piv, col)].abs() {
+                    piv = r;
+                }
+            }
+            if a[(piv, col)].abs() < 1e-12 {
+                return None;
+            }
+            if piv != col {
+                for j in 0..n {
+                    let tmp = a[(col, j)];
+                    a[(col, j)] = a[(piv, j)];
+                    a[(piv, j)] = tmp;
+                }
+                x.swap(col, piv);
+            }
+            // eliminate
+            for r in col + 1..n {
+                let f = a[(r, col)] / a[(col, col)];
+                if f == 0.0 {
+                    continue;
+                }
+                for j in col..n {
+                    a[(r, j)] -= f * a[(col, j)];
+                }
+                x[r] -= f * x[col];
+            }
+        }
+        // back substitution
+        for col in (0..n).rev() {
+            let mut s = x[col];
+            for j in col + 1..n {
+                s -= a[(col, j)] * x[j];
+            }
+            x[col] = s / a[(col, col)];
+        }
+        Some(x)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Least-squares solve of `A x ≈ b` via ridge-regularized normal equations
+/// `(AᵀA + λI) x = Aᵀ b`.  λ defaults tiny — only there to keep nearly
+/// collinear polynomial features solvable.
+pub fn lstsq(a: &Mat, b: &[f64], ridge: f64) -> Option<Vec<f64>> {
+    assert_eq!(a.rows, b.len());
+    let at = a.transpose();
+    let mut ata = at.matmul(a);
+    for i in 0..ata.rows {
+        ata[(i, i)] += ridge;
+    }
+    let atb = at.matvec(b);
+    ata.solve(&atb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solve_simple() {
+        let a = Mat::from_rows(&[vec![2.0, 1.0], vec![1.0, 3.0]]);
+        let x = a.solve(&[5.0, 10.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-10);
+        assert!((x[1] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn solve_requires_pivoting() {
+        let a = Mat::from_rows(&[vec![0.0, 1.0], vec![1.0, 0.0]]);
+        let x = a.solve(&[2.0, 3.0]).unwrap();
+        assert_eq!(x, vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn solve_singular_returns_none() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]);
+        assert!(a.solve(&[1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let i = Mat::identity(2);
+        assert_eq!(a.matmul(&i), a);
+        assert_eq!(i.matmul(&a), a);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn lstsq_recovers_line() {
+        // y = 3 + 2x with exact data
+        let xs = [0.0, 1.0, 2.0, 3.0, 4.0];
+        let a = Mat::from_rows(&xs.iter().map(|&x| vec![1.0, x]).collect::<Vec<_>>());
+        let b: Vec<f64> = xs.iter().map(|&x| 3.0 + 2.0 * x).collect();
+        let w = lstsq(&a, &b, 1e-9).unwrap();
+        assert!((w[0] - 3.0).abs() < 1e-5);
+        assert!((w[1] - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn lstsq_overdetermined_noisy() {
+        // best fit of constant signal: mean
+        let a = Mat::from_rows(&(0..10).map(|_| vec![1.0]).collect::<Vec<_>>());
+        let b: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let w = lstsq(&a, &b, 0.0).unwrap();
+        assert!((w[0] - 4.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,9 @@
+//! Shared utilities: deterministic RNG, small linear algebra, geometry,
+//! statistics, JSON — the pieces `rand`/`serde`/`nalgebra` would normally
+//! provide, reimplemented because this build is fully offline (DESIGN.md §3).
+
+pub mod geometry;
+pub mod json;
+pub mod matrix;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,213 @@
+//! Integration: the full offline phase over a scenario, plus property
+//! tests on the optimizer/grouping invariants (the coordinator-side
+//! guarantees CrossRoI's correctness rests on).
+
+use crossroi::association::table::AssociationTable;
+use crossroi::association::tiles::Tiling;
+use crossroi::config::Config;
+use crossroi::coordinator::{build_plan, Method};
+use crossroi::reid::error_model::{ErrorModelParams, RawReid};
+use crossroi::reid::records::{RawDetection, ReidStream};
+use crossroi::roi::setcover::{self, SolverParams};
+use crossroi::sim::Scenario;
+use crossroi::testing::{check, gen, PropConfig};
+use crossroi::util::geometry::Rect;
+
+/// The paper's central guarantee (Eq. 2): after optimization, every
+/// object occurrence in the *filtered* stream keeps at least one
+/// appearance region fully inside the masks.
+#[test]
+fn masks_cover_every_filtered_occurrence() {
+    let cfg = Config::test_small();
+    let scenario = Scenario::build(&cfg.scenario);
+    let plan = build_plan(&scenario, &cfg.scenario, &cfg.system, &Method::CrossRoi);
+    // rebuild the filtered stream exactly as build_plan does
+    let raw =
+        RawReid::generate(&scenario, scenario.profile_range(), &ErrorModelParams::default());
+    let filters = crossroi::filters::TandemFilters::default();
+    let (stream, _) = filters.apply(&raw);
+    let tiling = Tiling::new(5, 320, 192, cfg.scenario.tile_px);
+    let table = AssociationTable::build(&stream, &tiling);
+    for c in &table.constraints {
+        if c.regions.is_empty() {
+            continue;
+        }
+        let satisfied = c.regions.iter().any(|r| {
+            r.iter().all(|&t| {
+                let (cam, tx, ty) = tiling.tile_pos(t);
+                plan.masks.tiles[cam].contains(&(tx, ty))
+            })
+        });
+        assert!(satisfied, "constraint unsatisfied by the plan masks: {c:?}");
+    }
+}
+
+/// Property: for random synthetic association tables, the greedy solution
+/// is always valid and never better than the exact optimum; on small
+/// instances it is within one tile of optimal.
+#[test]
+fn prop_setcover_valid_and_near_optimal() {
+    check(&PropConfig { cases: 40, seed: 0xC0FFEE }, "setcover", |rng| {
+        let tiling = Tiling::new(2, 320, 192, 16);
+        let n_constraints = 1 + rng.below(5);
+        let mut records = Vec::new();
+        let mut id = 0u32;
+        for frame in 0..n_constraints {
+            // each constraint: an object seen in 1-2 cameras
+            let n_regions = 1 + rng.below(2);
+            for cam in 0..n_regions {
+                records.push(RawDetection {
+                    cam,
+                    frame,
+                    bbox: gen::bbox_in_frame(rng, 320.0, 192.0),
+                    raw_id: id,
+                    true_id: id,
+                });
+            }
+            id += 1;
+        }
+        let stream = ReidStream::new(2, n_constraints, records);
+        let table = AssociationTable::build(&stream, &tiling);
+        let greedy = setcover::solve(&table, &SolverParams::default());
+        // validity
+        for c in &table.constraints {
+            let ok = c
+                .regions
+                .iter()
+                .any(|r| r.iter().all(|t| greedy.tiles.contains(t)));
+            if !ok {
+                return Err(format!("greedy left constraint unsatisfied: {c:?}"));
+            }
+        }
+        if table.n_constraints() <= 6 {
+            let exact = setcover::solve_exact(&table, 8);
+            if greedy.size() < exact.size() {
+                return Err(format!(
+                    "greedy {} beat 'exact' {} — exact solver is broken",
+                    greedy.size(),
+                    exact.size()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Property: tile groups always partition the mask exactly.
+#[test]
+fn prop_tilegroup_partitions_mask() {
+    check(&PropConfig { cases: 60, seed: 0x717E }, "tilegroup", |rng| {
+        let tiling = Tiling::new(1, 320, 192, 16);
+        let n = 1 + rng.below(60);
+        let mut set = std::collections::HashSet::new();
+        for _ in 0..n {
+            set.insert((rng.below(20) as u32, rng.below(12) as u32));
+        }
+        let masks = crossroi::roi::masks::RoiMasks { tiling, tiles: vec![set.clone()] };
+        let groups = crossroi::tilegroup::group_camera(&masks, 0);
+        let mut covered = std::collections::HashSet::new();
+        for g in &groups {
+            for ty in g.y / 16..(g.y + g.h) / 16 {
+                for tx in g.x / 16..(g.x + g.w) / 16 {
+                    if !set.contains(&(tx, ty)) {
+                        return Err(format!("group {g:?} covers non-mask tile ({tx},{ty})"));
+                    }
+                    if !covered.insert((tx, ty)) {
+                        return Err(format!("tile ({tx},{ty}) covered twice"));
+                    }
+                }
+            }
+        }
+        if covered != set {
+            return Err(format!("{} of {} tiles covered", covered.len(), set.len()));
+        }
+        Ok(())
+    });
+}
+
+/// Property: the association table groups same-id same-frame records into
+/// single multi-region constraints, regardless of camera order.
+#[test]
+fn prop_association_is_order_invariant() {
+    check(&PropConfig { cases: 40, seed: 0xA550 }, "association", |rng| {
+        let tiling = Tiling::new(3, 320, 192, 16);
+        let mut records = Vec::new();
+        for f in 0..3 {
+            for cam in 0..3 {
+                if rng.chance(0.7) {
+                    records.push(RawDetection {
+                        cam,
+                        frame: f,
+                        bbox: gen::bbox_in_frame(rng, 320.0, 192.0),
+                        raw_id: (f % 2) as u32,
+                        true_id: (f % 2) as u32,
+                    });
+                }
+            }
+        }
+        let a = AssociationTable::build(&ReidStream::new(3, 3, records.clone()), &tiling);
+        let mut rev = records.clone();
+        rev.reverse();
+        let b = AssociationTable::build(&ReidStream::new(3, 3, rev), &tiling);
+        if a.constraints != b.constraints {
+            return Err("constraint set depends on record order".into());
+        }
+        Ok(())
+    });
+}
+
+/// Failure injection: a camera whose ReID stream is empty (dead camera
+/// during profiling) must yield an empty mask for it, not a crash.
+#[test]
+fn dead_camera_during_profile() {
+    let cfg = Config::test_small();
+    let scenario = Scenario::build(&cfg.scenario);
+    let raw =
+        RawReid::generate(&scenario, scenario.profile_range(), &ErrorModelParams::default());
+    // drop every record of camera 2
+    let stream = raw.filtered(|d| d.cam != 2);
+    let tiling = Tiling::new(5, 320, 192, 16);
+    let table = AssociationTable::build(&stream, &tiling);
+    let sol = setcover::solve(&table, &SolverParams::default());
+    let masks = crossroi::roi::masks::RoiMasks::from_solution(&tiling, &sol.tiles);
+    assert_eq!(masks.camera_size(2), 0, "dead camera got mask tiles");
+    // other cameras still covered
+    assert!(masks.total_size() > 0);
+}
+
+#[test]
+fn rebuilding_plan_is_deterministic() {
+    let cfg = Config::test_small();
+    let scenario = Scenario::build(&cfg.scenario);
+    let a = build_plan(&scenario, &cfg.scenario, &cfg.system, &Method::CrossRoi);
+    let b = build_plan(&scenario, &cfg.scenario, &cfg.system, &Method::CrossRoi);
+    assert_eq!(a.masks.total_size(), b.masks.total_size());
+    for cam in 0..5 {
+        assert_eq!(a.masks.tiles[cam], b.masks.tiles[cam]);
+        assert_eq!(a.groups[cam], b.groups[cam]);
+        assert_eq!(a.blocks[cam], b.blocks[cam]);
+    }
+}
+
+/// Bboxes in appearance regions round-trip: every record's bbox is fully
+/// covered by the union of its appearance-region tiles.
+#[test]
+fn prop_appearance_region_covers_bbox() {
+    check(&PropConfig { cases: 100, seed: 0xBB0C }, "appearance", |rng| {
+        let tiling = Tiling::new(1, 320, 192, 16);
+        let bbox = gen::bbox_in_frame(rng, 320.0, 192.0);
+        let region = tiling.appearance_region(0, &bbox);
+        if region.is_empty() {
+            return Err(format!("empty region for {bbox:?}"));
+        }
+        // the union of tile rects must contain the bbox
+        let mut cover = Rect::new(0.0, 0.0, 0.0, 0.0);
+        for &t in &region {
+            cover = cover.union_bounds(&tiling.tile_rect(t).to_rect());
+        }
+        if bbox.intersect(&cover).area() + 1e-6 < bbox.area() {
+            return Err(format!("region does not cover bbox: {bbox:?} vs {cover:?}"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,163 @@
+//! Integration: the online phase (encode → DES → inference → query) over
+//! a small scenario with the native detector, checking the paper's
+//! directional claims hold end-to-end, plus DES/queueing properties.
+
+use crossroi::config::Config;
+use crossroi::coordinator::{
+    baseline_reference, run_ablation, run_method, Method, NativeInfer,
+};
+use crossroi::sim::Scenario;
+use crossroi::testing::{check, PropConfig};
+
+fn small() -> (Scenario, Config) {
+    let mut cfg = Config::test_small();
+    cfg.scenario.profile_secs = 15.0;
+    cfg.scenario.eval_secs = 10.0;
+    (Scenario::build(&cfg.scenario), cfg)
+}
+
+#[test]
+fn ablation_ordering_holds() {
+    let (scenario, cfg) = small();
+    let methods = [
+        Method::Baseline,
+        Method::NoFilters,
+        Method::NoMerging,
+        Method::NoRoiInf,
+        Method::CrossRoi,
+    ];
+    let reports = run_ablation(&scenario, &cfg.system, &NativeInfer, &methods).unwrap();
+    let get = |n: &str| reports.iter().find(|r| r.method == n).unwrap();
+    let base = get("Baseline");
+    let cross = get("CrossRoI");
+    // paper's headline directions
+    assert!(
+        cross.network_mbps_total < base.network_mbps_total,
+        "CrossRoI must use less network: {} vs {}",
+        cross.network_mbps_total,
+        base.network_mbps_total
+    );
+    assert!(
+        cross.network_mbps_total <= get("No-Merging").network_mbps_total,
+        "tile grouping must not increase network"
+    );
+    assert!(
+        cross.network_mbps_total <= get("No-Filters").network_mbps_total * 1.05,
+        "filters should shrink (or at least not inflate) network"
+    );
+    assert!(cross.latency.total() < base.latency.total(), "CrossRoI must cut latency");
+    assert!(cross.accuracy > 0.9, "CrossRoI accuracy too low: {}", cross.accuracy);
+    assert_eq!(base.accuracy, 1.0, "Baseline must be the reference");
+    // masks really shrank
+    assert!(cross.mask_coverage < 0.8);
+}
+
+#[test]
+fn reducto_integration_dominates_plain_reducto() {
+    let (scenario, cfg) = small();
+    let (reference, _) = baseline_reference(&scenario, &cfg.system, &NativeInfer).unwrap();
+    let target = 0.85;
+    let red = run_method(
+        &scenario, &cfg.system, &NativeInfer, &Method::Reducto(target), Some(&reference),
+    )
+    .unwrap();
+    let cr = run_method(
+        &scenario, &cfg.system, &NativeInfer, &Method::CrossRoiReducto(target), Some(&reference),
+    )
+    .unwrap();
+    assert!(
+        cr.network_mbps_total < red.network_mbps_total,
+        "CrossRoI-Reducto must use less network: {} vs {}",
+        cr.network_mbps_total,
+        red.network_mbps_total
+    );
+    // both meet a loosened version of the target (short window => noisy)
+    assert!(red.accuracy > target - 0.1, "Reducto accuracy {}", red.accuracy);
+    assert!(cr.accuracy > target - 0.1, "CrossRoI-Reducto accuracy {}", cr.accuracy);
+}
+
+#[test]
+fn reducto_reduces_frames_at_lower_targets() {
+    let (scenario, cfg) = small();
+    let (reference, _) = baseline_reference(&scenario, &cfg.system, &NativeInfer).unwrap();
+    let strict = run_method(
+        &scenario, &cfg.system, &NativeInfer, &Method::Reducto(1.0), Some(&reference),
+    )
+    .unwrap();
+    let loose = run_method(
+        &scenario, &cfg.system, &NativeInfer, &Method::Reducto(0.85), Some(&reference),
+    )
+    .unwrap();
+    assert_eq!(strict.frames_reduced, 0, "target 1.0 must keep every frame");
+    assert!(
+        loose.frames_reduced >= strict.frames_reduced,
+        "lower target should drop at least as many frames"
+    );
+}
+
+#[test]
+fn segment_length_tradeoff() {
+    let (scenario, cfg) = small();
+    let mut short_sys = cfg.system.clone();
+    short_sys.segment_secs = 0.4;
+    let mut long_sys = cfg.system.clone();
+    long_sys.segment_secs = 4.0;
+    let short =
+        run_method(&scenario, &short_sys, &NativeInfer, &Method::CrossRoi, None).unwrap();
+    let long = run_method(&scenario, &long_sys, &NativeInfer, &Method::CrossRoi, None).unwrap();
+    // Fig. 11: longer segments compress better but queue longer at cameras
+    assert!(
+        long.network_mbps_total < short.network_mbps_total,
+        "long segments should compress better: {} vs {}",
+        long.network_mbps_total,
+        short.network_mbps_total
+    );
+    assert!(
+        long.latency.camera > short.latency.camera,
+        "long segments should queue longer: {} vs {}",
+        long.latency.camera,
+        short.latency.camera
+    );
+}
+
+#[test]
+fn narrower_link_increases_latency_only() {
+    let (scenario, cfg) = small();
+    let mut narrow = cfg.system.clone();
+    narrow.bandwidth_mbps = cfg.system.bandwidth_mbps / 3.0;
+    let wide = run_method(&scenario, &cfg.system, &NativeInfer, &Method::CrossRoi, None).unwrap();
+    let slow = run_method(&scenario, &narrow, &NativeInfer, &Method::CrossRoi, None).unwrap();
+    assert!((wide.bytes_total as i64 - slow.bytes_total as i64).abs() < 16, "bytes must not depend on link");
+    assert!(
+        slow.latency.network > wide.latency.network,
+        "narrow link must raise network latency: {} vs {}",
+        slow.latency.network,
+        wide.latency.network
+    );
+}
+
+/// Property: the DES latency decomposition is consistent — every
+/// component non-negative and their mean sum equals the mean total.
+#[test]
+fn prop_latency_decomposition_consistent() {
+    check(&PropConfig { cases: 4, seed: 0xDE5 }, "latency", |rng| {
+        let mut cfg = Config::test_small();
+        cfg.scenario.profile_secs = 8.0;
+        cfg.scenario.eval_secs = 6.0;
+        cfg.scenario.seed = rng.next_u64();
+        cfg.system.segment_secs = [0.4, 1.0, 2.0][rng.below(3)];
+        let scenario = Scenario::build(&cfg.scenario);
+        let r = run_method(&scenario, &cfg.system, &NativeInfer, &Method::CrossRoi, None)
+            .map_err(|e| e.to_string())?;
+        if r.latency.camera < 0.0 || r.latency.network < 0.0 || r.latency.server < 0.0 {
+            return Err(format!("negative latency component: {:?}", r.latency));
+        }
+        if r.latency.total() <= 0.0 {
+            return Err("zero total latency".into());
+        }
+        if !(r.latency_p95 + 1e-9 >= 0.0) {
+            return Err("bad p95".into());
+        }
+        Ok(())
+    });
+}

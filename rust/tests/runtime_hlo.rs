@@ -1,0 +1,115 @@
+//! Cross-layer validation: the AOT HLO executables (L1 Pallas kernel
+//! inside the L2 graph, compiled via PJRT) against the independent
+//! pure-rust native detector — closing the loop
+//! python-oracle ↔ Pallas ↔ HLO ↔ rust.
+//!
+//! Requires `make artifacts`; tests are skipped (with a notice) otherwise.
+
+use crossroi::config::Config;
+use crossroi::runtime::{decode_objectness, native, Runtime};
+use crossroi::sim::Scenario;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::load("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIPPING runtime_hlo tests: {e:#}");
+            None
+        }
+    }
+}
+
+fn rendered_frame() -> Vec<f32> {
+    let cfg = Config::test_small();
+    let sc = Scenario::build(&cfg.scenario);
+    let renderer = sc.renderer();
+    // pick a frame with vehicles in camera 0 if possible
+    let frame = (0..sc.n_frames()).find(|&f| !sc.detections(0, f).is_empty()).unwrap_or(0);
+    renderer.render(0, frame).to_f32()
+}
+
+#[test]
+fn dense_hlo_matches_native_detector() {
+    let Some(rt) = runtime() else { return };
+    let frame = rendered_frame();
+    let hlo = rt.infer_full(&frame).unwrap();
+    let nat = native::detect_full(&frame, 192, 320);
+    assert_eq!(hlo.len(), nat.len());
+    for (i, (a, b)) in hlo.iter().zip(&nat).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-3,
+            "cell {i}: HLO {a} vs native {b}"
+        );
+    }
+}
+
+#[test]
+fn roi_hlo_matches_native_on_active_blocks() {
+    let Some(rt) = runtime() else { return };
+    let frame = rendered_frame();
+    for blocks in [vec![0, 7, 23, 42], (0..12).collect::<Vec<i32>>(), vec![59]] {
+        let (hlo, k) = rt.infer_roi(&frame, &blocks).unwrap();
+        assert!(k >= blocks.len());
+        let nat = native::detect_roi(&frame, 192, 320, &blocks, 32, 10);
+        for (i, (a, b)) in hlo.iter().zip(&nat).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-3,
+                "blocks {blocks:?} cell {i}: HLO {a} vs native {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn roi_capacity_selection() {
+    let Some(rt) = runtime() else { return };
+    assert_eq!(rt.capacity_for(1), Some(8));
+    assert_eq!(rt.capacity_for(8), Some(8));
+    assert_eq!(rt.capacity_for(9), Some(16));
+    assert_eq!(rt.capacity_for(33), Some(60));
+    assert_eq!(rt.capacity_for(60), Some(60));
+    assert_eq!(rt.capacity_for(61), None);
+}
+
+#[test]
+fn empty_roi_is_silent() {
+    let Some(rt) = runtime() else { return };
+    let frame = rendered_frame();
+    let (grid, _) = rt.infer_roi(&frame, &[]).unwrap();
+    assert!(grid.iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn detector_finds_rendered_vehicles() {
+    let Some(rt) = runtime() else { return };
+    let cfg = Config::test_small();
+    let sc = Scenario::build(&cfg.scenario);
+    let renderer = sc.renderer();
+    // a frame with at least one big unoccluded vehicle in camera 0
+    let mut checked = 0;
+    for f in 0..sc.n_frames() {
+        let gt: Vec<_> = sc
+            .detections(0, f)
+            .iter()
+            .filter(|d| !d.occluded && d.bbox.area() > 700.0)
+            .collect();
+        if gt.is_empty() {
+            continue;
+        }
+        let frame = renderer.render(0, f).to_f32();
+        let grid = rt.infer_full(&frame).unwrap();
+        let dets = decode_objectness(&grid, 12, 20, 16, 0.25);
+        for g in &gt {
+            let (cx, cy) = g.bbox.center();
+            let hit = dets
+                .iter()
+                .any(|d| d.bbox.iou(&g.bbox) >= 0.1 || d.bbox.contains_point(cx, cy));
+            assert!(hit, "frame {f}: vehicle {} at {:?} undetected", g.vehicle_id, g.bbox);
+        }
+        checked += 1;
+        if checked >= 10 {
+            break;
+        }
+    }
+    assert!(checked > 0, "no suitable frames found");
+}
