@@ -25,7 +25,8 @@ pub fn sweep_config() -> Config {
     cfg
 }
 
-/// Load the PJRT runtime or exit with a hint.
+/// Load the PJRT runtime or exit with a hint (pjrt-feature benches only).
+#[cfg(feature = "pjrt")]
 pub fn load_runtime(cfg: &Config) -> crossroi::runtime::Runtime {
     match crossroi::runtime::Runtime::load(&cfg.system.artifacts_dir) {
         Ok(rt) => rt,

@@ -318,9 +318,12 @@ impl SegmentEncoder {
         self.streams.len()
     }
 
-    /// Encode one segment (GOP): resets references so the segment is
-    /// independently decodable, then codes every frame of every region.
-    pub fn encode_segment(&mut self, frames: &[Frame]) -> EncodedSegment {
+    /// Encode one segment (GOP) from borrowed frames: resets references
+    /// so the segment is independently decodable, then codes every frame
+    /// of every region.  The streaming pipeline's entry point — kept
+    /// frames stay owned by the camera worker and are never cloned into
+    /// the encoder.
+    pub fn encode_segment_refs(&mut self, frames: &[&Frame]) -> EncodedSegment {
         for s in self.streams.iter_mut() {
             s.reset_gop();
         }
@@ -336,6 +339,13 @@ impl SegmentEncoder {
             + self.streams.len() * frames.len() * REGION_HEADER_BYTES
             + SEGMENT_HEADER_BYTES;
         EncodedSegment { bytes, n_frames: frames.len(), region_bits }
+    }
+
+    /// Encode one segment from owned frames (convenience wrapper around
+    /// [`SegmentEncoder::encode_segment_refs`]).
+    pub fn encode_segment(&mut self, frames: &[Frame]) -> EncodedSegment {
+        let refs: Vec<&Frame> = frames.iter().collect();
+        self.encode_segment_refs(&refs)
     }
 }
 
@@ -429,6 +439,19 @@ mod tests {
             b.bytes,
             a.bytes
         );
+    }
+
+    #[test]
+    fn borrowed_and_owned_segment_paths_are_identical() {
+        let fs = frames(4);
+        let refs: Vec<&Frame> = fs.iter().collect();
+        let region = [IRect::new(0, 0, 320, 192)];
+        let mut a = SegmentEncoder::new(&region, 6.0);
+        let mut b = SegmentEncoder::new(&region, 6.0);
+        let ea = a.encode_segment(&fs);
+        let eb = b.encode_segment_refs(&refs);
+        assert_eq!(ea.bytes, eb.bytes);
+        assert_eq!(ea.region_bits, eb.region_bits);
     }
 
     #[test]

@@ -1,0 +1,134 @@
+//! The evaluated methods (§5.2 ablations + §5.4 integrations) and the
+//! flags that steer the offline and online phases.
+
+/// The evaluated methods (§5.2 ablations + §5.4 integrations).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Method {
+    /// Everything off: full H.264 streams + off-the-shelf detector.
+    Baseline,
+    /// Filters ② off, rest of CrossRoI on.
+    NoFilters,
+    /// Tile grouping ⑤ off.
+    NoMerging,
+    /// RoI-based inference ⑥ off (dense detector on cropped frames).
+    NoRoiInf,
+    /// The full system.
+    CrossRoi,
+    /// Frame filtering only, with an accuracy target.
+    Reducto(f64),
+    /// CrossRoI + frame filtering (Fig. 12).
+    CrossRoiReducto(f64),
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::Baseline => "Baseline".into(),
+            Method::NoFilters => "No-Filters".into(),
+            Method::NoMerging => "No-Merging".into(),
+            Method::NoRoiInf => "No-RoIInf".into(),
+            Method::CrossRoi => "CrossRoI".into(),
+            Method::Reducto(t) => format!("Reducto@{t:.2}"),
+            Method::CrossRoiReducto(t) => format!("CrossRoI-Reducto@{t:.2}"),
+        }
+    }
+
+    /// Does the offline phase compute RoI masks?
+    pub fn uses_roi_masks(&self) -> bool {
+        !matches!(self, Method::Baseline | Method::Reducto(_))
+    }
+
+    /// Are the tandem statistical filters applied?
+    pub fn uses_filters(&self) -> bool {
+        self.uses_roi_masks() && !matches!(self, Method::NoFilters)
+    }
+
+    /// Is the tile grouping algorithm applied?
+    pub fn uses_merging(&self) -> bool {
+        self.uses_roi_masks() && !matches!(self, Method::NoMerging)
+    }
+
+    /// Is the SBNet RoI inference variant used?
+    pub fn uses_roi_inference(&self) -> bool {
+        matches!(
+            self,
+            Method::NoFilters | Method::NoMerging | Method::CrossRoi | Method::CrossRoiReducto(_)
+        )
+    }
+
+    /// Frame-filter accuracy target, if any.
+    pub fn reducto_target(&self) -> Option<f64> {
+        match self {
+            Method::Reducto(t) | Method::CrossRoiReducto(t) => Some(*t),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The full flag matrix for all 7 variants:
+    /// (method, roi_masks, filters, merging, roi_inference, reducto_target).
+    #[test]
+    fn flag_matrix_all_variants() {
+        let t = 0.9;
+        let matrix: [(Method, bool, bool, bool, bool, Option<f64>); 7] = [
+            (Method::Baseline, false, false, false, false, None),
+            (Method::NoFilters, true, false, true, true, None),
+            (Method::NoMerging, true, true, false, true, None),
+            (Method::NoRoiInf, true, true, true, false, None),
+            (Method::CrossRoi, true, true, true, true, None),
+            (Method::Reducto(t), false, false, false, false, Some(t)),
+            (Method::CrossRoiReducto(t), true, true, true, true, Some(t)),
+        ];
+        for (m, masks, filters, merging, roi_inf, target) in matrix {
+            assert_eq!(m.uses_roi_masks(), masks, "{}: uses_roi_masks", m.name());
+            assert_eq!(m.uses_filters(), filters, "{}: uses_filters", m.name());
+            assert_eq!(m.uses_merging(), merging, "{}: uses_merging", m.name());
+            assert_eq!(m.uses_roi_inference(), roi_inf, "{}: uses_roi_inference", m.name());
+            assert_eq!(m.reducto_target(), target, "{}: reducto_target", m.name());
+        }
+    }
+
+    /// Filters/merging imply RoI masks: no variant may enable a dependent
+    /// module while the masks themselves are off.
+    #[test]
+    fn dependent_flags_require_masks() {
+        for m in [
+            Method::Baseline,
+            Method::NoFilters,
+            Method::NoMerging,
+            Method::NoRoiInf,
+            Method::CrossRoi,
+            Method::Reducto(0.8),
+            Method::CrossRoiReducto(0.8),
+        ] {
+            if !m.uses_roi_masks() {
+                assert!(!m.uses_filters(), "{}", m.name());
+                assert!(!m.uses_merging(), "{}", m.name());
+            }
+        }
+    }
+
+    #[test]
+    fn names_are_distinct_and_encode_targets() {
+        let names: Vec<String> = [
+            Method::Baseline,
+            Method::NoFilters,
+            Method::NoMerging,
+            Method::NoRoiInf,
+            Method::CrossRoi,
+            Method::Reducto(0.9),
+            Method::CrossRoiReducto(0.95),
+        ]
+        .iter()
+        .map(|m| m.name())
+        .collect();
+        let unique: std::collections::HashSet<&String> = names.iter().collect();
+        assert_eq!(unique.len(), names.len(), "duplicate method names: {names:?}");
+        assert_eq!(names[5], "Reducto@0.90");
+        assert_eq!(names[6], "CrossRoI-Reducto@0.95");
+    }
+}

@@ -1,5 +1,7 @@
 //! Metrics reported per method — one row of Fig. 8 / Table 4.
 
+use crate::util::json::Json;
+
 /// End-to-end latency decomposition (Fig. 8f's stacked bars).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct LatencyBreakdown {
@@ -72,6 +74,38 @@ impl MethodReport {
             self.latency.server,
         )
     }
+
+    /// Full report as a JSON document (experiment dumps; the determinism
+    /// test compares these byte-for-byte across pipeline schedules).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::Str(self.method.clone())),
+            ("accuracy", Json::Num(self.accuracy)),
+            (
+                "missed_per_frame",
+                Json::Arr(self.missed_per_frame.iter().map(|&m| Json::Num(m as f64)).collect()),
+            ),
+            ("total_appearances", Json::Num(self.total_appearances as f64)),
+            ("network_mbps_per_cam", Json::arr_f64(&self.network_mbps_per_cam)),
+            ("network_mbps_total", Json::Num(self.network_mbps_total)),
+            ("bytes_total", Json::Num(self.bytes_total as f64)),
+            ("server_hz", Json::Num(self.server_hz)),
+            ("camera_fps", Json::Num(self.camera_fps)),
+            ("latency_camera", Json::Num(self.latency.camera)),
+            ("latency_network", Json::Num(self.latency.network)),
+            ("latency_server", Json::Num(self.latency.server)),
+            ("latency_p95", Json::Num(self.latency_p95)),
+            ("frames_reduced", Json::Num(self.frames_reduced as f64)),
+            ("frames_total", Json::Num(self.frames_total as f64)),
+            ("mask_tiles", Json::Num(self.mask_tiles as f64)),
+            ("mask_coverage", Json::Num(self.mask_coverage)),
+            (
+                "regions_per_cam",
+                Json::Arr(self.regions_per_cam.iter().map(|&r| Json::Num(r as f64)).collect()),
+            ),
+            ("offline_seconds", Json::Num(self.offline_seconds)),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -92,5 +126,21 @@ mod tests {
         let row = r.row();
         assert!(row.contains("CrossRoI"));
         assert!(row.contains("acc=0.999"));
+    }
+
+    #[test]
+    fn json_roundtrips_and_is_stable() {
+        let mut r = MethodReport::default();
+        r.method = "CrossRoI".to_string();
+        r.accuracy = 0.987;
+        r.network_mbps_per_cam = vec![0.5, 0.25];
+        r.missed_per_frame = vec![0, 1, 2];
+        let text = r.to_json().to_string_pretty(2);
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(parsed.get("method").unwrap().as_str(), Some("CrossRoI"));
+        assert_eq!(parsed.get("accuracy").unwrap().as_f64(), Some(0.987));
+        assert_eq!(parsed.get("missed_per_frame").unwrap().as_arr().unwrap().len(), 3);
+        // identical reports serialize identically (byte-wise)
+        assert_eq!(text, r.clone().to_json().to_string_pretty(2));
     }
 }

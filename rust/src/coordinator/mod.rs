@@ -2,18 +2,28 @@
 //!
 //! [`offline`] runs modules ①–④ (ReID → tandem filters → region
 //! association → RoI optimization → tile grouping) over the profile
-//! window and produces each camera's plan; [`online`] drives the
-//! streaming pipeline (⑤ crop/group/encode/stream, ⑥ RoI-CNN inference)
-//! over the evaluation window, with real measured compute and a
-//! discrete-event network/queueing model, and scores the unique-vehicle
-//! query.  [`metrics`] defines the report every bench prints.
+//! window and produces each camera's plan; [`online`] orchestrates the
+//! staged streaming pipeline in [`crate::pipeline`] (⑤ per-camera
+//! crop/group/encode workers, ⑥ merged batched RoI-CNN inference) over
+//! the evaluation window, with real measured compute and a discrete-event
+//! network/queueing replay, and scores the unique-vehicle query.
+//! [`metrics`] defines the report every bench prints.
 
+pub mod method;
 pub mod metrics;
 pub mod offline;
 pub mod online;
 
+pub use method::Method;
 pub use metrics::{LatencyBreakdown, MethodReport};
 pub use offline::{build_plan, OfflinePlan};
 pub use online::{
-    baseline_reference, run_ablation, run_method, Infer, Method, NativeInfer, RuntimeInfer,
+    baseline_reference, baseline_reference_with, run_ablation, run_ablation_with, run_method,
+    run_method_with,
 };
+
+// Inference backends live with the pipeline's inference stage; re-exported
+// here because they are part of the coordinator's public entry points.
+#[cfg(feature = "pjrt")]
+pub use crate::pipeline::RuntimeInfer;
+pub use crate::pipeline::{Infer, NativeInfer};

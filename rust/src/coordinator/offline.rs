@@ -7,7 +7,7 @@ use std::time::Instant;
 use crate::association::table::AssociationTable;
 use crate::association::tiles::Tiling;
 use crate::config::{ScenarioConfig, SystemConfig};
-use crate::coordinator::online::Method;
+use crate::coordinator::method::Method;
 use crate::filters::ransac::RansacParams;
 use crate::filters::svm::SvmParams;
 use crate::filters::{FilterReport, TandemFilters};

@@ -8,16 +8,19 @@
 //!   depends on: traffic-world simulator, ReID error model, statistical
 //!   filters (RANSAC / SVM), region association, RoI set-cover optimizer,
 //!   tile grouping, block video codec, network discrete-event simulator,
-//!   streaming pipeline, Reducto frame filtering and the query/accuracy
-//!   machinery.
+//!   the stage-parallel streaming [`pipeline`], Reducto frame filtering
+//!   and the query/accuracy machinery.
 //! * **L2 (python/compile/model.py)** — the detector compute graph, AOT
 //!   lowered to HLO text in `artifacts/`.
 //! * **L1 (python/compile/kernels/sbnet.py)** — the SBNet-style sparse-block
 //!   Pallas kernel inside that graph.
 //!
 //! The [`runtime`] module loads the AOT artifacts via the PJRT CPU client
-//! (`xla` crate) and executes them on the request path; Python is build-time
-//! only.  See `DESIGN.md` for the substitution table and experiment index.
+//! (`xla` crate, behind the non-default `pjrt` feature) and executes them
+//! on the request path; Python is build-time only.  Default builds use the
+//! pure-rust reference detector instead, so `cargo build && cargo test`
+//! work fully offline.  See `DESIGN.md` for the substitution table and
+//! experiment index.
 
 pub mod association;
 pub mod bench;
@@ -27,6 +30,7 @@ pub mod config;
 pub mod coordinator;
 pub mod filters;
 pub mod net;
+pub mod pipeline;
 pub mod query;
 pub mod reducto;
 pub mod reid;

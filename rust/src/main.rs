@@ -13,12 +13,11 @@
 //!   crossroi ablation --eval-secs 30
 //!   crossroi info
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use crossroi::cli::Args;
 use crossroi::config::Config;
-use crossroi::coordinator::{self, Method, NativeInfer, RuntimeInfer};
-use crossroi::runtime::Runtime;
+use crossroi::coordinator::{self, Method, MethodReport, NativeInfer};
 use crossroi::sim::Scenario;
 
 const USAGE: &str = "usage: crossroi <offline|run|ablation|info> [flags]
@@ -35,6 +34,8 @@ flags:
   --reducto-target <a>     frame-filter accuracy target (with reducto methods)
   --artifacts <dir>        AOT artifact directory (default: artifacts)
   --native                 use the native reference detector (no PJRT)
+  --sequential             run the online pipeline single-threaded
+                           (uncontended service-time measurement)
 ";
 
 fn main() {
@@ -101,22 +102,14 @@ fn parse_method(args: &Args) -> Result<Method> {
 
 fn run() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
-    args.ensure_known_switches(&["native", "verbose"])?;
+    args.ensure_known_switches(&["native", "verbose", "sequential"])?;
     let cfg = build_config(&args)?;
 
     match args.subcommand.as_deref() {
         Some("info") => {
             println!("scenario: {:?}", cfg.scenario);
             println!("system:   {:?}", cfg.system);
-            match Runtime::load(&cfg.system.artifacts_dir) {
-                Ok(rt) => println!(
-                    "artifacts: OK ({} RoI variants, contract {}x{})",
-                    rt.contract.roi_capacities.len(),
-                    rt.contract.frame_w,
-                    rt.contract.frame_h
-                ),
-                Err(e) => println!("artifacts: UNAVAILABLE ({e:#})"),
-            }
+            println!("artifacts: {}", artifact_status(&cfg));
             Ok(())
         }
         Some("offline") => {
@@ -152,12 +145,14 @@ fn run() -> Result<()> {
         Some("run") => {
             let scenario = Scenario::build(&cfg.scenario);
             let method = parse_method(&args)?;
+            let opts = pipeline_options(&args);
             let report = if args.switch("native") {
-                coordinator::run_method(&scenario, &cfg.system, &NativeInfer, &method, None)?
+                coordinator::run_method_with(
+                    &scenario, &cfg.system, &NativeInfer, &method, None, &opts,
+                )?
+                .0
             } else {
-                let rt = Runtime::load(&cfg.system.artifacts_dir)
-                    .context("loading artifacts (or pass --native)")?;
-                coordinator::run_method(&scenario, &cfg.system, &RuntimeInfer(&rt), &method, None)?
+                run_with_runtime(&scenario, &cfg, &method, &opts)?
             };
             println!("{}", report.row());
             println!(
@@ -178,12 +173,13 @@ fn run() -> Result<()> {
                 Method::NoRoiInf,
                 Method::CrossRoi,
             ];
+            let opts = pipeline_options(&args);
             let reports = if args.switch("native") {
-                coordinator::run_ablation(&scenario, &cfg.system, &NativeInfer, &methods)?
+                coordinator::run_ablation_with(
+                    &scenario, &cfg.system, &NativeInfer, &methods, &opts,
+                )?
             } else {
-                let rt = Runtime::load(&cfg.system.artifacts_dir)
-                    .context("loading artifacts (or pass --native)")?;
-                coordinator::run_ablation(&scenario, &cfg.system, &RuntimeInfer(&rt), &methods)?
+                ablation_with_runtime(&scenario, &cfg, &methods, &opts)?
             };
             for r in &reports {
                 println!("{}", r.row());
@@ -193,4 +189,94 @@ fn run() -> Result<()> {
         Some(other) => bail!("unknown subcommand {other:?}"),
         None => bail!("missing subcommand"),
     }
+}
+
+fn pipeline_options(args: &Args) -> crossroi::pipeline::PipelineOptions {
+    let mut opts = crossroi::pipeline::PipelineOptions::default();
+    if args.switch("sequential") {
+        opts.parallelism = crossroi::pipeline::Parallelism::Sequential;
+    }
+    opts
+}
+
+// ---- PJRT-backed entry points (feature `pjrt`); default builds route
+// everything through --native and report the runtime as unavailable ----
+
+#[cfg(feature = "pjrt")]
+fn artifact_status(cfg: &Config) -> String {
+    match crossroi::runtime::Runtime::load(&cfg.system.artifacts_dir) {
+        Ok(rt) => format!(
+            "OK ({} RoI variants, contract {}x{})",
+            rt.contract.roi_capacities.len(),
+            rt.contract.frame_w,
+            rt.contract.frame_h
+        ),
+        Err(e) => format!("UNAVAILABLE ({e:#})"),
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn artifact_status(_cfg: &Config) -> String {
+    "UNAVAILABLE (built without the `pjrt` feature; rebuild with --features pjrt)".to_string()
+}
+
+#[cfg(feature = "pjrt")]
+fn run_with_runtime(
+    scenario: &Scenario,
+    cfg: &Config,
+    method: &Method,
+    opts: &crossroi::pipeline::PipelineOptions,
+) -> Result<MethodReport> {
+    use anyhow::Context as _;
+    let rt = crossroi::runtime::Runtime::load(&cfg.system.artifacts_dir)
+        .context("loading artifacts (or pass --native)")?;
+    let report = coordinator::run_method_with(
+        scenario,
+        &cfg.system,
+        &coordinator::RuntimeInfer(&rt),
+        method,
+        None,
+        opts,
+    )?
+    .0;
+    Ok(report)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn run_with_runtime(
+    _scenario: &Scenario,
+    _cfg: &Config,
+    _method: &Method,
+    _opts: &crossroi::pipeline::PipelineOptions,
+) -> Result<MethodReport> {
+    bail!("this binary was built without the `pjrt` feature; pass --native or rebuild with --features pjrt")
+}
+
+#[cfg(feature = "pjrt")]
+fn ablation_with_runtime(
+    scenario: &Scenario,
+    cfg: &Config,
+    methods: &[Method],
+    opts: &crossroi::pipeline::PipelineOptions,
+) -> Result<Vec<MethodReport>> {
+    use anyhow::Context as _;
+    let rt = crossroi::runtime::Runtime::load(&cfg.system.artifacts_dir)
+        .context("loading artifacts (or pass --native)")?;
+    coordinator::run_ablation_with(
+        scenario,
+        &cfg.system,
+        &coordinator::RuntimeInfer(&rt),
+        methods,
+        opts,
+    )
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn ablation_with_runtime(
+    _scenario: &Scenario,
+    _cfg: &Config,
+    _methods: &[Method],
+    _opts: &crossroi::pipeline::PipelineOptions,
+) -> Result<Vec<MethodReport>> {
+    bail!("this binary was built without the `pjrt` feature; pass --native or rebuild with --features pjrt")
 }

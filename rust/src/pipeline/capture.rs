@@ -1,0 +1,47 @@
+//! Capture stage: the simulator-backed frame source.
+
+use crate::pipeline::stage::CaptureStage;
+use crate::sim::render::{Frame, Renderer};
+
+/// Renders one camera's evaluation-window frames into caller-owned
+/// buffers via [`Renderer::render_into`] (no per-frame allocation).
+pub struct SimCapture<'a> {
+    renderer: &'a Renderer<'a>,
+    cam: usize,
+    /// Absolute frame index of the evaluation window's first frame.
+    eval_start: usize,
+}
+
+impl<'a> SimCapture<'a> {
+    pub fn new(renderer: &'a Renderer<'a>, cam: usize, eval_start: usize) -> Self {
+        SimCapture { renderer, cam, eval_start }
+    }
+}
+
+impl CaptureStage for SimCapture<'_> {
+    fn capture(&mut self, local: usize, out: &mut Frame) {
+        self.renderer.render_into(self.cam, self.eval_start + local, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::sim::Scenario;
+
+    #[test]
+    fn capture_matches_direct_render() {
+        let cfg = Config::test_small();
+        let sc = Scenario::build(&cfg.scenario);
+        let renderer = sc.renderer();
+        let eval = sc.eval_range();
+        let mut stage = SimCapture::new(&renderer, 1, eval.start);
+        let mut buf = Frame::new(1, 1);
+        stage.capture(3, &mut buf);
+        assert_eq!(buf.data, renderer.render(1, eval.start + 3).data);
+        // the buffer is reused across captures
+        stage.capture(4, &mut buf);
+        assert_eq!(buf.data, renderer.render(1, eval.start + 4).data);
+    }
+}

@@ -1,0 +1,117 @@
+//! Filter stage: per-camera frame-filtering state (Reducto §5.4).
+//!
+//! The keep/drop state that used to live inline in the coordinator's
+//! camera loop: the previous *rendered* frame is the diff reference (the
+//! threshold was profiled against exactly that sequence offline).
+
+use crate::pipeline::stage::FilterStage;
+use crate::reducto;
+use crate::sim::render::Frame;
+use crate::util::geometry::IRect;
+
+/// Keeps every frame — methods without frame filtering.
+pub struct PassThroughFilter;
+
+impl FilterStage for PassThroughFilter {
+    fn keep(&mut self, _frame: &Frame, _segment_head: bool) -> bool {
+        true
+    }
+}
+
+/// Reducto keep/drop state for one camera, with the threshold learned
+/// offline ([`crate::reducto::ReductoFilter`]).  A negative threshold
+/// (the disabled filter) keeps even pixel-identical frames.
+pub struct ReductoFilterStage<'a> {
+    /// RoI regions the diff feature is restricted to (Fig. 12).
+    regions: &'a [IRect],
+    threshold: f64,
+    /// Previous rendered frame (diff reference), reused across frames.
+    prev: Option<Frame>,
+}
+
+impl<'a> ReductoFilterStage<'a> {
+    pub fn new(regions: &'a [IRect], threshold: f64) -> Self {
+        ReductoFilterStage { regions, threshold, prev: None }
+    }
+}
+
+impl FilterStage for ReductoFilterStage<'_> {
+    fn keep(&mut self, frame: &Frame, segment_head: bool) -> bool {
+        let keep = match &self.prev {
+            // the very first frame has no reference and is always sent
+            None => true,
+            Some(prev) => {
+                segment_head
+                    || reducto::frame_diff(prev, frame, self.regions) > self.threshold
+            }
+        };
+        // update the diff reference in place, reusing its allocation
+        match &mut self.prev {
+            Some(p) => p.copy_from(frame),
+            None => self.prev = Some(frame.clone()),
+        }
+        keep
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat(level: u8) -> Frame {
+        let mut f = Frame::new(32, 32);
+        for y in 0..32 {
+            for x in 0..32 {
+                f.set(x, y, [level, level, level]);
+            }
+        }
+        f
+    }
+
+    #[test]
+    fn pass_through_keeps_everything() {
+        let mut f = PassThroughFilter;
+        assert!(f.keep(&flat(0), true));
+        assert!(f.keep(&flat(0), false));
+    }
+
+    #[test]
+    fn first_frame_and_segment_heads_always_kept() {
+        let regions = [IRect::new(0, 0, 32, 32)];
+        let mut f = ReductoFilterStage::new(&regions, 0.5);
+        let frame = flat(100);
+        assert!(f.keep(&frame, false), "first frame must be kept");
+        assert!(!f.keep(&frame, false), "identical frame below threshold");
+        assert!(f.keep(&frame, true), "segment head must be kept");
+    }
+
+    #[test]
+    fn large_diff_is_kept() {
+        let regions = [IRect::new(0, 0, 32, 32)];
+        let mut f = ReductoFilterStage::new(&regions, 0.5);
+        assert!(f.keep(&flat(0), true));
+        assert!(f.keep(&flat(100), false), "every pixel changed: must be kept");
+    }
+
+    #[test]
+    fn diff_reference_is_previous_rendered_frame_not_last_kept() {
+        let regions = [IRect::new(0, 0, 32, 32)];
+        let mut f = ReductoFilterStage::new(&regions, 0.5);
+        assert!(f.keep(&flat(0), true));
+        // +8 luma: below the per-pixel delta, dropped — but it still
+        // becomes the diff reference
+        assert!(!f.keep(&flat(8), false));
+        // +16 vs the last *kept* frame would trip the per-pixel delta;
+        // vs the previous *rendered* frame it is another +8 -> dropped
+        assert!(!f.keep(&flat(16), false));
+    }
+
+    #[test]
+    fn negative_threshold_keeps_identical_frames() {
+        let regions = [IRect::new(0, 0, 32, 32)];
+        let mut f = ReductoFilterStage::new(&regions, -1.0);
+        let frame = flat(7);
+        assert!(f.keep(&frame, true));
+        assert!(f.keep(&frame, false), "disabled filter keeps zero-diff frames");
+    }
+}

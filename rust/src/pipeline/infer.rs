@@ -1,0 +1,243 @@
+//! Inference stage: the server side of the pipeline.
+//!
+//! Kept frames from all cameras arrive on a merged queue; the stage packs
+//! everything currently queued into one [`Infer::infer_batch`] call, then
+//! decodes the objectness grids and matches detections to ground-truth
+//! identities.  Backends implement [`Infer`]: the real PJRT runtime in
+//! benches and examples (feature `pjrt`), the native reference in fast
+//! tests.
+
+use std::collections::HashSet;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::pipeline::stage::CameraSegment;
+use crate::query;
+use crate::runtime::postproc::decode_objectness;
+use crate::sim::Scenario;
+
+/// When the RoI covers at least this fraction of blocks, fall back to the
+/// dense detector (§4.4: "we load both RoI-YOLO and normal YOLO into GPU
+/// and push large RoI-area videos to normal YOLO").  The threshold sits at
+/// the measured crossover of the compiled variants: a mask needing the
+/// K=60 capacity runs slower than dense, so only masks that fit K≤32
+/// (≤ 32/60 ≈ 53 % coverage) take the SBNet path (see the
+/// `sbnet_crossover` bench).
+pub const DENSE_FALLBACK_FRACTION: f64 = 0.55;
+
+/// One detector invocation's inputs (borrowed from the pending jobs).
+#[derive(Debug, Clone, Copy)]
+pub struct InferRequest<'a> {
+    /// HWC f32 pixels in [0, 1].
+    pub frame: &'a [f32],
+    /// Active block ids for the RoI variant; `None` means dense.
+    pub blocks: Option<&'a [i32]>,
+}
+
+/// Inference backend abstraction: the real PJRT runtime in benches and
+/// examples, the native reference in fast tests.  `Sync` so the server
+/// stage can be shared across pipeline threads.
+pub trait Infer: Sync {
+    /// Run the detector; `blocks = None` means the dense variant.
+    /// Returns the objectness grid and the measured inference seconds.
+    fn infer(&self, frame: &[f32], blocks: Option<&[i32]>) -> Result<(Vec<f32>, f64)>;
+
+    /// Run a merged batch of requests (kept frames from all cameras).
+    /// The default forwards to [`Infer::infer`] per request; backends
+    /// with a real batch dimension override this.
+    fn infer_batch(&self, requests: &[InferRequest<'_>]) -> Result<Vec<(Vec<f32>, f64)>> {
+        requests.iter().map(|r| self.infer(r.frame, r.blocks)).collect()
+    }
+
+    /// Total detector blocks (for the dense-fallback policy).
+    fn n_blocks(&self) -> usize {
+        60
+    }
+}
+
+/// Real PJRT-backed inference.
+#[cfg(feature = "pjrt")]
+pub struct RuntimeInfer<'a>(pub &'a crate::runtime::Runtime);
+
+#[cfg(feature = "pjrt")]
+impl Infer for RuntimeInfer<'_> {
+    fn infer(&self, frame: &[f32], blocks: Option<&[i32]>) -> Result<(Vec<f32>, f64)> {
+        let t0 = Instant::now();
+        let grid = match blocks {
+            None => self.0.infer_full(frame)?,
+            Some(b) => self.0.infer_roi(frame, b)?.0,
+        };
+        Ok((grid, t0.elapsed().as_secs_f64()))
+    }
+
+    fn n_blocks(&self) -> usize {
+        self.0.contract.n_blocks
+    }
+}
+
+/// Native reference inference (tests / fast sweeps; never used for
+/// reported throughput numbers).
+pub struct NativeInfer;
+
+impl Infer for NativeInfer {
+    fn infer(&self, frame: &[f32], blocks: Option<&[i32]>) -> Result<(Vec<f32>, f64)> {
+        let t0 = Instant::now();
+        let grid = match blocks {
+            None => crate::runtime::native::detect_full(frame, 192, 320),
+            Some(b) => crate::runtime::native::detect_roi(frame, 192, 320, b, 32, 10),
+        };
+        Ok((grid, t0.elapsed().as_secs_f64()))
+    }
+}
+
+/// One kept frame's inference result, ready for the DES replay and the
+/// query stage.
+#[derive(Debug, Clone)]
+pub struct InferOutcome {
+    pub local: usize,
+    pub capture_time: f64,
+    /// Inference service time in seconds.
+    pub secs: f64,
+    /// Ground-truth vehicle ids the detections cover.
+    pub matched: HashSet<u32>,
+}
+
+/// The server-side inference stage: consumes merged camera segments and
+/// produces per-frame outcomes.
+pub trait InferStage {
+    /// Run one merged batch — all pending jobs of `segments` in a single
+    /// [`Infer::infer_batch`] call — returning outcomes per segment, in
+    /// the same order.
+    fn infer_merged(&self, segments: &[CameraSegment]) -> Result<Vec<Vec<InferOutcome>>>;
+}
+
+/// [`InferStage`] over any [`Infer`] backend, with per-camera RoI policy
+/// and ground-truth matching for the unique-vehicle query.
+pub struct BatchedInfer<'a> {
+    pub infer: &'a dyn Infer,
+    pub scenario: &'a Scenario,
+    /// Active detector blocks per camera.
+    pub blocks: &'a [Vec<i32>],
+    /// Whether each camera takes the SBNet RoI path.
+    pub use_roi: &'a [bool],
+    pub objectness_threshold: f64,
+    /// Absolute frame index of the evaluation window's first frame.
+    pub eval_start: usize,
+}
+
+impl InferStage for BatchedInfer<'_> {
+    fn infer_merged(&self, segments: &[CameraSegment]) -> Result<Vec<Vec<InferOutcome>>> {
+        let mut requests = Vec::new();
+        for s in segments {
+            for job in &s.jobs {
+                requests.push(InferRequest {
+                    frame: &job.pixels,
+                    blocks: if self.use_roi[s.cam] {
+                        Some(self.blocks[s.cam].as_slice())
+                    } else {
+                        None
+                    },
+                });
+            }
+        }
+        let results = self.infer.infer_batch(&requests)?;
+        anyhow::ensure!(
+            results.len() == requests.len(),
+            "infer_batch returned {} results for {} requests",
+            results.len(),
+            requests.len()
+        );
+        let mut it = results.into_iter();
+        let mut out = Vec::with_capacity(segments.len());
+        for s in segments {
+            let mut frames = Vec::with_capacity(s.jobs.len());
+            for job in &s.jobs {
+                let (grid, secs) = it.next().expect("length checked above");
+                let dets = decode_objectness(&grid, 12, 20, 16, self.objectness_threshold);
+                let abs = self.eval_start + job.local;
+                let matched =
+                    query::match_detections(&dets, self.scenario.detections(s.cam, abs));
+                frames.push(InferOutcome {
+                    local: job.local,
+                    capture_time: job.capture_time,
+                    secs,
+                    matched,
+                });
+            }
+            out.push(frames);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A backend that records batch sizes and returns a fixed grid.
+    struct CountingInfer(std::sync::Mutex<Vec<usize>>);
+
+    impl Infer for CountingInfer {
+        fn infer(&self, _frame: &[f32], _blocks: Option<&[i32]>) -> Result<(Vec<f32>, f64)> {
+            Ok((vec![0.0; 12 * 20], 0.001))
+        }
+
+        fn infer_batch(&self, requests: &[InferRequest<'_>]) -> Result<Vec<(Vec<f32>, f64)>> {
+            self.0.lock().unwrap().push(requests.len());
+            requests.iter().map(|r| self.infer(r.frame, r.blocks)).collect()
+        }
+    }
+
+    #[test]
+    fn merged_segments_become_one_batch() {
+        use crate::config::Config;
+        use crate::pipeline::stage::InferJob;
+
+        let cfg = Config::test_small();
+        let sc = Scenario::build(&cfg.scenario);
+        let backend = CountingInfer(std::sync::Mutex::new(Vec::new()));
+        let blocks: Vec<Vec<i32>> = vec![Vec::new(); sc.cameras.len()];
+        let use_roi = vec![false; sc.cameras.len()];
+        let stage = BatchedInfer {
+            infer: &backend,
+            scenario: &sc,
+            blocks: &blocks,
+            use_roi: &use_roi,
+            objectness_threshold: 0.25,
+            eval_start: sc.eval_range().start,
+        };
+        let job = |local: usize| InferJob {
+            local,
+            capture_time: (local as f64 + 1.0) / 5.0,
+            pixels: vec![0.0f32; 320 * 192 * 3],
+        };
+        let segs = vec![
+            CameraSegment {
+                cam: 0,
+                seg: 0,
+                capture_end: 1.0,
+                bytes: 10,
+                encode_secs: 0.0,
+                dropped: 0,
+                jobs: vec![job(0), job(1)],
+            },
+            CameraSegment {
+                cam: 1,
+                seg: 0,
+                capture_end: 1.0,
+                bytes: 10,
+                encode_secs: 0.0,
+                dropped: 0,
+                jobs: vec![job(0)],
+            },
+        ];
+        let out = stage.infer_merged(&segs).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].len(), 2);
+        assert_eq!(out[1].len(), 1);
+        // both segments' jobs were merged into a single batch call
+        assert_eq!(*backend.0.lock().unwrap(), vec![3]);
+        assert!((out[0][1].capture_time - 0.4).abs() < 1e-12);
+    }
+}

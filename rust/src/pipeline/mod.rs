@@ -1,0 +1,59 @@
+//! The stage-parallel online streaming pipeline (§4.1.2).
+//!
+//! The online phase is an explicit staged pipeline with typed
+//! inter-stage records:
+//!
+//! ```text
+//!   per camera (worker thread)          server side (caller thread)
+//!   ┌─────────┐ ┌────────┐ ┌────────┐   ┌───────────┐ ┌───────────┐ ┌──────┐
+//!   │ Capture │→│ Filter │→│ Encode │→ →│   Infer   │→│ Transport │→│ Query│
+//!   └─────────┘ └────────┘ └────────┘ ↗ │ (batched) │ │ (DES)     │ └──────┘
+//!      camera 2 ────────────────────── ↗└───────────┘ └───────────┘
+//!      camera N ──────────────────────
+//! ```
+//!
+//! * **[`CaptureStage`]** renders a camera's frames into reusable buffers
+//!   ([`SimCapture`]).
+//! * **[`FilterStage`]** owns the per-camera keep/drop state
+//!   ([`ReductoFilterStage`] / [`PassThroughFilter`]).
+//! * **[`EncodeStage`]** drives the block codec over the kept frames —
+//!   borrowed, never cloned ([`CodecEncodeStage`]).
+//! * **[`InferStage`]** consumes the merged queue of all cameras'
+//!   segments and batches kept frames per [`Infer::infer_batch`] call
+//!   ([`BatchedInfer`]).
+//! * **[`TransportStage`]** replays the measured service times on the
+//!   discrete-event engine ([`DesTransport`]).
+//! * **[`QueryStage`]** fuses per-camera results, carrying inference
+//!   results over filtered frames ([`CarryOverQuery`]).
+//!
+//! Scheduling lives in [`run_pipeline`]: camera chains run on scoped
+//! worker threads ([`Parallelism::PerCamera`] by default) and results are
+//! re-canonicalized so `MethodReport`s are bit-identical across thread
+//! counts.  New stages (codecs, filters, schedulers) plug in here without
+//! touching the coordinator.
+
+pub mod capture;
+pub mod encode;
+pub mod filter;
+pub mod infer;
+pub mod query;
+pub mod runner;
+pub mod stage;
+pub mod transport;
+
+pub use capture::SimCapture;
+pub use encode::{CodecEncodeStage, EncodeCost};
+pub use filter::{PassThroughFilter, ReductoFilterStage};
+#[cfg(feature = "pjrt")]
+pub use infer::RuntimeInfer;
+pub use infer::{
+    BatchedInfer, Infer, InferOutcome, InferRequest, InferStage, NativeInfer,
+    DENSE_FALLBACK_FRACTION,
+};
+pub use query::{CarryOverQuery, QueryStage};
+pub use runner::{run_pipeline, CameraStages, Parallelism, PipelineOptions, PipelineOutput};
+pub use stage::{
+    CameraSegment, CaptureStage, EncodeStage, FilterStage, InferJob, SegmentLayout,
+    SegmentRecord,
+};
+pub use transport::{DesTransport, LatencySamples, TransportStage};

@@ -1,0 +1,100 @@
+//! Query stage: fuses per-camera inference results into the fleet's
+//! per-frame unique-vehicle reports (§5.1.2).
+//!
+//! Frames the filter stage discarded have no inference result; the server
+//! reuses the camera's last inferred result for them (the standard
+//! Reducto carry-over behaviour), then unions across cameras.
+
+use std::collections::HashSet;
+
+/// Fuses per-camera per-frame vehicle sets into per-frame fleet reports.
+pub trait QueryStage {
+    /// `frame_sets[cam][local]` is `Some(vehicles)` for inferred frames
+    /// and `None` for filtered ones.
+    fn fuse(
+        &self,
+        frame_sets: &[Vec<Option<HashSet<u32>>>],
+        n_frames: usize,
+    ) -> Vec<HashSet<u32>>;
+}
+
+/// The carry-over fusion described above.
+pub struct CarryOverQuery;
+
+impl QueryStage for CarryOverQuery {
+    fn fuse(
+        &self,
+        frame_sets: &[Vec<Option<HashSet<u32>>>],
+        n_frames: usize,
+    ) -> Vec<HashSet<u32>> {
+        let mut reported: Vec<HashSet<u32>> = vec![HashSet::new(); n_frames];
+        for cam_sets in frame_sets {
+            let mut last: HashSet<u32> = HashSet::new();
+            for lf in 0..n_frames {
+                if let Some(s) = &cam_sets[lf] {
+                    last = s.clone();
+                }
+                for &v in &last {
+                    reported[lf].insert(v);
+                }
+            }
+        }
+        reported
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set(ids: &[u32]) -> HashSet<u32> {
+        ids.iter().copied().collect()
+    }
+
+    #[test]
+    fn inferred_frames_pass_through() {
+        let sets = vec![vec![Some(set(&[1])), Some(set(&[2])), Some(set(&[]))]];
+        let fused = CarryOverQuery.fuse(&sets, 3);
+        assert_eq!(fused, vec![set(&[1]), set(&[2]), set(&[])]);
+    }
+
+    #[test]
+    fn filtered_frames_carry_the_last_inferred_result() {
+        let sets = vec![vec![Some(set(&[1, 2])), None, None, Some(set(&[3])), None]];
+        let fused = CarryOverQuery.fuse(&sets, 5);
+        assert_eq!(
+            fused,
+            vec![set(&[1, 2]), set(&[1, 2]), set(&[1, 2]), set(&[3]), set(&[3])]
+        );
+    }
+
+    #[test]
+    fn empty_inferred_result_clears_the_carry() {
+        let sets = vec![vec![Some(set(&[7])), Some(set(&[])), None]];
+        let fused = CarryOverQuery.fuse(&sets, 3);
+        assert_eq!(fused, vec![set(&[7]), set(&[]), set(&[])]);
+    }
+
+    #[test]
+    fn leading_filtered_frames_report_nothing() {
+        let sets = vec![vec![None, None, Some(set(&[5]))]];
+        let fused = CarryOverQuery.fuse(&sets, 3);
+        assert_eq!(fused, vec![set(&[]), set(&[]), set(&[5])]);
+    }
+
+    #[test]
+    fn cameras_union_per_frame() {
+        let sets = vec![
+            vec![Some(set(&[1])), None],
+            vec![Some(set(&[2])), Some(set(&[3]))],
+        ];
+        let fused = CarryOverQuery.fuse(&sets, 2);
+        assert_eq!(fused, vec![set(&[1, 2]), set(&[1, 3])]);
+    }
+
+    #[test]
+    fn no_cameras_reports_empty_frames() {
+        let fused = CarryOverQuery.fuse(&[], 2);
+        assert_eq!(fused, vec![set(&[]), set(&[])]);
+    }
+}

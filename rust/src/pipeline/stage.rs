@@ -1,0 +1,111 @@
+//! Typed inter-stage records and the camera-side stage traits.
+//!
+//! A camera worker drives `CaptureStage → FilterStage → EncodeStage` over
+//! its streaming segments and emits one [`CameraSegment`] per segment into
+//! the merged server queue.  The server side turns each into a
+//! [`SegmentRecord`] once the inference stage has measured its per-frame
+//! service times; the transport stage then replays the records on the DES
+//! (see DESIGN.md §4).
+
+use crate::codec::EncodedSegment;
+use crate::sim::render::Frame;
+
+/// Segmenting geometry of one online run (shared by every stage).
+#[derive(Debug, Clone, Copy)]
+pub struct SegmentLayout {
+    /// Evaluation-window length in frames.
+    pub n_frames: usize,
+    /// Frames per streaming segment (= GOP length).
+    pub frames_per_segment: usize,
+    /// Capture frame rate.
+    pub fps: f64,
+}
+
+impl SegmentLayout {
+    /// Number of segments each camera produces.
+    pub fn n_segments(&self) -> usize {
+        self.n_frames.div_ceil(self.frames_per_segment)
+    }
+}
+
+/// Produces the camera's pixels: renders local frame `local` of the
+/// evaluation window into `out`, reusing its allocation.
+pub trait CaptureStage: Send {
+    fn capture(&mut self, local: usize, out: &mut Frame);
+}
+
+/// Keep/drop decision for a freshly captured frame.  `segment_head` marks
+/// the first frame of a streaming segment, which is always sent (it seeds
+/// the GOP and the server's carry-over state).
+pub trait FilterStage: Send {
+    fn keep(&mut self, frame: &Frame, segment_head: bool) -> bool;
+}
+
+/// Encodes one segment's kept frames (borrowed — the worker keeps
+/// ownership and recycles the buffers afterwards).  Returns the encoded
+/// segment and the encode service time in seconds.
+pub trait EncodeStage: Send {
+    fn encode(&mut self, kept: &[&Frame]) -> (EncodedSegment, f64);
+}
+
+/// One kept frame's pending inference work: the RoI-masked detector input
+/// plus the metadata the DES replay needs.
+#[derive(Debug, Clone)]
+pub struct InferJob {
+    /// Local frame index within the evaluation window.
+    pub local: usize,
+    /// Virtual capture time (s, eval-window origin).
+    pub capture_time: f64,
+    /// Masked HWC f32 pixels in [0, 1] — the detector input.
+    pub pixels: Vec<f32>,
+}
+
+/// A camera worker's per-segment output, sent over the merged server
+/// queue: everything measured camera-side plus the pending inference jobs.
+#[derive(Debug, Clone)]
+pub struct CameraSegment {
+    pub cam: usize,
+    /// Segment index within the camera (capture order).
+    pub seg: usize,
+    /// Virtual time (s, eval-window origin) when the segment's last frame
+    /// was captured.
+    pub capture_end: f64,
+    /// Encoded size in bytes.
+    pub bytes: usize,
+    /// Measured (or modelled) encode service time in seconds.
+    pub encode_secs: f64,
+    /// Frames the filter stage discarded in this segment.
+    pub dropped: usize,
+    /// Pending inference inputs for the kept frames, in capture order.
+    pub jobs: Vec<InferJob>,
+}
+
+/// A fully-measured segment, ready for the DES transport replay.
+#[derive(Debug, Clone)]
+pub struct SegmentRecord {
+    pub cam: usize,
+    /// Segment index within the camera (capture order).
+    pub seg: usize,
+    /// Virtual time (s, eval-window origin) when the segment's last frame
+    /// was captured.
+    pub capture_end: f64,
+    pub bytes: usize,
+    pub encode_secs: f64,
+    /// (local frame index, capture time, inference seconds) per kept frame.
+    pub frames: Vec<(usize, f64, f64)>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_segment_count() {
+        let l = SegmentLayout { n_frames: 40, frames_per_segment: 5, fps: 5.0 };
+        assert_eq!(l.n_segments(), 8);
+        let l = SegmentLayout { n_frames: 41, frames_per_segment: 5, fps: 5.0 };
+        assert_eq!(l.n_segments(), 9);
+        let l = SegmentLayout { n_frames: 4, frames_per_segment: 5, fps: 5.0 };
+        assert_eq!(l.n_segments(), 1);
+    }
+}

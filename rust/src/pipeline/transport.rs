@@ -1,0 +1,154 @@
+//! Transport stage: replays the measured segment records on the
+//! discrete-event engine — shared-link transport plus camera/server
+//! queueing — and produces the latency samples behind Fig. 8f.
+//!
+//! Compute costs (encode, inference) are **measured** by the earlier
+//! stages; this stage replays the transport and queueing behaviour
+//! (shared 30 Mbps link, segment queueing, FIFO server) with those
+//! measured service times — see DESIGN.md §3 on the testbed substitution.
+
+use crate::net::{Des, SharedLink};
+use crate::pipeline::stage::SegmentRecord;
+
+/// DES events of the online pipeline replay.
+enum Ev {
+    Captured(usize),
+    EncodeDone(usize),
+    Arrived(usize),
+}
+
+/// Per-frame latency samples from one replay.
+#[derive(Debug, Clone, Default)]
+pub struct LatencySamples {
+    /// Capture-to-encode-done (includes segment queueing).
+    pub camera: Vec<f64>,
+    /// Encode-done to server arrival (link queueing + tx + propagation).
+    pub network: Vec<f64>,
+    /// Arrival to inference completion (server queue + inference).
+    pub server: Vec<f64>,
+    /// Capture to inference completion.
+    pub total: Vec<f64>,
+}
+
+/// Replays measured segment records into end-to-end latency samples.
+pub trait TransportStage {
+    fn replay(&self, n_cams: usize, segments: &[SegmentRecord]) -> LatencySamples;
+}
+
+/// The discrete-event replay: per-camera FIFO encoders feeding one shared
+/// FIFO uplink feeding one FIFO inference server.
+pub struct DesTransport {
+    pub bandwidth_mbps: f64,
+    pub rtt_ms: f64,
+}
+
+impl DesTransport {
+    pub fn new(bandwidth_mbps: f64, rtt_ms: f64) -> DesTransport {
+        DesTransport { bandwidth_mbps, rtt_ms }
+    }
+}
+
+impl TransportStage for DesTransport {
+    fn replay(&self, n_cams: usize, segments: &[SegmentRecord]) -> LatencySamples {
+        // capture order; the sort is stable, so same-time segments keep
+        // their canonical (camera-major) order and the replay is
+        // bit-reproducible
+        let mut order: Vec<usize> = (0..segments.len()).collect();
+        order.sort_by(|&a, &b| {
+            segments[a].capture_end.partial_cmp(&segments[b].capture_end).unwrap()
+        });
+        let mut des: Des<Ev> = Des::new();
+        for &si in &order {
+            des.at(segments[si].capture_end, Ev::Captured(si));
+        }
+        let mut link = SharedLink::new(self.bandwidth_mbps, self.rtt_ms);
+        let mut cam_free = vec![0.0f64; n_cams];
+        let mut enc_done_at = vec![0.0f64; segments.len()];
+        let mut arrived_at = vec![0.0f64; segments.len()];
+        let mut server_free = 0.0f64;
+        let mut out = LatencySamples::default();
+        while let Some((now, ev)) = des.pop() {
+            match ev {
+                Ev::Captured(si) => {
+                    let s = &segments[si];
+                    let start = now.max(cam_free[s.cam]);
+                    let done = start + s.encode_secs;
+                    cam_free[s.cam] = done;
+                    enc_done_at[si] = done;
+                    des.at(done, Ev::EncodeDone(si));
+                }
+                Ev::EncodeDone(si) => {
+                    let arrival = link.transfer(now, segments[si].bytes);
+                    arrived_at[si] = arrival;
+                    des.at(arrival, Ev::Arrived(si));
+                }
+                Ev::Arrived(si) => {
+                    let s = &segments[si];
+                    for &(_, capture, secs) in &s.frames {
+                        let start = server_free.max(now);
+                        let done = start + secs;
+                        server_free = done;
+                        out.camera.push(enc_done_at[si] - capture);
+                        out.network.push(arrived_at[si] - enc_done_at[si]);
+                        out.server.push(done - arrived_at[si]);
+                        out.total.push(done - capture);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(cam: usize, seg_idx: usize, capture_end: f64, bytes: usize) -> SegmentRecord {
+        SegmentRecord {
+            cam,
+            seg: seg_idx,
+            capture_end,
+            bytes,
+            encode_secs: 0.1,
+            frames: vec![(0, capture_end - 0.5, 0.02)],
+        }
+    }
+
+    #[test]
+    fn replay_produces_one_sample_per_frame() {
+        let t = DesTransport::new(1.8, 10.0);
+        let segs = vec![seg(0, 0, 1.0, 4000), seg(1, 0, 1.0, 4000), seg(0, 1, 2.0, 4000)];
+        let lat = t.replay(2, &segs);
+        assert_eq!(lat.total.len(), 3);
+        for i in 0..3 {
+            assert!(lat.camera[i] > 0.0);
+            assert!(lat.network[i] > 0.0);
+            assert!(lat.server[i] > 0.0);
+            let sum = lat.camera[i] + lat.network[i] + lat.server[i];
+            assert!((sum - lat.total[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn shared_link_serializes_simultaneous_segments() {
+        let t = DesTransport::new(1.8, 0.0);
+        // two same-time segments from different cameras: the second must
+        // queue behind the first on the shared link
+        let segs = vec![seg(0, 0, 1.0, 45_000), seg(1, 0, 1.0, 45_000)];
+        let lat = t.replay(2, &segs);
+        let tx = 45_000.0 * 8.0 / 1.8e6;
+        assert!(lat.network[1] > lat.network[0] + 0.9 * tx, "{:?}", lat.network);
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let t = DesTransport::new(1.8, 10.0);
+        let segs: Vec<SegmentRecord> =
+            (0..20).map(|i| seg(i % 4, i / 4, 1.0 + (i / 4) as f64, 3000 + 100 * i)).collect();
+        let a = t.replay(4, &segs);
+        let b = t.replay(4, &segs);
+        assert_eq!(a.total, b.total);
+        assert_eq!(a.camera, b.camera);
+    }
+}

@@ -23,6 +23,12 @@ pub struct Runtime {
     pub contract: Contract,
 }
 
+// NOTE: `RuntimeInfer` requires `Runtime: Sync` (the pipeline's `Infer`
+// trait is `Sync`).  The in-tree stub's types are trivially Sync; when
+// swapping in real PJRT bindings whose handles are `!Sync`, wrap them
+// (e.g. a mutex around execution) rather than asserting `unsafe impl
+// Sync` here — the compile error at `RuntimeInfer` is the safety net.
+
 impl Runtime {
     /// Load and compile every artifact in `artifacts_dir`.
     pub fn load(artifacts_dir: &str) -> Result<Runtime> {

@@ -3,11 +3,13 @@
 //! Python never runs here — the rust binary is self-contained after
 //! `make artifacts` (see /opt/xla-example/load_hlo for the pattern).
 
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod contract;
 pub mod native;
 pub mod postproc;
 
+#[cfg(feature = "pjrt")]
 pub use client::Runtime;
 pub use contract::Contract;
 pub use postproc::{decode_objectness, Detection};

@@ -47,6 +47,15 @@ impl Frame {
         [self.data[i], self.data[i + 1], self.data[i + 2]]
     }
 
+    /// Overwrite this frame with `src`, reusing the existing allocation
+    /// (the pipeline's buffer-recycling hot path).
+    pub fn copy_from(&mut self, src: &Frame) {
+        self.w = src.w;
+        self.h = src.h;
+        self.data.clear();
+        self.data.extend_from_slice(&src.data);
+    }
+
     /// Luma (BT.601-ish) of a pixel in [0, 255].
     #[inline]
     pub fn luma(&self, x: u32, y: u32) -> f32 {
@@ -59,14 +68,39 @@ impl Frame {
         self.data.iter().map(|&b| b as f32 / 255.0).collect()
     }
 
+    /// RoI-masked detector input: like `masked_keep(keep).to_f32()` but
+    /// without materializing the intermediate frame — the streaming
+    /// pipeline calls this once per kept frame on the hot path.
+    pub fn masked_f32(&self, keep: &[crate::util::geometry::IRect]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.data.len()];
+        for r in keep {
+            if r.x >= self.w || r.y >= self.h {
+                continue;
+            }
+            let x1 = (r.x + r.w).min(self.w);
+            let y1 = (r.y + r.h).min(self.h);
+            for y in r.y..y1 {
+                let start = self.idx(r.x, y);
+                let len = ((x1 - r.x) * 3) as usize;
+                for i in start..start + len {
+                    out[i] = self.data[i] as f32 / 255.0;
+                }
+            }
+        }
+        out
+    }
+
     /// Zero out everything except the given pixel rectangles (RoI crop:
     /// non-RoI tiles are never streamed, the server sees black there).
     pub fn masked_keep(&self, keep: &[crate::util::geometry::IRect]) -> Frame {
         let mut out = Frame::new(self.w, self.h);
         for r in keep {
+            if r.x >= self.w || r.y >= self.h {
+                continue;
+            }
             let x1 = (r.x + r.w).min(self.w);
             let y1 = (r.y + r.h).min(self.h);
-            for y in r.y.min(self.h)..y1 {
+            for y in r.y..y1 {
                 let src = self.idx(r.x, y);
                 let len = ((x1 - r.x) * 3) as usize;
                 let dst = out.idx(r.x, y);
@@ -112,10 +146,20 @@ impl<'a> Renderer<'a> {
         Renderer { scenario, backgrounds, noise: scenario.cfg.sensor_noise }
     }
 
-    /// Render camera `cam` at frame index `frame`.
+    /// Render camera `cam` at frame index `frame` into a fresh buffer.
     pub fn render(&self, cam: usize, frame: usize) -> Frame {
+        let mut out = Frame { w: 0, h: 0, data: Vec::new() };
+        self.render_into(cam, frame, &mut out);
+        out
+    }
+
+    /// Render camera `cam` at frame index `frame` into `out`, reusing the
+    /// buffer's allocation — the per-camera pipeline workers render
+    /// thousands of frames, so the hot path stays allocation-free.
+    pub fn render_into(&self, cam: usize, frame: usize, out: &mut Frame) {
         let camera = &self.scenario.cameras[cam];
-        let mut f = self.backgrounds[cam].clone();
+        out.copy_from(&self.backgrounds[cam]);
+        let f = out;
         // painter's algorithm: scenario detections are already far -> near
         for det in self.scenario.detections(cam, frame) {
             let color = self
@@ -171,7 +215,6 @@ impl<'a> Renderer<'a> {
                 }
             }
         }
-        f
     }
 }
 
@@ -287,6 +330,28 @@ mod tests {
         assert_eq!(m.get(95, 63), f.get(95, 63));
         assert_eq!(m.get(96, 63), [0, 0, 0]);
         assert_eq!(m.get(200, 100), [0, 0, 0]);
+    }
+
+    #[test]
+    fn render_into_reuses_buffer_and_matches_render() {
+        let sc = scenario();
+        let r = sc.renderer();
+        let mut buf = Frame::new(1, 1);
+        r.render_into(0, 3, &mut buf);
+        assert_eq!(buf.data, r.render(0, 3).data);
+        // stale contents from a previous frame must not leak through
+        r.render_into(0, 4, &mut buf);
+        assert_eq!(buf.data, r.render(0, 4).data);
+        assert_eq!((buf.w, buf.h), (320, 192));
+    }
+
+    #[test]
+    fn masked_f32_matches_masked_keep_to_f32() {
+        let sc = scenario();
+        let r = sc.renderer();
+        let f = r.render(0, 0);
+        let keep = vec![IRect::new(32, 32, 64, 32), IRect::new(200, 100, 50, 40)];
+        assert_eq!(f.masked_f32(&keep), f.masked_keep(&keep).to_f32());
     }
 
     #[test]

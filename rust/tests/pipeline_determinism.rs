@@ -1,0 +1,137 @@
+//! Determinism: the stage-parallel pipeline must produce byte-identical
+//! `MethodReport` JSON across repeated runs and across thread counts.
+//!
+//! Wall-clock measurement is replaced by deterministic cost models — a
+//! fixed-seconds inference backend and a per-frame encode cost — so every
+//! field of the report (bytes, accuracy, the full DES latency breakdown)
+//! is a pure function of the scenario seed.  `offline_seconds` is the one
+//! inherently wall-clock diagnostic; the comparison zeroes it.
+
+use anyhow::Result;
+use crossroi::config::Config;
+use crossroi::coordinator::{run_method_with, Infer, Method, MethodReport, NativeInfer};
+use crossroi::pipeline::{EncodeCost, Parallelism, PipelineOptions};
+use crossroi::sim::Scenario;
+
+/// Native reference detector with a fixed, deterministic service time.
+struct FixedCostInfer;
+
+impl Infer for FixedCostInfer {
+    fn infer(&self, frame: &[f32], blocks: Option<&[i32]>) -> Result<(Vec<f32>, f64)> {
+        let (grid, _) = NativeInfer.infer(frame, blocks)?;
+        // dense costs more than RoI, like the real executables
+        let secs = match blocks {
+            None => 0.004,
+            Some(b) => 0.001 + 0.00004 * b.len() as f64,
+        };
+        Ok((grid, secs))
+    }
+}
+
+fn small() -> (Scenario, Config) {
+    let mut cfg = Config::test_small();
+    cfg.scenario.profile_secs = 10.0;
+    cfg.scenario.eval_secs = 6.0;
+    (Scenario::build(&cfg.scenario), cfg)
+}
+
+fn report_json(scenario: &Scenario, cfg: &Config, method: &Method, par: Parallelism) -> String {
+    let opts = PipelineOptions { parallelism: par, encode_cost: EncodeCost::PerFrame(0.02) };
+    let (mut report, _) =
+        run_method_with(scenario, &cfg.system, &FixedCostInfer, method, None, &opts).unwrap();
+    // the offline phase is profiled with a real clock; everything else in
+    // the report is deterministic under the fixed cost models
+    report.offline_seconds = 0.0;
+    report.to_json().to_string_pretty(2)
+}
+
+fn assert_identical_across_schedules(method: Method) {
+    let (scenario, cfg) = small();
+    let reference = report_json(&scenario, &cfg, &method, Parallelism::Sequential);
+    assert!(reference.contains("\"accuracy\""));
+    // repeated run, same schedule: byte-identical
+    let again = report_json(&scenario, &cfg, &method, Parallelism::Sequential);
+    assert_eq!(reference, again, "{}: sequential rerun diverged", method.name());
+    // different thread counts: byte-identical
+    for par in [Parallelism::PerCamera, Parallelism::Workers(1), Parallelism::Workers(3)] {
+        let parallel = report_json(&scenario, &cfg, &method, par);
+        assert_eq!(
+            reference, parallel,
+            "{}: {par:?} diverged from the sequential reference",
+            method.name()
+        );
+    }
+}
+
+#[test]
+fn baseline_is_deterministic_across_schedules() {
+    assert_identical_across_schedules(Method::Baseline);
+}
+
+#[test]
+fn crossroi_is_deterministic_across_schedules() {
+    assert_identical_across_schedules(Method::CrossRoi);
+}
+
+#[test]
+fn crossroi_reducto_is_deterministic_across_schedules() {
+    // exercises the stateful filter stage (kept/dropped frames must not
+    // depend on scheduling)
+    assert_identical_across_schedules(Method::CrossRoiReducto(0.85));
+}
+
+#[test]
+fn parallel_run_reports_expected_shape() {
+    let (scenario, cfg) = small();
+    let opts = PipelineOptions::default();
+    let (report, reported) = run_method_with(
+        &scenario,
+        &cfg.system,
+        &FixedCostInfer,
+        &Method::Baseline,
+        None,
+        &opts,
+    )
+    .unwrap();
+    let eval_frames = (cfg.scenario.eval_secs * cfg.scenario.fps).round() as usize;
+    assert_eq!(report.frames_total, eval_frames * cfg.scenario.n_cameras);
+    assert_eq!(reported.len(), eval_frames);
+    assert!(report.network_mbps_total > 0.0);
+    assert!(report.server_hz > 0.0);
+    assert!(report.latency.total() > 0.0);
+    assert!(report.accuracy > 0.5, "baseline accuracy {}", report.accuracy);
+}
+
+#[test]
+fn measured_mode_still_produces_consistent_structure() {
+    // wall-clock mode can't be byte-compared, but the deterministic
+    // fields must match the modelled run exactly
+    let (scenario, cfg) = small();
+    let measured = PipelineOptions {
+        parallelism: Parallelism::PerCamera,
+        encode_cost: EncodeCost::Measured,
+    };
+    let modelled = PipelineOptions {
+        parallelism: Parallelism::Sequential,
+        encode_cost: EncodeCost::PerFrame(0.02),
+    };
+    let (a, _) = run_method_with(
+        &scenario, &cfg.system, &FixedCostInfer, &Method::CrossRoi, None, &measured,
+    )
+    .unwrap();
+    let (b, _) = run_method_with(
+        &scenario, &cfg.system, &FixedCostInfer, &Method::CrossRoi, None, &modelled,
+    )
+    .unwrap();
+    deterministic_fields_match(&a, &b);
+}
+
+fn deterministic_fields_match(a: &MethodReport, b: &MethodReport) {
+    assert_eq!(a.bytes_total, b.bytes_total);
+    assert_eq!(a.accuracy, b.accuracy);
+    assert_eq!(a.missed_per_frame, b.missed_per_frame);
+    assert_eq!(a.frames_reduced, b.frames_reduced);
+    assert_eq!(a.mask_tiles, b.mask_tiles);
+    assert_eq!(a.regions_per_cam, b.regions_per_cam);
+    assert_eq!(a.network_mbps_per_cam, b.network_mbps_per_cam);
+}

@@ -1,0 +1,156 @@
+//! Offline stand-in for the PJRT `xla` bindings (DESIGN.md §3).
+//!
+//! The real deployment points the workspace's optional `xla` dependency
+//! at the genuine PJRT CPU-client bindings; this container has no
+//! network, so the `pjrt` feature compiles against this API-compatible
+//! stub instead.  Every entry point that would touch PJRT returns a
+//! descriptive error — the surrounding code (artifact loading, the
+//! `crossroi info` subcommand) already treats runtime unavailability as
+//! a soft failure.
+
+use std::fmt;
+
+/// Error type matching the real bindings' surface (Display + Error).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT is unavailable in this build (the `xla` dependency is the offline stub; \
+         point it at the real bindings to run compiled artifacts)"
+    ))
+}
+
+/// Scalar element types the [`Literal`] constructors accept.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// A host-side tensor.
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    bytes: Vec<u8>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let bytes = unsafe {
+            std::slice::from_raw_parts(data.as_ptr().cast::<u8>(), std::mem::size_of_val(data))
+        }
+        .to_vec();
+        Literal { bytes, dims: vec![data.len() as i64] }
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        Ok(Literal { bytes: self.bytes.clone(), dims: dims.to_vec() })
+    }
+
+    /// Unwrap a single-element tuple result.
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(unavailable("Literal::to_tuple1"))
+    }
+
+    /// Copy out as a typed host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// A parsed HLO module.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        // match the real bindings: missing files fail at parse time
+        std::fs::metadata(path)
+            .map_err(|e| Error(format!("reading HLO text {path}: {e}")))?;
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// A computation ready for compilation.
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A device-resident buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled, loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments; returns per-device, per-output
+    /// buffers like the real bindings.
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// The PJRT client.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literals_carry_shape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.dims(), &[6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+    }
+
+    #[test]
+    fn pjrt_entry_points_error_descriptively() {
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("offline stub"), "{err}");
+    }
+}
