@@ -1,0 +1,82 @@
+//! Offline planner scaling — camera-count sweep for the staged planner:
+//! per-stage seconds and the multi-thread speedup of the O(n²) pair
+//! fitting (ReXCam's argument: cross-camera correlation profiling is the
+//! city-scale bottleneck; this tracks how far the parallel planner pushes
+//! it).
+//!
+//! Expected shape: the filter stage dominates and grows ~quadratically
+//! with cameras; with one worker per core the filter stage — and at 8+
+//! cameras the whole offline phase — should clear a ≥ 3× speedup over
+//! `--offline-threads 1`, while the plans stay byte-identical
+//! (`rust/tests/offline_determinism.rs` proves the identity; this bench
+//! spot-checks |M|).
+
+mod common;
+
+use crossroi::bench::Table;
+use crossroi::coordinator::Method;
+use crossroi::offline::{build_plan_with, OfflineOptions, OfflinePlan, SolverKind};
+use crossroi::sim::Scenario;
+
+fn stage(plan: &OfflinePlan, name: &str) -> f64 {
+    plan.report.stage_seconds(name).unwrap_or(0.0)
+}
+
+fn main() {
+    let base = common::bench_config();
+    let threads = OfflineOptions::default().effective_threads();
+    println!(
+        "offline scaling sweep: {}s profile window, {} worker threads (auto)",
+        base.scenario.profile_secs, threads
+    );
+
+    let mut table = Table::new(&[
+        "cams",
+        "constraints",
+        "profile s",
+        "filter s (1t)",
+        "filter s (auto)",
+        "solve s",
+        "total s (1t)",
+        "total s (auto)",
+        "speedup",
+    ]);
+    for cams in [4usize, 8, 12, 16] {
+        let mut cfg = base.clone();
+        cfg.scenario.n_cameras = cams;
+        let scenario = Scenario::build(&cfg.scenario);
+        let sequential = build_plan_with(
+            &scenario,
+            &cfg.scenario,
+            &cfg.system,
+            &Method::CrossRoi,
+            &OfflineOptions { threads: 1, solver: SolverKind::Greedy },
+        )
+        .unwrap();
+        let parallel = build_plan_with(
+            &scenario,
+            &cfg.scenario,
+            &cfg.system,
+            &Method::CrossRoi,
+            &OfflineOptions { threads: 0, solver: SolverKind::Greedy },
+        )
+        .unwrap();
+        assert_eq!(
+            sequential.masks.total_size(),
+            parallel.masks.total_size(),
+            "parallel plan diverged from sequential at {cams} cameras"
+        );
+        table.row(vec![
+            format!("{cams}"),
+            format!("{}", parallel.n_constraints),
+            format!("{:.3}", stage(&parallel, "profile")),
+            format!("{:.3}", stage(&sequential, "filter")),
+            format!("{:.3}", stage(&parallel, "filter")),
+            format!("{:.3}", stage(&parallel, "solve")),
+            format!("{:.3}", sequential.seconds()),
+            format!("{:.3}", parallel.seconds()),
+            format!("{:.2}x", sequential.seconds() / parallel.seconds().max(1e-9)),
+        ]);
+    }
+    table.print("Offline planner scaling (camera sweep, CrossRoI method)");
+}

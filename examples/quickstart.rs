@@ -25,7 +25,8 @@ fn main() -> anyhow::Result<()> {
     let rt = Runtime::load(&cfg.system.artifacts_dir)?;
     let infer = RuntimeInfer(&rt);
 
-    let plan = coordinator::build_plan(&scenario, &cfg.scenario, &cfg.system, &Method::CrossRoi);
+    let plan =
+        coordinator::build_plan(&scenario, &cfg.scenario, &cfg.system, &Method::CrossRoi)?;
     println!(
         "offline: |M| = {} tiles, coverage {:.1}%, {} regions total",
         plan.masks.total_size(),

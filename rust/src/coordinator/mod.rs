@@ -1,8 +1,9 @@
 //! The L3 coordinator: CrossRoI's two-phase workflow (§4.1).
 //!
-//! [`offline`] runs modules ①–④ (ReID → tandem filters → region
-//! association → RoI optimization → tile grouping) over the profile
-//! window and produces each camera's plan; [`online`] orchestrates the
+//! [`offline`] re-exports the staged offline planner
+//! ([`crate::offline`]: Profile → Filter → Associate → Solve → Group over
+//! the profile window, producing each camera's plan with a per-stage
+//! [`PlanReport`]); [`online`] orchestrates the
 //! staged streaming pipeline in [`crate::pipeline`] (⑤ per-camera
 //! crop/group/encode workers, ⑥ merged batched RoI-CNN inference) over
 //! the evaluation window, with real measured compute and a discrete-event
@@ -16,7 +17,9 @@ pub mod online;
 
 pub use method::Method;
 pub use metrics::{LatencyBreakdown, MethodReport};
-pub use offline::{build_plan, OfflinePlan};
+pub use offline::{
+    build_plan, build_plan_with, OfflineOptions, OfflinePlan, PlanReport, SolverKind,
+};
 pub use online::{
     baseline_reference, baseline_reference_with, run_ablation, run_ablation_with, run_method,
     run_method_with,

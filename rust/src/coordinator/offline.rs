@@ -1,197 +1,10 @@
-//! Offline phase (§4.1.1, modules ①–④): profile the synchronized clips,
-//! clean the ReID stream, build region associations, optimize the RoI
-//! masks and group their tiles — producing each camera's online plan.
+//! Compatibility shim: the offline planner lives in [`crate::offline`] —
+//! a staged subsystem (Profile → Filter → Associate → Solve → Group) with
+//! parallel pair fitting and a pluggable set-cover solver.  Re-exported
+//! here so the coordinator's historical public surface
+//! (`coordinator::build_plan`) keeps working.
 
-use std::time::Instant;
-
-use crate::association::table::AssociationTable;
-use crate::association::tiles::Tiling;
-use crate::config::{ScenarioConfig, SystemConfig};
-use crate::coordinator::method::Method;
-use crate::filters::ransac::RansacParams;
-use crate::filters::svm::SvmParams;
-use crate::filters::{FilterReport, TandemFilters};
-use crate::reid::error_model::{ErrorModelParams, RawReid};
-use crate::roi::masks::RoiMasks;
-use crate::roi::setcover::{self, SolverParams};
-use crate::sim::Scenario;
-use crate::tilegroup;
-use crate::util::geometry::IRect;
-
-/// Per-fleet plan handed to the online phase.
-#[derive(Debug, Clone)]
-pub struct OfflinePlan {
-    pub masks: RoiMasks,
-    /// Codec regions per camera (grouped rectangles, or per-tile rects for
-    /// No-Merging, or the full frame for Baseline).
-    pub groups: Vec<Vec<IRect>>,
-    /// Active detector blocks per camera (for the RoI HLO variant).
-    pub blocks: Vec<Vec<i32>>,
-    /// Filter diagnostics (None when filters were off).
-    pub filter_report: Option<FilterReport>,
-    /// Association table size (diagnostics).
-    pub n_constraints: usize,
-    /// Wall-clock seconds the offline phase took.
-    pub seconds: f64,
-}
-
-/// Run the offline phase for a method.
-///
-/// * Baseline / Reducto: full-frame masks, one full-frame region.
-/// * No-Filters: raw ReID straight into the optimizer (② off).
-/// * No-Merging: optimized masks but per-tile regions (tile grouping off).
-/// * No-RoIInf / CrossRoI / CrossRoI-Reducto: the full pipeline.
-pub fn build_plan(
-    scenario: &Scenario,
-    cfg: &ScenarioConfig,
-    sys: &SystemConfig,
-    method: &Method,
-) -> OfflinePlan {
-    let start = Instant::now();
-    let tiling = Tiling::new(
-        scenario.cameras.len(),
-        crate::sim::FRAME_W,
-        crate::sim::FRAME_H,
-        cfg.tile_px,
-    );
-
-    if !method.uses_roi_masks() {
-        let masks = RoiMasks::full(&tiling);
-        let n_cams = scenario.cameras.len();
-        let full_rect = vec![IRect::new(0, 0, crate::sim::FRAME_W, crate::sim::FRAME_H)];
-        let blocks: Vec<Vec<i32>> =
-            (0..n_cams).map(|c| masks.active_blocks(c, 32, crate::sim::FRAME_W)).collect();
-        return OfflinePlan {
-            groups: vec![full_rect; n_cams],
-            blocks,
-            masks,
-            filter_report: None,
-            n_constraints: 0,
-            seconds: start.elapsed().as_secs_f64(),
-        };
-    }
-
-    // ① offline ReID over the profile window
-    let raw = RawReid::generate(scenario, scenario.profile_range(), &ErrorModelParams::default());
-
-    // ② tandem statistical filters (skipped by No-Filters)
-    let (stream, filter_report) = if method.uses_filters() {
-        let filters = TandemFilters {
-            ransac: RansacParams { theta: sys.ransac_theta, ..Default::default() },
-            svm: SvmParams { gamma: sys.svm_gamma, ..Default::default() },
-            ..Default::default()
-        };
-        let (s, r) = filters.apply(&raw);
-        (s, Some(r))
-    } else {
-        (raw, None)
-    };
-
-    // ③ region association lookup table
-    let table = AssociationTable::build(&stream, &tiling);
-
-    // ④ RoI mask optimization
-    let solution = setcover::solve(&table, &SolverParams::default());
-    let masks = RoiMasks::from_solution(&tiling, &solution.tiles);
-
-    // ⑤-prep: tile grouping (skipped by No-Merging)
-    let groups: Vec<Vec<IRect>> = if method.uses_merging() {
-        tilegroup::group_all(&masks)
-    } else {
-        (0..scenario.cameras.len()).map(|c| masks.tile_rects(c)).collect()
-    };
-    let blocks: Vec<Vec<i32>> = (0..scenario.cameras.len())
-        .map(|c| masks.active_blocks(c, 32, crate::sim::FRAME_W))
-        .collect();
-
-    OfflinePlan {
-        masks,
-        groups,
-        blocks,
-        filter_report,
-        n_constraints: table.n_constraints(),
-        seconds: start.elapsed().as_secs_f64(),
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::config::Config;
-
-    fn setup() -> (Scenario, Config) {
-        let cfg = Config::test_small();
-        (Scenario::build(&cfg.scenario), cfg)
-    }
-
-    #[test]
-    fn baseline_plan_is_full_frame() {
-        let (sc, cfg) = setup();
-        let plan = build_plan(&sc, &cfg.scenario, &cfg.system, &Method::Baseline);
-        assert_eq!(plan.groups[0], vec![IRect::new(0, 0, 320, 192)]);
-        assert_eq!(plan.blocks[0].len(), 60);
-        assert!((plan.masks.coverage(0) - 1.0).abs() < 1e-12);
-        assert!(plan.filter_report.is_none());
-    }
-
-    #[test]
-    fn crossroi_plan_reduces_tiles() {
-        let (sc, cfg) = setup();
-        let plan = build_plan(&sc, &cfg.scenario, &cfg.system, &Method::CrossRoi);
-        let total: usize = (0..5).map(|c| plan.masks.camera_size(c)).sum();
-        assert!(total > 0, "empty masks");
-        assert!(
-            total < 5 * 240,
-            "CrossRoI masks did not shrink below full frames: {total}"
-        );
-        assert!(plan.filter_report.is_some());
-        assert!(plan.n_constraints > 0);
-        // grouped regions are fewer than tiles
-        for cam in 0..5 {
-            assert!(plan.groups[cam].len() <= plan.masks.camera_size(cam));
-        }
-    }
-
-    #[test]
-    fn no_merging_uses_per_tile_regions() {
-        let (sc, cfg) = setup();
-        let merged = build_plan(&sc, &cfg.scenario, &cfg.system, &Method::CrossRoi);
-        let unmerged = build_plan(&sc, &cfg.scenario, &cfg.system, &Method::NoMerging);
-        // identical masks (same seed/profile), different region granularity
-        assert_eq!(merged.masks.total_size(), unmerged.masks.total_size());
-        for cam in 0..5 {
-            assert_eq!(unmerged.groups[cam].len(), unmerged.masks.camera_size(cam));
-            assert!(merged.groups[cam].len() <= unmerged.groups[cam].len());
-        }
-    }
-
-    #[test]
-    fn no_filters_masks_are_larger() {
-        let (sc, cfg) = setup();
-        let with = build_plan(&sc, &cfg.scenario, &cfg.system, &Method::CrossRoi);
-        let without = build_plan(&sc, &cfg.scenario, &cfg.system, &Method::NoFilters);
-        // false negatives force both copies of every broken pair into the
-        // masks: the unfiltered plan must be at least as large
-        assert!(
-            without.masks.total_size() >= with.masks.total_size(),
-            "no-filters {} < crossroi {}",
-            without.masks.total_size(),
-            with.masks.total_size()
-        );
-    }
-
-    #[test]
-    fn blocks_cover_mask_tiles() {
-        let (sc, cfg) = setup();
-        let plan = build_plan(&sc, &cfg.scenario, &cfg.system, &Method::CrossRoi);
-        for cam in 0..5 {
-            for &(tx, ty) in plan.masks.tiles[cam].iter() {
-                let bid = ((ty / 2) * 10 + tx / 2) as i32;
-                assert!(
-                    plan.blocks[cam].contains(&bid),
-                    "cam {cam} tile ({tx},{ty}) not covered by block {bid}"
-                );
-            }
-        }
-    }
-}
+pub use crate::offline::{
+    build_plan, build_plan_with, OfflineOptions, OfflinePlan, PlanReport, SolverKind,
+    StageTiming,
+};

@@ -17,7 +17,7 @@ use anyhow::Result;
 use crate::config::SystemConfig;
 use crate::coordinator::method::Method;
 use crate::coordinator::metrics::{LatencyBreakdown, MethodReport};
-use crate::coordinator::offline::{build_plan, OfflinePlan};
+use crate::coordinator::offline::{build_plan_with, OfflinePlan};
 use crate::pipeline::{
     run_pipeline, BatchedInfer, CameraStages, CarryOverQuery, CodecEncodeStage, DesTransport,
     FilterStage, Infer, PassThroughFilter, PipelineOptions, QueryStage, ReductoFilterStage,
@@ -62,7 +62,7 @@ pub fn run_method_with(
     let frames_per_segment = ((sys.segment_secs * fps).round() as usize).max(1);
 
     // ---- offline phase ----
-    let plan: OfflinePlan = build_plan(scenario, cfg, sys, method);
+    let plan: OfflinePlan = build_plan_with(scenario, cfg, sys, method, &opts.offline)?;
     let reducto_filter = method.reducto_target().map(|target| {
         if target >= 1.0 {
             ReductoFilter::disabled(n_cams)
@@ -174,7 +174,7 @@ pub fn run_method_with(
             &(0..n_cams).map(|c| plan.masks.coverage(c)).collect::<Vec<_>>(),
         ),
         regions_per_cam: plan.groups.iter().map(|g| g.len()).collect(),
-        offline_seconds: plan.seconds,
+        offline_seconds: plan.seconds(),
     };
     Ok((report, reported))
 }

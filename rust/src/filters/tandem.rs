@@ -2,13 +2,25 @@
 //! (false positives get fresh ids, becoming negative data) → SVM filter
 //! (false negatives are removed) → highly-confident stream for the
 //! association/optimization stages.
+//!
+//! Both filters work per ordered camera pair, and the pairwise work is the
+//! part of the offline phase that grows O(n²) with fleet size.  The sample
+//! sets of **every** pair are built in one indexed pass over the stream
+//! (no per-pair rescans), then the pair models are fitted on scoped worker
+//! threads and merged back in pair order — rewrites are applied by record
+//! index and fresh ids assigned after the merge, so the output stream is
+//! byte-identical to a sequential run at any thread count
+//! (`rust/tests/offline_determinism.rs`).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
 
 use crate::filters::features::bbox4;
 use crate::filters::ransac::{self, RansacParams};
 use crate::filters::svm::{Svm, SvmParams};
 use crate::reid::records::ReidStream;
+use crate::util::geometry::Rect;
+use crate::util::parallel::ordered_map;
 use crate::util::rng::Rng;
 
 /// Tandem filter configuration.
@@ -42,7 +54,7 @@ impl Default for TandemFilters {
 }
 
 /// What the filters did (diagnostics + Fig. 9/10 sweeps).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct FilterReport {
     /// Camera pairs with enough positives to fit a mapping.
     pub pairs_fit: usize,
@@ -52,55 +64,75 @@ pub struct FilterReport {
     pub fn_removed: usize,
 }
 
+/// Minimum per-class SVM sample count: pairs with fewer of either class
+/// are skipped (no region can be learned), and subsampling always
+/// reserves this many negative slots so the training set never collapses
+/// to one class.
+const MIN_CLASS_SAMPLES: usize = 8;
+
+/// Index of an ordered camera pair in the canonical (src-major, dst-minor,
+/// src ≠ dst) enumeration — the merge order that keeps parallel fitting
+/// byte-identical to the sequential reference.
+fn pair_index(src: usize, dst: usize, n: usize) -> usize {
+    debug_assert!(src != dst && src < n && dst < n);
+    src * (n - 1) + dst - usize::from(dst > src)
+}
+
+/// One ordered pair's regression-filter training set: interior positive
+/// (src bbox, dst bbox) pairs plus the src record index behind each.
+#[derive(Debug, Default)]
+struct PairSamples {
+    rec_idx: Vec<usize>,
+    pairs: Vec<(Rect, Rect)>,
+}
+
+/// One ordered pair's SVM training set: every src-camera record labelled
+/// ±1 by whether its id appears in dst at the same frame.  Features and
+/// record indices depend only on the source camera, so the `n - 1` pairs
+/// sharing a source share one allocation.
+#[derive(Debug)]
+struct SvmSamples {
+    rec_idx: Arc<Vec<usize>>,
+    feats: Arc<Vec<Vec<f64>>>,
+    labels: Vec<f64>,
+}
+
 impl TandemFilters {
-    /// Run both filters; returns the cleaned stream and a report.
+    /// Run both filters on the caller's thread; returns the cleaned
+    /// stream and a report.
     pub fn apply(&self, stream: &ReidStream) -> (ReidStream, FilterReport) {
+        self.apply_with_threads(stream, 1)
+    }
+
+    /// Like [`Self::apply`], with the per-pair model fitting spread over
+    /// `threads` scoped worker threads.  The result is identical to
+    /// `apply` for every thread count (deterministic pair-order merge).
+    pub fn apply_with_threads(
+        &self,
+        stream: &ReidStream,
+        threads: usize,
+    ) -> (ReidStream, FilterReport) {
         let mut report = FilterReport::default();
 
         // ---- stage 1: regression filter (per ordered camera pair) ----
         // positive pair = src record whose raw id also appears in dst
+        let pair_samples = self.build_pair_samples(stream);
+        let fits = ordered_map(&pair_samples, threads, |p| ransac::fit(&p.pairs, &self.ransac));
         let mut rewrites: HashMap<usize, u32> = HashMap::new();
         let mut next_fresh = stream.max_raw_id() + 1;
-        let n = stream.n_cameras;
-        let interior = |b: &crate::util::geometry::Rect| {
-            b.left > self.edge_margin
-                && b.top > self.edge_margin
-                && b.right() < self.frame_w - self.edge_margin
-                && b.bottom() < self.frame_h - self.edge_margin
-        };
-        for src in 0..n {
-            for dst in 0..n {
-                if src == dst {
-                    continue;
-                }
-                // record-index + dst bbox for every interior positive pair
-                let mut rec_idx = Vec::new();
-                let mut pairs = Vec::new();
-                for (i, rec) in stream.all().iter().enumerate() {
-                    if rec.cam != src || !interior(&rec.bbox) {
-                        continue;
-                    }
-                    if let Some(m) = stream.find_id(dst, rec.frame, rec.raw_id) {
-                        if !interior(&m.bbox) {
-                            continue;
-                        }
-                        rec_idx.push(i);
-                        pairs.push((rec.bbox, m.bbox));
-                    }
-                }
-                let Some(fit) = ransac::fit(&pairs, &self.ransac) else {
-                    continue;
-                };
-                report.pairs_fit += 1;
-                for oi in fit.outlier_indices() {
-                    let rec = rec_idx[oi];
-                    // decouple: fresh id turns this into a negative sample
-                    rewrites.entry(rec).or_insert_with(|| {
-                        report.fp_rewritten += 1;
-                        next_fresh += 1;
-                        next_fresh - 1
-                    });
-                }
+        for (p, fit) in pair_samples.iter().zip(&fits) {
+            let Some(fit) = fit else {
+                continue;
+            };
+            report.pairs_fit += 1;
+            for oi in fit.outlier_indices() {
+                let rec = p.rec_idx[oi];
+                // decouple: fresh id turns this into a negative sample
+                rewrites.entry(rec).or_insert_with(|| {
+                    report.fp_rewritten += 1;
+                    next_fresh += 1;
+                    next_fresh - 1
+                });
             }
         }
         let stage1 = stream.with_rewrites(&rewrites);
@@ -108,39 +140,15 @@ impl TandemFilters {
         // ---- stage 2: SVM filter (per ordered camera pair) ----
         // label every src record ±1 by whether its id appears in dst;
         // negative outliers (negatives in the positive region) are FNs.
+        let svm_samples = build_svm_samples(&stage1);
+        let removals = ordered_map(&svm_samples, threads, |s| self.fit_svm_pair(s));
         let mut remove: Vec<bool> = vec![false; stage1.len()];
-        for src in 0..n {
-            for dst in 0..n {
-                if src == dst {
-                    continue;
+        for pair_removals in &removals {
+            for &rec in pair_removals {
+                if !remove[rec] {
+                    report.fn_removed += 1;
                 }
-                let mut feats: Vec<Vec<f64>> = Vec::new();
-                let mut labels: Vec<f64> = Vec::new();
-                let mut rec_idx: Vec<usize> = Vec::new();
-                for (i, rec) in stage1.all().iter().enumerate() {
-                    if rec.cam != src {
-                        continue;
-                    }
-                    let positive = stage1.find_id(dst, rec.frame, rec.raw_id).is_some();
-                    feats.push(bbox4(&rec.bbox).to_vec());
-                    labels.push(if positive { 1.0 } else { -1.0 });
-                    rec_idx.push(i);
-                }
-                let n_pos = labels.iter().filter(|&&l| l > 0.0).count();
-                if n_pos < 8 || labels.len() - n_pos < 8 {
-                    continue; // not enough of either class to learn a region
-                }
-                // subsample for training if oversized (keep all positives)
-                let (tx, ty) = subsample(&feats, &labels, self.svm_max_samples, self.svm.seed);
-                let svm = Svm::train(tx, ty, &self.svm);
-                for (k, f) in feats.iter().enumerate() {
-                    if labels[k] < 0.0 && svm.decision(f) > 0.0 {
-                        if !remove[rec_idx[k]] {
-                            report.fn_removed += 1;
-                        }
-                        remove[rec_idx[k]] = true;
-                    }
-                }
+                remove[rec] = true;
             }
         }
         let mut i = 0;
@@ -151,10 +159,121 @@ impl TandemFilters {
         });
         (filtered, report)
     }
+
+    /// One indexed pass over the stream building every ordered pair's
+    /// positive sample set: a `(cam, frame, raw_id) → first record` map
+    /// replaces the per-pair `find_id` rescans, and each record fans its
+    /// matches out to the pairs it belongs to.  Per-pair vectors are
+    /// filled in record order — exactly the order the per-pair rescan
+    /// produced.
+    fn build_pair_samples(&self, stream: &ReidStream) -> Vec<PairSamples> {
+        let n = stream.n_cameras;
+        let interior = |b: &Rect| {
+            b.left > self.edge_margin
+                && b.top > self.edge_margin
+                && b.right() < self.frame_w - self.edge_margin
+                && b.bottom() < self.frame_h - self.edge_margin
+        };
+        // first record carrying (cam, frame, raw_id) — what find_id returns
+        let mut first: HashMap<(usize, usize, u32), usize> = HashMap::new();
+        for (i, rec) in stream.all().iter().enumerate() {
+            first.entry((rec.cam, rec.frame, rec.raw_id)).or_insert(i);
+        }
+        let mut out: Vec<PairSamples> =
+            (0..n.saturating_sub(1) * n).map(|_| PairSamples::default()).collect();
+        for (i, rec) in stream.all().iter().enumerate() {
+            if !interior(&rec.bbox) {
+                continue;
+            }
+            for dst in 0..n {
+                if dst == rec.cam {
+                    continue;
+                }
+                let Some(&j) = first.get(&(dst, rec.frame, rec.raw_id)) else {
+                    continue;
+                };
+                let m = &stream.all()[j];
+                if !interior(&m.bbox) {
+                    continue;
+                }
+                let p = &mut out[pair_index(rec.cam, dst, n)];
+                p.rec_idx.push(i);
+                p.pairs.push((rec.bbox, m.bbox));
+            }
+        }
+        out
+    }
+
+    /// Train one pair's SVM and return the record indices it removes
+    /// (negatives the model places in the positive region).
+    fn fit_svm_pair(&self, s: &SvmSamples) -> Vec<usize> {
+        let n_pos = s.labels.iter().filter(|&&l| l > 0.0).count();
+        if n_pos < MIN_CLASS_SAMPLES || s.labels.len() - n_pos < MIN_CLASS_SAMPLES {
+            return Vec::new(); // not enough of either class to learn a region
+        }
+        // subsample for training if oversized (keep all positives)
+        let (tx, ty) = subsample(&s.feats, &s.labels, self.svm_max_samples, self.svm.seed);
+        let svm = Svm::train(tx, ty, &self.svm);
+        let mut out = Vec::new();
+        for (k, f) in s.feats.iter().enumerate() {
+            if s.labels[k] < 0.0 && svm.decision(f) > 0.0 {
+                out.push(s.rec_idx[k]);
+            }
+        }
+        out
+    }
 }
 
-/// Deterministically subsample to `max` samples, preferring to keep all
-/// positives (they are the scarce class, O2).
+/// One indexed pass building every ordered pair's SVM sample set: each
+/// record contributes one labelled sample to the `n - 1` pairs it is the
+/// source of, with the label looked up in a presence set instead of a
+/// per-pair `find_id` scan.  The per-source feature matrix and record
+/// indices are built once and shared across that source's pairs.
+fn build_svm_samples(stream: &ReidStream) -> Vec<SvmSamples> {
+    let n = stream.n_cameras;
+    let mut present: HashSet<(usize, usize, u32)> = HashSet::new();
+    for rec in stream.all() {
+        present.insert((rec.cam, rec.frame, rec.raw_id));
+    }
+    let mut rec_idx: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut feats: Vec<Vec<Vec<f64>>> = vec![Vec::new(); n];
+    let mut labels: Vec<Vec<f64>> =
+        (0..n.saturating_sub(1) * n).map(|_| Vec::new()).collect();
+    for (i, rec) in stream.all().iter().enumerate() {
+        rec_idx[rec.cam].push(i);
+        feats[rec.cam].push(bbox4(&rec.bbox).to_vec());
+        for dst in 0..n {
+            if dst == rec.cam {
+                continue;
+            }
+            let positive = present.contains(&(dst, rec.frame, rec.raw_id));
+            labels[pair_index(rec.cam, dst, n)].push(if positive { 1.0 } else { -1.0 });
+        }
+    }
+    let rec_idx: Vec<Arc<Vec<usize>>> = rec_idx.into_iter().map(Arc::new).collect();
+    let feats: Vec<Arc<Vec<Vec<f64>>>> = feats.into_iter().map(Arc::new).collect();
+    let mut out = Vec::with_capacity(labels.len());
+    for src in 0..n {
+        for dst in 0..n {
+            if dst == src {
+                continue;
+            }
+            out.push(SvmSamples {
+                rec_idx: Arc::clone(&rec_idx[src]),
+                feats: Arc::clone(&feats[src]),
+                labels: std::mem::take(&mut labels[pair_index(src, dst, n)]),
+            });
+        }
+    }
+    out
+}
+
+/// Deterministically subsample to `max` samples, keeping **all** positives
+/// (they are the scarce class, O2) up to the cap less a reserved negative
+/// quota; negatives get the budget the positives leave over.  The quota
+/// keeps the training set two-class even when positives alone exceed the
+/// cap — a one-class SVM would put the whole plane in the positive region
+/// and flag every negative as a false negative.
 fn subsample(
     feats: &[Vec<f64>],
     labels: &[f64],
@@ -166,9 +285,10 @@ fn subsample(
     }
     let pos: Vec<usize> = (0..feats.len()).filter(|&i| labels[i] > 0.0).collect();
     let neg: Vec<usize> = (0..feats.len()).filter(|&i| labels[i] < 0.0).collect();
-    let budget_neg = max.saturating_sub(pos.len().min(max / 2));
     let mut rng = Rng::new(seed).fork(feats.len() as u64);
-    let mut chosen: Vec<usize> = pos.into_iter().take(max / 2).collect();
+    let neg_quota = neg.len().min(MIN_CLASS_SAMPLES);
+    let mut chosen: Vec<usize> = pos.into_iter().take(max.saturating_sub(neg_quota)).collect();
+    let budget_neg = max - chosen.len();
     if neg.len() <= budget_neg {
         chosen.extend(neg);
     } else {
@@ -189,6 +309,28 @@ mod tests {
     use crate::reid::error_model::{ErrorModelParams, RawReid};
     use crate::reid::labels;
     use crate::sim::Scenario;
+
+    #[test]
+    fn pair_index_is_a_bijection() {
+        for n in [2usize, 3, 5, 16] {
+            let mut seen = vec![false; n * (n - 1)];
+            let mut expected = 0usize;
+            for src in 0..n {
+                for dst in 0..n {
+                    if src == dst {
+                        continue;
+                    }
+                    let k = pair_index(src, dst, n);
+                    // canonical enumeration order: src-major, dst-minor
+                    assert_eq!(k, expected, "pair ({src},{dst}) of {n}");
+                    assert!(!seen[k]);
+                    seen[k] = true;
+                    expected += 1;
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+        }
+    }
 
     #[test]
     fn filters_improve_reid_quality() {
@@ -212,6 +354,25 @@ mod tests {
         }
         // FP should not grow
         assert!(sum_fp(&after) <= sum_fp(&before), "FP grew");
+    }
+
+    #[test]
+    fn parallel_apply_is_byte_identical_to_sequential() {
+        let sc = Scenario::build(&Config::test_small().scenario);
+        let raw = RawReid::generate(&sc, 0..sc.n_frames(), &ErrorModelParams::default());
+        let filters = TandemFilters::default();
+        let (seq, seq_report) = filters.apply_with_threads(&raw, 1);
+        for threads in [2usize, 3, 8] {
+            let (par, par_report) = filters.apply_with_threads(&raw, threads);
+            assert_eq!(seq_report, par_report, "report diverged at {threads} threads");
+            assert_eq!(seq.len(), par.len(), "stream length diverged at {threads} threads");
+            for (a, b) in seq.all().iter().zip(par.all()) {
+                assert_eq!(a.cam, b.cam);
+                assert_eq!(a.frame, b.frame);
+                assert_eq!(a.raw_id, b.raw_id, "rewritten ids diverged at {threads} threads");
+                assert_eq!(a.bbox, b.bbox);
+            }
+        }
     }
 
     #[test]
@@ -250,5 +411,35 @@ mod tests {
         let (tx, ty) = subsample(&feats, &labels, 50, 1);
         assert!(tx.len() <= 50);
         assert!(ty.iter().filter(|&&l| l > 0.0).count() >= 20.min(25));
+    }
+
+    #[test]
+    fn subsample_keeps_all_positives_when_they_exceed_half_the_cap() {
+        // regression: `take(max / 2)` used to silently drop positives as
+        // soon as they exceeded half the cap
+        let feats: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64]).collect();
+        let labels: Vec<f64> = (0..100).map(|i| if i < 70 { 1.0 } else { -1.0 }).collect();
+        let (tx, ty) = subsample(&feats, &labels, 80, 1);
+        assert_eq!(tx.len(), 80);
+        assert_eq!(ty.iter().filter(|&&l| l > 0.0).count(), 70, "positives dropped");
+        assert_eq!(ty.iter().filter(|&&l| l < 0.0).count(), 10);
+        // positives beyond the whole cap are still capped
+        let all_pos: Vec<f64> = vec![1.0; 100];
+        let (tx, ty) = subsample(&feats, &all_pos, 80, 1);
+        assert_eq!(tx.len(), 80);
+        assert!(ty.iter().all(|&l| l > 0.0));
+    }
+
+    #[test]
+    fn subsample_always_reserves_negative_slots() {
+        // regression: when positives alone exceed the cap, the negative
+        // quota must keep the training set two-class (a one-class SVM
+        // would flag every negative as FN)
+        let feats: Vec<Vec<f64>> = (0..115).map(|i| vec![i as f64]).collect();
+        let labels: Vec<f64> = (0..115).map(|i| if i < 95 { 1.0 } else { -1.0 }).collect();
+        let (tx, ty) = subsample(&feats, &labels, 50, 1);
+        assert_eq!(tx.len(), 50);
+        assert_eq!(ty.iter().filter(|&&l| l > 0.0).count(), 42);
+        assert_eq!(ty.iter().filter(|&&l| l < 0.0).count(), 8);
     }
 }

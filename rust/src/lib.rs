@@ -8,8 +8,9 @@
 //!   depends on: traffic-world simulator, ReID error model, statistical
 //!   filters (RANSAC / SVM), region association, RoI set-cover optimizer,
 //!   tile grouping, block video codec, network discrete-event simulator,
-//!   the stage-parallel streaming [`pipeline`], Reducto frame filtering
-//!   and the query/accuracy machinery.
+//!   the staged [`offline`] planner, the stage-parallel streaming
+//!   [`pipeline`], Reducto frame filtering and the query/accuracy
+//!   machinery.
 //! * **L2 (python/compile/model.py)** — the detector compute graph, AOT
 //!   lowered to HLO text in `artifacts/`.
 //! * **L1 (python/compile/kernels/sbnet.py)** — the SBNet-style sparse-block
@@ -30,6 +31,7 @@ pub mod config;
 pub mod coordinator;
 pub mod filters;
 pub mod net;
+pub mod offline;
 pub mod pipeline;
 pub mod query;
 pub mod reducto;

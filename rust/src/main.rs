@@ -32,6 +32,10 @@ flags:
   --ransac-theta <t>       RANSAC threshold multiplier
   --method <name>          baseline|no-filters|no-merging|no-roiinf|crossroi|reducto|crossroi-reducto
   --reducto-target <a>     frame-filter accuracy target (with reducto methods)
+  --offline-threads <n>    worker threads for the offline pair fitting
+                           (0 = one per core, the default)
+  --solver <name>          greedy|exact RoI set-cover solver (exact is a
+                           certifier for small instances only)
   --artifacts <dir>        AOT artifact directory (default: artifacts)
   --native                 use the native reference detector (no PJRT)
   --sequential             run the online pipeline single-threaded
@@ -115,14 +119,21 @@ fn run() -> Result<()> {
         Some("offline") => {
             let scenario = Scenario::build(&cfg.scenario);
             let method = parse_method(&args)?;
-            let plan =
-                coordinator::build_plan(&scenario, &cfg.scenario, &cfg.system, &method);
+            let opts = offline_options(&args)?;
+            let plan = coordinator::build_plan_with(
+                &scenario, &cfg.scenario, &cfg.system, &method, &opts,
+            )?;
             println!(
-                "offline phase for {} in {:.2} s: {} constraints",
+                "offline phase for {} in {:.2} s ({} threads, {} solver): {} constraints",
                 method.name(),
-                plan.seconds,
+                plan.seconds(),
+                plan.report.threads,
+                plan.report.solver,
                 plan.n_constraints
             );
+            for st in &plan.report.stages {
+                println!("  stage {:<9} {:8.3} s", st.stage, st.seconds);
+            }
             if let Some(r) = &plan.filter_report {
                 println!(
                     "filters: {} pairs fit, {} FP decoupled, {} FN removed",
@@ -145,7 +156,7 @@ fn run() -> Result<()> {
         Some("run") => {
             let scenario = Scenario::build(&cfg.scenario);
             let method = parse_method(&args)?;
-            let opts = pipeline_options(&args);
+            let opts = pipeline_options(&args)?;
             let report = if args.switch("native") {
                 coordinator::run_method_with(
                     &scenario, &cfg.system, &NativeInfer, &method, None, &opts,
@@ -173,7 +184,7 @@ fn run() -> Result<()> {
                 Method::NoRoiInf,
                 Method::CrossRoi,
             ];
-            let opts = pipeline_options(&args);
+            let opts = pipeline_options(&args)?;
             let reports = if args.switch("native") {
                 coordinator::run_ablation_with(
                     &scenario, &cfg.system, &NativeInfer, &methods, &opts,
@@ -191,12 +202,26 @@ fn run() -> Result<()> {
     }
 }
 
-fn pipeline_options(args: &Args) -> crossroi::pipeline::PipelineOptions {
+fn offline_options(args: &Args) -> Result<crossroi::offline::OfflineOptions> {
+    let mut opts = crossroi::offline::OfflineOptions::default();
+    if let Some(n) = args.u64_flag("offline-threads")? {
+        opts.threads = n as usize;
+    }
+    if let Some(name) = args.flag("solver") {
+        opts.solver = crossroi::offline::SolverKind::parse(name)?;
+    }
+    Ok(opts)
+}
+
+fn pipeline_options(args: &Args) -> Result<crossroi::pipeline::PipelineOptions> {
     let mut opts = crossroi::pipeline::PipelineOptions::default();
     if args.switch("sequential") {
         opts.parallelism = crossroi::pipeline::Parallelism::Sequential;
     }
-    opts
+    // run/ablation build their offline plan internally — the planner
+    // flags steer it there too
+    opts.offline = offline_options(args)?;
+    Ok(opts)
 }
 
 // ---- PJRT-backed entry points (feature `pjrt`); default builds route

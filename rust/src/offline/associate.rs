@@ -1,0 +1,42 @@
+//! Stage ③ — Associate: build the region-association lookup table (§3.2,
+//! §4.1.1 module ③) from the cleaned stream — the constraint set of the
+//! RoI optimization.
+
+use crate::association::table::AssociationTable;
+use crate::association::tiles::Tiling;
+use crate::reid::records::ReidStream;
+
+/// The associate stage's artifact: the deduplicated constraint table.
+#[derive(Debug, Clone)]
+pub struct AssociateArtifact {
+    pub table: AssociationTable,
+}
+
+/// Build the association table over the given tiling.
+pub fn run(stream: &ReidStream, tiling: &Tiling) -> AssociateArtifact {
+    AssociateArtifact { table: AssociationTable::build(stream, tiling) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::offline::profile;
+    use crate::sim::Scenario;
+
+    #[test]
+    fn builds_constraints_from_the_profile_stream() {
+        let cfg = Config::test_small();
+        let sc = Scenario::build(&cfg.scenario);
+        let profiled = profile::run(&sc);
+        let tiling = Tiling::new(
+            cfg.scenario.n_cameras,
+            crate::sim::FRAME_W,
+            crate::sim::FRAME_H,
+            cfg.scenario.tile_px,
+        );
+        let art = run(&profiled.stream, &tiling);
+        assert!(art.table.n_constraints() > 0);
+        assert!(art.table.total_occurrences >= art.table.n_constraints());
+    }
+}

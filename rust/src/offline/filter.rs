@@ -1,0 +1,70 @@
+//! Stage ② — Filter: the tandem statistical filters (RANSAC regression +
+//! RBF-SVM) over the profiled ReID stream (§4.1.1 module ②; skipped by
+//! the No-Filters ablation).  The O(n²) per-pair model fitting runs on
+//! `threads` scoped workers — see [`crate::filters::TandemFilters`].
+
+use crate::config::SystemConfig;
+use crate::coordinator::method::Method;
+use crate::filters::ransac::RansacParams;
+use crate::filters::svm::SvmParams;
+use crate::filters::{FilterReport, TandemFilters};
+use crate::offline::profile::ProfileArtifact;
+use crate::reid::records::ReidStream;
+
+/// The filter stage's artifact: the cleaned stream plus the filter
+/// diagnostics (`None` when the method runs with filters off).
+#[derive(Debug, Clone)]
+pub struct FilterArtifact {
+    pub stream: ReidStream,
+    pub report: Option<FilterReport>,
+}
+
+/// Clean the profiled stream (or pass it through for No-Filters).
+pub fn run(
+    profiled: ProfileArtifact,
+    sys: &SystemConfig,
+    method: &Method,
+    threads: usize,
+) -> FilterArtifact {
+    if !method.uses_filters() {
+        return FilterArtifact { stream: profiled.stream, report: None };
+    }
+    let filters = TandemFilters {
+        ransac: RansacParams { theta: sys.ransac_theta, ..Default::default() },
+        svm: SvmParams { gamma: sys.svm_gamma, ..Default::default() },
+        ..Default::default()
+    };
+    let (stream, report) = filters.apply_with_threads(&profiled.stream, threads);
+    FilterArtifact { stream, report: Some(report) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::offline::profile;
+    use crate::sim::Scenario;
+
+    #[test]
+    fn no_filters_method_passes_the_stream_through() {
+        let cfg = Config::test_small();
+        let sc = Scenario::build(&cfg.scenario);
+        let profiled = profile::run(&sc);
+        let before = profiled.stream.len();
+        let art = run(profiled, &cfg.system, &Method::NoFilters, 2);
+        assert!(art.report.is_none());
+        assert_eq!(art.stream.len(), before);
+    }
+
+    #[test]
+    fn crossroi_method_filters_and_reports() {
+        let cfg = Config::test_small();
+        let sc = Scenario::build(&cfg.scenario);
+        let profiled = profile::run(&sc);
+        let before = profiled.stream.len();
+        let art = run(profiled, &cfg.system, &Method::CrossRoi, 2);
+        let report = art.report.expect("filters ran");
+        assert!(report.pairs_fit > 0, "no camera pair could be fit");
+        assert!(art.stream.len() <= before);
+    }
+}

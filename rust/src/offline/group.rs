@@ -1,0 +1,73 @@
+//! Stage ⑤-prep — Group: merge each camera's mask tiles into few large
+//! codec regions (§4.3.2, Fig. 5; per-tile regions for the No-Merging
+//! ablation) and derive the detector's active block lists.
+
+use crate::roi::masks::RoiMasks;
+use crate::tilegroup;
+use crate::util::geometry::IRect;
+
+/// Detector block size in pixels (2×2 tiles at the working resolution;
+/// must match the L2 geometry contract).
+pub const BLOCK_PX: u32 = 32;
+
+/// The group stage's artifact: codec regions and detector blocks per
+/// camera.
+#[derive(Debug, Clone)]
+pub struct GroupArtifact {
+    pub groups: Vec<Vec<IRect>>,
+    pub blocks: Vec<Vec<i32>>,
+}
+
+/// Group each camera's mask (or emit per-tile regions when `merging` is
+/// off) and compute its active detector blocks.
+pub fn run(masks: &RoiMasks, merging: bool) -> GroupArtifact {
+    let n_cams = masks.tiling.n_cameras;
+    let groups: Vec<Vec<IRect>> = if merging {
+        tilegroup::group_all(masks)
+    } else {
+        (0..n_cams).map(|c| masks.tile_rects(c)).collect()
+    };
+    let blocks: Vec<Vec<i32>> = (0..n_cams)
+        .map(|c| masks.active_blocks(c, BLOCK_PX, masks.tiling.frame_w))
+        .collect();
+    GroupArtifact { groups, blocks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::association::tiles::Tiling;
+    use std::collections::HashSet;
+
+    fn masks_from(tiles: &[(u32, u32)]) -> RoiMasks {
+        let tiling = Tiling::new(1, 320, 192, 16);
+        let mut set = HashSet::new();
+        set.extend(tiles.iter().copied());
+        RoiMasks { tiling, tiles: vec![set] }
+    }
+
+    #[test]
+    fn merging_produces_fewer_regions_than_tiles() {
+        // a 3×2 block of tiles merges into one region
+        let tiles: Vec<(u32, u32)> =
+            (0..3).flat_map(|x| (0..2).map(move |y| (x, y))).collect();
+        let m = masks_from(&tiles);
+        let merged = run(&m, true);
+        let unmerged = run(&m, false);
+        assert_eq!(merged.groups[0].len(), 1);
+        assert_eq!(unmerged.groups[0].len(), tiles.len());
+        // blocks are identical either way (they depend on the mask only)
+        assert_eq!(merged.blocks, unmerged.blocks);
+    }
+
+    #[test]
+    fn blocks_cover_every_mask_tile() {
+        let m = masks_from(&[(0, 0), (5, 3), (10, 6)]);
+        let art = run(&m, true);
+        let blocks_x = (320 / BLOCK_PX) as i32;
+        for &(tx, ty) in m.tiles[0].iter() {
+            let bid = (ty / 2) as i32 * blocks_x + (tx / 2) as i32;
+            assert!(art.blocks[0].contains(&bid), "tile ({tx},{ty}) missing block {bid}");
+        }
+    }
+}

@@ -1,0 +1,322 @@
+//! The staged offline planner (§4.1.1, modules ①–④ plus grouping):
+//! Profile → Filter → Associate → Solve → Group, each stage a typed
+//! function producing a named artifact, timed into a [`PlanReport`].
+//!
+//! This mirrors the online phase's stage decomposition
+//! ([`crate::pipeline`], DESIGN.md §4) on the offline side: the planner
+//! is the part of CrossRoI that must scale as fleets grow — the pairwise
+//! filter fitting is O(n²) in cameras — so the pair models are fitted on
+//! scoped worker threads ([`parallel::ordered_map`]) with a deterministic
+//! pair-order merge, and the RoI optimizer is pluggable behind
+//! [`crate::roi::setcover::Solver`] (greedy default, exact certifier,
+//! warm-started `resolve` for sliding profile windows).  Plans are
+//! byte-identical at every thread count
+//! (`rust/tests/offline_determinism.rs`).
+
+pub mod associate;
+pub mod filter;
+pub mod group;
+pub mod parallel;
+pub mod profile;
+pub mod solve;
+
+pub use solve::SolverKind;
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::association::tiles::Tiling;
+use crate::config::{ScenarioConfig, SystemConfig};
+use crate::coordinator::method::Method;
+use crate::filters::FilterReport;
+use crate::roi::masks::RoiMasks;
+use crate::sim::Scenario;
+use crate::util::geometry::IRect;
+
+/// Options steering one offline planning run.
+#[derive(Debug, Clone, Copy)]
+pub struct OfflineOptions {
+    /// Worker threads for the O(n²) camera-pair fitting
+    /// (CLI: `--offline-threads`); 0 = one per available core.
+    pub threads: usize,
+    /// Which set-cover solver optimizes the RoI masks (CLI: `--solver`).
+    pub solver: SolverKind,
+}
+
+impl Default for OfflineOptions {
+    fn default() -> Self {
+        OfflineOptions { threads: 0, solver: SolverKind::Greedy }
+    }
+}
+
+impl OfflineOptions {
+    /// Resolve `threads = 0` to the host's core count.
+    pub fn effective_threads(&self) -> usize {
+        match self.threads {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            n => n,
+        }
+    }
+}
+
+/// One stage's wall-clock share of a planning run.
+#[derive(Debug, Clone, Copy)]
+pub struct StageTiming {
+    pub stage: &'static str,
+    pub seconds: f64,
+}
+
+/// Per-stage breakdown of an offline planning run — supersedes the bare
+/// `seconds` field the pre-stage `OfflinePlan` carried.  Timings are the
+/// one wall-clock (non-deterministic) part of a plan; everything else is
+/// a pure function of the scenario seed.
+#[derive(Debug, Clone, Default)]
+pub struct PlanReport {
+    /// Stage timings in execution order.
+    pub stages: Vec<StageTiming>,
+    pub total_seconds: f64,
+    /// Worker threads the pair fitting used.
+    pub threads: usize,
+    /// Solver that produced the masks.
+    pub solver: &'static str,
+}
+
+impl PlanReport {
+    fn record(&mut self, stage: &'static str, since: Instant) {
+        self.stages.push(StageTiming { stage, seconds: since.elapsed().as_secs_f64() });
+    }
+
+    /// Seconds one named stage took (`None` if it did not run).
+    pub fn stage_seconds(&self, stage: &str) -> Option<f64> {
+        self.stages.iter().find(|s| s.stage == stage).map(|s| s.seconds)
+    }
+}
+
+/// Per-fleet plan handed to the online phase.
+#[derive(Debug, Clone)]
+pub struct OfflinePlan {
+    pub masks: RoiMasks,
+    /// Codec regions per camera (grouped rectangles, or per-tile rects for
+    /// No-Merging, or the full frame for Baseline).
+    pub groups: Vec<Vec<IRect>>,
+    /// Active detector blocks per camera (for the RoI HLO variant).
+    pub blocks: Vec<Vec<i32>>,
+    /// Filter diagnostics (None when filters were off).
+    pub filter_report: Option<FilterReport>,
+    /// Association table size (diagnostics).
+    pub n_constraints: usize,
+    /// Per-stage wall-clock breakdown of this plan.
+    pub report: PlanReport,
+}
+
+impl OfflinePlan {
+    /// Total wall-clock seconds the offline phase took.
+    pub fn seconds(&self) -> f64 {
+        self.report.total_seconds
+    }
+}
+
+/// Run the offline phase for a method with default options (auto thread
+/// count, greedy solver).
+///
+/// * Baseline / Reducto: full-frame masks, one full-frame region.
+/// * No-Filters: raw ReID straight into the optimizer (② off).
+/// * No-Merging: optimized masks but per-tile regions (tile grouping off).
+/// * No-RoIInf / CrossRoI / CrossRoI-Reducto: the full pipeline.
+pub fn build_plan(
+    scenario: &Scenario,
+    cfg: &ScenarioConfig,
+    sys: &SystemConfig,
+    method: &Method,
+) -> Result<OfflinePlan> {
+    build_plan_with(scenario, cfg, sys, method, &OfflineOptions::default())
+}
+
+/// [`build_plan`] with explicit [`OfflineOptions`].  Errors when the
+/// chosen solver cannot take the instance (`--solver exact` on a real
+/// profile window); the default greedy solver never fails.
+pub fn build_plan_with(
+    scenario: &Scenario,
+    cfg: &ScenarioConfig,
+    sys: &SystemConfig,
+    method: &Method,
+    opts: &OfflineOptions,
+) -> Result<OfflinePlan> {
+    let start = Instant::now();
+    let threads = opts.effective_threads();
+    let mut report =
+        PlanReport { threads, solver: opts.solver.name(), ..Default::default() };
+    let tiling = Tiling::new(
+        scenario.cameras.len(),
+        crate::sim::FRAME_W,
+        crate::sim::FRAME_H,
+        cfg.tile_px,
+    );
+
+    if !method.uses_roi_masks() {
+        // Baseline / Reducto stream full frames: only Group has work.
+        let t = Instant::now();
+        let masks = RoiMasks::full(&tiling);
+        let n_cams = scenario.cameras.len();
+        let full_rect = vec![IRect::new(0, 0, crate::sim::FRAME_W, crate::sim::FRAME_H)];
+        let blocks: Vec<Vec<i32>> = (0..n_cams)
+            .map(|c| masks.active_blocks(c, group::BLOCK_PX, crate::sim::FRAME_W))
+            .collect();
+        report.record("group", t);
+        report.total_seconds = start.elapsed().as_secs_f64();
+        return Ok(OfflinePlan {
+            groups: vec![full_rect; n_cams],
+            blocks,
+            masks,
+            filter_report: None,
+            n_constraints: 0,
+            report,
+        });
+    }
+
+    // ① Profile: offline ReID over the profile window
+    let t = Instant::now();
+    let profiled = profile::run(scenario);
+    report.record("profile", t);
+
+    // ② Filter: tandem statistical filters (skipped by No-Filters)
+    let t = Instant::now();
+    let filtered = filter::run(profiled, sys, method, threads);
+    report.record("filter", t);
+
+    // ③ Associate: region association lookup table
+    let t = Instant::now();
+    let assoc = associate::run(&filtered.stream, &tiling);
+    report.record("associate", t);
+
+    // ④ Solve: RoI mask optimization
+    let t = Instant::now();
+    opts.solver.validate(&assoc.table)?;
+    let solved = solve::run(&assoc.table, opts.solver.build().as_ref());
+    report.record("solve", t);
+
+    // ⑤-prep Group: tile grouping (per-tile regions for No-Merging)
+    let t = Instant::now();
+    let grouped = group::run(&solved.masks, method.uses_merging());
+    report.record("group", t);
+
+    report.total_seconds = start.elapsed().as_secs_f64();
+    Ok(OfflinePlan {
+        masks: solved.masks,
+        groups: grouped.groups,
+        blocks: grouped.blocks,
+        filter_report: filtered.report,
+        n_constraints: assoc.table.n_constraints(),
+        report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn setup() -> (Scenario, Config) {
+        let cfg = Config::test_small();
+        (Scenario::build(&cfg.scenario), cfg)
+    }
+
+    #[test]
+    fn baseline_plan_is_full_frame() {
+        let (sc, cfg) = setup();
+        let plan = build_plan(&sc, &cfg.scenario, &cfg.system, &Method::Baseline).unwrap();
+        assert_eq!(plan.groups[0], vec![IRect::new(0, 0, 320, 192)]);
+        assert_eq!(plan.blocks[0].len(), 60);
+        assert!((plan.masks.coverage(0) - 1.0).abs() < 1e-12);
+        assert!(plan.filter_report.is_none());
+        // only the group stage runs for full-frame methods
+        assert!(plan.report.stage_seconds("group").is_some());
+        assert!(plan.report.stage_seconds("solve").is_none());
+    }
+
+    #[test]
+    fn crossroi_plan_reduces_tiles() {
+        let (sc, cfg) = setup();
+        let plan = build_plan(&sc, &cfg.scenario, &cfg.system, &Method::CrossRoi).unwrap();
+        let total: usize = (0..5).map(|c| plan.masks.camera_size(c)).sum();
+        assert!(total > 0, "empty masks");
+        assert!(
+            total < 5 * 240,
+            "CrossRoI masks did not shrink below full frames: {total}"
+        );
+        assert!(plan.filter_report.is_some());
+        assert!(plan.n_constraints > 0);
+        // grouped regions are fewer than tiles
+        for cam in 0..5 {
+            assert!(plan.groups[cam].len() <= plan.masks.camera_size(cam));
+        }
+    }
+
+    #[test]
+    fn plan_report_times_every_stage() {
+        let (sc, cfg) = setup();
+        let plan = build_plan_with(
+            &sc,
+            &cfg.scenario,
+            &cfg.system,
+            &Method::CrossRoi,
+            &OfflineOptions { threads: 2, solver: SolverKind::Greedy },
+        )
+        .unwrap();
+        let stages: Vec<&str> = plan.report.stages.iter().map(|s| s.stage).collect();
+        assert_eq!(stages, vec!["profile", "filter", "associate", "solve", "group"]);
+        assert!(plan.report.stages.iter().all(|s| s.seconds >= 0.0));
+        // the total covers at least the sum of its stages
+        let sum: f64 = plan.report.stages.iter().map(|s| s.seconds).sum();
+        assert!(plan.report.total_seconds >= sum * 0.99, "{} < {sum}", plan.report.total_seconds);
+        assert_eq!(plan.report.threads, 2);
+        assert_eq!(plan.report.solver, "greedy");
+        assert!(plan.seconds() > 0.0);
+    }
+
+    #[test]
+    fn no_merging_uses_per_tile_regions() {
+        let (sc, cfg) = setup();
+        let merged = build_plan(&sc, &cfg.scenario, &cfg.system, &Method::CrossRoi).unwrap();
+        let unmerged =
+            build_plan(&sc, &cfg.scenario, &cfg.system, &Method::NoMerging).unwrap();
+        // identical masks (same seed/profile), different region granularity
+        assert_eq!(merged.masks.total_size(), unmerged.masks.total_size());
+        for cam in 0..5 {
+            assert_eq!(unmerged.groups[cam].len(), unmerged.masks.camera_size(cam));
+            assert!(merged.groups[cam].len() <= unmerged.groups[cam].len());
+        }
+    }
+
+    #[test]
+    fn no_filters_masks_are_larger() {
+        let (sc, cfg) = setup();
+        let with = build_plan(&sc, &cfg.scenario, &cfg.system, &Method::CrossRoi).unwrap();
+        let without =
+            build_plan(&sc, &cfg.scenario, &cfg.system, &Method::NoFilters).unwrap();
+        // false negatives force both copies of every broken pair into the
+        // masks: the unfiltered plan must be at least as large
+        assert!(
+            without.masks.total_size() >= with.masks.total_size(),
+            "no-filters {} < crossroi {}",
+            without.masks.total_size(),
+            with.masks.total_size()
+        );
+    }
+
+    #[test]
+    fn blocks_cover_mask_tiles() {
+        let (sc, cfg) = setup();
+        let plan = build_plan(&sc, &cfg.scenario, &cfg.system, &Method::CrossRoi).unwrap();
+        for cam in 0..5 {
+            for &(tx, ty) in plan.masks.tiles[cam].iter() {
+                let bid = ((ty / 2) * 10 + tx / 2) as i32;
+                assert!(
+                    plan.blocks[cam].contains(&bid),
+                    "cam {cam} tile ({tx},{ty}) not covered by block {bid}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,6 @@
+//! The offline planner's deterministic fan-out — a re-export of
+//! [`crate::util::parallel`] (the helper is fully generic; the filters
+//! layer uses it too, so it lives in `util` to keep the planner a pure
+//! consumer of the layers below it).
+
+pub use crate::util::parallel::ordered_map;

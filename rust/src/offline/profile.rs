@@ -1,0 +1,36 @@
+//! Stage ① — Profile: run the (error-prone) offline ReID over the
+//! scenario's profile window (§4.1.1 module ①).
+
+use crate::reid::error_model::{ErrorModelParams, RawReid};
+use crate::reid::records::ReidStream;
+use crate::sim::Scenario;
+
+/// The profile stage's artifact: the raw ReID stream of the profile
+/// window, indexed for the filter and association stages.
+#[derive(Debug, Clone)]
+pub struct ProfileArtifact {
+    pub stream: ReidStream,
+}
+
+/// Generate the raw ReID stream for the profile window.
+pub fn run(scenario: &Scenario) -> ProfileArtifact {
+    let stream =
+        RawReid::generate(scenario, scenario.profile_range(), &ErrorModelParams::default());
+    ProfileArtifact { stream }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    #[test]
+    fn profiles_the_profile_window_only() {
+        let cfg = Config::test_small();
+        let sc = Scenario::build(&cfg.scenario);
+        let art = run(&sc);
+        assert_eq!(art.stream.n_cameras, cfg.scenario.n_cameras);
+        assert_eq!(art.stream.n_frames, sc.profile_range().len());
+        assert!(!art.stream.is_empty(), "profile window produced no ReID records");
+    }
+}

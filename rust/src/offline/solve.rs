@@ -1,0 +1,158 @@
+//! Stage ④ — Solve: optimize the RoI masks over the association table
+//! (§4.1.1 module ④, Eq. 1–2) with a pluggable [`Solver`].
+
+use anyhow::{bail, Result};
+
+use crate::association::table::AssociationTable;
+use crate::roi::masks::RoiMasks;
+use crate::roi::setcover::{ExactSolver, GreedySolver, Solution, Solver};
+
+/// Which set-cover implementation optimizes the RoI masks
+/// (CLI: `--solver greedy|exact`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SolverKind {
+    /// Incremental greedy density heuristic + prune (the default; scales
+    /// to full profile-window instances).
+    #[default]
+    Greedy,
+    /// Branch-and-bound certifier — exponential, refuses instances above
+    /// its constraint cap; only meaningful on small/toy scenarios.
+    Exact,
+}
+
+impl SolverKind {
+    pub fn parse(name: &str) -> Result<SolverKind> {
+        Ok(match name {
+            "greedy" => SolverKind::Greedy,
+            "exact" => SolverKind::Exact,
+            other => bail!("unknown solver {other:?} (expected greedy|exact)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverKind::Greedy => "greedy",
+            SolverKind::Exact => "exact",
+        }
+    }
+
+    /// Instantiate the solver behind this kind.
+    pub fn build(&self) -> Box<dyn Solver> {
+        match self {
+            SolverKind::Greedy => Box::new(GreedySolver::default()),
+            SolverKind::Exact => Box::new(ExactSolver::default()),
+        }
+    }
+
+    /// Reject instances the chosen solver cannot take — the exact
+    /// certifier is exponential and capped, and must fail cleanly (not
+    /// panic) when `--solver exact` meets a real profile window.
+    pub fn validate(&self, table: &AssociationTable) -> Result<()> {
+        if let SolverKind::Exact = self {
+            let cap = ExactSolver::default().max_constraints;
+            if table.n_constraints() > cap {
+                bail!(
+                    "the exact solver is a certifier for small instances \
+                     (<= {cap} constraints); this profile window produced {} — \
+                     use --solver greedy",
+                    table.n_constraints()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The solve stage's artifact: the global tile solution and its
+/// per-camera mask split.
+#[derive(Debug, Clone)]
+pub struct SolveArtifact {
+    pub solution: Solution,
+    pub masks: RoiMasks,
+}
+
+/// Solve from scratch.
+pub fn run(table: &AssociationTable, solver: &dyn Solver) -> SolveArtifact {
+    finish(table, solver.solve(table))
+}
+
+/// Warm-start from a previous window's solution ([`Solver::resolve`]) —
+/// the entry point for sliding-window re-profiling.
+pub fn run_incremental(
+    table: &AssociationTable,
+    solver: &dyn Solver,
+    prev: &Solution,
+) -> SolveArtifact {
+    finish(table, solver.resolve(prev, table))
+}
+
+fn finish(table: &AssociationTable, solution: Solution) -> SolveArtifact {
+    let masks = RoiMasks::from_solution(&table.tiling, &solution.tiles);
+    SolveArtifact { solution, masks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::association::table::Constraint;
+    use crate::association::tiles::Tiling;
+
+    fn toy_table() -> AssociationTable {
+        AssociationTable {
+            tiling: Tiling::new(1, 320, 192, 16),
+            constraints: vec![
+                Constraint { regions: vec![vec![1, 2], vec![10, 11, 12]] },
+                Constraint { regions: vec![vec![1, 2]] },
+            ],
+            multiplicity: vec![1, 1],
+            total_occurrences: 2,
+        }
+    }
+
+    #[test]
+    fn validate_rejects_large_instances_for_exact_only() {
+        let small = toy_table();
+        assert!(SolverKind::Greedy.validate(&small).is_ok());
+        assert!(SolverKind::Exact.validate(&small).is_ok());
+        let big = AssociationTable {
+            tiling: Tiling::new(1, 320, 192, 16),
+            constraints: (0..30)
+                .map(|i| Constraint { regions: vec![vec![i]] })
+                .collect(),
+            multiplicity: vec![1; 30],
+            total_occurrences: 30,
+        };
+        assert!(SolverKind::Greedy.validate(&big).is_ok());
+        let err = SolverKind::Exact.validate(&big).unwrap_err();
+        assert!(err.to_string().contains("--solver greedy"), "{err}");
+    }
+
+    #[test]
+    fn kind_parses_and_names() {
+        assert_eq!(SolverKind::parse("greedy").unwrap(), SolverKind::Greedy);
+        assert_eq!(SolverKind::parse("exact").unwrap(), SolverKind::Exact);
+        assert!(SolverKind::parse("simplex").is_err());
+        assert_eq!(SolverKind::Greedy.name(), "greedy");
+        assert_eq!(SolverKind::Exact.build().name(), "exact");
+        assert_eq!(SolverKind::default(), SolverKind::Greedy);
+    }
+
+    #[test]
+    fn greedy_and_exact_agree_on_the_toy_table() {
+        let table = toy_table();
+        let g = run(&table, SolverKind::Greedy.build().as_ref());
+        let e = run(&table, SolverKind::Exact.build().as_ref());
+        assert_eq!(g.solution.size(), 2);
+        assert_eq!(e.solution.size(), 2, "greedy not certified by exact");
+        assert_eq!(g.masks.total_size(), 2);
+    }
+
+    #[test]
+    fn incremental_solve_reuses_the_previous_mask() {
+        let table = toy_table();
+        let solver = SolverKind::Greedy.build();
+        let first = run(&table, solver.as_ref());
+        let second = run_incremental(&table, solver.as_ref(), &first.solution);
+        assert_eq!(first.solution.tiles, second.solution.tiles);
+    }
+}

@@ -34,7 +34,9 @@ pub enum Parallelism {
     Workers(usize),
 }
 
-/// Options steering one pipeline run.
+/// Options steering one end-to-end run: the online schedule/cost model
+/// plus the offline planner's options (the coordinator builds the plan
+/// before wiring the pipeline, so they travel together).
 ///
 /// Note on methodology: with `EncodeCost::Measured` under a parallel
 /// schedule, per-camera encode times are measured while up to `n_cams`
@@ -47,6 +49,8 @@ pub enum Parallelism {
 pub struct PipelineOptions {
     pub parallelism: Parallelism,
     pub encode_cost: crate::pipeline::encode::EncodeCost,
+    /// Offline planner options (`--offline-threads`, `--solver`).
+    pub offline: crate::offline::OfflineOptions,
 }
 
 impl Default for PipelineOptions {
@@ -64,6 +68,7 @@ impl Default for PipelineOptions {
         PipelineOptions {
             parallelism,
             encode_cost: crate::pipeline::encode::EncodeCost::Measured,
+            offline: crate::offline::OfflineOptions::default(),
         }
     }
 }

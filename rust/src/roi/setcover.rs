@@ -1,18 +1,35 @@
-//! The group-cover solver behind RoI mask generation.
+//! The group-cover solvers behind RoI mask generation.
 //!
 //! Problem (Eq. 1–2): pick a tile set `M` minimizing `|M|` such that every
 //! constraint has ≥ 1 region with all tiles in `M`.  (Each region is an
 //! AND over its tiles; regions of one constraint are OR-ed — a "minimum
 //! union of closed sets" / group Steiner-flavoured cover, NP-hard.)
 //!
-//! * [`solve`] — greedy density heuristic (best satisfied-per-new-tile
-//!   ratio) followed by redundant-tile pruning; scales to the full
-//!   profile-window instance.
-//! * [`solve_exact`] — branch-and-bound over constraint/region choices
-//!   with a union lower bound; exponential, used on small instances and in
-//!   tests to certify the greedy's quality.
+//! The optimizer is pluggable behind the [`Solver`] trait:
+//!
+//! * [`GreedySolver`] (and the [`solve`] convenience wrapper) — greedy
+//!   density heuristic (best satisfied-per-new-tile ratio) followed by
+//!   redundant-tile pruning.  The implementation keeps incremental state —
+//!   a bitset mask over dense tile ids, per-region missing-tile counters
+//!   maintained as tiles are added, and an inverted tile→region index with
+//!   epoch-stamped hit counters for gain evaluation — so each round costs
+//!   O(open-region tiles × index fan-out) instead of rescanning every
+//!   open constraint × region × tile.  Selection order, scores and
+//!   tie-breaking of the greedy phase are identical to the reference
+//!   greedy; the prune pass deliberately changed order (rarest tiles
+//!   first instead of ascending tile id), so where several tiles are
+//!   interchangeably redundant the pruned cover may pick a different —
+//!   equally valid, 1-minimal — tile set than pre-refactor builds.
+//! * [`ExactSolver`] / [`solve_exact`] — branch-and-bound over
+//!   constraint/region choices with a union lower bound; exponential, used
+//!   on small instances and in tests to certify the greedy's quality.
+//!
+//! [`Solver::resolve`] warm-starts from a previous solution — the hook for
+//! sliding profile windows (continuous re-profiling): still-useful tiles
+//! are reused, newly-open constraints are covered greedily, and the prune
+//! pass drops whatever the new window no longer needs.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 
 use crate::association::table::AssociationTable;
 use crate::association::tiles::GlobalTile;
@@ -44,6 +61,21 @@ impl Solution {
     }
 }
 
+/// A pluggable RoI set-cover optimizer.
+pub trait Solver: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Solve from scratch.
+    fn solve(&self, table: &AssociationTable) -> Solution;
+
+    /// Warm-start from `prev` (e.g. the previous profile window's mask):
+    /// tiles still referenced by `table` seed the cover, only newly-open
+    /// constraints pay for greedy rounds, and pruning drops tiles the new
+    /// window no longer needs.  Must return a valid cover of `table`;
+    /// solvers with nothing to reuse may ignore `prev`.
+    fn resolve(&self, prev: &Solution, table: &AssociationTable) -> Solution;
+}
+
 fn region_satisfied(region: &[GlobalTile], m: &HashSet<GlobalTile>) -> bool {
     region.iter().all(|t| m.contains(t))
 }
@@ -52,90 +84,366 @@ fn constraint_satisfied(regions: &[Vec<GlobalTile>], m: &HashSet<GlobalTile>) ->
     regions.iter().any(|r| region_satisfied(r, m))
 }
 
-/// Greedy + prune solver.
-pub fn solve(table: &AssociationTable, params: &SolverParams) -> Solution {
-    let n = table.constraints.len();
-    let mut m: HashSet<GlobalTile> = HashSet::new();
-    let mut satisfied = vec![false; n];
-    let mut unsatisfiable = 0usize;
-    for (i, c) in table.constraints.iter().enumerate() {
-        if c.regions.is_empty() {
-            satisfied[i] = true;
-            unsatisfiable += 1;
-        }
-    }
-
-    loop {
-        // refresh satisfaction (a region may have become covered as a side
-        // effect of tiles added for other constraints)
-        for (i, c) in table.constraints.iter().enumerate() {
-            if !satisfied[i] && constraint_satisfied(&c.regions, &m) {
-                satisfied[i] = true;
-            }
-        }
-        let open: Vec<usize> = (0..n).filter(|&i| !satisfied[i]).collect();
-        if open.is_empty() {
-            break;
-        }
-        // candidate regions of open constraints, scored by
-        //   (# open constraints fully satisfied by adding it) / (# new tiles)
-        let mut best: Option<(f64, &Vec<GlobalTile>)> = None;
-        for &ci in &open {
-            for region in &table.constraints[ci].regions {
-                let new_tiles = region.iter().filter(|t| !m.contains(t)).count();
-                if new_tiles == 0 {
-                    continue; // would already have satisfied it
-                }
-                // count how many open constraints this region closes
-                let mut would: HashSet<GlobalTile> = HashSet::new();
-                would.extend(region.iter().copied());
-                let mut gain = 0usize;
-                for &cj in &open {
-                    let c = &table.constraints[cj];
-                    if c.regions.iter().any(|r| {
-                        r.iter().all(|t| m.contains(t) || would.contains(t))
-                    }) {
-                        gain += table.multiplicity[cj].max(1);
-                    }
-                }
-                let score = gain as f64 / new_tiles as f64;
-                if best.as_ref().map_or(true, |(s, _)| score > *s) {
-                    best = Some((score, region));
-                }
-            }
-        }
-        match best {
-            Some((_, region)) => {
-                m.extend(region.iter().copied());
-            }
-            None => {
-                // every open constraint has only empty/covered regions —
-                // cannot happen with non-empty regions, guard anyway
-                unsatisfiable += open.len();
-                break;
-            }
-        }
-    }
-
-    if params.prune {
-        prune(table, &mut m);
-    }
-    Solution { tiles: m, unsatisfiable }
+/// Greedy + prune solver (see module docs); the default optimizer.
+#[derive(Debug, Clone, Default)]
+pub struct GreedySolver {
+    pub params: SolverParams,
 }
 
-/// Remove tiles whose removal keeps every constraint satisfied.
-fn prune(table: &AssociationTable, m: &mut HashSet<GlobalTile>) {
-    let mut tiles: Vec<GlobalTile> = m.iter().copied().collect();
-    tiles.sort_unstable();
-    // try removing rare tiles first (they are likelier to be redundant)
-    for t in tiles {
-        m.remove(&t);
-        let ok = table
-            .constraints
+impl Solver for GreedySolver {
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+
+    fn solve(&self, table: &AssociationTable) -> Solution {
+        greedy_cover(table, &HashSet::new(), self.params.prune)
+    }
+
+    fn resolve(&self, prev: &Solution, table: &AssociationTable) -> Solution {
+        greedy_cover(table, &prev.tiles, self.params.prune)
+    }
+}
+
+/// Exact branch-and-bound solver (small instances only; the certifier).
+#[derive(Debug, Clone)]
+pub struct ExactSolver {
+    /// Refuses (panics on) larger tables — branch-and-bound is exponential.
+    pub max_constraints: usize,
+}
+
+impl Default for ExactSolver {
+    fn default() -> Self {
+        ExactSolver { max_constraints: 24 }
+    }
+}
+
+impl Solver for ExactSolver {
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+
+    fn solve(&self, table: &AssociationTable) -> Solution {
+        solve_exact(table, self.max_constraints)
+    }
+
+    /// Exact solutions cannot reuse a warm start (the optimum is the
+    /// optimum); `prev` is ignored.
+    fn resolve(&self, _prev: &Solution, table: &AssociationTable) -> Solution {
+        self.solve(table)
+    }
+}
+
+/// Greedy + prune with default-parameter [`GreedySolver`] semantics.
+pub fn solve(table: &AssociationTable, params: &SolverParams) -> Solution {
+    GreedySolver { params: params.clone() }.solve(table)
+}
+
+// ---- incremental greedy machinery ----
+
+/// Fixed-capacity bitset over dense tile ids.
+struct BitSet {
+    words: Vec<u64>,
+}
+
+impl BitSet {
+    fn new(n: usize) -> BitSet {
+        BitSet { words: vec![0u64; n.div_ceil(64)] }
+    }
+
+    fn contains(&self, i: u32) -> bool {
+        (self.words[i as usize / 64] >> (i % 64)) & 1 == 1
+    }
+
+    fn insert(&mut self, i: u32) {
+        self.words[i as usize / 64] |= 1u64 << (i % 64);
+    }
+}
+
+/// The association table re-indexed for incremental solving: candidate
+/// tiles get dense ids, regions are flat (deduped, dense) tile lists, and
+/// an inverted tile→regions index drives gain evaluation and the
+/// missing-count updates.
+struct DenseTable<'a> {
+    table: &'a AssociationTable,
+    /// Sorted candidate tiles; position = dense id.
+    tiles: Vec<GlobalTile>,
+    /// Flat region list: deduped dense tile ids per region.
+    region_tiles: Vec<Vec<u32>>,
+    /// Owning constraint of each flat region.
+    region_constraint: Vec<u32>,
+    /// Flat region ids of each constraint, in original region order.
+    constraint_regions: Vec<Vec<u32>>,
+    /// Inverted index: flat regions containing each dense tile.
+    tile_regions: Vec<Vec<u32>>,
+}
+
+/// Mutable cover state: the mask plus the incrementally-maintained gain
+/// caches (per-region missing counts, per-constraint satisfaction).
+struct CoverState {
+    mask: BitSet,
+    missing: Vec<u32>,
+    satisfied: Vec<bool>,
+    unsatisfiable: usize,
+}
+
+impl<'a> DenseTable<'a> {
+    fn build(table: &'a AssociationTable) -> DenseTable<'a> {
+        let tiles = table.candidate_tiles();
+        let id_of: HashMap<GlobalTile, u32> =
+            tiles.iter().enumerate().map(|(i, &t)| (t, i as u32)).collect();
+        let mut region_tiles = Vec::new();
+        let mut region_constraint = Vec::new();
+        let mut constraint_regions = Vec::with_capacity(table.constraints.len());
+        for (ci, c) in table.constraints.iter().enumerate() {
+            let mut rids = Vec::with_capacity(c.regions.len());
+            for region in &c.regions {
+                let mut dense: Vec<u32> = region.iter().map(|t| id_of[t]).collect();
+                dense.sort_unstable();
+                dense.dedup();
+                rids.push(region_tiles.len() as u32);
+                region_constraint.push(ci as u32);
+                region_tiles.push(dense);
+            }
+            constraint_regions.push(rids);
+        }
+        let mut tile_regions: Vec<Vec<u32>> = vec![Vec::new(); tiles.len()];
+        for (q, rt) in region_tiles.iter().enumerate() {
+            for &t in rt {
+                tile_regions[t as usize].push(q as u32);
+            }
+        }
+        DenseTable { table, tiles, region_tiles, region_constraint, constraint_regions, tile_regions }
+    }
+
+    fn initial_state(&self) -> CoverState {
+        let mut satisfied = vec![false; self.constraint_regions.len()];
+        let mut unsatisfiable = 0usize;
+        for (ci, c) in self.table.constraints.iter().enumerate() {
+            if c.regions.is_empty() {
+                satisfied[ci] = true;
+                unsatisfiable += 1;
+            }
+        }
+        let missing: Vec<u32> = self.region_tiles.iter().map(|r| r.len() as u32).collect();
+        // a region with no tiles satisfies its constraint for free
+        for (q, r) in self.region_tiles.iter().enumerate() {
+            if r.is_empty() {
+                satisfied[self.region_constraint[q] as usize] = true;
+            }
+        }
+        CoverState {
+            mask: BitSet::new(self.tiles.len()),
+            missing,
+            satisfied,
+            unsatisfiable,
+        }
+    }
+
+    /// Add a tile to the mask, decrementing the missing counters of every
+    /// region containing it; regions reaching zero satisfy their
+    /// constraint (the incremental form of the reference greedy's
+    /// satisfaction-refresh rescan).
+    fn add_tile(&self, st: &mut CoverState, t: u32) {
+        if st.mask.contains(t) {
+            return;
+        }
+        st.mask.insert(t);
+        for &q in &self.tile_regions[t as usize] {
+            let qi = q as usize;
+            st.missing[qi] -= 1;
+            if st.missing[qi] == 0 {
+                st.satisfied[self.region_constraint[qi] as usize] = true;
+            }
+        }
+    }
+
+    /// Score of candidate region `r`:
+    ///   (Σ multiplicity of open constraints it would close) / (new tiles).
+    /// A constraint closes iff one of its regions has all missing tiles
+    /// inside `r`'s missing tiles — counted by walking the inverted index
+    /// of exactly those tiles with epoch-stamped hit counters (no
+    /// clearing between candidates).
+    #[allow(clippy::too_many_arguments)]
+    fn score(
+        &self,
+        st: &CoverState,
+        r: u32,
+        epoch: u64,
+        hit: &mut [u32],
+        hit_epoch: &mut [u64],
+        closed_epoch: &mut [u64],
+    ) -> f64 {
+        let mut gain = 0usize;
+        let mut new_tiles = 0usize;
+        for &t in &self.region_tiles[r as usize] {
+            if st.mask.contains(t) {
+                continue;
+            }
+            new_tiles += 1;
+            for &q in &self.tile_regions[t as usize] {
+                let qi = q as usize;
+                let ci = self.region_constraint[qi] as usize;
+                if st.satisfied[ci] {
+                    continue;
+                }
+                if hit_epoch[qi] != epoch {
+                    hit_epoch[qi] = epoch;
+                    hit[qi] = 0;
+                }
+                hit[qi] += 1;
+                if hit[qi] == st.missing[qi] && closed_epoch[ci] != epoch {
+                    closed_epoch[ci] = epoch;
+                    gain += self.table.multiplicity[ci].max(1);
+                }
+            }
+        }
+        debug_assert!(new_tiles > 0, "candidate region of an open constraint has no new tiles");
+        gain as f64 / new_tiles as f64
+    }
+}
+
+/// Greedy density cover from a (possibly empty) seed tile set, with
+/// optional pruning.  Scores, iteration order and tie-breaking replicate
+/// the reference greedy exactly, so the cover is unchanged — only the
+/// bookkeeping is incremental.
+fn greedy_cover(table: &AssociationTable, seed: &HashSet<GlobalTile>, prune_after: bool) -> Solution {
+    let dense = DenseTable::build(table);
+    let mut st = dense.initial_state();
+
+    // warm start: reuse seed tiles still referenced by this table (tiles
+    // no constraint mentions serve nothing and are dropped here — pruning
+    // would remove them anyway)
+    let mut seed_dense: Vec<u32> = Vec::new();
+    for (i, t) in dense.tiles.iter().enumerate() {
+        if seed.contains(t) {
+            seed_dense.push(i as u32);
+        }
+    }
+    for t in seed_dense {
+        dense.add_tile(&mut st, t);
+    }
+
+    let n_regions = dense.region_tiles.len();
+    let mut hit = vec![0u32; n_regions];
+    let mut hit_epoch = vec![0u64; n_regions];
+    let mut closed_epoch = vec![0u64; dense.constraint_regions.len()];
+    let mut epoch = 0u64;
+
+    loop {
+        // candidate regions of open constraints, scored by
+        //   (# open constraints fully satisfied by adding it) / (# new tiles)
+        let mut best: Option<(f64, u32)> = None;
+        for (ci, rids) in dense.constraint_regions.iter().enumerate() {
+            if st.satisfied[ci] {
+                continue;
+            }
+            for &r in rids {
+                epoch += 1;
+                let score = dense.score(&st, r, epoch, &mut hit, &mut hit_epoch, &mut closed_epoch);
+                if best.map_or(true, |(s, _)| score > s) {
+                    best = Some((score, r));
+                }
+            }
+        }
+        // every constraint satisfied (open constraints always offer a
+        // region with missing tiles, so `best` is None only when done)
+        let Some((_, r)) = best else {
+            break;
+        };
+        let adds: Vec<u32> = dense.region_tiles[r as usize]
             .iter()
-            .all(|c| c.regions.is_empty() || constraint_satisfied(&c.regions, m));
+            .copied()
+            .filter(|&t| !st.mask.contains(t))
+            .collect();
+        for t in adds {
+            dense.add_tile(&mut st, t);
+        }
+    }
+
+    let mut m: HashSet<GlobalTile> = dense
+        .tiles
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| st.mask.contains(i as u32))
+        .map(|(_, &t)| t)
+        .collect();
+    if prune_after {
+        prune(table, &mut m);
+    }
+    Solution { tiles: m, unsatisfiable: st.unsatisfiable }
+}
+
+/// Constraints referencing each tile of `m` (each constraint counted
+/// once per tile) — drives both the prune order and the per-tile
+/// recheck set.
+fn referencing_constraints(
+    table: &AssociationTable,
+    m: &HashSet<GlobalTile>,
+) -> HashMap<GlobalTile, Vec<usize>> {
+    let mut referencing: HashMap<GlobalTile, Vec<usize>> = HashMap::new();
+    for (ci, c) in table.constraints.iter().enumerate() {
+        let mut seen: HashSet<GlobalTile> = HashSet::new();
+        for region in &c.regions {
+            for &t in region {
+                if m.contains(&t) && seen.insert(t) {
+                    referencing.entry(t).or_default().push(ci);
+                }
+            }
+        }
+    }
+    referencing
+}
+
+/// Tiles of `m` ordered for pruning: ascending count of constraints that
+/// reference them (rare tiles are likelier redundant), ties by tile id.
+fn occurrence_order_from(
+    referencing: &HashMap<GlobalTile, Vec<usize>>,
+    m: &HashSet<GlobalTile>,
+) -> Vec<GlobalTile> {
+    let mut tiles: Vec<GlobalTile> = m.iter().copied().collect();
+    tiles.sort_unstable_by_key(|t| (referencing.get(t).map_or(0, |v| v.len()), *t));
+    tiles
+}
+
+/// [`occurrence_order_from`] building its own referencing index
+/// (the ordering test's hook).
+#[cfg(test)]
+fn occurrence_order(table: &AssociationTable, m: &HashSet<GlobalTile>) -> Vec<GlobalTile> {
+    occurrence_order_from(&referencing_constraints(table, m), m)
+}
+
+/// Remove tiles whose removal keeps every constraint satisfied, rare
+/// (fewest-referencing-constraints) tiles first.  The referencing index
+/// is built once and drives both the order and the per-tile rechecks.
+fn prune(table: &AssociationTable, m: &mut HashSet<GlobalTile>) {
+    let referencing = referencing_constraints(table, m);
+    let order = occurrence_order_from(&referencing, m);
+    prune_with(table, m, &order, &referencing);
+}
+
+/// The prune pass over an explicit removal order (order-robustness test
+/// hook; builds the referencing index itself).
+#[cfg(test)]
+fn prune_ordered(table: &AssociationTable, m: &mut HashSet<GlobalTile>, order: &[GlobalTile]) {
+    let referencing = referencing_constraints(table, m);
+    prune_with(table, m, order, &referencing);
+}
+
+/// Try removing tiles in `order`.  Only constraints referencing the
+/// candidate tile can break, so only they are rechecked.
+fn prune_with(
+    table: &AssociationTable,
+    m: &mut HashSet<GlobalTile>,
+    order: &[GlobalTile],
+    referencing: &HashMap<GlobalTile, Vec<usize>>,
+) {
+    for t in order {
+        m.remove(t);
+        let ok = referencing.get(t).map_or(true, |cs| {
+            cs.iter().all(|&ci| constraint_satisfied(&table.constraints[ci].regions, m))
+        });
         if !ok {
-            m.insert(t);
+            m.insert(*t);
         }
     }
 }
@@ -236,6 +544,20 @@ mod tests {
         }
     }
 
+    /// No single tile of the solution can be removed without breaking a
+    /// constraint — the invariant any prune order must establish.
+    fn check_one_minimal(table: &AssociationTable, sol: &Solution) {
+        for &t in &sol.tiles {
+            let mut m = sol.tiles.clone();
+            m.remove(&t);
+            let still_ok = table
+                .constraints
+                .iter()
+                .all(|c| c.regions.is_empty() || constraint_satisfied(&c.regions, &m));
+            assert!(!still_ok, "tile {t} is redundant after pruning: {:?}", sol.tiles);
+        }
+    }
+
     #[test]
     fn picks_shared_region_over_two_singles() {
         // the paper's O_1 example: object visible in both cameras — only
@@ -286,6 +608,22 @@ mod tests {
     }
 
     #[test]
+    fn solver_trait_objects_agree_with_free_functions() {
+        let t = table_from(vec![
+            vec![vec![1, 2, 3], vec![7, 8]],
+            vec![vec![2, 3], vec![9]],
+            vec![vec![7, 8], vec![1]],
+        ]);
+        let greedy: Box<dyn Solver> = Box::new(GreedySolver::default());
+        let exact: Box<dyn Solver> = Box::new(ExactSolver::default());
+        assert_eq!(greedy.name(), "greedy");
+        assert_eq!(exact.name(), "exact");
+        let g = greedy.solve(&t);
+        assert_eq!(g.tiles, solve(&t, &SolverParams::default()).tiles);
+        assert_eq!(exact.solve(&t).size(), solve_exact(&t, 16).size());
+    }
+
+    #[test]
     fn pruning_removes_redundant_tiles() {
         // constraint B ⊂ A tiles: greedy may add extra; prune must trim to
         // a minimal solution
@@ -293,6 +631,44 @@ mod tests {
         let sol = solve(&t, &SolverParams::default());
         check_valid(&t, &sol);
         assert_eq!(sol.size(), 4);
+    }
+
+    #[test]
+    fn prune_orders_by_ascending_constraint_occurrence() {
+        // t2 and t3 are each referenced by two constraints, t1 and t9 by
+        // one; the removal order must try the rare tiles first, ties by id
+        let t = table_from(vec![
+            vec![vec![1, 2, 3]],
+            vec![vec![2, 3], vec![9]],
+        ]);
+        let m: HashSet<GlobalTile> = [1, 2, 3, 9].into_iter().collect();
+        assert_eq!(occurrence_order(&t, &m), vec![1, 9, 2, 3]);
+    }
+
+    #[test]
+    fn pruning_is_order_robust() {
+        // whatever order the prune pass walks, the result must stay a
+        // valid cover and be 1-minimal (no removable tile left behind)
+        let cases = vec![
+            vec![vec![vec![1, 2, 3, 4]], vec![vec![2, 3]]],
+            vec![vec![vec![1], vec![2, 3]], vec![vec![2], vec![9]], vec![vec![3]]],
+            vec![vec![vec![5, 6]], vec![vec![6, 7]], vec![vec![5, 7], vec![8, 9, 10]]],
+        ];
+        for regions in cases {
+            let t = table_from(regions);
+            let unpruned = solve(&t, &SolverParams { prune: false });
+            for reversed in [false, true] {
+                let mut m = unpruned.tiles.clone();
+                let mut order = occurrence_order(&t, &m);
+                if reversed {
+                    order.reverse();
+                }
+                prune_ordered(&t, &mut m, &order);
+                let sol = Solution { tiles: m, unsatisfiable: 0 };
+                check_valid(&t, &sol);
+                check_one_minimal(&t, &sol);
+            }
+        }
     }
 
     #[test]
@@ -337,5 +713,54 @@ mod tests {
         let e = solve_exact(&t, 8);
         check_valid(&t, &e);
         assert_eq!(e.size(), 2);
+    }
+
+    #[test]
+    fn resolve_with_unchanged_table_is_stable() {
+        let t = table_from(vec![
+            vec![vec![1, 2, 3], vec![7, 8]],
+            vec![vec![2, 3], vec![9]],
+            vec![vec![7, 8], vec![1]],
+        ]);
+        let solver = GreedySolver::default();
+        let a = solver.solve(&t);
+        let b = solver.resolve(&a, &t);
+        assert_eq!(a.tiles, b.tiles, "warm restart on the same window must be a fixpoint");
+    }
+
+    #[test]
+    fn resolve_covers_a_shifted_window() {
+        // window A: two constraints; window B drops one, keeps one, adds
+        // two new ones (one reusing A's tiles, one over fresh tiles)
+        let a = table_from(vec![vec![vec![1, 2]], vec![vec![40, 41]]]);
+        let b = table_from(vec![
+            vec![vec![1, 2]],
+            vec![vec![1, 2], vec![30]],
+            vec![vec![50, 51]],
+        ]);
+        let solver = GreedySolver::default();
+        let prev = solver.solve(&a);
+        assert_eq!(prev.size(), 4);
+        let next = solver.resolve(&prev, &b);
+        check_valid(&b, &next);
+        check_one_minimal(&b, &next);
+        // stale tiles (40, 41 serve no constraint of B) must be gone
+        assert!(!next.tiles.contains(&40) && !next.tiles.contains(&41), "{:?}", next.tiles);
+        // reused tiles keep the shared constraints covered without adding
+        // the {30} alternative
+        assert!(next.tiles.contains(&1) && next.tiles.contains(&2));
+        assert!(!next.tiles.contains(&30), "{:?}", next.tiles);
+        assert_eq!(next.size(), 4, "{:?}", next.tiles);
+    }
+
+    #[test]
+    fn resolve_matches_fresh_solve_when_prev_is_empty() {
+        let t = table_from(vec![
+            vec![vec![1], vec![2]],
+            vec![vec![2], vec![3]],
+        ]);
+        let solver = GreedySolver::default();
+        let empty = Solution { tiles: HashSet::new(), unsatisfiable: 0 };
+        assert_eq!(solver.resolve(&empty, &t).tiles, solver.solve(&t).tiles);
     }
 }

@@ -5,5 +5,6 @@
 pub mod geometry;
 pub mod json;
 pub mod matrix;
+pub mod parallel;
 pub mod rng;
 pub mod stats;

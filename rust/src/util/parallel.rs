@@ -1,0 +1,77 @@
+//! Deterministic fan-out: map a slice over scoped worker threads and
+//! return results **in input order**, so every merge downstream is
+//! byte-identical to the sequential execution regardless of thread count
+//! or scheduling (the same re-canonicalization rule as the online
+//! pipeline, DESIGN.md §4; used by the offline planner's pair fitting,
+//! DESIGN.md §5).
+
+/// Map `f` over `items` on up to `threads` scoped worker threads.
+///
+/// Items are strided over the workers (worker `w` takes items `w`,
+/// `w + threads`, …); each worker returns `(index, result)` pairs and the
+/// caller reassembles them by index, so the output order — and therefore
+/// any order-sensitive fold over it — never depends on scheduling.
+/// `threads <= 1` (or a single item) runs inline on the caller's thread.
+pub fn ordered_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = threads.clamp(1, items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let mut slots: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> = (0..threads)
+            .map(|w| {
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    let mut i = w;
+                    while i < items.len() {
+                        out.push((i, f(&items[i])));
+                        i += threads;
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots.into_iter().map(|s| s.expect("every item mapped exactly once")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<usize> = (0..37).collect();
+        let expect: Vec<usize> = items.iter().map(|i| i * i).collect();
+        for threads in [1, 2, 3, 8, 64] {
+            assert_eq!(ordered_map(&items, threads, |&i| i * i), expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let none: Vec<u32> = Vec::new();
+        assert!(ordered_map(&none, 4, |&x| x).is_empty());
+        assert_eq!(ordered_map(&[7u32], 4, |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn matches_sequential_for_stateless_work() {
+        let items: Vec<u64> = (0..100).map(|i| i * 31 + 7).collect();
+        let seq = ordered_map(&items, 1, |&x| x.wrapping_mul(x) ^ 0xABCD);
+        let par = ordered_map(&items, 7, |&x| x.wrapping_mul(x) ^ 0xABCD);
+        assert_eq!(seq, par);
+    }
+}

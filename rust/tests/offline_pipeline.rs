@@ -20,7 +20,7 @@ use crossroi::util::geometry::Rect;
 fn masks_cover_every_filtered_occurrence() {
     let cfg = Config::test_small();
     let scenario = Scenario::build(&cfg.scenario);
-    let plan = build_plan(&scenario, &cfg.scenario, &cfg.system, &Method::CrossRoi);
+    let plan = build_plan(&scenario, &cfg.scenario, &cfg.system, &Method::CrossRoi).unwrap();
     // rebuild the filtered stream exactly as build_plan does
     let raw =
         RawReid::generate(&scenario, scenario.profile_range(), &ErrorModelParams::default());
@@ -179,8 +179,8 @@ fn dead_camera_during_profile() {
 fn rebuilding_plan_is_deterministic() {
     let cfg = Config::test_small();
     let scenario = Scenario::build(&cfg.scenario);
-    let a = build_plan(&scenario, &cfg.scenario, &cfg.system, &Method::CrossRoi);
-    let b = build_plan(&scenario, &cfg.scenario, &cfg.system, &Method::CrossRoi);
+    let a = build_plan(&scenario, &cfg.scenario, &cfg.system, &Method::CrossRoi).unwrap();
+    let b = build_plan(&scenario, &cfg.scenario, &cfg.system, &Method::CrossRoi).unwrap();
     assert_eq!(a.masks.total_size(), b.masks.total_size());
     for cam in 0..5 {
         assert_eq!(a.masks.tiles[cam], b.masks.tiles[cam]);

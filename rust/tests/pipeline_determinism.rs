@@ -36,7 +36,11 @@ fn small() -> (Scenario, Config) {
 }
 
 fn report_json(scenario: &Scenario, cfg: &Config, method: &Method, par: Parallelism) -> String {
-    let opts = PipelineOptions { parallelism: par, encode_cost: EncodeCost::PerFrame(0.02) };
+    let opts = PipelineOptions {
+        parallelism: par,
+        encode_cost: EncodeCost::PerFrame(0.02),
+        ..PipelineOptions::default()
+    };
     let (mut report, _) =
         run_method_with(scenario, &cfg.system, &FixedCostInfer, method, None, &opts).unwrap();
     // the offline phase is profiled with a real clock; everything else in
@@ -110,10 +114,12 @@ fn measured_mode_still_produces_consistent_structure() {
     let measured = PipelineOptions {
         parallelism: Parallelism::PerCamera,
         encode_cost: EncodeCost::Measured,
+        ..PipelineOptions::default()
     };
     let modelled = PipelineOptions {
         parallelism: Parallelism::Sequential,
         encode_cost: EncodeCost::PerFrame(0.02),
+        ..PipelineOptions::default()
     };
     let (a, _) = run_method_with(
         &scenario, &cfg.system, &FixedCostInfer, &Method::CrossRoi, None, &measured,
