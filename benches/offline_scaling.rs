@@ -1,35 +1,43 @@
-//! Offline planner scaling — camera-count sweep for the staged planner:
-//! per-stage seconds and the multi-thread speedup of the O(n²) pair
-//! fitting (ReXCam's argument: cross-camera correlation profiling is the
-//! city-scale bottleneck; this tracks how far the parallel planner pushes
-//! it).
+//! Offline planner scaling — two sweeps for the staged planner:
 //!
-//! Expected shape: the filter stage dominates and grows ~quadratically
-//! with cameras; with one worker per core the filter stage — and at 8+
-//! cameras the whole offline phase — should clear a ≥ 3× speedup over
-//! `--offline-threads 1`, while the plans stay byte-identical
-//! (`rust/tests/offline_determinism.rs` proves the identity; this bench
-//! spot-checks |M|).
+//! 1. **Single intersection, camera sweep** (4→16 cameras): per-stage
+//!    seconds and the multi-thread speedup of the O(n²) pair fitting
+//!    (ReXCam's argument: cross-camera correlation profiling is the
+//!    city-scale bottleneck; this tracks how far the parallel planner
+//!    pushes it).
+//! 2. **Disjoint intersections, fleet sweep** (16→64 cameras as 4-camera
+//!    intersections): overlap-sharded planning (`--shards auto`) against
+//!    the single-instance planner on the same fleet.  The co-occurrence
+//!    partition recovers the intersections, every shard plans
+//!    independently, and total time should grow near-linearly in shard
+//!    count — while the unsharded planner pays the full O(n²) pair
+//!    enumeration and a fleet-wide set-cover.  Plans must stay
+//!    byte-identical between modes and across thread counts
+//!    (`rust/tests/offline_determinism.rs` proves the identity; this
+//!    bench spot-checks |M| and per-camera masks).
+//!
+//! Expected shape: sweep 1's filter stage dominates and grows
+//! ~quadratically with cameras; with one worker per core the filter stage
+//! — and at 8+ cameras the whole offline phase — should clear a ≥ 3×
+//! speedup over `--offline-threads 1`.  Sweep 2's sharded time per
+//! intersection should stay roughly flat from 4 to 16 intersections.
 
 mod common;
 
 use crossroi::bench::Table;
+use crossroi::config::Config;
 use crossroi::coordinator::Method;
-use crossroi::offline::{build_plan_with, OfflineOptions, OfflinePlan, SolverKind};
+use crossroi::offline::{
+    build_plan_from_stream, build_plan_with, OfflineOptions, OfflinePlan, ShardMode, SolverKind,
+};
 use crossroi::sim::Scenario;
+use crossroi::testing::fleet::disjoint_intersections;
 
 fn stage(plan: &OfflinePlan, name: &str) -> f64 {
     plan.report.stage_seconds(name).unwrap_or(0.0)
 }
 
-fn main() {
-    let base = common::bench_config();
-    let threads = OfflineOptions::default().effective_threads();
-    println!(
-        "offline scaling sweep: {}s profile window, {} worker threads (auto)",
-        base.scenario.profile_secs, threads
-    );
-
+fn single_intersection_sweep(base: &Config, threads: usize) {
     let mut table = Table::new(&[
         "cams",
         "constraints",
@@ -50,7 +58,7 @@ fn main() {
             &cfg.scenario,
             &cfg.system,
             &Method::CrossRoi,
-            &OfflineOptions { threads: 1, solver: SolverKind::Greedy },
+            &OfflineOptions { threads: 1, solver: SolverKind::Greedy, shards: ShardMode::Off },
         )
         .unwrap();
         let parallel = build_plan_with(
@@ -58,7 +66,7 @@ fn main() {
             &cfg.scenario,
             &cfg.system,
             &Method::CrossRoi,
-            &OfflineOptions { threads: 0, solver: SolverKind::Greedy },
+            &OfflineOptions { threads: 0, solver: SolverKind::Greedy, shards: ShardMode::Off },
         )
         .unwrap();
         assert_eq!(
@@ -78,5 +86,80 @@ fn main() {
             format!("{:.2}x", sequential.seconds() / parallel.seconds().max(1e-9)),
         ]);
     }
-    table.print("Offline planner scaling (camera sweep, CrossRoI method)");
+    table.print(&format!(
+        "Offline planner scaling (single-intersection camera sweep, {threads} auto threads)"
+    ));
+}
+
+fn disjoint_fleet_sweep(base: &Config) {
+    let mut table = Table::new(&[
+        "cams",
+        "shards",
+        "constraints",
+        "|M|",
+        "sharded s",
+        "sharded s (1t)",
+        "unsharded s",
+        "speedup",
+        "s/shard",
+    ]);
+    for n_intersections in [4usize, 8, 16] {
+        let cams = 4 * n_intersections;
+        let (stream, tiling) =
+            disjoint_intersections(base, n_intersections, base.scenario.seed);
+        let plan = |shards: ShardMode, threads: usize| -> OfflinePlan {
+            build_plan_from_stream(
+                &stream,
+                &tiling,
+                &base.system,
+                &Method::CrossRoi,
+                &OfflineOptions { threads, solver: SolverKind::Greedy, shards },
+            )
+            .unwrap()
+        };
+        let sharded = plan(ShardMode::Auto, 0);
+        let sharded_1t = plan(ShardMode::Auto, 1);
+        let unsharded = plan(ShardMode::Off, 0);
+        // byte-identity spot checks (the full identity matrix lives in
+        // rust/tests/offline_determinism.rs)
+        assert_eq!(
+            sharded.masks.total_size(),
+            unsharded.masks.total_size(),
+            "sharded |M| diverged from unsharded at {cams} cameras"
+        );
+        for cam in 0..cams {
+            assert_eq!(
+                sharded.masks.tiles[cam], sharded_1t.masks.tiles[cam],
+                "sharded plan diverged across thread counts at cam {cam}"
+            );
+            assert_eq!(
+                sharded.masks.tiles[cam], unsharded.masks.tiles[cam],
+                "sharded mask diverged from unsharded at cam {cam}"
+            );
+        }
+        let n_shards = sharded.report.shards.len().max(1);
+        table.row(vec![
+            format!("{cams}"),
+            format!("{n_shards}"),
+            format!("{}", sharded.n_constraints),
+            format!("{}", sharded.masks.total_size()),
+            format!("{:.3}", sharded.seconds()),
+            format!("{:.3}", sharded_1t.seconds()),
+            format!("{:.3}", unsharded.seconds()),
+            format!("{:.2}x", unsharded.seconds() / sharded.seconds().max(1e-9)),
+            format!("{:.4}", sharded.seconds() / n_shards as f64),
+        ]);
+    }
+    table.print("Overlap-sharded planning (disjoint 4-camera intersections, 16-64 cameras)");
+}
+
+fn main() {
+    let base = common::bench_config();
+    let threads = OfflineOptions::default().effective_threads();
+    println!(
+        "offline scaling sweep: {}s profile window, {} worker threads (auto)",
+        base.scenario.profile_secs, threads
+    );
+    single_intersection_sweep(&base, threads);
+    disjoint_fleet_sweep(&base);
 }

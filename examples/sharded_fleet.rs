@@ -1,0 +1,71 @@
+//! Overlap-sharded planning on a disjoint multi-intersection fleet.
+//!
+//! The CLI's `--shards auto` on the default scenario exercises only the
+//! single-component fall-through (the 5-camera rig is one overlap
+//! component), so this example is the release-build smoke for the real
+//! fan-out: it builds a synthetic fleet of disjoint 4-camera
+//! intersections (`crossroi::testing::fleet`), plans it sharded and
+//! unsharded, checks the plans are byte-identical, and prints the shard
+//! breakdown.  CI runs it on every push (`cargo run --release --example
+//! sharded_fleet`); it needs no PJRT runtime.
+
+use anyhow::Result;
+
+use crossroi::config::Config;
+use crossroi::coordinator::Method;
+use crossroi::offline::{build_plan_from_stream, OfflineOptions, ShardMode};
+use crossroi::testing::fleet::disjoint_intersections;
+
+fn main() -> Result<()> {
+    let mut cfg = Config::paper();
+    // small windows: this is a smoke, not a bench (eval length only
+    // affects how much ground truth the scenario builder generates)
+    cfg.scenario.profile_secs = 12.0;
+    cfg.scenario.eval_secs = 8.0;
+    let n_intersections = 3;
+    let (stream, tiling) = disjoint_intersections(&cfg, n_intersections, cfg.scenario.seed);
+    println!(
+        "fleet: {} cameras as {n_intersections} disjoint intersections, {} profile records",
+        tiling.n_cameras,
+        stream.len()
+    );
+
+    let plan_with = |shards: ShardMode| {
+        let opts = OfflineOptions { shards, ..Default::default() };
+        build_plan_from_stream(&stream, &tiling, &cfg.system, &Method::CrossRoi, &opts)
+    };
+    let sharded = plan_with(ShardMode::Auto)?;
+    let unsharded = plan_with(ShardMode::Off)?;
+
+    assert!(
+        sharded.report.shards.len() >= n_intersections,
+        "partition found {} shards, expected >= {n_intersections}",
+        sharded.report.shards.len()
+    );
+    for cam in 0..tiling.n_cameras {
+        assert_eq!(
+            sharded.masks.tiles[cam], unsharded.masks.tiles[cam],
+            "sharded plan diverged from unsharded at camera {cam}"
+        );
+        assert_eq!(sharded.groups[cam], unsharded.groups[cam], "groups diverged at {cam}");
+        assert_eq!(sharded.blocks[cam], unsharded.blocks[cam], "blocks diverged at {cam}");
+    }
+    assert_eq!(sharded.filter_report, unsharded.filter_report, "filter report diverged");
+    assert_eq!(sharded.n_constraints, unsharded.n_constraints, "constraint count diverged");
+
+    println!(
+        "plans byte-identical: {} constraints, |M| = {} tiles; sharded {:.2} s vs unsharded {:.2} s",
+        sharded.n_constraints,
+        sharded.masks.total_size(),
+        sharded.seconds(),
+        unsharded.seconds()
+    );
+    for (i, s) in sharded.report.shards.iter().enumerate() {
+        println!(
+            "  shard {i}: cameras {:?}, {} constraints, {} tiles",
+            s.cameras, s.n_constraints, s.mask_tiles
+        );
+    }
+    println!("OK");
+    Ok(())
+}

@@ -67,16 +67,32 @@ impl Tiling {
     }
 
     /// Appearance region (§3.2): the least set of tiles covering a bbox.
-    /// Returns a sorted list of global tile ids; empty if the bbox is empty.
+    /// Returns a sorted list of global tile ids; empty if the bbox is
+    /// empty or lies entirely outside the frame.
     pub fn appearance_region(&self, cam: usize, bbox: &Rect) -> Vec<GlobalTile> {
         if bbox.is_empty() {
             return Vec::new();
         }
+        // A bbox entirely outside the frame covers no tile.  Without this
+        // check the clamps below cross (tx0 > tx1 / ty0 > ty1), the extent
+        // arithmetic underflows u32, and a bbox fully left/above the frame
+        // would alias onto tile column/row 0.
+        if bbox.right() <= 0.0
+            || bbox.bottom() <= 0.0
+            || bbox.left >= self.frame_w as f64
+            || bbox.top >= self.frame_h as f64
+        {
+            return Vec::new();
+        }
         let t = self.tile_px as f64;
-        let tx0 = (bbox.left / t).floor().max(0.0) as u32;
-        let ty0 = (bbox.top / t).floor().max(0.0) as u32;
-        let tx1 = (((bbox.right() - 1e-9) / t).floor() as u32).min(self.tiles_x - 1);
-        let ty1 = (((bbox.bottom() - 1e-9) / t).floor() as u32).min(self.tiles_y - 1);
+        let tx0 = ((bbox.left / t).floor().max(0.0) as u32).min(self.tiles_x - 1);
+        let ty0 = ((bbox.top / t).floor().max(0.0) as u32).min(self.tiles_y - 1);
+        let tx1 = (((bbox.right() - 1e-9) / t).floor().max(0.0) as u32).min(self.tiles_x - 1);
+        let ty1 = (((bbox.bottom() - 1e-9) / t).floor().max(0.0) as u32).min(self.tiles_y - 1);
+        // a box thinner than the boundary epsilon can still cross clamps
+        if tx1 < tx0 || ty1 < ty0 {
+            return Vec::new();
+        }
         let mut out = Vec::with_capacity(((tx1 - tx0 + 1) * (ty1 - ty0 + 1)) as usize);
         for ty in ty0..=ty1 {
             for tx in tx0..=tx1 {
@@ -153,5 +169,51 @@ mod tests {
         let region = t.appearance_region(0, &r);
         assert_eq!(region, vec![t.tile_id(0, 19, 11)]);
         assert!(t.appearance_region(0, &Rect::new(5.0, 5.0, 0.0, 0.0)).is_empty());
+    }
+
+    #[test]
+    fn appearance_region_of_off_frame_bboxes_is_empty() {
+        let t = tiling();
+        // entirely past the right/bottom edge: clamping used to cross the
+        // tile extents and underflow `tx1 - tx0 + 1`
+        assert!(t.appearance_region(0, &Rect::new(330.0, 10.0, 40.0, 40.0)).is_empty());
+        assert!(t.appearance_region(0, &Rect::new(10.0, 200.0, 40.0, 40.0)).is_empty());
+        assert!(t.appearance_region(0, &Rect::new(400.0, 300.0, 5.0, 5.0)).is_empty());
+        // entirely left/above: the negative-to-u32 cast used to alias
+        // these onto tile column/row 0
+        assert!(t.appearance_region(0, &Rect::new(-50.0, 20.0, 30.0, 30.0)).is_empty());
+        assert!(t.appearance_region(0, &Rect::new(20.0, -80.0, 30.0, 30.0)).is_empty());
+        assert!(t.appearance_region(0, &Rect::new(-90.0, -90.0, 30.0, 30.0)).is_empty());
+        // degenerate: thinner than the boundary epsilon, sitting exactly on
+        // a tile edge (tx1 < tx0 after the epsilon shave)
+        assert!(t.appearance_region(0, &Rect::new(32.0, 32.0, 1e-12, 1e-12)).is_empty());
+    }
+
+    #[test]
+    fn appearance_region_never_underflows_fuzz() {
+        // fuzz-style sweep over random (mostly off-frame) bboxes: every
+        // call must return without panicking, tiles must be in range, and
+        // emptiness must match frame intersection
+        let t = tiling();
+        let mut rng = crate::util::rng::Rng::new(0xF0F0);
+        for _ in 0..2000 {
+            let r = Rect::new(
+                rng.range(-400.0, 400.0),
+                rng.range(-400.0, 400.0),
+                rng.range(0.0, 120.0),
+                rng.range(0.0, 120.0),
+            );
+            let region = t.appearance_region(1, &r);
+            for &id in &region {
+                assert!(id < t.total(), "tile id {id} out of range for {r:?}");
+                assert_eq!(t.camera_of(id), 1);
+            }
+            let overlap = r.clip_to_frame(t.frame_w as f64, t.frame_h as f64);
+            if overlap.is_empty() {
+                assert!(region.is_empty(), "off-frame {r:?} produced tiles {region:?}");
+            } else if overlap.area() > 1e-6 {
+                assert!(!region.is_empty(), "in-frame {r:?} produced no tiles");
+            }
+        }
     }
 }

@@ -19,7 +19,7 @@ pub struct Args {
 pub const VALUE_FLAGS: &[&str] = &[
     "config", "artifacts", "seed", "segment-secs", "svm-gamma", "ransac-theta",
     "reducto-target", "eval-secs", "profile-secs", "cameras", "method", "out",
-    "bandwidth-mbps", "qp", "offline-threads", "solver",
+    "bandwidth-mbps", "qp", "offline-threads", "solver", "shards",
 ];
 
 impl Args {

@@ -18,7 +18,8 @@ pub mod online;
 pub use method::Method;
 pub use metrics::{LatencyBreakdown, MethodReport};
 pub use offline::{
-    build_plan, build_plan_with, OfflineOptions, OfflinePlan, PlanReport, SolverKind,
+    build_plan, build_plan_from_stream, build_plan_with, OfflineOptions, OfflinePlan,
+    PlanReport, ShardMode, ShardReport, SolverKind,
 };
 pub use online::{
     baseline_reference, baseline_reference_with, run_ablation, run_ablation_with, run_method,

@@ -5,6 +5,6 @@
 //! (`coordinator::build_plan`) keeps working.
 
 pub use crate::offline::{
-    build_plan, build_plan_with, OfflineOptions, OfflinePlan, PlanReport, SolverKind,
-    StageTiming,
+    build_plan, build_plan_from_stream, build_plan_with, OfflineOptions, OfflinePlan,
+    PlanReport, ShardMode, ShardReport, SolverKind, StageTiming,
 };

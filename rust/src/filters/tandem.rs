@@ -70,12 +70,82 @@ pub struct FilterReport {
 /// to one class.
 const MIN_CLASS_SAMPLES: usize = 8;
 
-/// Index of an ordered camera pair in the canonical (src-major, dst-minor,
-/// src ≠ dst) enumeration — the merge order that keeps parallel fitting
-/// byte-identical to the sequential reference.
-fn pair_index(src: usize, dst: usize, n: usize) -> usize {
-    debug_assert!(src != dst && src < n && dst < n);
-    src * (n - 1) + dst - usize::from(dst > src)
+/// The ordered camera pairs one filter run fits, in canonical
+/// (src-major, dst-minor, src ≠ dst) enumeration — the merge order that
+/// keeps parallel fitting byte-identical to the sequential reference.
+///
+/// A whole-fleet run enumerates every ordered pair; a camera-scoped run
+/// ([`TandemFilters::apply_scoped`], used by the sharded planner in
+/// `crate::offline::shard`) enumerates only pairs inside the subset —
+/// cross-shard pairs share no observations, so building their (empty)
+/// sample sets would only burn the O(n²) the sharding exists to avoid.
+#[derive(Debug)]
+pub struct PairSet {
+    /// (src, dst) per slot, canonical order (global camera indices).
+    pairs: Vec<(usize, usize)>,
+    /// Destination cameras of each source, ascending (per-record fan-out;
+    /// indexed by global camera).
+    dsts: Vec<Vec<usize>>,
+    /// Global camera → dense member index (`usize::MAX` = not a member).
+    /// O(n) per set — a scoped set must not pay O(n²) in the global
+    /// camera count, or sharding would reintroduce the cost it removes.
+    member: Vec<usize>,
+    /// `member(src) * k + member(dst)` → slot (`usize::MAX` = src = dst).
+    slot: Vec<usize>,
+    /// Member count.
+    k: usize,
+}
+
+impl PairSet {
+    /// Every ordered pair of an `n`-camera fleet.
+    pub fn all(n: usize) -> PairSet {
+        let cams: Vec<usize> = (0..n).collect();
+        PairSet::among(n, &cams)
+    }
+
+    /// Only the ordered pairs within `cams` (global indices < `n`,
+    /// sorted ascending, deduplicated).
+    pub fn among(n: usize, cams: &[usize]) -> PairSet {
+        debug_assert!(cams.windows(2).all(|w| w[0] < w[1]), "cameras not sorted/deduped");
+        debug_assert!(cams.iter().all(|&c| c < n), "camera index out of range");
+        let k = cams.len();
+        let mut member = vec![usize::MAX; n];
+        for (i, &c) in cams.iter().enumerate() {
+            member[c] = i;
+        }
+        let mut pairs = Vec::with_capacity(k * k.saturating_sub(1));
+        let mut dsts: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut slot = vec![usize::MAX; k * k];
+        for (si, &src) in cams.iter().enumerate() {
+            for (di, &dst) in cams.iter().enumerate() {
+                if src == dst {
+                    continue;
+                }
+                slot[si * k + di] = pairs.len();
+                pairs.push((src, dst));
+                dsts[src].push(dst);
+            }
+        }
+        PairSet { pairs, dsts, member, slot, k }
+    }
+
+    /// Number of enumerated pairs.
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+
+    /// Slot of an ordered pair (`usize::MAX` when not enumerated).
+    fn slot_of(&self, src: usize, dst: usize) -> usize {
+        let (si, di) = (self.member[src], self.member[dst]);
+        if si == usize::MAX || di == usize::MAX {
+            return usize::MAX;
+        }
+        self.slot[si * self.k + di]
+    }
 }
 
 /// One ordered pair's regression-filter training set: interior positive
@@ -112,11 +182,28 @@ impl TandemFilters {
         stream: &ReidStream,
         threads: usize,
     ) -> (ReidStream, FilterReport) {
+        self.apply_scoped(stream, threads, None)
+    }
+
+    /// Like [`Self::apply_with_threads`], restricted to the ordered pairs
+    /// within `cameras` (None = the whole fleet).  The sharded planner
+    /// passes one overlap component at a time: records of other cameras
+    /// are ignored and no cross-component pair is ever enumerated.
+    pub fn apply_scoped(
+        &self,
+        stream: &ReidStream,
+        threads: usize,
+        cameras: Option<&[usize]>,
+    ) -> (ReidStream, FilterReport) {
+        let pairset = match cameras {
+            None => PairSet::all(stream.n_cameras),
+            Some(cams) => PairSet::among(stream.n_cameras, cams),
+        };
         let mut report = FilterReport::default();
 
         // ---- stage 1: regression filter (per ordered camera pair) ----
         // positive pair = src record whose raw id also appears in dst
-        let pair_samples = self.build_pair_samples(stream);
+        let pair_samples = self.build_pair_samples(stream, &pairset);
         let fits = ordered_map(&pair_samples, threads, |p| ransac::fit(&p.pairs, &self.ransac));
         let mut rewrites: HashMap<usize, u32> = HashMap::new();
         let mut next_fresh = stream.max_raw_id() + 1;
@@ -140,7 +227,7 @@ impl TandemFilters {
         // ---- stage 2: SVM filter (per ordered camera pair) ----
         // label every src record ±1 by whether its id appears in dst;
         // negative outliers (negatives in the positive region) are FNs.
-        let svm_samples = build_svm_samples(&stage1);
+        let svm_samples = build_svm_samples(&stage1, &pairset);
         let removals = ordered_map(&svm_samples, threads, |s| self.fit_svm_pair(s));
         let mut remove: Vec<bool> = vec![false; stage1.len()];
         for pair_removals in &removals {
@@ -160,14 +247,13 @@ impl TandemFilters {
         (filtered, report)
     }
 
-    /// One indexed pass over the stream building every ordered pair's
+    /// One indexed pass over the stream building every enumerated pair's
     /// positive sample set: a `(cam, frame, raw_id) → first record` map
     /// replaces the per-pair `find_id` rescans, and each record fans its
     /// matches out to the pairs it belongs to.  Per-pair vectors are
     /// filled in record order — exactly the order the per-pair rescan
     /// produced.
-    fn build_pair_samples(&self, stream: &ReidStream) -> Vec<PairSamples> {
-        let n = stream.n_cameras;
+    fn build_pair_samples(&self, stream: &ReidStream, ps: &PairSet) -> Vec<PairSamples> {
         let interior = |b: &Rect| {
             b.left > self.edge_margin
                 && b.top > self.edge_margin
@@ -180,15 +266,12 @@ impl TandemFilters {
             first.entry((rec.cam, rec.frame, rec.raw_id)).or_insert(i);
         }
         let mut out: Vec<PairSamples> =
-            (0..n.saturating_sub(1) * n).map(|_| PairSamples::default()).collect();
+            (0..ps.len()).map(|_| PairSamples::default()).collect();
         for (i, rec) in stream.all().iter().enumerate() {
             if !interior(&rec.bbox) {
                 continue;
             }
-            for dst in 0..n {
-                if dst == rec.cam {
-                    continue;
-                }
+            for &dst in &ps.dsts[rec.cam] {
                 let Some(&j) = first.get(&(dst, rec.frame, rec.raw_id)) else {
                     continue;
                 };
@@ -196,7 +279,7 @@ impl TandemFilters {
                 if !interior(&m.bbox) {
                     continue;
                 }
-                let p = &mut out[pair_index(rec.cam, dst, n)];
+                let p = &mut out[ps.slot_of(rec.cam, dst)];
                 p.rec_idx.push(i);
                 p.pairs.push((rec.bbox, m.bbox));
             }
@@ -224,12 +307,12 @@ impl TandemFilters {
     }
 }
 
-/// One indexed pass building every ordered pair's SVM sample set: each
-/// record contributes one labelled sample to the `n - 1` pairs it is the
-/// source of, with the label looked up in a presence set instead of a
-/// per-pair `find_id` scan.  The per-source feature matrix and record
-/// indices are built once and shared across that source's pairs.
-fn build_svm_samples(stream: &ReidStream) -> Vec<SvmSamples> {
+/// One indexed pass building every enumerated pair's SVM sample set: each
+/// record contributes one labelled sample to the pairs it is the source
+/// of, with the label looked up in a presence set instead of a per-pair
+/// `find_id` scan.  The per-source feature matrix and record indices are
+/// built once and shared across that source's pairs.
+fn build_svm_samples(stream: &ReidStream, ps: &PairSet) -> Vec<SvmSamples> {
     let n = stream.n_cameras;
     let mut present: HashSet<(usize, usize, u32)> = HashSet::new();
     for rec in stream.all() {
@@ -237,33 +320,24 @@ fn build_svm_samples(stream: &ReidStream) -> Vec<SvmSamples> {
     }
     let mut rec_idx: Vec<Vec<usize>> = vec![Vec::new(); n];
     let mut feats: Vec<Vec<Vec<f64>>> = vec![Vec::new(); n];
-    let mut labels: Vec<Vec<f64>> =
-        (0..n.saturating_sub(1) * n).map(|_| Vec::new()).collect();
+    let mut labels: Vec<Vec<f64>> = (0..ps.len()).map(|_| Vec::new()).collect();
     for (i, rec) in stream.all().iter().enumerate() {
         rec_idx[rec.cam].push(i);
         feats[rec.cam].push(bbox4(&rec.bbox).to_vec());
-        for dst in 0..n {
-            if dst == rec.cam {
-                continue;
-            }
+        for &dst in &ps.dsts[rec.cam] {
             let positive = present.contains(&(dst, rec.frame, rec.raw_id));
-            labels[pair_index(rec.cam, dst, n)].push(if positive { 1.0 } else { -1.0 });
+            labels[ps.slot_of(rec.cam, dst)].push(if positive { 1.0 } else { -1.0 });
         }
     }
     let rec_idx: Vec<Arc<Vec<usize>>> = rec_idx.into_iter().map(Arc::new).collect();
     let feats: Vec<Arc<Vec<Vec<f64>>>> = feats.into_iter().map(Arc::new).collect();
     let mut out = Vec::with_capacity(labels.len());
-    for src in 0..n {
-        for dst in 0..n {
-            if dst == src {
-                continue;
-            }
-            out.push(SvmSamples {
-                rec_idx: Arc::clone(&rec_idx[src]),
-                feats: Arc::clone(&feats[src]),
-                labels: std::mem::take(&mut labels[pair_index(src, dst, n)]),
-            });
-        }
+    for (k, &(src, _)) in ps.pairs.iter().enumerate() {
+        out.push(SvmSamples {
+            rec_idx: Arc::clone(&rec_idx[src]),
+            feats: Arc::clone(&feats[src]),
+            labels: std::mem::take(&mut labels[k]),
+        });
     }
     out
 }
@@ -311,25 +385,89 @@ mod tests {
     use crate::sim::Scenario;
 
     #[test]
-    fn pair_index_is_a_bijection() {
+    fn pair_set_enumerates_all_ordered_pairs_canonically() {
         for n in [2usize, 3, 5, 16] {
-            let mut seen = vec![false; n * (n - 1)];
+            let ps = PairSet::all(n);
+            assert_eq!(ps.len(), n * (n - 1));
             let mut expected = 0usize;
             for src in 0..n {
                 for dst in 0..n {
                     if src == dst {
                         continue;
                     }
-                    let k = pair_index(src, dst, n);
                     // canonical enumeration order: src-major, dst-minor
-                    assert_eq!(k, expected, "pair ({src},{dst}) of {n}");
-                    assert!(!seen[k]);
-                    seen[k] = true;
+                    assert_eq!(ps.slot_of(src, dst), expected, "pair ({src},{dst}) of {n}");
+                    assert_eq!(ps.pairs[expected], (src, dst));
                     expected += 1;
                 }
             }
-            assert!(seen.iter().all(|&s| s));
         }
+    }
+
+    #[test]
+    fn pair_set_among_restricts_to_the_subset() {
+        let ps = PairSet::among(6, &[1, 3, 4]);
+        assert_eq!(ps.len(), 6);
+        assert_eq!(
+            ps.pairs,
+            vec![(1, 3), (1, 4), (3, 1), (3, 4), (4, 1), (4, 3)],
+            "subset pairs not in src-major canonical order"
+        );
+        // pairs touching cameras outside the subset are not enumerated
+        assert_eq!(ps.slot_of(0, 1), usize::MAX);
+        assert_eq!(ps.slot_of(1, 2), usize::MAX);
+        assert_eq!(ps.slot_of(5, 4), usize::MAX);
+        assert!(ps.dsts[0].is_empty() && ps.dsts[2].is_empty() && ps.dsts[5].is_empty());
+        assert_eq!(ps.dsts[1], vec![3, 4]);
+    }
+
+    #[test]
+    fn scoped_apply_on_a_component_matches_whole_fleet_on_its_records() {
+        // two disjoint "intersections" in one stream (cameras {0,1} and
+        // {2,3} share no ids): filtering the whole fleet must equal
+        // filtering each component scoped — the sharded planner's
+        // correctness argument in miniature
+        let sc = Scenario::build(&Config::test_small().scenario);
+        let raw = RawReid::generate(&sc, 0..sc.n_frames(), &ErrorModelParams::default());
+        // build the synthetic 2-component stream: copy cameras 0/1 as-is,
+        // and duplicate them as cameras 2/3 with an id offset
+        let offset = raw.max_raw_id() + 1;
+        let mut records = Vec::new();
+        for rec in raw.all() {
+            if rec.cam > 1 {
+                continue;
+            }
+            records.push(*rec);
+            let mut moved = *rec;
+            moved.cam += 2;
+            moved.raw_id += offset;
+            moved.true_id += offset;
+            records.push(moved);
+        }
+        let combined = ReidStream::new(4, raw.n_frames, records);
+        let filters = TandemFilters::default();
+        let (whole, whole_report) = filters.apply_scoped(&combined, 2, None);
+        let (a, a_report) = filters.apply_scoped(&combined, 2, Some(&[0, 1]));
+        let (b, b_report) = filters.apply_scoped(&combined, 2, Some(&[2, 3]));
+        assert_eq!(
+            whole_report.pairs_fit,
+            a_report.pairs_fit + b_report.pairs_fit,
+            "cross-component pairs must never fit"
+        );
+        assert_eq!(whole_report.fn_removed, a_report.fn_removed + b_report.fn_removed);
+        assert_eq!(whole_report.fp_rewritten, a_report.fp_rewritten + b_report.fp_rewritten);
+        // the whole-fleet output restricted to a component matches the
+        // scoped run's output on that component (ids may differ only on
+        // FP-decoupled records, which get fresh ids from different pools)
+        let keep_component = |s: &ReidStream, cams: std::ops::Range<usize>| -> Vec<(usize, usize, Rect)> {
+            s.all()
+                .iter()
+                .filter(|r| cams.contains(&r.cam))
+                .map(|r| (r.cam, r.frame, r.bbox))
+                .collect()
+        };
+        assert_eq!(keep_component(&whole, 0..2), keep_component(&a, 0..2));
+        assert_eq!(keep_component(&whole, 2..4), keep_component(&b, 2..4));
     }
 
     #[test]

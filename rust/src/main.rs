@@ -8,6 +8,7 @@
 //!
 //! Examples:
 //!   crossroi offline --seed 7
+//!   crossroi offline --seed 7 --shards auto --offline-threads 8
 //!   crossroi run --method crossroi --segment-secs 1.0
 //!   crossroi run --method reducto --reducto-target 0.9
 //!   crossroi ablation --eval-secs 30
@@ -36,6 +37,9 @@ flags:
                            (0 = one per core, the default)
   --solver <name>          greedy|exact RoI set-cover solver (exact is a
                            certifier for small instances only)
+  --shards <mode>          auto|off overlap-sharded planning: partition the
+                           fleet into co-occurrence components and plan
+                           each independently (default: auto)
   --artifacts <dir>        AOT artifact directory (default: artifacts)
   --native                 use the native reference detector (no PJRT)
   --sequential             run the online pipeline single-threaded
@@ -134,6 +138,20 @@ fn run() -> Result<()> {
             for st in &plan.report.stages {
                 println!("  stage {:<9} {:8.3} s", st.stage, st.seconds);
             }
+            if !plan.report.shards.is_empty() {
+                println!("sharded into {} fleets:", plan.report.shards.len());
+                for (i, s) in plan.report.shards.iter().enumerate() {
+                    let cams: Vec<String> =
+                        s.cameras.iter().map(|c| format!("C{}", c + 1)).collect();
+                    println!(
+                        "  shard {i}: [{}] {} constraints, {} tiles, solve {:.3} s",
+                        cams.join(" "),
+                        s.n_constraints,
+                        s.mask_tiles,
+                        s.stage_seconds("solve").unwrap_or(0.0)
+                    );
+                }
+            }
             if let Some(r) = &plan.filter_report {
                 println!(
                     "filters: {} pairs fit, {} FP decoupled, {} FN removed",
@@ -209,6 +227,9 @@ fn offline_options(args: &Args) -> Result<crossroi::offline::OfflineOptions> {
     }
     if let Some(name) = args.flag("solver") {
         opts.solver = crossroi::offline::SolverKind::parse(name)?;
+    }
+    if let Some(name) = args.flag("shards") {
+        opts.shards = crossroi::offline::ShardMode::parse(name)?;
     }
     Ok(opts)
 }

@@ -63,14 +63,28 @@ impl<E> Des<E> {
     }
 
     /// Schedule `event` at absolute time `time` (>= now, clamped).
+    ///
+    /// Panics on non-finite times: `Scheduled::cmp` falls back to
+    /// `Ordering::Equal` when `partial_cmp` fails, so a single NaN would
+    /// silently corrupt the heap order — and with it the bit-reproducible
+    /// insertion-sequence tie-break — instead of failing loudly here.
     pub fn at(&mut self, time: f64, event: E) {
+        assert!(
+            time.is_finite(),
+            "Des::at: event time must be finite, got {time} (now = {})",
+            self.now
+        );
         let t = time.max(self.now);
         self.queue.push(Scheduled { time: t, seq: self.seq, event });
         self.seq += 1;
     }
 
     /// Schedule `event` after a delay.
+    ///
+    /// Panics on non-finite delays (a NaN delay would otherwise be
+    /// silently clamped to zero by the `max` below).
     pub fn after(&mut self, delay: f64, event: E) {
+        assert!(delay.is_finite(), "Des::after: delay must be finite, got {delay}");
         debug_assert!(delay >= 0.0, "negative delay {delay}");
         self.at(self.now + delay.max(0.0), event);
     }
@@ -142,6 +156,43 @@ mod tests {
         des.at(3.0, "late");
         let (t, _) = des.pop().unwrap();
         assert_eq!(t, 10.0); // clamped to now, clock never goes backward
+    }
+
+    #[test]
+    #[should_panic(expected = "event time must be finite")]
+    fn nan_event_time_is_rejected() {
+        let mut des: Des<u32> = Des::new();
+        des.at(f64::NAN, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "event time must be finite")]
+    fn infinite_event_time_is_rejected() {
+        let mut des: Des<u32> = Des::new();
+        des.at(f64::INFINITY, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "delay must be finite")]
+    fn nan_delay_is_rejected() {
+        let mut des: Des<u32> = Des::new();
+        // NaN.max(0.0) is 0.0: without its own guard `after` would
+        // silently schedule the event immediately
+        des.after(f64::NAN, 1);
+    }
+
+    #[test]
+    fn finite_ordering_is_unchanged_by_the_guard() {
+        // mixed magnitudes, ties, and clamped-past times: the observable
+        // order must be exactly what the pre-guard engine produced
+        let mut des: Des<u32> = Des::new();
+        des.at(1e-12, 0);
+        des.at(5.0, 1);
+        des.at(5.0, 2); // tie with 1: insertion order
+        des.at(1e9, 3);
+        des.at(0.0, 4);
+        let order: Vec<u32> = std::iter::from_fn(|| des.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![4, 0, 1, 2, 3]);
     }
 
     #[test]

@@ -8,7 +8,6 @@ use crate::coordinator::method::Method;
 use crate::filters::ransac::RansacParams;
 use crate::filters::svm::SvmParams;
 use crate::filters::{FilterReport, TandemFilters};
-use crate::offline::profile::ProfileArtifact;
 use crate::reid::records::ReidStream;
 
 /// The filter stage's artifact: the cleaned stream plus the filter
@@ -19,22 +18,32 @@ pub struct FilterArtifact {
     pub report: Option<FilterReport>,
 }
 
-/// Clean the profiled stream (or pass it through for No-Filters).
-pub fn run(
-    profiled: ProfileArtifact,
+/// Clean the stream (or pass it through for No-Filters), restricted to
+/// the ordered camera pairs within `cameras` (None = whole fleet) — the
+/// sharded planner passes one overlap component at a time, so
+/// cross-shard pairs are never enumerated.  `frame` is the
+/// (width, height) the streams were captured at (the planner passes its
+/// `Tiling`'s geometry): the filters' interior predicate must match the
+/// caller's frames, never a hardcoded sim constant.
+pub fn run_scoped(
+    stream: ReidStream,
     sys: &SystemConfig,
     method: &Method,
     threads: usize,
+    cameras: Option<&[usize]>,
+    frame: (f64, f64),
 ) -> FilterArtifact {
     if !method.uses_filters() {
-        return FilterArtifact { stream: profiled.stream, report: None };
+        return FilterArtifact { stream, report: None };
     }
     let filters = TandemFilters {
         ransac: RansacParams { theta: sys.ransac_theta, ..Default::default() },
         svm: SvmParams { gamma: sys.svm_gamma, ..Default::default() },
+        frame_w: frame.0,
+        frame_h: frame.1,
         ..Default::default()
     };
-    let (stream, report) = filters.apply_with_threads(&profiled.stream, threads);
+    let (stream, report) = filters.apply_scoped(&stream, threads, cameras);
     FilterArtifact { stream, report: Some(report) }
 }
 
@@ -45,13 +54,16 @@ mod tests {
     use crate::offline::profile;
     use crate::sim::Scenario;
 
+    const SIM_FRAME: (f64, f64) = (crate::sim::FRAME_W as f64, crate::sim::FRAME_H as f64);
+
     #[test]
     fn no_filters_method_passes_the_stream_through() {
         let cfg = Config::test_small();
         let sc = Scenario::build(&cfg.scenario);
         let profiled = profile::run(&sc);
         let before = profiled.stream.len();
-        let art = run(profiled, &cfg.system, &Method::NoFilters, 2);
+        let art =
+            run_scoped(profiled.stream, &cfg.system, &Method::NoFilters, 2, None, SIM_FRAME);
         assert!(art.report.is_none());
         assert_eq!(art.stream.len(), before);
     }
@@ -62,7 +74,8 @@ mod tests {
         let sc = Scenario::build(&cfg.scenario);
         let profiled = profile::run(&sc);
         let before = profiled.stream.len();
-        let art = run(profiled, &cfg.system, &Method::CrossRoi, 2);
+        let art =
+            run_scoped(profiled.stream, &cfg.system, &Method::CrossRoi, 2, None, SIM_FRAME);
         let report = art.report.expect("filters ran");
         assert!(report.pairs_fit > 0, "no camera pair could be fit");
         assert!(art.stream.len() <= before);

@@ -1,35 +1,42 @@
 //! The staged offline planner (§4.1.1, modules ①–④ plus grouping):
-//! Profile → Filter → Associate → Solve → Group, each stage a typed
-//! function producing a named artifact, timed into a [`PlanReport`].
+//! Profile → [Shard] → Filter → Associate → Solve → Group, each stage a
+//! typed function producing a named artifact, timed into a [`PlanReport`].
 //!
 //! This mirrors the online phase's stage decomposition
 //! ([`crate::pipeline`], DESIGN.md §4) on the offline side: the planner
 //! is the part of CrossRoI that must scale as fleets grow — the pairwise
-//! filter fitting is O(n²) in cameras — so the pair models are fitted on
-//! scoped worker threads ([`parallel::ordered_map`]) with a deterministic
-//! pair-order merge, and the RoI optimizer is pluggable behind
-//! [`crate::roi::setcover::Solver`] (greedy default, exact certifier,
-//! warm-started `resolve` for sliding profile windows).  Plans are
-//! byte-identical at every thread count
-//! (`rust/tests/offline_determinism.rs`).
+//! filter fitting is O(n²) in cameras — so the fleet is first partitioned
+//! into overlap-connected shards ([`shard`]; city-scale fleets are sparse
+//! and cross-shard pairs contribute nothing), each shard is planned
+//! independently on scoped worker threads ([`parallel::ordered_map`])
+//! with a deterministic shard-order merge, the pair models inside a shard
+//! are fitted the same way with a deterministic pair-order merge, and the
+//! RoI optimizer is pluggable behind [`crate::roi::setcover::Solver`]
+//! (greedy default, exact certifier, warm-started `resolve` for sliding
+//! profile windows).  Plans are byte-identical at every thread count and
+//! at every shard mode (`rust/tests/offline_determinism.rs`).
 
 pub mod associate;
 pub mod filter;
 pub mod group;
 pub mod parallel;
 pub mod profile;
+pub mod shard;
 pub mod solve;
 
+pub use shard::ShardMode;
 pub use solve::SolverKind;
 
+use std::collections::HashSet;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{Context as _, Result};
 
-use crate::association::tiles::Tiling;
+use crate::association::tiles::{GlobalTile, Tiling};
 use crate::config::{ScenarioConfig, SystemConfig};
 use crate::coordinator::method::Method;
 use crate::filters::FilterReport;
+use crate::reid::records::ReidStream;
 use crate::roi::masks::RoiMasks;
 use crate::sim::Scenario;
 use crate::util::geometry::IRect;
@@ -37,16 +44,20 @@ use crate::util::geometry::IRect;
 /// Options steering one offline planning run.
 #[derive(Debug, Clone, Copy)]
 pub struct OfflineOptions {
-    /// Worker threads for the O(n²) camera-pair fitting
-    /// (CLI: `--offline-threads`); 0 = one per available core.
+    /// Worker threads for the per-shard planning and the O(n²)
+    /// camera-pair fitting (CLI: `--offline-threads`); 0 = one per
+    /// available core.
     pub threads: usize,
     /// Which set-cover solver optimizes the RoI masks (CLI: `--solver`).
     pub solver: SolverKind,
+    /// Overlap-sharded planning (CLI: `--shards auto|off`): partition the
+    /// fleet into co-occurrence components and plan each independently.
+    pub shards: ShardMode,
 }
 
 impl Default for OfflineOptions {
     fn default() -> Self {
-        OfflineOptions { threads: 0, solver: SolverKind::Greedy }
+        OfflineOptions { threads: 0, solver: SolverKind::Greedy, shards: ShardMode::Auto }
     }
 }
 
@@ -67,14 +78,46 @@ pub struct StageTiming {
     pub seconds: f64,
 }
 
+/// One shard's sub-report inside a sharded planning run: which cameras it
+/// covered, its own filter/associate/solve timings, and what it
+/// contributed to the merged plan.
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    /// Global camera indices of this shard, ascending.
+    pub cameras: Vec<usize>,
+    /// Stage timings of this shard's run, in execution order.
+    pub stages: Vec<StageTiming>,
+    /// Constraints in this shard's association table.
+    pub n_constraints: usize,
+    /// Mask tiles this shard contributed to the merged solution.
+    pub mask_tiles: usize,
+}
+
+impl ShardReport {
+    /// Seconds one named stage of this shard took (`None` if it did not
+    /// run).
+    pub fn stage_seconds(&self, stage: &str) -> Option<f64> {
+        self.stages.iter().find(|s| s.stage == stage).map(|s| s.seconds)
+    }
+}
+
 /// Per-stage breakdown of an offline planning run — supersedes the bare
 /// `seconds` field the pre-stage `OfflinePlan` carried.  Timings are the
 /// one wall-clock (non-deterministic) part of a plan; everything else is
 /// a pure function of the scenario seed.
+///
+/// Unsharded (and single-shard `--shards auto`) runs time every stage
+/// top-level in [`Self::stages`], keeping [`Self::stage_seconds`]'s
+/// historical shape.  Multi-shard runs time the fan-out top-level
+/// (profile / shard / plan / merge / group) and keep each shard's
+/// filter/associate/solve timings in [`Self::shards`].
 #[derive(Debug, Clone, Default)]
 pub struct PlanReport {
     /// Stage timings in execution order.
     pub stages: Vec<StageTiming>,
+    /// Per-shard sub-reports, in merge order (empty for unsharded and
+    /// single-shard runs).
+    pub shards: Vec<ShardReport>,
     pub total_seconds: f64,
     /// Worker threads the pair fitting used.
     pub threads: usize,
@@ -144,9 +187,11 @@ pub fn build_plan_with(
     opts: &OfflineOptions,
 ) -> Result<OfflinePlan> {
     let start = Instant::now();
-    let threads = opts.effective_threads();
-    let mut report =
-        PlanReport { threads, solver: opts.solver.name(), ..Default::default() };
+    let mut report = PlanReport {
+        threads: opts.effective_threads(),
+        solver: opts.solver.name(),
+        ..Default::default()
+    };
     let tiling = Tiling::new(
         scenario.cameras.len(),
         crate::sim::FRAME_W,
@@ -155,24 +200,7 @@ pub fn build_plan_with(
     );
 
     if !method.uses_roi_masks() {
-        // Baseline / Reducto stream full frames: only Group has work.
-        let t = Instant::now();
-        let masks = RoiMasks::full(&tiling);
-        let n_cams = scenario.cameras.len();
-        let full_rect = vec![IRect::new(0, 0, crate::sim::FRAME_W, crate::sim::FRAME_H)];
-        let blocks: Vec<Vec<i32>> = (0..n_cams)
-            .map(|c| masks.active_blocks(c, group::BLOCK_PX, crate::sim::FRAME_W))
-            .collect();
-        report.record("group", t);
-        report.total_seconds = start.elapsed().as_secs_f64();
-        return Ok(OfflinePlan {
-            groups: vec![full_rect; n_cams],
-            blocks,
-            masks,
-            filter_report: None,
-            n_constraints: 0,
-            report,
-        });
+        return Ok(full_frame_plan(&tiling, report, start));
     }
 
     // ① Profile: offline ReID over the profile window
@@ -180,14 +208,99 @@ pub fn build_plan_with(
     let profiled = profile::run(scenario);
     report.record("profile", t);
 
+    plan_stream(profiled.stream, &tiling, sys, method, opts, report, start)
+}
+
+/// Plan from an already-profiled ReID stream over an explicit [`Tiling`]
+/// — the entry point for fleets the simulator cannot build as one
+/// scenario (synthetic multi-intersection worlds in
+/// `benches/offline_scaling.rs` and the sharding tests) and for
+/// externally profiled streams.  [`build_plan_with`] is this plus the
+/// Profile stage.
+pub fn build_plan_from_stream(
+    stream: &ReidStream,
+    tiling: &Tiling,
+    sys: &SystemConfig,
+    method: &Method,
+    opts: &OfflineOptions,
+) -> Result<OfflinePlan> {
+    anyhow::ensure!(
+        stream.n_cameras == tiling.n_cameras,
+        "stream carries {} cameras but the tiling {}",
+        stream.n_cameras,
+        tiling.n_cameras
+    );
+    let start = Instant::now();
+    let report = PlanReport {
+        threads: opts.effective_threads(),
+        solver: opts.solver.name(),
+        ..Default::default()
+    };
+    if !method.uses_roi_masks() {
+        return Ok(full_frame_plan(tiling, report, start));
+    }
+    plan_stream(stream.clone(), tiling, sys, method, opts, report, start)
+}
+
+/// Full-frame plan (Baseline / Reducto): only Group has work.  Everything
+/// — the full rect, the block grid — derives from the `Tiling`, never
+/// from the sim's frame constants, so a non-default tiling stays
+/// consistent with what [`group::run`] computes for the masked methods.
+fn full_frame_plan(tiling: &Tiling, mut report: PlanReport, start: Instant) -> OfflinePlan {
+    let t = Instant::now();
+    let masks = RoiMasks::full(tiling);
+    let n_cams = tiling.n_cameras;
+    let full_rect = vec![IRect::new(0, 0, tiling.frame_w, tiling.frame_h)];
+    let blocks: Vec<Vec<i32>> = (0..n_cams)
+        .map(|c| masks.active_blocks(c, group::BLOCK_PX, tiling.frame_w))
+        .collect();
+    report.record("group", t);
+    report.total_seconds = start.elapsed().as_secs_f64();
+    OfflinePlan {
+        groups: vec![full_rect; n_cams],
+        blocks,
+        masks,
+        filter_report: None,
+        n_constraints: 0,
+        report,
+    }
+}
+
+/// The post-profile stages.  `--shards auto` partitions the fleet first
+/// and fans the shards out; one overlap component (or `--shards off`)
+/// runs the historical single-instance path.
+fn plan_stream(
+    stream: ReidStream,
+    tiling: &Tiling,
+    sys: &SystemConfig,
+    method: &Method,
+    opts: &OfflineOptions,
+    mut report: PlanReport,
+    start: Instant,
+) -> Result<OfflinePlan> {
+    let threads = report.threads;
+
+    if opts.shards == ShardMode::Auto {
+        let t = Instant::now();
+        let shards = shard::partition(&stream);
+        if shards.len() > 1 {
+            report.record("shard", t);
+            return plan_sharded(stream, tiling, sys, method, opts, report, start, shards);
+        }
+        // a fully-connected fleet falls through to the unsharded path,
+        // keeping the historical stage shape (and byte-identical plans
+        // trivially)
+    }
+
     // ② Filter: tandem statistical filters (skipped by No-Filters)
     let t = Instant::now();
-    let filtered = filter::run(profiled, sys, method, threads);
+    let frame = (tiling.frame_w as f64, tiling.frame_h as f64);
+    let filtered = filter::run_scoped(stream, sys, method, threads, None, frame);
     report.record("filter", t);
 
     // ③ Associate: region association lookup table
     let t = Instant::now();
-    let assoc = associate::run(&filtered.stream, &tiling);
+    let assoc = associate::run(&filtered.stream, tiling);
     report.record("associate", t);
 
     // ④ Solve: RoI mask optimization
@@ -209,6 +322,129 @@ pub fn build_plan_with(
         filter_report: filtered.report,
         n_constraints: assoc.table.n_constraints(),
         report,
+    })
+}
+
+/// What one shard's independent run hands back to the merge.
+struct ShardOutcome {
+    tiles: HashSet<GlobalTile>,
+    filter_report: Option<FilterReport>,
+    report: ShardReport,
+}
+
+/// Fan the overlap components out on [`parallel::ordered_map`] workers
+/// and merge in shard order.  Each shard plans its sub-stream with
+/// global camera indexing (tile ids never need remapping), so the merge
+/// is a plain union of disjoint per-shard solutions followed by one
+/// global Group pass — grouping is per-camera, so post-merge grouping is
+/// identical to grouping inside each shard.
+#[allow(clippy::too_many_arguments)]
+fn plan_sharded(
+    stream: ReidStream,
+    tiling: &Tiling,
+    sys: &SystemConfig,
+    method: &Method,
+    opts: &OfflineOptions,
+    mut report: PlanReport,
+    start: Instant,
+    shards: Vec<shard::Shard>,
+) -> Result<OfflinePlan> {
+    let threads = report.threads;
+    // Split the worker budget by each shard's share of the O(k²) pair
+    // fitting, not uniformly: on a skewed fleet (one downtown component
+    // plus many singletons) a uniform split would hand the dominant
+    // shard one thread and make `--shards auto` slower than unsharded.
+    // Tiny shards still get one inline worker; the transient
+    // oversubscription while a dominant shard and the fan-out overlap is
+    // bounded and strictly better than starving it.
+    let pair_count =
+        |sh: &shard::Shard| sh.cameras.len() * sh.cameras.len().saturating_sub(1);
+    let total_pairs: usize = shards.iter().map(&pair_count).sum();
+
+    let t = Instant::now();
+    let outcomes = parallel::ordered_map(&shards, threads, |sh| {
+        let inner_threads = (threads * pair_count(sh) / total_pairs.max(1)).max(1);
+        plan_one_shard(sh, &stream, tiling, sys, method, opts, inner_threads)
+    });
+    report.record("plan", t);
+
+    // deterministic shard-order merge back into global camera indexing
+    let t = Instant::now();
+    let mut tiles: HashSet<GlobalTile> = HashSet::new();
+    let mut filter_report = method.uses_filters().then(FilterReport::default);
+    let mut n_constraints = 0usize;
+    for outcome in outcomes {
+        let o = outcome?;
+        n_constraints += o.report.n_constraints;
+        if let (Some(acc), Some(r)) = (filter_report.as_mut(), o.filter_report.as_ref()) {
+            acc.pairs_fit += r.pairs_fit;
+            acc.fp_rewritten += r.fp_rewritten;
+            acc.fn_removed += r.fn_removed;
+        }
+        tiles.extend(o.tiles.iter().copied());
+        report.shards.push(o.report);
+    }
+    let masks = RoiMasks::from_solution(tiling, &tiles);
+    report.record("merge", t);
+
+    let t = Instant::now();
+    let grouped = group::run(&masks, method.uses_merging());
+    report.record("group", t);
+
+    report.total_seconds = start.elapsed().as_secs_f64();
+    Ok(OfflinePlan {
+        masks,
+        groups: grouped.groups,
+        blocks: grouped.blocks,
+        filter_report,
+        n_constraints,
+        report,
+    })
+}
+
+/// One shard's Filter → Associate → Solve run over its sub-stream,
+/// restricted to intra-shard camera pairs.
+fn plan_one_shard(
+    sh: &shard::Shard,
+    stream: &ReidStream,
+    tiling: &Tiling,
+    sys: &SystemConfig,
+    method: &Method,
+    opts: &OfflineOptions,
+    threads: usize,
+) -> Result<ShardOutcome> {
+    let mut stages = Vec::new();
+
+    // ② Filter, intra-shard pairs only
+    let t = Instant::now();
+    let frame = (tiling.frame_w as f64, tiling.frame_h as f64);
+    let filtered =
+        filter::run_scoped(sh.substream(stream), sys, method, threads, Some(&sh.cameras), frame);
+    stages.push(StageTiming { stage: "filter", seconds: t.elapsed().as_secs_f64() });
+
+    // ③ Associate: shard-local constraint table (global tile ids; the
+    // solver's dense re-indexing shrinks to this shard's candidate tiles)
+    let t = Instant::now();
+    let assoc = associate::run(&filtered.stream, tiling);
+    stages.push(StageTiming { stage: "associate", seconds: t.elapsed().as_secs_f64() });
+
+    // ④ Solve: shard-local set cover
+    let t = Instant::now();
+    opts.solver
+        .validate(&assoc.table)
+        .with_context(|| format!("shard of cameras {:?}", sh.cameras))?;
+    let solution = opts.solver.build().solve(&assoc.table);
+    stages.push(StageTiming { stage: "solve", seconds: t.elapsed().as_secs_f64() });
+
+    Ok(ShardOutcome {
+        report: ShardReport {
+            cameras: sh.cameras.clone(),
+            stages,
+            n_constraints: assoc.table.n_constraints(),
+            mask_tiles: solution.size(),
+        },
+        tiles: solution.tiles,
+        filter_report: filtered.report,
     })
 }
 
@@ -261,7 +497,7 @@ mod tests {
             &cfg.scenario,
             &cfg.system,
             &Method::CrossRoi,
-            &OfflineOptions { threads: 2, solver: SolverKind::Greedy },
+            &OfflineOptions { threads: 2, ..Default::default() },
         )
         .unwrap();
         let stages: Vec<&str> = plan.report.stages.iter().map(|s| s.stage).collect();
@@ -303,6 +539,95 @@ mod tests {
             without.masks.total_size(),
             with.masks.total_size()
         );
+    }
+
+    #[test]
+    fn full_frame_plan_derives_from_the_tiling() {
+        // regression: the full-frame path used to hardcode the sim's
+        // FRAME_W/FRAME_H for the rect and block grid, drifting from
+        // `group::run` (which derives from `masks.tiling`) for any
+        // non-sim tiling
+        let tiling = Tiling::new(2, 160, 96, 16);
+        let stream = ReidStream::new(2, 1, Vec::new());
+        let cfg = Config::test_small();
+        let plan = build_plan_from_stream(
+            &stream,
+            &tiling,
+            &cfg.system,
+            &Method::Baseline,
+            &OfflineOptions::default(),
+        )
+        .unwrap();
+        for cam in 0..2 {
+            assert_eq!(plan.groups[cam], vec![IRect::new(0, 0, 160, 96)]);
+            // 160x96 at 32-px blocks: 5 x 3 grid
+            assert_eq!(plan.blocks[cam], (0..15).collect::<Vec<i32>>());
+            assert!((plan.masks.coverage(cam) - 1.0).abs() < 1e-12);
+        }
+        // the blocks must agree with what group::run derives from the
+        // same tiling
+        let grouped = group::run(&plan.masks, true);
+        assert_eq!(plan.blocks, grouped.blocks);
+    }
+
+    #[test]
+    fn sharded_exact_solver_validates_per_shard() {
+        // the exact certifier's constraint cap applies per shard: a toy
+        // two-component fleet plans end-to-end with --solver exact, and
+        // the report carries one sub-report per component
+        use crate::reid::records::RawDetection;
+        use crate::util::geometry::Rect;
+        let det = |cam: usize, frame: usize, raw_id: u32, x: f64| RawDetection {
+            cam,
+            frame,
+            bbox: Rect::new(x, 32.0, 16.0, 16.0),
+            raw_id,
+            true_id: raw_id,
+        };
+        // components {0,1} and {2,3}: one shared object each, every frame
+        let mut records = Vec::new();
+        for f in 0..4 {
+            records.push(det(0, f, 1, 32.0));
+            records.push(det(1, f, 1, 48.0));
+            records.push(det(2, f, 100, 64.0));
+            records.push(det(3, f, 100, 80.0));
+        }
+        let stream = ReidStream::new(4, 4, records);
+        let tiling = Tiling::new(4, 320, 192, 16);
+        let cfg = Config::test_small();
+        let opts = OfflineOptions { solver: SolverKind::Exact, ..Default::default() };
+        let plan =
+            build_plan_from_stream(&stream, &tiling, &cfg.system, &Method::CrossRoi, &opts)
+                .unwrap();
+        assert_eq!(plan.report.solver, "exact");
+        assert_eq!(plan.report.shards.len(), 2);
+        assert_eq!(plan.report.shards[0].cameras, vec![0, 1]);
+        assert_eq!(plan.report.shards[1].cameras, vec![2, 3]);
+        // each component's constraint has two single-tile regions; the
+        // optimum keeps one tile per component
+        assert_eq!(plan.n_constraints, 2);
+        assert_eq!(plan.masks.total_size(), 2);
+        for s in &plan.report.shards {
+            assert_eq!(s.n_constraints, 1);
+            assert_eq!(s.mask_tiles, 1);
+            assert!(s.stage_seconds("solve").is_some());
+        }
+    }
+
+    #[test]
+    fn plan_from_stream_rejects_mismatched_tiling() {
+        let tiling = Tiling::new(3, 160, 96, 16);
+        let stream = ReidStream::new(2, 1, Vec::new());
+        let cfg = Config::test_small();
+        let err = build_plan_from_stream(
+            &stream,
+            &tiling,
+            &cfg.system,
+            &Method::CrossRoi,
+            &OfflineOptions::default(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("cameras"), "{err}");
     }
 
     #[test]

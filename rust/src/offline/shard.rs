@@ -1,0 +1,212 @@
+//! Stage ②-prep — Shard: partition the fleet into overlap-connected
+//! camera clusters so the rest of the planner runs per cluster.
+//!
+//! City-scale deployments are sparse (ReXCam, arXiv:1811.01268): cameras
+//! cluster around intersections, and a camera pair whose viewing fields
+//! never overlap contributes nothing to the association table — fitting
+//! its tandem filters or carrying its tiles through one global set-cover
+//! only burns the O(n²) that keeps the offline phase from scaling.  The
+//! shard stage builds the camera overlap graph from the profile stream —
+//! an edge wherever two cameras ever report the same raw id at the same
+//! frame, a superset of the pairs the tandem filters could ever fit (a
+//! pair with no co-occurrence has no positive samples) and far cheaper
+//! than fitting them first — and partitions it into connected components
+//! with a union-find.
+//!
+//! Determinism: the partition is a pure function of the stream (no
+//! iteration-order dependence — unions commute), shards are ordered by
+//! their smallest camera index and cameras ascend inside each shard, so
+//! the downstream shard-order merge is byte-identical across runs and
+//! thread counts (`rust/tests/offline_determinism.rs`).
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::reid::records::ReidStream;
+
+/// Whether the planner partitions the fleet (CLI: `--shards auto|off`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardMode {
+    /// Partition into overlap components; a fully-connected fleet (one
+    /// component) falls through to the unsharded path.
+    #[default]
+    Auto,
+    /// Always plan the fleet as one instance.
+    Off,
+}
+
+impl ShardMode {
+    pub fn parse(name: &str) -> Result<ShardMode> {
+        Ok(match name {
+            "auto" => ShardMode::Auto,
+            "off" => ShardMode::Off,
+            other => bail!("unknown shard mode {other:?} (expected auto|off)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardMode::Auto => "auto",
+            ShardMode::Off => "off",
+        }
+    }
+}
+
+/// One overlap-connected camera cluster (global camera indices, ascending).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Shard {
+    pub cameras: Vec<usize>,
+}
+
+impl Shard {
+    /// The shard's records only, global camera indexing preserved (the
+    /// association table keeps producing global tile ids, so the merge
+    /// is a plain union).
+    pub fn substream(&self, stream: &ReidStream) -> ReidStream {
+        let mut member = vec![false; stream.n_cameras];
+        for &c in &self.cameras {
+            member[c] = true;
+        }
+        stream.filtered(|r| member[r.cam])
+    }
+}
+
+/// Partition the fleet into overlap components of the profile stream.
+/// Cameras with no co-occurrence at all become singleton shards.
+pub fn partition(stream: &ReidStream) -> Vec<Shard> {
+    let mut uf = UnionFind::new(stream.n_cameras);
+    // (frame, raw_id) → first camera seen carrying it; later carriers
+    // union into that representative (transitively joining each other)
+    let mut first_cam: HashMap<(usize, u32), usize> = HashMap::new();
+    for rec in stream.all() {
+        match first_cam.entry((rec.frame, rec.raw_id)) {
+            Entry::Occupied(e) => uf.union(*e.get(), rec.cam),
+            Entry::Vacant(v) => {
+                v.insert(rec.cam);
+            }
+        }
+    }
+    let mut by_root: HashMap<usize, Vec<usize>> = HashMap::new();
+    for cam in 0..stream.n_cameras {
+        by_root.entry(uf.find(cam)).or_default().push(cam);
+    }
+    // cameras were pushed in ascending order; order shards the same way
+    let mut shards: Vec<Shard> =
+        by_root.into_values().map(|cameras| Shard { cameras }).collect();
+    shards.sort_by_key(|s| s.cameras[0]);
+    shards
+}
+
+/// Union-find with path halving + union by size.
+struct UnionFind {
+    parent: Vec<usize>,
+    size: Vec<usize>,
+}
+
+impl UnionFind {
+    fn new(n: usize) -> UnionFind {
+        UnionFind { parent: (0..n).collect(), size: vec![1; n] }
+    }
+
+    fn find(&mut self, mut x: usize) -> usize {
+        while self.parent[x] != x {
+            self.parent[x] = self.parent[self.parent[x]];
+            x = self.parent[x];
+        }
+        x
+    }
+
+    fn union(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return;
+        }
+        let (big, small) = if self.size[ra] >= self.size[rb] { (ra, rb) } else { (rb, ra) };
+        self.parent[small] = big;
+        self.size[big] += self.size[small];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::reid::records::RawDetection;
+    use crate::util::geometry::Rect;
+
+    fn det(cam: usize, frame: usize, raw_id: u32) -> RawDetection {
+        RawDetection { cam, frame, bbox: Rect::new(10.0, 10.0, 20.0, 20.0), raw_id, true_id: raw_id }
+    }
+
+    fn cams(shards: &[Shard]) -> Vec<Vec<usize>> {
+        shards.iter().map(|s| s.cameras.clone()).collect()
+    }
+
+    #[test]
+    fn disjoint_components_split() {
+        // cams {0,1} share id 1; cams {2,3} share id 9; cam 4 sees only
+        // its own id
+        let s = ReidStream::new(
+            5,
+            2,
+            vec![
+                det(0, 0, 1),
+                det(1, 0, 1),
+                det(2, 0, 9),
+                det(3, 1, 9),
+                det(2, 1, 9),
+                det(4, 0, 50),
+            ],
+        );
+        assert_eq!(cams(&partition(&s)), vec![vec![0, 1], vec![2, 3], vec![4]]);
+    }
+
+    #[test]
+    fn transitive_overlap_joins() {
+        // 0-1 co-occur and 1-2 co-occur: one component even though 0 and 2
+        // never share a frame id directly
+        let s = ReidStream::new(
+            3,
+            2,
+            vec![det(0, 0, 1), det(1, 0, 1), det(1, 1, 2), det(2, 1, 2)],
+        );
+        assert_eq!(cams(&partition(&s)), vec![vec![0, 1, 2]]);
+    }
+
+    #[test]
+    fn same_id_on_different_frames_does_not_join() {
+        let s = ReidStream::new(2, 2, vec![det(0, 0, 1), det(1, 1, 1)]);
+        assert_eq!(cams(&partition(&s)), vec![vec![0], vec![1]]);
+    }
+
+    #[test]
+    fn empty_stream_yields_singletons() {
+        let s = ReidStream::new(3, 1, vec![]);
+        assert_eq!(cams(&partition(&s)), vec![vec![0], vec![1], vec![2]]);
+    }
+
+    #[test]
+    fn substream_keeps_only_member_records() {
+        let s = ReidStream::new(
+            4,
+            1,
+            vec![det(0, 0, 1), det(1, 0, 1), det(2, 0, 9), det(3, 0, 9)],
+        );
+        let sh = Shard { cameras: vec![2, 3] };
+        let sub = sh.substream(&s);
+        assert_eq!(sub.n_cameras, 4, "global indexing must be preserved");
+        assert_eq!(sub.len(), 2);
+        assert!(sub.all().iter().all(|r| r.cam >= 2));
+    }
+
+    #[test]
+    fn mode_parses_and_names() {
+        assert_eq!(ShardMode::parse("auto").unwrap(), ShardMode::Auto);
+        assert_eq!(ShardMode::parse("off").unwrap(), ShardMode::Off);
+        assert!(ShardMode::parse("on").is_err());
+        assert_eq!(ShardMode::Auto.name(), "auto");
+        assert_eq!(ShardMode::Off.name(), "off");
+        assert_eq!(ShardMode::default(), ShardMode::Auto);
+    }
+}

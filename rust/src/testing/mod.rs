@@ -57,6 +57,64 @@ pub mod gen {
     }
 }
 
+/// Synthetic multi-intersection fleets — the city-scale fleet shape the
+/// overlap-sharded planner targets, which the simulator cannot build as
+/// one scenario.  Shared by the sharding determinism tests, the
+/// `offline_scaling` bench and the `sharded_fleet` example so the fleet
+/// construction (camera offsets, disjoint id spaces) cannot drift
+/// between them.
+pub mod fleet {
+    use crate::association::tiles::Tiling;
+    use crate::config::Config;
+    use crate::offline::profile;
+    use crate::reid::records::{RawDetection, ReidStream};
+    use crate::sim::Scenario;
+
+    /// Profile `n_intersections` disjoint 4-camera intersections (seeds
+    /// `base_seed + k`) and concatenate their streams into one fleet:
+    /// camera indices are offset by intersection and raw/true id spaces
+    /// are kept disjoint, so the co-occurrence graph has (at least) one
+    /// component per intersection and none across.  The scenario knobs
+    /// (window lengths, arrival rate, tile size) come from `base`; its
+    /// `n_cameras`/`seed` are overridden per intersection.
+    pub fn disjoint_intersections(
+        base: &Config,
+        n_intersections: usize,
+        base_seed: u64,
+    ) -> (ReidStream, Tiling) {
+        let mut records: Vec<RawDetection> = Vec::new();
+        let mut n_frames = 0usize;
+        let mut id_offset = 0u32;
+        for k in 0..n_intersections {
+            let mut cfg = base.clone();
+            cfg.scenario.n_cameras = 4;
+            cfg.scenario.seed = base_seed + k as u64;
+            let scenario = Scenario::build(&cfg.scenario);
+            let stream = profile::run(&scenario).stream;
+            n_frames = stream.n_frames; // identical windows per intersection
+            let mut max_id = id_offset;
+            for rec in stream.all() {
+                let mut r = *rec;
+                r.cam += 4 * k;
+                r.raw_id += id_offset;
+                r.true_id += id_offset;
+                max_id = max_id.max(r.raw_id).max(r.true_id);
+                records.push(r);
+            }
+            id_offset = max_id + 1;
+        }
+        let n_cams = 4 * n_intersections;
+        let stream = ReidStream::new(n_cams, n_frames, records);
+        let tiling = Tiling::new(
+            n_cams,
+            crate::sim::FRAME_W,
+            crate::sim::FRAME_H,
+            base.scenario.tile_px,
+        );
+        (stream, tiling)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -8,9 +8,14 @@
 //! (pair-order rewrites, fresh ids assigned after the merge) must make
 //! the schedule unobservable.
 
+use crossroi::association::tiles::Tiling;
 use crossroi::config::Config;
 use crossroi::coordinator::Method;
-use crossroi::offline::{build_plan_with, OfflineOptions, OfflinePlan, SolverKind};
+use crossroi::offline::{
+    build_plan_from_stream, build_plan_with, OfflineOptions, OfflinePlan, ShardMode,
+    SolverKind,
+};
+use crossroi::reid::records::ReidStream;
 use crossroi::sim::Scenario;
 
 fn small() -> (Scenario, Config) {
@@ -19,7 +24,7 @@ fn small() -> (Scenario, Config) {
 }
 
 fn plan_at(scenario: &Scenario, cfg: &Config, method: &Method, threads: usize) -> OfflinePlan {
-    let opts = OfflineOptions { threads, solver: SolverKind::Greedy };
+    let opts = OfflineOptions { threads, solver: SolverKind::Greedy, shards: ShardMode::Auto };
     build_plan_with(scenario, &cfg.scenario, &cfg.system, method, &opts)
         .expect("the greedy planner never fails")
 }
@@ -89,6 +94,129 @@ fn stage_report_shape_is_stable_across_threads() {
         );
         assert_eq!(plan.report.solver, "greedy");
     }
+}
+
+// ---- overlap-sharded planning ----
+
+/// A disjoint multi-intersection fleet over the small test windows — the
+/// construction itself (camera offsets, disjoint id spaces) is shared
+/// with the bench and example via [`crossroi::testing::fleet`].
+fn disjoint_fleet(n_intersections: usize, base_seed: u64) -> (ReidStream, Tiling, Config) {
+    let cfg = Config::test_small();
+    let (stream, tiling) =
+        crossroi::testing::fleet::disjoint_intersections(&cfg, n_intersections, base_seed);
+    (stream, tiling, cfg)
+}
+
+fn plan_stream_at(
+    stream: &ReidStream,
+    tiling: &Tiling,
+    cfg: &Config,
+    shards: ShardMode,
+    threads: usize,
+) -> OfflinePlan {
+    let opts = OfflineOptions { threads, solver: SolverKind::Greedy, shards };
+    build_plan_from_stream(stream, tiling, &cfg.system, &Method::CrossRoi, &opts)
+        .expect("the greedy planner never fails")
+}
+
+#[test]
+fn shards_auto_equals_off_byte_identically_on_one_intersection() {
+    // the acceptance tie-down: on a fleet the partition does not split
+    // (the 5-camera rig overlaps at the crossing), --shards auto must
+    // produce exactly the --shards off plan
+    let (scenario, cfg) = small();
+    let mk = |shards: ShardMode| {
+        let opts = OfflineOptions { threads: 2, solver: SolverKind::Greedy, shards };
+        build_plan_with(&scenario, &cfg.scenario, &cfg.system, &Method::CrossRoi, &opts)
+            .expect("the greedy planner never fails")
+    };
+    let auto = mk(ShardMode::Auto);
+    let off = mk(ShardMode::Off);
+    assert_plans_identical(&auto, &off, "shards auto vs off, connected fleet");
+    assert!(off.report.shards.is_empty(), "--shards off must not shard");
+    // whether or not the partition split this fleet, the sub-reports must
+    // cover every camera exactly once
+    if !auto.report.shards.is_empty() {
+        let mut covered: Vec<usize> =
+            auto.report.shards.iter().flat_map(|s| s.cameras.iter().copied()).collect();
+        covered.sort_unstable();
+        assert_eq!(covered, (0..5).collect::<Vec<_>>());
+    }
+}
+
+#[test]
+fn shards_auto_equals_off_byte_identically_on_a_disjoint_fleet() {
+    // shard-count independence: the sharded fan-out must be unobservable
+    // in the plan even when it actually splits the fleet
+    let (stream, tiling, cfg) = disjoint_fleet(3, 7);
+    let auto = plan_stream_at(&stream, &tiling, &cfg, ShardMode::Auto, 2);
+    let off = plan_stream_at(&stream, &tiling, &cfg, ShardMode::Off, 2);
+    assert!(auto.report.shards.len() >= 3, "expected ≥ 3 components");
+    // shards never span intersections, and cover the fleet exactly
+    let mut covered = Vec::new();
+    for s in &auto.report.shards {
+        assert!(
+            s.cameras.iter().all(|c| c / 4 == s.cameras[0] / 4),
+            "shard spans intersections: {:?}",
+            s.cameras
+        );
+        covered.extend(s.cameras.iter().copied());
+    }
+    covered.sort_unstable();
+    assert_eq!(covered, (0..stream.n_cameras).collect::<Vec<_>>());
+    assert_plans_identical(&auto, &off, "shards auto vs off, disjoint fleet");
+}
+
+#[test]
+fn sharded_plans_are_byte_identical_across_thread_counts() {
+    let (stream, tiling, cfg) = disjoint_fleet(2, 41);
+    let reference = plan_stream_at(&stream, &tiling, &cfg, ShardMode::Auto, 1);
+    for threads in [2usize, 8] {
+        let parallel = plan_stream_at(&stream, &tiling, &cfg, ShardMode::Auto, threads);
+        assert_plans_identical(
+            &reference,
+            &parallel,
+            &format!("sharded, {threads} threads vs sequential"),
+        );
+        assert_eq!(parallel.report.shards.len(), reference.report.shards.len());
+    }
+    let auto_cores = plan_stream_at(&stream, &tiling, &cfg, ShardMode::Auto, 0);
+    assert_plans_identical(&reference, &auto_cores, "sharded, auto threads");
+}
+
+#[test]
+fn disjoint_merged_masks_equal_the_per_fleet_concatenation() {
+    // a disjoint fleet planned sharded must byte-match each intersection
+    // planned alone (camera indices shifted, ids uniformly offset — both
+    // invisible to the plan)
+    let n = 2usize;
+    let base_seed = 99u64;
+    let (stream, tiling, cfg) = disjoint_fleet(n, base_seed);
+    let merged = plan_stream_at(&stream, &tiling, &cfg, ShardMode::Auto, 2);
+    let mut total_constraints = 0usize;
+    for k in 0..n {
+        let mut c = cfg.clone();
+        // exactly the per-intersection scenario the fleet helper profiled
+        c.scenario.n_cameras = 4;
+        c.scenario.seed = base_seed + k as u64;
+        let sc = Scenario::build(&c.scenario);
+        let opts =
+            OfflineOptions { threads: 2, solver: SolverKind::Greedy, shards: ShardMode::Off };
+        let alone = build_plan_with(&sc, &c.scenario, &c.system, &Method::CrossRoi, &opts)
+            .expect("the greedy planner never fails");
+        for cam in 0..4 {
+            let g = 4 * k + cam;
+            assert_eq!(
+                merged.masks.tiles[g], alone.masks.tiles[cam],
+                "intersection {k} cam {cam}: merged mask diverged from standalone plan"
+            );
+            assert_eq!(merged.groups[g], alone.groups[cam], "intersection {k} cam {cam} groups");
+            assert_eq!(merged.blocks[g], alone.blocks[cam], "intersection {k} cam {cam} blocks");
+        }
+        total_constraints += alone.n_constraints;
+    }
+    assert_eq!(merged.n_constraints, total_constraints, "constraint counts must sum");
 }
 
 #[test]
