@@ -24,12 +24,17 @@
 
 mod common;
 
+use std::time::Instant;
+
+use crossroi::association::tiles::Tiling;
 use crossroi::bench::Table;
 use crossroi::config::Config;
 use crossroi::coordinator::Method;
 use crossroi::offline::{
-    build_plan_from_stream, build_plan_with, OfflineOptions, OfflinePlan, ShardMode, SolverKind,
+    associate, build_plan_from_stream, build_plan_with, solve, OfflineOptions, OfflinePlan,
+    ShardMode, SolverKind,
 };
+use crossroi::reid::error_model::{ErrorModelParams, RawReid};
 use crossroi::sim::Scenario;
 use crossroi::testing::fleet::disjoint_intersections;
 
@@ -153,6 +158,84 @@ fn disjoint_fleet_sweep(base: &Config) {
     table.print("Overlap-sharded planning (disjoint 4-camera intersections, 16-64 cameras)");
 }
 
+/// Continuous re-profiling (DESIGN.md §7): warm-started re-solve
+/// (`Solver::resolve` via `solve::run_incremental`) against a
+/// from-scratch solve on a window slid by various fractions.  The slid
+/// window keeps most of its constraints, so the warm seed closes them for
+/// free and only the novel tail pays greedy rounds — re-solve time should
+/// sit well under from-scratch across the sweep.
+fn warm_start_sweep(base: &Config) {
+    let mut cfg = base.clone();
+    cfg.scenario.n_cameras = 8;
+    // drifting traffic so the slid windows genuinely change
+    cfg.scenario.drift_at_secs = cfg.scenario.profile_secs;
+    cfg.scenario.drift_strength = 0.75;
+    let scenario = Scenario::build(&cfg.scenario);
+    let tiling = Tiling::new(
+        cfg.scenario.n_cameras,
+        crossroi::sim::FRAME_W,
+        crossroi::sim::FRAME_H,
+        cfg.scenario.tile_px,
+    );
+    let window = scenario.profile_range().len();
+    let params = ErrorModelParams::default();
+    let base_stream = RawReid::generate(&scenario, 0..window, &params);
+    let base_table = associate::run(&base_stream, &tiling).table;
+    let solver = SolverKind::Greedy.build();
+    let prev = solve::run(&base_table, solver.as_ref());
+
+    let reps = 5;
+    let mut table = Table::new(&[
+        "slide",
+        "constraints",
+        "novel",
+        "fresh ms",
+        "warm ms",
+        "speedup",
+        "|M| fresh",
+        "|M| warm",
+    ]);
+    for slide_frac in [0.1f64, 0.25, 0.5] {
+        let slide = ((window as f64 * slide_frac) as usize).max(1);
+        let end = (slide + window).min(scenario.n_frames());
+        let stream = RawReid::generate(&scenario, slide..end, &params);
+        let slid = associate::run(&stream, &tiling).table;
+        let base_set: std::collections::HashSet<&crossroi::association::table::Constraint> =
+            base_table.constraints.iter().collect();
+        let novel = slid.constraints.iter().filter(|c| !base_set.contains(*c)).count();
+        let time = |f: &dyn Fn() -> usize| -> (f64, usize) {
+            let mut best = f64::INFINITY;
+            let mut size = 0;
+            for _ in 0..reps {
+                let t0 = Instant::now();
+                size = f();
+                best = best.min(t0.elapsed().as_secs_f64());
+            }
+            (best, size)
+        };
+        let (fresh_s, fresh_m) = time(&|| solve::run(&slid, solver.as_ref()).solution.size());
+        let (warm_s, warm_m) =
+            time(&|| solve::run_incremental(&slid, solver.as_ref(), &prev.solution).solution.size());
+        // noise-tolerant backstop: the table shows the real speedup; this
+        // only trips when warm-starting regresses to slower than scratch
+        assert!(
+            warm_s <= fresh_s * 1.25,
+            "warm re-solve ({warm_s:.4}s) regressed past from-scratch ({fresh_s:.4}s) at slide {slide_frac}"
+        );
+        table.row(vec![
+            format!("{:.0}%", slide_frac * 100.0),
+            format!("{}", slid.n_constraints()),
+            format!("{novel}"),
+            format!("{:.2}", fresh_s * 1e3),
+            format!("{:.2}", warm_s * 1e3),
+            format!("{:.2}x", fresh_s / warm_s.max(1e-9)),
+            format!("{fresh_m}"),
+            format!("{warm_m}"),
+        ]);
+    }
+    table.print("Warm-start re-solve vs from-scratch (slid profile window, 8 drifting cameras)");
+}
+
 fn main() {
     let base = common::bench_config();
     let threads = OfflineOptions::default().effective_threads();
@@ -162,4 +245,5 @@ fn main() {
     );
     single_intersection_sweep(&base, threads);
     disjoint_fleet_sweep(&base);
+    warm_start_sweep(&base);
 }

@@ -20,6 +20,7 @@ pub const VALUE_FLAGS: &[&str] = &[
     "config", "artifacts", "seed", "segment-secs", "svm-gamma", "ransac-theta",
     "reducto-target", "eval-secs", "profile-secs", "cameras", "method", "out",
     "bandwidth-mbps", "qp", "offline-threads", "solver", "shards",
+    "replan-every", "replan-drift", "drift-at", "drift-strength",
 ];
 
 impl Args {

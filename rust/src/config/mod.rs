@@ -35,6 +35,16 @@ pub struct ScenarioConfig {
     pub tile_px: u32,
     /// Sensor noise std (u8 scale / 255).
     pub sensor_noise: f64,
+    /// Traffic drift (the continuous re-profiling scenario, DESIGN.md §7):
+    /// absolute scenario time in seconds at which the per-arm arrival mix
+    /// flips between the two roads; `0.0` disables drift (the default —
+    /// stationary traffic, byte-identical to pre-drift builds).
+    pub drift_at_secs: f64,
+    /// Drift magnitude in `[0, 1]`: before `drift_at_secs` the EW arms
+    /// spawn at `(1 + s) ×` the base rate and the NS arms at `(1 − s) ×`;
+    /// after, the roles swap — shifting object flow between the camera
+    /// overlaps mid-run.  `1.0` silences the disfavoured road entirely.
+    pub drift_strength: f64,
 }
 
 impl Default for ScenarioConfig {
@@ -51,6 +61,8 @@ impl Default for ScenarioConfig {
             truck_fraction: 0.12,
             tile_px: 16,
             sensor_noise: 0.015,
+            drift_at_secs: 0.0,
+            drift_strength: 0.75,
         }
     }
 }
@@ -84,6 +96,12 @@ impl ScenarioConfig {
         if self.tile_px == 0 {
             bail!("tile_px must be positive");
         }
+        if self.drift_at_secs < 0.0 {
+            bail!("drift_at_secs must be non-negative (0 disables drift)");
+        }
+        if !(0.0..=1.0).contains(&self.drift_strength) {
+            bail!("drift_strength must be in [0,1]");
+        }
         Ok(())
     }
 
@@ -101,6 +119,10 @@ impl ScenarioConfig {
             "truck_fraction" => self.truck_fraction = value.as_f64().context("truck_fraction")?,
             "tile_px" => self.tile_px = value.as_u64().context("tile_px")? as u32,
             "sensor_noise" => self.sensor_noise = value.as_f64().context("sensor_noise")?,
+            "drift_at_secs" => self.drift_at_secs = value.as_f64().context("drift_at_secs")?,
+            "drift_strength" => {
+                self.drift_strength = value.as_f64().context("drift_strength")?
+            }
             other => bail!("unknown scenario key {other:?}"),
         }
         Ok(())

@@ -56,6 +56,24 @@ pub struct MethodReport {
     pub regions_per_cam: Vec<usize>,
     /// Wall-clock cost of running the method's offline phase (seconds).
     pub offline_seconds: f64,
+    // --- continuous re-profiling (DESIGN.md §7; zero/empty when the
+    // policy is `Never`) ---
+    /// Re-plans executed over the run (epoch boundaries where the policy
+    /// fired; mere drift checks are not counted).
+    pub replan_count: usize,
+    /// Executed re-plans served by the warm-started solver (vs fresh
+    /// from-scratch re-solves).
+    pub replan_warm_count: usize,
+    /// Mean mask churn (Jaccard distance between consecutive global tile
+    /// sets) across executed re-plans.
+    pub replan_mask_churn: f64,
+    /// Wall seconds spent re-profiling: drift checks + executed re-plans
+    /// (like `offline_seconds`, inherently wall-clock).
+    pub replan_seconds: f64,
+    /// DES-clock completion time of each executed re-plan (epoch-boundary
+    /// trigger + measured planning seconds, timestamped by the transport
+    /// replay).
+    pub replan_done_at: Vec<f64>,
 }
 
 impl MethodReport {
@@ -104,6 +122,11 @@ impl MethodReport {
                 Json::Arr(self.regions_per_cam.iter().map(|&r| Json::Num(r as f64)).collect()),
             ),
             ("offline_seconds", Json::Num(self.offline_seconds)),
+            ("replan_count", Json::Num(self.replan_count as f64)),
+            ("replan_warm_count", Json::Num(self.replan_warm_count as f64)),
+            ("replan_mask_churn", Json::Num(self.replan_mask_churn)),
+            ("replan_seconds", Json::Num(self.replan_seconds)),
+            ("replan_done_at", Json::arr_f64(&self.replan_done_at)),
         ])
     }
 }

@@ -1,14 +1,15 @@
 //! The L3 coordinator: CrossRoI's two-phase workflow (§4.1).
 //!
-//! [`offline`] re-exports the staged offline planner
-//! ([`crate::offline`]: Profile → Filter → Associate → Solve → Group over
-//! the profile window, producing each camera's plan with a per-stage
-//! [`PlanReport`]); [`online`] orchestrates the
-//! staged streaming pipeline in [`crate::pipeline`] (⑤ per-camera
+//! The offline planner lives in [`crate::offline`] (Profile → Filter →
+//! Associate → Solve → Group over the profile window, producing each
+//! camera's plan with a per-stage [`PlanReport`]; the historical
+//! [`offline`] path here is a deprecated shim).  [`online`] orchestrates
+//! the staged streaming pipeline in [`crate::pipeline`] (⑤ per-camera
 //! crop/group/encode workers, ⑥ merged batched RoI-CNN inference) over
-//! the evaluation window, with real measured compute and a discrete-event
-//! network/queueing replay, and scores the unique-vehicle query.
-//! [`metrics`] defines the report every bench prints.
+//! the evaluation window — with real measured compute, a discrete-event
+//! network/queueing replay, and optional continuous re-profiling
+//! (DESIGN.md §7) — and scores the unique-vehicle query.  [`metrics`]
+//! defines the report every bench prints.
 
 pub mod method;
 pub mod metrics;
@@ -17,7 +18,7 @@ pub mod online;
 
 pub use method::Method;
 pub use metrics::{LatencyBreakdown, MethodReport};
-pub use offline::{
+pub use crate::offline::{
     build_plan, build_plan_from_stream, build_plan_with, OfflineOptions, OfflinePlan,
     PlanReport, ShardMode, ShardReport, SolverKind,
 };

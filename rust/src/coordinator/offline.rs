@@ -1,10 +1,30 @@
-//! Compatibility shim: the offline planner lives in [`crate::offline`] —
-//! a staged subsystem (Profile → Filter → Associate → Solve → Group) with
-//! parallel pair fitting and a pluggable set-cover solver.  Re-exported
-//! here so the coordinator's historical public surface
-//! (`coordinator::build_plan`) keeps working.
+//! Deprecated compatibility shim: the offline planner lives in
+//! [`crate::offline`] — a staged subsystem (Profile → Filter → Associate
+//! → Solve → Group) with parallel pair fitting, overlap sharding, a
+//! pluggable set-cover solver and continuous re-profiling.
+//!
+//! These re-exports carry `#[deprecated]` so stale
+//! `coordinator::offline::*` imports warn (pointing at the real module)
+//! instead of silently aliasing it; they will be removed once nothing
+//! external spells the old path.
 
-pub use crate::offline::{
-    build_plan, build_plan_from_stream, build_plan_with, OfflineOptions, OfflinePlan,
-    PlanReport, ShardMode, ShardReport, SolverKind, StageTiming,
-};
+#[deprecated(note = "use `crate::offline::build_plan`")]
+pub use crate::offline::build_plan;
+#[deprecated(note = "use `crate::offline::build_plan_from_stream`")]
+pub use crate::offline::build_plan_from_stream;
+#[deprecated(note = "use `crate::offline::build_plan_with`")]
+pub use crate::offline::build_plan_with;
+#[deprecated(note = "use `crate::offline::OfflineOptions`")]
+pub use crate::offline::OfflineOptions;
+#[deprecated(note = "use `crate::offline::OfflinePlan`")]
+pub use crate::offline::OfflinePlan;
+#[deprecated(note = "use `crate::offline::PlanReport`")]
+pub use crate::offline::PlanReport;
+#[deprecated(note = "use `crate::offline::ShardMode`")]
+pub use crate::offline::ShardMode;
+#[deprecated(note = "use `crate::offline::ShardReport`")]
+pub use crate::offline::ShardReport;
+#[deprecated(note = "use `crate::offline::SolverKind`")]
+pub use crate::offline::SolverKind;
+#[deprecated(note = "use `crate::offline::StageTiming`")]
+pub use crate::offline::StageTiming;

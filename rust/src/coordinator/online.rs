@@ -9,6 +9,13 @@
 //! and queueing behaviour (shared 30 Mbps link, segment queueing, FIFO
 //! server) is replayed on the discrete-event engine with those measured
 //! service times — see DESIGN.md §3 on the testbed substitution.
+//!
+//! With a [`crate::pipeline::ReplanPolicy`] other than `Never`
+//! (`--replan-every` / `--replan-drift`), the run also installs
+//! continuous re-profiling (DESIGN.md §7): an
+//! [`crate::offline::Replanner`] slides the profile window beside the
+//! stage workers and the pipeline swaps masks at epoch boundaries; the
+//! DES replay timestamps each executed re-plan into the report.
 
 use std::collections::HashSet;
 
@@ -17,11 +24,13 @@ use anyhow::Result;
 use crate::config::SystemConfig;
 use crate::coordinator::method::Method;
 use crate::coordinator::metrics::{LatencyBreakdown, MethodReport};
-use crate::coordinator::offline::{build_plan_with, OfflinePlan};
+use crate::offline::replan::{Replanner, ReplanRecord};
+use crate::offline::{build_plan_with, OfflinePlan};
 use crate::pipeline::{
-    run_pipeline, BatchedInfer, CameraStages, CarryOverQuery, CodecEncodeStage, DesTransport,
-    FilterStage, Infer, PassThroughFilter, PipelineOptions, QueryStage, ReductoFilterStage,
-    SegmentLayout, SimCapture, TransportStage, DENSE_FALLBACK_FRACTION,
+    run_pipeline_with_replan, use_roi_path, BatchedInfer, CameraStages, CarryOverQuery,
+    CodecEncodeStage, DesTransport, FilterStage, Infer, PassThroughFilter, PipelineOptions,
+    PlanEpoch, PlanSchedule, QueryStage, ReductoFilterStage, ReplanContext, SegmentLayout,
+    SimCapture,
 };
 use crate::query;
 use crate::reducto::ReductoFilter;
@@ -74,17 +83,44 @@ pub fn run_method_with(
 
     // which cameras use the RoI inference variant
     let use_roi: Vec<bool> = (0..n_cams)
-        .map(|c| {
-            method.uses_roi_inference()
-                && (plan.blocks[c].len() as f64)
-                    < DENSE_FALLBACK_FRACTION * infer.n_blocks() as f64
-        })
+        .map(|c| use_roi_path(method, plan.blocks[c].len(), infer.n_blocks()))
         .collect();
 
     // ---- staged compute pass: per-camera capture → filter → encode
     // workers feeding the merged, batched inference stage (all measured) ----
     let renderer = scenario.renderer();
     let layout = SegmentLayout { n_frames, frames_per_segment, fps };
+
+    // continuous re-profiling: epoch schedule + sliding-window re-planner
+    // (full-frame methods have no masks to chase, so the policy is inert
+    // for them).  The Reducto frame-filter thresholds stay profiled
+    // against the initial plan's regions — re-deriving them per epoch is
+    // an open item (ROADMAP).
+    let replan_setup: Option<(PlanSchedule, Replanner<'_>)> =
+        match (opts.replan.check_every(), method.uses_roi_masks()) {
+            (Some(check_every), true) => {
+                let epoch0 = PlanEpoch {
+                    groups: plan.groups.clone(),
+                    blocks: plan.blocks.clone(),
+                    use_roi: use_roi.clone(),
+                    mask_tiles: plan.masks.total_size(),
+                };
+                let schedule = PlanSchedule::new(layout.n_segments(), check_every, epoch0);
+                let replanner = Replanner::new(
+                    scenario,
+                    sys,
+                    method,
+                    opts.offline,
+                    opts.replan,
+                    frames_per_segment,
+                    &plan,
+                    infer.n_blocks(),
+                );
+                Some((schedule, replanner))
+            }
+            _ => None,
+        };
+
     let cams: Vec<CameraStages<'_>> = (0..n_cams)
         .map(|cam| {
             let regions = &plan.groups[cam];
@@ -105,10 +141,21 @@ pub fn run_method_with(
         scenario,
         blocks: &plan.blocks,
         use_roi: &use_roi,
+        schedule: replan_setup.as_ref().map(|(s, _)| s),
         objectness_threshold: sys.objectness_threshold,
         eval_start: eval.start,
     };
-    let out = run_pipeline(cams, &server, &layout, opts.parallelism)?;
+    let out = run_pipeline_with_replan(
+        cams,
+        &server,
+        &layout,
+        opts.parallelism,
+        replan_setup
+            .as_ref()
+            .map(|(schedule, planner)| ReplanContext { schedule, planner }),
+    )?;
+    let replan_records: Vec<ReplanRecord> =
+        replan_setup.as_ref().map(|(_, r)| r.records()).unwrap_or_default();
 
     // ---- query scoring (carry-over for filtered frames) ----
     let reported = CarryOverQuery.fuse(&out.frame_sets, n_frames);
@@ -124,8 +171,14 @@ pub fn run_method_with(
     };
     let (acc, missed) = query::accuracy(reference, &reported);
 
-    // ---- DES replay: transport + queueing with measured service times ----
-    let lat = DesTransport::new(sys.bandwidth_mbps, sys.rtt_ms).replay(n_cams, &out.segments);
+    // ---- DES replay: transport + queueing with measured service times;
+    // executed re-plans are timestamped on the same virtual clock ----
+    let executed: Vec<&ReplanRecord> =
+        replan_records.iter().filter(|r| r.replanned).collect();
+    let replan_events: Vec<(f64, f64)> =
+        executed.iter().map(|r| (r.trigger_time, r.seconds)).collect();
+    let (lat, replan_done_at) = DesTransport::new(sys.bandwidth_mbps, sys.rtt_ms)
+        .replay_with_replans(n_cams, &out.segments, &replan_events);
 
     // ---- report (aggregated in canonical segment order) ----
     let mut bytes_per_cam = vec![0u64; n_cams];
@@ -175,6 +228,13 @@ pub fn run_method_with(
         ),
         regions_per_cam: plan.groups.iter().map(|g| g.len()).collect(),
         offline_seconds: plan.seconds(),
+        replan_count: executed.len(),
+        replan_warm_count: executed.iter().filter(|r| r.warm).count(),
+        replan_mask_churn: stats::mean(
+            &executed.iter().map(|r| r.mask_churn).collect::<Vec<_>>(),
+        ),
+        replan_seconds: replan_records.iter().map(|r| r.seconds).sum(),
+        replan_done_at,
     };
     Ok((report, reported))
 }

@@ -10,6 +10,7 @@
 //!   crossroi offline --seed 7
 //!   crossroi offline --seed 7 --shards auto --offline-threads 8
 //!   crossroi run --method crossroi --segment-secs 1.0
+//!   crossroi run --method crossroi --native --drift-at 70 --replan-every 4
 //!   crossroi run --method reducto --reducto-target 0.9
 //!   crossroi ablation --eval-secs 30
 //!   crossroi info
@@ -40,6 +41,15 @@ flags:
   --shards <mode>          auto|off overlap-sharded planning: partition the
                            fleet into co-occurrence components and plan
                            each independently (default: auto)
+  --replan-every <n>       continuous re-profiling (run/ablation): re-plan
+                           the RoI masks every n streaming segments from a
+                           sliding profile window, warm-starting the solver
+  --replan-drift <t>       re-plan only when the window's constraint drift
+                           reaches t in [0,1] (checked every --replan-every
+                           segments, default 4)
+  --drift-at <s>           sim: shift the traffic flow between the two
+                           roads at scenario time s (0 = stationary)
+  --drift-strength <s>     sim: drift magnitude in [0,1] (default 0.75)
   --artifacts <dir>        AOT artifact directory (default: artifacts)
   --native                 use the native reference detector (no PJRT)
   --sequential             run the online pipeline single-threaded
@@ -88,6 +98,12 @@ fn build_config(args: &Args) -> Result<Config> {
     }
     if let Some(dir) = args.flag("artifacts") {
         cfg.system.artifacts_dir = dir.to_string();
+    }
+    if let Some(v) = args.f64_flag("drift-at")? {
+        cfg.scenario.drift_at_secs = v;
+    }
+    if let Some(v) = args.f64_flag("drift-strength")? {
+        cfg.scenario.drift_strength = v;
     }
     cfg.scenario.validate()?;
     cfg.system.validate()?;
@@ -191,6 +207,15 @@ fn run() -> Result<()> {
                 report.mask_tiles,
                 100.0 * report.mask_coverage
             );
+            if report.replan_count > 0 {
+                println!(
+                    "  re-profiling: {} re-plans ({} warm-started), mean mask churn {:.2}, {:.2} s planning",
+                    report.replan_count,
+                    report.replan_warm_count,
+                    report.replan_mask_churn,
+                    report.replan_seconds
+                );
+            }
             Ok(())
         }
         Some("ablation") => {
@@ -235,6 +260,7 @@ fn offline_options(args: &Args) -> Result<crossroi::offline::OfflineOptions> {
 }
 
 fn pipeline_options(args: &Args) -> Result<crossroi::pipeline::PipelineOptions> {
+    use crossroi::pipeline::ReplanPolicy;
     let mut opts = crossroi::pipeline::PipelineOptions::default();
     if args.switch("sequential") {
         opts.parallelism = crossroi::pipeline::Parallelism::Sequential;
@@ -242,6 +268,21 @@ fn pipeline_options(args: &Args) -> Result<crossroi::pipeline::PipelineOptions> 
     // run/ablation build their offline plan internally — the planner
     // flags steer it there too
     opts.offline = offline_options(args)?;
+    let every = args.u64_flag("replan-every")?.map(|n| (n as usize).max(1));
+    let drift = args.f64_flag("replan-drift")?;
+    opts.replan = match (every, drift) {
+        (None, None) => ReplanPolicy::Never,
+        (Some(n), None) => ReplanPolicy::Every(n),
+        (every, Some(threshold)) => {
+            if !(0.0..=1.0).contains(&threshold) {
+                bail!("--replan-drift must be in [0,1], got {threshold}");
+            }
+            ReplanPolicy::Drift {
+                check_every: every.unwrap_or(ReplanPolicy::DEFAULT_CHECK_EVERY),
+                threshold,
+            }
+        }
+    };
     Ok(opts)
 }
 

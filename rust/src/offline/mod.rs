@@ -15,15 +15,22 @@
 //! (greedy default, exact certifier, warm-started `resolve` for sliding
 //! profile windows).  Plans are byte-identical at every thread count and
 //! at every shard mode (`rust/tests/offline_determinism.rs`).
+//!
+//! Planning is no longer one-shot: [`replan`] re-profiles a sliding
+//! window during the online phase and warm-starts the solve from the
+//! previous masks, swapping plans into the pipeline at segment
+//! boundaries (DESIGN.md §7).
 
 pub mod associate;
 pub mod filter;
 pub mod group;
 pub mod parallel;
 pub mod profile;
+pub mod replan;
 pub mod shard;
 pub mod solve;
 
+pub use replan::{ReplanRecord, Replanner};
 pub use shard::ShardMode;
 pub use solve::SolverKind;
 
@@ -110,7 +117,13 @@ impl ShardReport {
 /// top-level in [`Self::stages`], keeping [`Self::stage_seconds`]'s
 /// historical shape.  Multi-shard runs time the fan-out top-level
 /// (profile / shard / plan / merge / group) and keep each shard's
-/// filter/associate/solve timings in [`Self::shards`].
+/// filter/associate/solve timings in [`Self::shards`].  Full-frame
+/// methods (Baseline / Reducto) only record the `group` stage.
+///
+/// `crossroi offline` prints this breakdown; continuous re-profiling
+/// records its per-epoch costs separately
+/// ([`replan::ReplanRecord::seconds`]), since re-plans run during the
+/// online phase.
 #[derive(Debug, Clone, Default)]
 pub struct PlanReport {
     /// Stage timings in execution order.
@@ -217,6 +230,29 @@ pub fn build_plan_with(
 /// `benches/offline_scaling.rs` and the sharding tests) and for
 /// externally profiled streams.  [`build_plan_with`] is this plus the
 /// Profile stage.
+///
+/// Errors when the stream's camera count disagrees with the tiling, or
+/// when the chosen solver cannot take the instance (`--solver exact` on
+/// an oversized window).
+///
+/// ```
+/// use crossroi::association::tiles::Tiling;
+/// use crossroi::config::Config;
+/// use crossroi::coordinator::Method;
+/// use crossroi::offline::{build_plan_from_stream, OfflineOptions};
+/// use crossroi::reid::records::ReidStream;
+///
+/// // plan a 2-camera fleet from an externally-profiled (here: empty)
+/// // stream; Baseline skips straight to full-frame masks
+/// let tiling = Tiling::new(2, 320, 192, 16);
+/// let stream = ReidStream::new(2, 1, Vec::new());
+/// let cfg = Config::test_small();
+/// let plan = build_plan_from_stream(
+///     &stream, &tiling, &cfg.system, &Method::Baseline, &OfflineOptions::default(),
+/// ).unwrap();
+/// assert_eq!(plan.masks.coverage(0), 1.0);
+/// assert!(plan.report.stage_seconds("group").is_some());
+/// ```
 pub fn build_plan_from_stream(
     stream: &ReidStream,
     tiling: &Tiling,

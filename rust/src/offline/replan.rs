@@ -1,0 +1,438 @@
+//! Continuous re-profiling — the offline planner's side of the loop
+//! (DESIGN.md §7): turn sliding profile windows into warm-started plans.
+//!
+//! The paper's offline/online split assumes the cross-camera correlation
+//! profile stays valid, but §3.1 concedes traffic patterns drift and the
+//! RoI masks must be periodically re-derived (ReXCam adapts its learned
+//! correlation model online the same way).  [`Replanner`] implements
+//! [`EpochPlanner`] for the pipeline runner: at each epoch boundary it
+//! re-profiles a **sliding window** of the most recent
+//! `profile_secs`-worth of detection records, rebuilds the association
+//! table, and — when the policy fires — re-solves the RoI cover,
+//! **warm-starting** from the previous solution
+//! ([`crate::roi::setcover::Solver::resolve`] via
+//! [`solve::run_incremental`]) unless the table drifted so far that the
+//! seed would mostly drag stale tiles through the prune pass
+//! ([`FRESH_SOLVE_DRIFT`]).
+//!
+//! The drift signal is the **constraint drift**: the fraction of the new
+//! window's (deduplicated) association constraints absent from the table
+//! the current plan was solved on.  It is a pure function of the window —
+//! never of pipeline timing — so re-plan decisions, and with them the
+//! whole run, stay byte-identical across thread counts
+//! (`rust/tests/replan.rs`).
+
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::association::table::{AssociationTable, Constraint};
+use crate::association::tiles::{GlobalTile, Tiling};
+use crate::config::SystemConfig;
+use crate::coordinator::method::Method;
+use crate::offline::solve::SolverKind;
+use crate::offline::{associate, filter, group, solve, OfflineOptions, OfflinePlan};
+use crate::pipeline::infer::use_roi_path;
+use crate::pipeline::replan::{EpochPlanner, PlanEpoch, ReplanPolicy};
+use crate::reid::error_model::{ErrorModelParams, RawReid};
+use crate::roi::masks::RoiMasks;
+use crate::roi::setcover::{Solution, Solver as _};
+use crate::sim::Scenario;
+
+/// Above this constraint drift a warm seed reuses too little to pay for
+/// itself (most seeded tiles are stale and only burden the prune pass);
+/// the re-plan falls back to a from-scratch solve.
+pub const FRESH_SOLVE_DRIFT: f64 = 0.6;
+
+/// One epoch boundary's outcome — a check that may or may not have fired.
+#[derive(Debug, Clone)]
+pub struct ReplanRecord {
+    /// Planning epoch (≥ 1; epoch 0 is the initial offline plan).
+    pub epoch: usize,
+    /// First segment index the epoch's plan applies to.
+    pub start_seg: usize,
+    /// Virtual time of the epoch boundary (seconds, eval-window origin —
+    /// the DES clock).
+    pub trigger_time: f64,
+    /// Measured wall seconds of this check: window ReID + raw associate
+    /// for the drift signal, plus filter + associate + solve + group when
+    /// the policy fired.  The *first* check additionally carries the
+    /// one-time drift-baseline derivation (a profile-window ReID +
+    /// associate pass) — the first re-plan genuinely completes that much
+    /// later, so its DES timestamp includes it.
+    pub seconds: f64,
+    /// Whether the policy fired (false = drift below threshold; the
+    /// previous plan was carried forward untouched).
+    pub replanned: bool,
+    /// Whether the executed solve warm-started from the previous solution
+    /// (vs a from-scratch re-solve).
+    pub warm: bool,
+    /// Fraction of the window's constraints absent from the table the
+    /// current plan was solved on.
+    pub constraint_drift: f64,
+    /// Jaccard distance between the previous and new global tile sets
+    /// (0.0 when not replanned).
+    pub mask_churn: f64,
+    /// Solver that produced this epoch's masks ("carried" when not
+    /// replanned).  May be "greedy" under a `--solver exact` run: re-plan
+    /// windows are solved unsharded, and when the exact certifier's cap
+    /// refuses the global table the epoch degrades to greedy rather than
+    /// failing the run mid-flight.
+    pub solver: &'static str,
+    /// Constraints in the window's *raw* (unfiltered) association table —
+    /// the same series the drift signal is computed on, for carried and
+    /// fired checks alike (the tandem-filtered table the solver covers is
+    /// smaller).
+    pub n_constraints: usize,
+    /// |M| after this boundary.
+    pub mask_tiles: usize,
+}
+
+/// Chained re-plan state: everything epoch `k` inherits from `k - 1`.
+struct ReplanState {
+    prev_solution: Solution,
+    /// *Raw* (unfiltered) constraint set of the window the current masks
+    /// were solved on — the drift baseline.  Raw-vs-raw keeps the signal
+    /// comparable across checks and free of the O(n²) pair fitting.
+    /// `None` until the first check derives the initial profile window's
+    /// baseline — lazily, on the planner thread, so the extra linear
+    /// ReID + associate pass overlaps the pipeline instead of delaying
+    /// its start (the offline plan does not retain its profile stream).
+    prev_constraints: Option<HashSet<Constraint>>,
+    records: Vec<ReplanRecord>,
+}
+
+/// The coordinator's [`EpochPlanner`]: sliding-window re-profiling with
+/// warm-started solves.  Construct once per run from the initial
+/// [`OfflinePlan`], hand to
+/// [`crate::pipeline::run_pipeline_with_replan`], then collect
+/// [`Replanner::records`] for the report.
+pub struct Replanner<'a> {
+    scenario: &'a Scenario,
+    sys: &'a SystemConfig,
+    method: Method,
+    opts: OfflineOptions,
+    policy: ReplanPolicy,
+    tiling: Tiling,
+    /// Sliding window length in frames (= the initial profile window's).
+    window_frames: usize,
+    frames_per_segment: usize,
+    /// Absolute frame index of the evaluation window's first frame.
+    eval_start: usize,
+    fps: f64,
+    /// Detector block count of the inference backend (dense-fallback
+    /// policy, same rule as the static plan's).
+    n_infer_blocks: usize,
+    state: Mutex<ReplanState>,
+}
+
+impl<'a> Replanner<'a> {
+    /// Seed the re-planner from the initial offline plan.  The drift
+    /// baseline (the initial profile window's raw association table) is
+    /// derived lazily at the first check, on the planner thread, so
+    /// constructing a `Replanner` never delays the pipeline's start.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        scenario: &'a Scenario,
+        sys: &'a SystemConfig,
+        method: &Method,
+        opts: OfflineOptions,
+        policy: ReplanPolicy,
+        frames_per_segment: usize,
+        initial: &OfflinePlan,
+        n_infer_blocks: usize,
+    ) -> Replanner<'a> {
+        Replanner {
+            scenario,
+            sys,
+            method: method.clone(),
+            opts,
+            policy,
+            window_frames: scenario.profile_range().len().max(1),
+            frames_per_segment: frames_per_segment.max(1),
+            eval_start: scenario.eval_range().start,
+            fps: scenario.cfg.fps,
+            n_infer_blocks,
+            state: Mutex::new(ReplanState {
+                prev_solution: solution_of(&initial.masks),
+                prev_constraints: None,
+                records: Vec::new(),
+            }),
+            tiling: initial.masks.tiling.clone(),
+        }
+    }
+
+    /// Every boundary's outcome so far, in epoch order.
+    pub fn records(&self) -> Vec<ReplanRecord> {
+        self.state.lock().unwrap().records.clone()
+    }
+}
+
+impl EpochPlanner for Replanner<'_> {
+    fn plan_epoch(
+        &self,
+        k: usize,
+        start_seg: usize,
+        prev: &Arc<PlanEpoch>,
+    ) -> Result<Arc<PlanEpoch>> {
+        let t0 = Instant::now();
+        let trigger_time = (start_seg * self.frames_per_segment) as f64 / self.fps;
+
+        // the sliding window: the last `window_frames` frames of detection
+        // records before the boundary (absolute frame indexing; early
+        // boundaries reach back into the original profile window)
+        let end_abs = (self.eval_start + start_seg * self.frames_per_segment)
+            .min(self.scenario.n_frames());
+        let window = end_abs.saturating_sub(self.window_frames)..end_abs;
+        let stream = RawReid::generate(self.scenario, window, &ErrorModelParams::default());
+
+        // drift signal on the *raw* (unfiltered) association table — one
+        // linear pass, comparable with the raw baseline, and it keeps
+        // skipped checks from paying the O(n²) pair fitting
+        let raw_table = associate::run(&stream, &self.tiling).table;
+        let mut st = self.state.lock().unwrap();
+        if st.prev_constraints.is_none() {
+            // first check: derive the drift baseline from the initial
+            // profile window (the plan the epoch-0 masks were solved on)
+            let baseline = RawReid::generate(
+                self.scenario,
+                self.scenario.profile_range(),
+                &ErrorModelParams::default(),
+            );
+            st.prev_constraints =
+                Some(constraint_set(&associate::run(&baseline, &self.tiling).table));
+        }
+        let drift =
+            constraint_drift(&raw_table, st.prev_constraints.as_ref().expect("just seeded"));
+        let fire = match self.policy {
+            ReplanPolicy::Never => false,
+            ReplanPolicy::Every(_) => true,
+            ReplanPolicy::Drift { threshold, .. } => drift >= threshold,
+        };
+        if !fire {
+            // carried forward: the drift baseline intentionally stays the
+            // window the *current masks* were solved on, so slow cumulative
+            // drift accumulates until it crosses the threshold
+            st.records.push(ReplanRecord {
+                epoch: k,
+                start_seg,
+                trigger_time,
+                seconds: t0.elapsed().as_secs_f64(),
+                replanned: false,
+                warm: false,
+                constraint_drift: drift,
+                mask_churn: 0.0,
+                solver: "carried",
+                n_constraints: raw_table.n_constraints(),
+                mask_tiles: prev.mask_tiles,
+            });
+            return Ok(prev.clone());
+        }
+
+        // full quality path for the fired re-plan: tandem filters, then
+        // the association table the solver actually covers
+        let frame = (self.tiling.frame_w as f64, self.tiling.frame_h as f64);
+        let filtered = filter::run_scoped(
+            stream,
+            self.sys,
+            &self.method,
+            self.opts.effective_threads(),
+            None,
+            frame,
+        );
+        let assoc = associate::run(&filtered.stream, &self.tiling);
+        // Re-plan windows are solved as one unsharded instance, so the
+        // exact certifier's per-shard cap that admitted the *initial* plan
+        // may refuse the global window table here.  A run that planned
+        // successfully offline must not die mid-flight on that: degrade
+        // the epoch to the (never-failing) greedy solver and record which
+        // solver actually produced the masks.
+        let solver = match self.opts.solver.validate(&assoc.table) {
+            Ok(()) => self.opts.solver.build(),
+            Err(_) => SolverKind::Greedy.build(),
+        };
+        let warm = drift <= FRESH_SOLVE_DRIFT;
+        let solved = if warm {
+            solve::run_incremental(&assoc.table, solver.as_ref(), &st.prev_solution)
+        } else {
+            solve::run(&assoc.table, solver.as_ref())
+        };
+        let churn = mask_churn(&st.prev_solution.tiles, &solved.solution.tiles);
+        let grouped = group::run(&solved.masks, self.method.uses_merging());
+        let use_roi: Vec<bool> = (0..self.tiling.n_cameras)
+            .map(|c| use_roi_path(&self.method, grouped.blocks[c].len(), self.n_infer_blocks))
+            .collect();
+        let mask_tiles = solved.masks.total_size();
+        let epoch = Arc::new(PlanEpoch {
+            groups: grouped.groups,
+            blocks: grouped.blocks,
+            use_roi,
+            mask_tiles,
+        });
+        st.prev_constraints = Some(constraint_set(&raw_table));
+        st.prev_solution = solved.solution;
+        st.records.push(ReplanRecord {
+            epoch: k,
+            start_seg,
+            trigger_time,
+            seconds: t0.elapsed().as_secs_f64(),
+            replanned: true,
+            warm,
+            constraint_drift: drift,
+            mask_churn: churn,
+            solver: solver.name(),
+            n_constraints: raw_table.n_constraints(),
+            mask_tiles,
+        });
+        Ok(epoch)
+    }
+}
+
+/// The global tile set of per-camera masks, as a warm-start seed.
+fn solution_of(masks: &RoiMasks) -> Solution {
+    let mut tiles: HashSet<GlobalTile> = HashSet::new();
+    for cam in 0..masks.tiling.n_cameras {
+        for &(tx, ty) in &masks.tiles[cam] {
+            tiles.insert(masks.tiling.tile_id(cam, tx, ty));
+        }
+    }
+    Solution { tiles, unsatisfiable: 0 }
+}
+
+fn constraint_set(table: &AssociationTable) -> HashSet<Constraint> {
+    table.constraints.iter().cloned().collect()
+}
+
+/// Fraction of `table`'s constraints absent from `prev` (0.0 for an empty
+/// table — nothing to cover means nothing drifted).
+fn constraint_drift(table: &AssociationTable, prev: &HashSet<Constraint>) -> f64 {
+    if table.constraints.is_empty() {
+        return 0.0;
+    }
+    let novel = table.constraints.iter().filter(|c| !prev.contains(*c)).count();
+    novel as f64 / table.constraints.len() as f64
+}
+
+/// Jaccard distance between two global tile sets (0.0 = identical masks).
+fn mask_churn(a: &HashSet<GlobalTile>, b: &HashSet<GlobalTile>) -> f64 {
+    if a.is_empty() && b.is_empty() {
+        return 0.0;
+    }
+    let inter = a.intersection(b).count();
+    let union = a.len() + b.len() - inter;
+    1.0 - inter as f64 / union as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::offline::build_plan;
+
+    fn table_from(regions: Vec<Vec<Vec<GlobalTile>>>) -> AssociationTable {
+        let n = regions.len();
+        AssociationTable {
+            tiling: Tiling::new(1, 320, 192, 16),
+            constraints: regions.into_iter().map(|r| Constraint { regions: r }).collect(),
+            multiplicity: vec![1; n],
+            total_occurrences: n,
+        }
+    }
+
+    #[test]
+    fn constraint_drift_counts_novel_constraints() {
+        let a = table_from(vec![vec![vec![1, 2]], vec![vec![3]]]);
+        let prev = constraint_set(&a);
+        // same table: no drift
+        assert_eq!(constraint_drift(&a, &prev), 0.0);
+        // one kept, one new: half the window is novel
+        let b = table_from(vec![vec![vec![1, 2]], vec![vec![9]]]);
+        assert!((constraint_drift(&b, &prev) - 0.5).abs() < 1e-12);
+        // empty window: nothing to cover, nothing drifted
+        let empty = table_from(vec![]);
+        assert_eq!(constraint_drift(&empty, &prev), 0.0);
+        // empty baseline: everything is novel
+        assert_eq!(constraint_drift(&a, &HashSet::new()), 1.0);
+    }
+
+    #[test]
+    fn mask_churn_is_jaccard_distance() {
+        let a: HashSet<GlobalTile> = [1, 2, 3].into_iter().collect();
+        let b: HashSet<GlobalTile> = [2, 3, 4].into_iter().collect();
+        assert_eq!(mask_churn(&a, &a), 0.0);
+        assert!((mask_churn(&a, &b) - 0.5).abs() < 1e-12);
+        assert_eq!(mask_churn(&HashSet::new(), &HashSet::new()), 0.0);
+        assert_eq!(mask_churn(&a, &HashSet::new()), 1.0);
+    }
+
+    #[test]
+    fn replanner_epoch_on_a_static_window_keeps_the_plan_small() {
+        // no drift scenario: the re-planner must still produce a valid
+        // epoch whose masks stay in the same ballpark as the initial plan,
+        // via the warm-started path
+        let cfg = Config::test_small();
+        let scenario = Scenario::build(&cfg.scenario);
+        let method = Method::CrossRoi;
+        let plan = build_plan(&scenario, &cfg.scenario, &cfg.system, &method).unwrap();
+        let rp = Replanner::new(
+            &scenario,
+            &cfg.system,
+            &method,
+            OfflineOptions::default(),
+            ReplanPolicy::Every(2),
+            5,
+            &plan,
+            60,
+        );
+        let epoch0 = Arc::new(PlanEpoch {
+            groups: plan.groups.clone(),
+            blocks: plan.blocks.clone(),
+            use_roi: vec![true; scenario.cameras.len()],
+            mask_tiles: plan.masks.total_size(),
+        });
+        let next = rp.plan_epoch(1, 2, &epoch0).unwrap();
+        assert_eq!(next.groups.len(), scenario.cameras.len());
+        assert!(next.mask_tiles > 0);
+        let records = rp.records();
+        assert_eq!(records.len(), 1);
+        assert!(records[0].replanned);
+        assert!(records[0].warm, "low-drift window must warm-start");
+        assert!(records[0].seconds >= 0.0);
+        assert_eq!(records[0].start_seg, 2);
+        assert_eq!(records[0].solver, "greedy");
+    }
+
+    #[test]
+    fn drift_policy_below_threshold_carries_the_plan_forward() {
+        let cfg = Config::test_small();
+        let scenario = Scenario::build(&cfg.scenario);
+        let method = Method::CrossRoi;
+        let plan = build_plan(&scenario, &cfg.scenario, &cfg.system, &method).unwrap();
+        let rp = Replanner::new(
+            &scenario,
+            &cfg.system,
+            &method,
+            OfflineOptions::default(),
+            // threshold above 1.0 can never fire
+            ReplanPolicy::Drift { check_every: 2, threshold: 1.1 },
+            5,
+            &plan,
+            60,
+        );
+        let epoch0 = Arc::new(PlanEpoch {
+            groups: plan.groups.clone(),
+            blocks: plan.blocks.clone(),
+            use_roi: vec![true; scenario.cameras.len()],
+            mask_tiles: plan.masks.total_size(),
+        });
+        let next = rp.plan_epoch(1, 2, &epoch0).unwrap();
+        assert!(Arc::ptr_eq(&next, &epoch0), "plan must be carried forward by pointer");
+        let records = rp.records();
+        assert_eq!(records.len(), 1);
+        assert!(!records[0].replanned);
+        assert_eq!(records[0].mask_churn, 0.0);
+        assert_eq!(records[0].solver, "carried");
+    }
+}

@@ -23,12 +23,13 @@ pub enum EncodeCost {
 /// [`SegmentEncoder`]-backed encode stage for one camera.
 pub struct CodecEncodeStage {
     enc: SegmentEncoder,
+    qp: f64,
     cost: EncodeCost,
 }
 
 impl CodecEncodeStage {
     pub fn new(regions: &[IRect], qp: f64, cost: EncodeCost) -> Self {
-        CodecEncodeStage { enc: SegmentEncoder::new(regions, qp), cost }
+        CodecEncodeStage { enc: SegmentEncoder::new(regions, qp), qp, cost }
     }
 }
 
@@ -41,6 +42,14 @@ impl EncodeStage for CodecEncodeStage {
             EncodeCost::PerFrame(per_frame) => per_frame * kept.len() as f64,
         };
         (encoded, secs)
+    }
+
+    /// Re-profiling mask swap: rebuild the per-region encoder streams for
+    /// the new plan.  Dropping the old encoder also drops its motion
+    /// reference state, which is exactly right — the first segment under
+    /// a new plan starts a fresh GOP, the same way segment heads do.
+    fn set_regions(&mut self, regions: &[IRect]) {
+        self.enc = SegmentEncoder::new(regions, self.qp);
     }
 }
 

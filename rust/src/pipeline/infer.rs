@@ -26,6 +26,21 @@ use crate::sim::Scenario;
 /// `sbnet_crossover` bench).
 pub const DENSE_FALLBACK_FRACTION: f64 = 0.55;
 
+/// The RoI-vs-dense policy for one camera under one plan: take the SBNet
+/// RoI path only when the method wants RoI inference *and* the plan's
+/// active blocks sit under the measured crossover
+/// ([`DENSE_FALLBACK_FRACTION`] of the backend's block count).  The one
+/// rule for both the initial plan and every re-profiled epoch — a policy
+/// change here applies to the whole run, never to half of it.
+pub fn use_roi_path(
+    method: &crate::coordinator::method::Method,
+    active_blocks: usize,
+    n_infer_blocks: usize,
+) -> bool {
+    method.uses_roi_inference()
+        && (active_blocks as f64) < DENSE_FALLBACK_FRACTION * n_infer_blocks as f64
+}
+
 /// One detector invocation's inputs (borrowed from the pending jobs).
 #[derive(Debug, Clone, Copy)]
 pub struct InferRequest<'a> {
@@ -114,13 +129,21 @@ pub trait InferStage {
 
 /// [`InferStage`] over any [`Infer`] backend, with per-camera RoI policy
 /// and ground-truth matching for the unique-vehicle query.
+///
+/// Under continuous re-profiling, `schedule` maps each incoming segment
+/// to its planning epoch, whose blocks / RoI policy override the static
+/// per-camera fields — a segment is always inferred against the same plan
+/// it was captured and encoded under.
 pub struct BatchedInfer<'a> {
     pub infer: &'a dyn Infer,
     pub scenario: &'a Scenario,
-    /// Active detector blocks per camera.
+    /// Active detector blocks per camera (the whole run's plan, or epoch 0
+    /// when a `schedule` is installed).
     pub blocks: &'a [Vec<i32>],
     /// Whether each camera takes the SBNet RoI path.
     pub use_roi: &'a [bool],
+    /// Re-profiling epoch schedule (`None` = static plan).
+    pub schedule: Option<&'a crate::pipeline::replan::PlanSchedule>,
     pub objectness_threshold: f64,
     /// Absolute frame index of the evaluation window's first frame.
     pub eval_start: usize,
@@ -128,16 +151,31 @@ pub struct BatchedInfer<'a> {
 
 impl InferStage for BatchedInfer<'_> {
     fn infer_merged(&self, segments: &[CameraSegment]) -> Result<Vec<Vec<InferOutcome>>> {
+        // resolve each segment's epoch plan first so the borrowed block
+        // slices below live as long as the request batch; a segment only
+        // reaches the server after its camera worker picked the epoch up,
+        // so the plan is always published by now
+        let epoch_plans: Vec<Option<std::sync::Arc<crate::pipeline::replan::PlanEpoch>>> =
+            segments
+                .iter()
+                .map(|s| {
+                    self.schedule.map(|sched| {
+                        sched
+                            .get(sched.epoch_of(s.seg))
+                            .expect("segment arrived before its epoch plan was published")
+                    })
+                })
+                .collect();
         let mut requests = Vec::new();
-        for s in segments {
+        for (s, epoch) in segments.iter().zip(&epoch_plans) {
+            let (blocks, use_roi): (&[i32], bool) = match epoch {
+                Some(p) => (p.blocks[s.cam].as_slice(), p.use_roi[s.cam]),
+                None => (self.blocks[s.cam].as_slice(), self.use_roi[s.cam]),
+            };
             for job in &s.jobs {
                 requests.push(InferRequest {
                     frame: &job.pixels,
-                    blocks: if self.use_roi[s.cam] {
-                        Some(self.blocks[s.cam].as_slice())
-                    } else {
-                        None
-                    },
+                    blocks: if use_roi { Some(blocks) } else { None },
                 });
             }
         }
@@ -204,6 +242,7 @@ mod tests {
             scenario: &sc,
             blocks: &blocks,
             use_roi: &use_roi,
+            schedule: None,
             objectness_threshold: 0.25,
             eval_start: sc.eval_range().start,
         };

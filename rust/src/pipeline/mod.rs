@@ -31,12 +31,20 @@
 //! re-canonicalized so `MethodReport`s are bit-identical across thread
 //! counts.  New stages (codecs, filters, schedulers) plug in here without
 //! touching the coordinator.
+//!
+//! **Continuous re-profiling** ([`replan`], DESIGN.md §7): with a
+//! [`ReplanPolicy`] other than `Never`, [`run_pipeline_with_replan`] runs
+//! an [`EpochPlanner`] beside the stage workers; workers swap codec
+//! regions and RoI masks at fixed segment-indexed epoch boundaries from
+//! the shared [`PlanSchedule`], so masks follow traffic drift without
+//! stalling the pipeline or breaking schedule determinism.
 
 pub mod capture;
 pub mod encode;
 pub mod filter;
 pub mod infer;
 pub mod query;
+pub mod replan;
 pub mod runner;
 pub mod stage;
 pub mod transport;
@@ -47,11 +55,15 @@ pub use filter::{PassThroughFilter, ReductoFilterStage};
 #[cfg(feature = "pjrt")]
 pub use infer::RuntimeInfer;
 pub use infer::{
-    BatchedInfer, Infer, InferOutcome, InferRequest, InferStage, NativeInfer,
+    use_roi_path, BatchedInfer, Infer, InferOutcome, InferRequest, InferStage, NativeInfer,
     DENSE_FALLBACK_FRACTION,
 };
 pub use query::{CarryOverQuery, QueryStage};
-pub use runner::{run_pipeline, CameraStages, Parallelism, PipelineOptions, PipelineOutput};
+pub use replan::{EpochPlanner, PlanEpoch, PlanSchedule, ReplanPolicy};
+pub use runner::{
+    run_pipeline, run_pipeline_with_replan, CameraStages, Parallelism, PipelineOptions,
+    PipelineOutput, ReplanContext,
+};
 pub use stage::{
     CameraSegment, CaptureStage, EncodeStage, FilterStage, InferJob, SegmentLayout,
     SegmentRecord,

@@ -1,0 +1,250 @@
+//! Continuous re-profiling: the pipeline-side plumbing that lets the
+//! online phase swap RoI plans at segment boundaries without stalling the
+//! stage workers (§3.1's concession that traffic patterns drift and the
+//! masks must be re-derived; ReXCam adapts its correlation model online
+//! the same way).
+//!
+//! The run is divided into fixed **planning epochs** of
+//! [`PlanSchedule::check_every`] segments.  Epoch 0 is the initial
+//! offline plan; every later epoch's plan is produced by an
+//! [`EpochPlanner`] (the coordinator installs
+//! `offline::replan::Replanner`) and published into the shared
+//! [`PlanSchedule`].  Camera workers look their epoch up at each segment
+//! boundary and swap the encode regions / RoI mask only when the plan
+//! actually changed; the server-side inference stage resolves each
+//! incoming segment's epoch the same way.  Because epoch boundaries are
+//! fixed segment indices and every epoch plan is a pure function of the
+//! scenario and the policy — never of worker timing — a run with
+//! re-profiling on is byte-identical across thread counts
+//! (`rust/tests/replan.rs`).
+//!
+//! The planner runs **concurrently** with the stage workers (a dedicated
+//! scoped thread under parallel schedules, inline pre-computation under
+//! [`crate::pipeline::Parallelism::Sequential`]); a worker only blocks on
+//! [`PlanSchedule::wait`] in the degenerate case where it reaches a
+//! boundary before the planner has published that epoch.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::Result;
+
+use crate::util::geometry::IRect;
+
+/// When to re-derive the RoI plan during the online phase
+/// (CLI: `--replan-every` / `--replan-drift`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum ReplanPolicy {
+    /// Plan once offline and keep the masks for the whole run (the
+    /// historical behaviour; the default).
+    #[default]
+    Never,
+    /// Re-plan at every epoch boundary, i.e. every `n` segments.
+    Every(usize),
+    /// Check the sliding window every `check_every` segments but only
+    /// re-solve when the constraint drift — the fraction of the new
+    /// window's association constraints absent from the previous window —
+    /// reaches `threshold`.
+    Drift { check_every: usize, threshold: f64 },
+}
+
+impl ReplanPolicy {
+    /// Default check cadence (segments) when `--replan-drift` is given
+    /// without `--replan-every`.
+    pub const DEFAULT_CHECK_EVERY: usize = 4;
+
+    /// Segments per planning epoch (`None` for [`ReplanPolicy::Never`]).
+    pub fn check_every(&self) -> Option<usize> {
+        match self {
+            ReplanPolicy::Never => None,
+            ReplanPolicy::Every(n) => Some((*n).max(1)),
+            ReplanPolicy::Drift { check_every, .. } => Some((*check_every).max(1)),
+        }
+    }
+}
+
+/// One planning epoch's per-camera artifacts — everything the online
+/// stages need from a plan (the `RoiMask` derivatives: codec regions,
+/// detector blocks, the RoI-vs-dense policy).
+#[derive(Debug, Clone)]
+pub struct PlanEpoch {
+    /// Codec regions per camera (what the encode stage crops and the
+    /// capture mask keeps).
+    pub groups: Vec<Vec<IRect>>,
+    /// Active detector blocks per camera (the RoI HLO variant's input).
+    pub blocks: Vec<Vec<i32>>,
+    /// Whether each camera takes the SBNet RoI inference path this epoch.
+    pub use_roi: Vec<bool>,
+    /// |M| of this epoch's masks (diagnostics).
+    pub mask_tiles: usize,
+}
+
+/// Produces the plan of each epoch `k ≥ 1`, in order, given the previous
+/// epoch's plan.  Implementations may return `prev` unchanged (an
+/// `Arc` clone) when their policy decides the window has not drifted —
+/// workers detect the pointer identity and skip the swap.
+///
+/// `start_seg` is the epoch's first segment **as the runner's
+/// [`PlanSchedule`] defines it** — the schedule is the single source of
+/// truth for boundaries, so a planner must derive its profile window and
+/// trigger timestamps from this argument, never from its own cadence
+/// copy.
+pub trait EpochPlanner: Sync {
+    fn plan_epoch(
+        &self,
+        k: usize,
+        start_seg: usize,
+        prev: &Arc<PlanEpoch>,
+    ) -> Result<Arc<PlanEpoch>>;
+}
+
+/// The shared epoch → plan table: fixed boundaries, plans filled in as
+/// the planner publishes them.  Epoch boundaries are segment indices
+/// (`epoch = seg / check_every`), so pickup is atomic *between* segments
+/// by construction — a worker never changes plan mid-segment.
+pub struct PlanSchedule {
+    check_every: usize,
+    cells: Vec<Cell>,
+}
+
+struct Cell {
+    slot: Mutex<Option<Arc<PlanEpoch>>>,
+    ready: Condvar,
+}
+
+impl PlanSchedule {
+    /// Schedule for a run of `n_segments` per camera with epoch length
+    /// `check_every`; epoch 0 is published immediately with the initial
+    /// offline plan.
+    pub fn new(n_segments: usize, check_every: usize, initial: PlanEpoch) -> PlanSchedule {
+        let check_every = check_every.max(1);
+        let n_epochs = n_segments.div_ceil(check_every).max(1);
+        let cells = (0..n_epochs)
+            .map(|_| Cell { slot: Mutex::new(None), ready: Condvar::new() })
+            .collect();
+        let sched = PlanSchedule { check_every, cells };
+        sched.publish(0, Arc::new(initial));
+        sched
+    }
+
+    /// Segments per epoch.
+    pub fn check_every(&self) -> usize {
+        self.check_every
+    }
+
+    pub fn n_epochs(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Epoch owning segment `seg`.
+    pub fn epoch_of(&self, seg: usize) -> usize {
+        (seg / self.check_every).min(self.cells.len() - 1)
+    }
+
+    /// First segment of epoch `k`.
+    pub fn start_seg(&self, k: usize) -> usize {
+        k * self.check_every
+    }
+
+    /// Publish epoch `k`'s plan, waking every worker blocked on it.
+    /// Re-publishing an epoch is a no-op (first write wins), so an error
+    /// path may flood the remaining epochs with the last good plan
+    /// without racing the planner.
+    pub fn publish(&self, k: usize, plan: Arc<PlanEpoch>) {
+        let mut slot = self.cells[k].slot.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(plan);
+        }
+        drop(slot);
+        self.cells[k].ready.notify_all();
+    }
+
+    /// Epoch `k`'s plan, blocking until published.
+    pub fn wait(&self, k: usize) -> Arc<PlanEpoch> {
+        let cell = &self.cells[k];
+        let mut slot = cell.slot.lock().unwrap();
+        loop {
+            if let Some(plan) = slot.as_ref() {
+                return plan.clone();
+            }
+            slot = cell.ready.wait(slot).unwrap();
+        }
+    }
+
+    /// Epoch `k`'s plan if already published (the server side only sees
+    /// segments whose epoch the camera worker already picked up).
+    pub fn get(&self, k: usize) -> Option<Arc<PlanEpoch>> {
+        self.cells[k].slot.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn epoch(tiles: usize) -> PlanEpoch {
+        PlanEpoch {
+            groups: vec![vec![IRect::new(0, 0, 16, 16)]],
+            blocks: vec![vec![0]],
+            use_roi: vec![true],
+            mask_tiles: tiles,
+        }
+    }
+
+    #[test]
+    fn policy_cadence() {
+        assert_eq!(ReplanPolicy::Never.check_every(), None);
+        assert_eq!(ReplanPolicy::Every(3).check_every(), Some(3));
+        assert_eq!(ReplanPolicy::Every(0).check_every(), Some(1));
+        assert_eq!(
+            ReplanPolicy::Drift { check_every: 5, threshold: 0.2 }.check_every(),
+            Some(5)
+        );
+        assert_eq!(ReplanPolicy::default(), ReplanPolicy::Never);
+    }
+
+    #[test]
+    fn epoch_boundaries_are_segment_indexed() {
+        let s = PlanSchedule::new(10, 4, epoch(1));
+        assert_eq!(s.n_epochs(), 3);
+        assert_eq!(s.epoch_of(0), 0);
+        assert_eq!(s.epoch_of(3), 0);
+        assert_eq!(s.epoch_of(4), 1);
+        assert_eq!(s.epoch_of(9), 2);
+        // segments past the last boundary stay in the last epoch
+        assert_eq!(s.epoch_of(40), 2);
+        assert_eq!(s.start_seg(2), 8);
+    }
+
+    #[test]
+    fn initial_epoch_is_published() {
+        let s = PlanSchedule::new(4, 2, epoch(7));
+        assert_eq!(s.wait(0).mask_tiles, 7);
+        assert!(s.get(1).is_none());
+    }
+
+    #[test]
+    fn publish_is_first_write_wins() {
+        let s = PlanSchedule::new(4, 2, epoch(1));
+        s.publish(1, Arc::new(epoch(2)));
+        s.publish(1, Arc::new(epoch(3)));
+        assert_eq!(s.get(1).unwrap().mask_tiles, 2);
+    }
+
+    #[test]
+    fn wait_blocks_until_published() {
+        let s = PlanSchedule::new(6, 3, epoch(1));
+        std::thread::scope(|scope| {
+            let waiter = scope.spawn(|| s.wait(1).mask_tiles);
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            s.publish(1, Arc::new(epoch(9)));
+            assert_eq!(waiter.join().unwrap(), 9);
+        });
+    }
+
+    #[test]
+    fn one_segment_run_has_one_epoch() {
+        let s = PlanSchedule::new(1, 8, epoch(1));
+        assert_eq!(s.n_epochs(), 1);
+        assert_eq!(s.epoch_of(0), 0);
+    }
+}

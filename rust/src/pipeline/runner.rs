@@ -11,10 +11,12 @@
 
 use std::collections::HashSet;
 use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::pipeline::infer::{InferOutcome, InferStage};
+use crate::pipeline::replan::{EpochPlanner, PlanEpoch, PlanSchedule, ReplanPolicy};
 use crate::pipeline::stage::{
     CameraSegment, CaptureStage, EncodeStage, FilterStage, InferJob, SegmentLayout,
     SegmentRecord,
@@ -51,6 +53,9 @@ pub struct PipelineOptions {
     pub encode_cost: crate::pipeline::encode::EncodeCost,
     /// Offline planner options (`--offline-threads`, `--solver`).
     pub offline: crate::offline::OfflineOptions,
+    /// Continuous re-profiling policy (`--replan-every`, `--replan-drift`);
+    /// [`ReplanPolicy::Never`] keeps the one-shot plan.
+    pub replan: ReplanPolicy,
 }
 
 impl Default for PipelineOptions {
@@ -69,8 +74,19 @@ impl Default for PipelineOptions {
             parallelism,
             encode_cost: crate::pipeline::encode::EncodeCost::Measured,
             offline: crate::offline::OfflineOptions::default(),
+            replan: ReplanPolicy::Never,
         }
     }
+}
+
+/// Everything [`run_pipeline_with_replan`] needs for continuous
+/// re-profiling: the shared epoch schedule plus the planner that fills
+/// it.  Plans are published into the schedule as the planner finishes
+/// them; workers swap at the fixed epoch boundaries.
+#[derive(Clone, Copy)]
+pub struct ReplanContext<'a> {
+    pub schedule: &'a PlanSchedule,
+    pub planner: &'a dyn EpochPlanner,
 }
 
 /// One camera's stage chain plus the RoI crop it streams.
@@ -95,10 +111,16 @@ pub struct PipelineOutput {
 /// Drive one camera's stages over every segment of the window, handing
 /// each finished [`CameraSegment`] to `emit`.  A `false` from `emit`
 /// (downstream gone or failed) aborts the remaining segments.
+///
+/// With a re-profiling `schedule`, the worker resolves its epoch at each
+/// segment boundary and — only when the published plan actually changed —
+/// swaps the encode regions and the streamed RoI mask before touching the
+/// segment's first frame, so a plan is never mixed within one segment.
 fn run_camera(
     cam: usize,
     stages: &mut CameraStages<'_>,
     layout: &SegmentLayout,
+    schedule: Option<&PlanSchedule>,
     emit: &mut dyn FnMut(CameraSegment) -> bool,
 ) {
     // free-list of frame buffers: capture renders into a recycled buffer,
@@ -106,7 +128,24 @@ fn run_camera(
     let mut pool: Vec<Frame> = Vec::new();
     let mut local = 0usize;
     let mut seg = 0usize;
+    let mut cur_epoch = 0usize;
+    let mut cur_plan: Option<Arc<PlanEpoch>> = schedule.map(|s| s.wait(0));
     while local < layout.n_frames {
+        if let Some(sched) = schedule {
+            let epoch = sched.epoch_of(seg);
+            if epoch != cur_epoch {
+                let plan = sched.wait(epoch);
+                if cur_plan.as_ref().map_or(true, |p| !Arc::ptr_eq(p, &plan)) {
+                    stages.encode.set_regions(&plan.groups[cam]);
+                }
+                cur_plan = Some(plan);
+                cur_epoch = epoch;
+            }
+        }
+        let mask: &[IRect] = match &cur_plan {
+            Some(plan) => &plan.groups[cam],
+            None => stages.mask,
+        };
         let end = (local + layout.frames_per_segment).min(layout.n_frames);
         let mut kept: Vec<(usize, Frame)> = Vec::new();
         let mut dropped = 0usize;
@@ -128,7 +167,7 @@ fn run_camera(
             .map(|(lf, f)| InferJob {
                 local: *lf,
                 capture_time: (*lf as f64 + 1.0) / layout.fps,
-                pixels: f.masked_f32(stages.mask),
+                pixels: f.masked_f32(mask),
             })
             .collect();
         for (_, f) in kept {
@@ -184,20 +223,53 @@ pub fn run_pipeline(
     layout: &SegmentLayout,
     parallelism: Parallelism,
 ) -> Result<PipelineOutput> {
+    run_pipeline_with_replan(cams, infer, layout, parallelism, None)
+}
+
+/// [`run_pipeline`] with optional continuous re-profiling: the planner
+/// fills the epoch schedule while the stage workers stream (a dedicated
+/// scoped thread under parallel schedules; pre-computed inline under
+/// [`Parallelism::Sequential`], whose single thread would otherwise
+/// interleave anyway), and workers pick new plans up at the fixed
+/// segment-indexed epoch boundaries — so nothing ever stalls mid-segment
+/// and the output is byte-identical across thread counts.
+///
+/// If the planner fails, the last good plan is flooded into the
+/// remaining epochs so every blocked worker finishes its window, and the
+/// planner's error is returned after the join.
+pub fn run_pipeline_with_replan(
+    cams: Vec<CameraStages<'_>>,
+    infer: &dyn InferStage,
+    layout: &SegmentLayout,
+    parallelism: Parallelism,
+    replan: Option<ReplanContext<'_>>,
+) -> Result<PipelineOutput> {
     let n_cams = cams.len();
     let mut frame_sets: Vec<Vec<Option<HashSet<u32>>>> =
         vec![vec![None; layout.n_frames]; n_cams];
     let mut segments: Vec<SegmentRecord> = Vec::new();
     let mut frames_reduced = 0usize;
+    let schedule = replan.map(|ctx| ctx.schedule);
 
     match parallelism {
         Parallelism::Sequential => {
+            // epoch plans first: the single thread would compute them at
+            // each boundary anyway, and camera 0 crosses every boundary
+            // before camera 1 starts
+            if let Some(ctx) = replan {
+                let mut prev = ctx.schedule.wait(0);
+                for k in 1..ctx.schedule.n_epochs() {
+                    let plan = ctx.planner.plan_epoch(k, ctx.schedule.start_seg(k), &prev)?;
+                    ctx.schedule.publish(k, plan.clone());
+                    prev = plan;
+                }
+            }
             // stream each segment straight into inference — never more
             // than one segment's pixel payloads in flight
             let mut cams = cams;
             let mut first_err: Option<anyhow::Error> = None;
             for (ci, stages) in cams.iter_mut().enumerate() {
-                run_camera(ci, stages, layout, &mut |cs| {
+                run_camera(ci, stages, layout, schedule, &mut |cs| {
                     match infer.infer_merged(std::slice::from_ref(&cs)) {
                         Ok(mut outcomes) => {
                             let outcome = outcomes.pop().expect("one segment in, one out");
@@ -232,7 +304,46 @@ pub fn run_pipeline(
                 buckets[ci % workers].push((ci, stages));
             }
             let layout = *layout;
+            let replan_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
             std::thread::scope(|scope| -> Result<()> {
+                // the re-planner runs beside the stage workers, publishing
+                // epochs in order; workers only block at a boundary if the
+                // planner has not caught up yet
+                if let Some(ctx) = replan {
+                    let err_slot = &replan_err;
+                    scope.spawn(move || {
+                        let mut prev = ctx.schedule.wait(0);
+                        for k in 1..ctx.schedule.n_epochs() {
+                            // a panicking planner must not strand workers
+                            // parked in `PlanSchedule::wait` (the scope
+                            // would then never join); catch it and take
+                            // the same flood-and-surface path as an Err
+                            let outcome = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| {
+                                    ctx.planner.plan_epoch(k, ctx.schedule.start_seg(k), &prev)
+                                }),
+                            )
+                            .unwrap_or_else(|_| {
+                                Err(anyhow::anyhow!("re-planner panicked at epoch {k}"))
+                            });
+                            match outcome {
+                                Ok(plan) => {
+                                    ctx.schedule.publish(k, plan.clone());
+                                    prev = plan;
+                                }
+                                Err(e) => {
+                                    // unblock every waiting worker with the
+                                    // last good plan, then surface the error
+                                    for kk in k..ctx.schedule.n_epochs() {
+                                        ctx.schedule.publish(kk, prev.clone());
+                                    }
+                                    *err_slot.lock().unwrap() = Some(e);
+                                    return;
+                                }
+                            }
+                        }
+                    });
+                }
                 // bounded: each queued segment carries full f32 pixel
                 // payloads for its kept frames, so backpressure (not
                 // buffering) absorbs any camera-side lead over the
@@ -246,7 +357,7 @@ pub fn run_pipeline(
                         for (ci, mut stages) in bucket {
                             // a dead receiver means the inference stage
                             // failed: stop burning compute on this camera
-                            run_camera(ci, &mut stages, &layout, &mut |cs| {
+                            run_camera(ci, &mut stages, &layout, schedule, &mut |cs| {
                                 tx.send(cs).is_ok()
                             });
                         }
@@ -273,6 +384,9 @@ pub fn run_pipeline(
                 }
                 Ok(())
             })?;
+            if let Some(e) = replan_err.into_inner().unwrap() {
+                return Err(e);
+            }
             // canonical order: reports must not depend on worker timing
             segments.sort_by_key(|s| (s.cam, s.seg));
         }

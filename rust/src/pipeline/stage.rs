@@ -46,6 +46,12 @@ pub trait FilterStage: Send {
 /// segment and the encode service time in seconds.
 pub trait EncodeStage: Send {
     fn encode(&mut self, kept: &[&Frame]) -> (EncodedSegment, f64);
+
+    /// Swap the codec regions this stage crops — called by the runner at
+    /// an epoch boundary when continuous re-profiling published a changed
+    /// plan, always *between* segments (never mid-segment).  Stages whose
+    /// output does not depend on regions may ignore it (the default).
+    fn set_regions(&mut self, _regions: &[crate::util::geometry::IRect]) {}
 }
 
 /// One kept frame's pending inference work: the RoI-masked detector input

@@ -15,6 +15,10 @@ enum Ev {
     Captured(usize),
     EncodeDone(usize),
     Arrived(usize),
+    /// A continuous-re-profiling solve finishing (timestamping only — the
+    /// planner runs beside the pipeline and contends with nothing the DES
+    /// models).
+    ReplanDone(usize),
 }
 
 /// Per-frame latency samples from one replay.
@@ -50,6 +54,25 @@ impl DesTransport {
 
 impl TransportStage for DesTransport {
     fn replay(&self, n_cams: usize, segments: &[SegmentRecord]) -> LatencySamples {
+        self.replay_with_replans(n_cams, segments, &[]).0
+    }
+}
+
+impl DesTransport {
+    /// [`TransportStage::replay`] that additionally timestamps continuous
+    /// re-profiling on the same virtual clock: each `(trigger, secs)` pair
+    /// — the epoch boundary that triggered a re-plan and its measured
+    /// planning cost — completes at `trigger + secs` on the DES, and the
+    /// completion times are returned in input order (they land in
+    /// `MethodReport::replan_done_at`).  Re-planning runs beside the
+    /// pipeline and contends with neither the link nor the server, so the
+    /// latency samples are identical to a replay without re-plan events.
+    pub fn replay_with_replans(
+        &self,
+        n_cams: usize,
+        segments: &[SegmentRecord],
+        replans: &[(f64, f64)],
+    ) -> (LatencySamples, Vec<f64>) {
         // capture order; the sort is stable, so same-time segments keep
         // their canonical (camera-major) order and the replay is
         // bit-reproducible
@@ -61,10 +84,14 @@ impl TransportStage for DesTransport {
         for &si in &order {
             des.at(segments[si].capture_end, Ev::Captured(si));
         }
+        for (ri, &(trigger, secs)) in replans.iter().enumerate() {
+            des.at(trigger + secs, Ev::ReplanDone(ri));
+        }
         let mut link = SharedLink::new(self.bandwidth_mbps, self.rtt_ms);
         let mut cam_free = vec![0.0f64; n_cams];
         let mut enc_done_at = vec![0.0f64; segments.len()];
         let mut arrived_at = vec![0.0f64; segments.len()];
+        let mut replan_done_at = vec![0.0f64; replans.len()];
         let mut server_free = 0.0f64;
         let mut out = LatencySamples::default();
         while let Some((now, ev)) = des.pop() {
@@ -94,9 +121,12 @@ impl TransportStage for DesTransport {
                         out.total.push(done - capture);
                     }
                 }
+                Ev::ReplanDone(ri) => {
+                    replan_done_at[ri] = now;
+                }
             }
         }
-        out
+        (out, replan_done_at)
     }
 }
 
@@ -139,6 +169,22 @@ mod tests {
         let lat = t.replay(2, &segs);
         let tx = 45_000.0 * 8.0 / 1.8e6;
         assert!(lat.network[1] > lat.network[0] + 0.9 * tx, "{:?}", lat.network);
+    }
+
+    #[test]
+    fn replan_events_are_timestamped_without_perturbing_latencies() {
+        let t = DesTransport::new(1.8, 10.0);
+        let segs = vec![seg(0, 0, 1.0, 4000), seg(1, 0, 1.0, 4000), seg(0, 1, 2.0, 4000)];
+        let plain = t.replay(2, &segs);
+        let (with, done_at) =
+            t.replay_with_replans(2, &segs, &[(1.0, 0.25), (2.0, 0.5)]);
+        assert_eq!(done_at.len(), 2);
+        assert!((done_at[0] - 1.25).abs() < 1e-12, "{done_at:?}");
+        assert!((done_at[1] - 2.5).abs() < 1e-12, "{done_at:?}");
+        // re-planning contends with nothing the DES models
+        assert_eq!(plain.total, with.total);
+        assert_eq!(plain.camera, with.camera);
+        assert_eq!(plain.network, with.network);
     }
 
     #[test]

@@ -12,8 +12,9 @@ use crate::sim::render::Frame;
 use crate::sim::Scenario;
 use crate::util::geometry::IRect;
 
-/// Luma delta (0..255) for a pixel to count as "changed".
-const PIXEL_DELTA: f32 = 12.0;
+/// Luma delta (0..255) for a pixel to count as "changed" (public so the
+/// [`frame_diff`] docs can cite it; rustdoc runs with `-D warnings`).
+pub const PIXEL_DELTA: f32 = 12.0;
 
 /// Candidate thresholds swept during profiling (fraction of changed
 /// pixels within the RoI area).

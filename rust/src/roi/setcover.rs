@@ -62,6 +62,11 @@ impl Solution {
 }
 
 /// A pluggable RoI set-cover optimizer.
+///
+/// Implementations must be deterministic pure functions of the table (and
+/// the warm seed): the planner's byte-identical-across-threads guarantee
+/// rests on it.  The two in-tree implementations are [`GreedySolver`]
+/// (the default) and [`ExactSolver`] (the branch-and-bound certifier).
 pub trait Solver: Send + Sync {
     fn name(&self) -> &'static str;
 
@@ -73,6 +78,44 @@ pub trait Solver: Send + Sync {
     /// constraints pay for greedy rounds, and pruning drops tiles the new
     /// window no longer needs.  Must return a valid cover of `table`;
     /// solvers with nothing to reuse may ignore `prev`.
+    ///
+    /// This is the continuous re-profiling hook (DESIGN.md §7): a window
+    /// sliding over drifting traffic keeps most of its constraints, so
+    /// re-solving from the previous mask is much cheaper than from
+    /// scratch (`benches/offline_scaling.rs` measures the gap).
+    ///
+    /// ```
+    /// use crossroi::association::table::{AssociationTable, Constraint};
+    /// use crossroi::association::tiles::Tiling;
+    /// use crossroi::roi::setcover::{GreedySolver, Solver};
+    ///
+    /// let window_a = AssociationTable {
+    ///     tiling: Tiling::new(1, 320, 192, 16),
+    ///     constraints: vec![
+    ///         Constraint { regions: vec![vec![1, 2]] },
+    ///         Constraint { regions: vec![vec![40, 41]] },
+    ///     ],
+    ///     multiplicity: vec![1, 1],
+    ///     total_occurrences: 2,
+    /// };
+    /// // the window slides: one constraint kept, one dropped, one new
+    /// let window_b = AssociationTable {
+    ///     constraints: vec![
+    ///         Constraint { regions: vec![vec![1, 2]] },
+    ///         Constraint { regions: vec![vec![50]] },
+    ///     ],
+    ///     multiplicity: vec![1, 1],
+    ///     ..window_a.clone()
+    /// };
+    ///
+    /// let solver = GreedySolver::default();
+    /// let prev = solver.solve(&window_a);
+    /// let next = solver.resolve(&prev, &window_b);
+    /// // still-useful tiles are reused, stale ones pruned, new ones added
+    /// assert!(next.tiles.contains(&1) && next.tiles.contains(&2));
+    /// assert!(!next.tiles.contains(&40) && !next.tiles.contains(&41));
+    /// assert!(next.tiles.contains(&50));
+    /// ```
     fn resolve(&self, prev: &Solution, table: &AssociationTable) -> Solution;
 }
 

@@ -77,6 +77,27 @@ pub fn make_route(d: Vec2, turn: Turn) -> Path {
     }
 }
 
+/// Per-arm arrival-rate weight under traffic drift (`cfg.drift_at_secs`
+/// / `cfg.drift_strength`): before the drift time the EW arms (indices
+/// 2, 3) are favoured at `1 + s` and the NS arms (0, 1) starved at
+/// `1 − s`; after it, the roles swap — the object flow shifts between
+/// the camera overlaps mid-run, which is what continuous re-profiling
+/// (DESIGN.md §7) has to chase.  With drift disabled the weight is
+/// exactly 1, so the generated world is bit-identical to pre-drift
+/// builds.
+fn arm_weight(cfg: &ScenarioConfig, arm_idx: usize, t: f64) -> f64 {
+    if cfg.drift_at_secs <= 0.0 {
+        return 1.0;
+    }
+    let ns_arm = arm_idx < 2;
+    let ns_favoured = t >= cfg.drift_at_secs;
+    if ns_arm == ns_favoured {
+        1.0 + cfg.drift_strength
+    } else {
+        1.0 - cfg.drift_strength
+    }
+}
+
 impl World {
     /// Generate all vehicles for `cfg.total_secs()` seconds (plus a lead-in
     /// so the scene is already populated at t = 0).
@@ -96,7 +117,22 @@ impl World {
             let mut arm_rng = rng.fork(arm_idx as u64 + 1);
             let mut t = -lead_in;
             loop {
-                t += arm_rng.exponential(cfg.arrival_rate).max(MIN_HEADWAY);
+                // piecewise-Poisson arrivals: headways are drawn at the
+                // rate in force when the gap opens; a gap that would cross
+                // the drift boundary is restarted there at the new rate —
+                // statistically exact (exponentials are memoryless) and it
+                // keeps a fully-starved arm (strength 1.0) from sleeping
+                // through its own post-drift revival on one infinite gap
+                let rate = cfg.arrival_rate * arm_weight(cfg, arm_idx, t);
+                let gap = arm_rng.exponential(rate).max(MIN_HEADWAY);
+                if cfg.drift_at_secs > 0.0
+                    && t < cfg.drift_at_secs
+                    && t + gap >= cfg.drift_at_secs
+                {
+                    t = cfg.drift_at_secs;
+                    continue;
+                }
+                t += gap;
                 if t > duration {
                     break;
                 }
@@ -214,6 +250,71 @@ mod tests {
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), w.vehicles.len());
+    }
+
+    #[test]
+    fn drift_shifts_flow_between_roads() {
+        let mut cfg = ScenarioConfig::default();
+        cfg.drift_at_secs = cfg.total_secs() / 2.0;
+        cfg.drift_strength = 0.9;
+        let w = World::generate(&cfg);
+        // classify spawns by road (heading x≈0 → NS road) and by phase
+        let mut counts = [[0usize; 2]; 2]; // [phase][is_ns]
+        for v in &w.vehicles {
+            if v.spawn_time < 0.0 {
+                continue; // lead-in
+            }
+            let start = v.path.point_at(0.0);
+            let is_ns = start.x.abs() < 2.0 * ROAD_HALF_WIDTH;
+            let phase = usize::from(v.spawn_time >= cfg.drift_at_secs);
+            counts[phase][usize::from(is_ns)] += 1;
+        }
+        // pre-drift the EW road dominates, post-drift the NS road
+        assert!(
+            counts[0][0] > 2 * counts[0][1].max(1),
+            "pre-drift EW {} vs NS {}",
+            counts[0][0],
+            counts[0][1]
+        );
+        assert!(
+            counts[1][1] > 2 * counts[1][0].max(1),
+            "post-drift NS {} vs EW {}",
+            counts[1][1],
+            counts[1][0]
+        );
+    }
+
+    #[test]
+    fn fully_starved_arm_revives_after_the_drift_boundary() {
+        let mut cfg = ScenarioConfig::default();
+        cfg.drift_at_secs = cfg.total_secs() / 2.0;
+        cfg.drift_strength = 1.0; // NS arms completely silent pre-drift
+        let w = World::generate(&cfg);
+        let ns_post = w
+            .vehicles
+            .iter()
+            .filter(|v| {
+                v.spawn_time >= cfg.drift_at_secs
+                    && v.path.point_at(0.0).x.abs() < 2.0 * ROAD_HALF_WIDTH
+            })
+            .count();
+        assert!(ns_post > 0, "starved NS arms never revived after the drift boundary");
+    }
+
+    #[test]
+    fn disabled_drift_reproduces_the_stationary_world() {
+        let cfg = ScenarioConfig::default();
+        assert_eq!(cfg.drift_at_secs, 0.0);
+        let mut drifting = cfg.clone();
+        drifting.drift_at_secs = 0.0;
+        drifting.drift_strength = 1.0; // ignored while drift is off
+        let a = World::generate(&cfg);
+        let b = World::generate(&drifting);
+        assert_eq!(a.vehicles.len(), b.vehicles.len());
+        for (x, y) in a.vehicles.iter().zip(&b.vehicles) {
+            assert_eq!(x.spawn_time, y.spawn_time);
+            assert_eq!(x.id, y.id);
+        }
     }
 
     #[test]

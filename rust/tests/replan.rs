@@ -1,0 +1,221 @@
+//! Continuous re-profiling (DESIGN.md §7): sliding-window warm-started
+//! re-planning must chase a drifting scene — masks change, coverage stays
+//! complete — and the mid-run mask swap must be byte-deterministic across
+//! pipeline schedules (no reordered or dropped segments).
+
+use std::collections::HashSet;
+
+use anyhow::Result;
+use crossroi::association::table::AssociationTable;
+use crossroi::association::tiles::{GlobalTile, Tiling};
+use crossroi::config::Config;
+use crossroi::coordinator::{run_method_with, Infer, Method, NativeInfer};
+use crossroi::offline::{associate, solve, SolverKind};
+use crossroi::pipeline::{EncodeCost, Parallelism, PipelineOptions, ReplanPolicy};
+use crossroi::reid::error_model::{ErrorModelParams, RawReid};
+use crossroi::sim::Scenario;
+
+/// Drifting small scenario: flow flips between the two roads 2 s into the
+/// evaluation window, so the masks profiled offline go stale mid-run.
+fn drift_config() -> Config {
+    let mut cfg = Config::test_small();
+    cfg.scenario.profile_secs = 10.0;
+    cfg.scenario.eval_secs = 10.0;
+    cfg.scenario.drift_at_secs = 12.0;
+    cfg.scenario.drift_strength = 0.9;
+    cfg
+}
+
+fn sim_tiling(cfg: &Config, n_cams: usize) -> Tiling {
+    Tiling::new(
+        n_cams,
+        crossroi::sim::FRAME_W,
+        crossroi::sim::FRAME_H,
+        cfg.scenario.tile_px,
+    )
+}
+
+fn covers(table: &AssociationTable, tiles: &HashSet<GlobalTile>) -> bool {
+    table.constraints.iter().all(|c| {
+        c.regions.is_empty()
+            || c.regions.iter().any(|r| r.iter().all(|t| tiles.contains(t)))
+    })
+}
+
+#[test]
+fn run_incremental_tracks_a_drifting_window() {
+    let cfg = drift_config();
+    let scenario = Scenario::build(&cfg.scenario);
+    let tiling = sim_tiling(&cfg, scenario.cameras.len());
+    let params = ErrorModelParams::default();
+    // window A: pre-drift; window B: post-drift
+    let a = RawReid::generate(&scenario, 0..50, &params);
+    let b = RawReid::generate(&scenario, 50..100, &params);
+    let table_a = associate::run(&a, &tiling).table;
+    let table_b = associate::run(&b, &tiling).table;
+    assert!(table_a.n_constraints() > 0 && table_b.n_constraints() > 0);
+
+    let solver = SolverKind::Greedy.build();
+    let first = solve::run(&table_a, solver.as_ref());
+    let warm = solve::run_incremental(&table_b, solver.as_ref(), &first.solution);
+    // the drifted window must be fully covered by the warm-started cover
+    assert!(covers(&table_b, &warm.solution.tiles), "warm re-solve left constraints open");
+    // and the masks must actually move with the flow
+    assert_ne!(
+        first.solution.tiles, warm.solution.tiles,
+        "drifting traffic did not change the masks"
+    );
+    // warm start must not balloon versus a fresh solve of the same window
+    let fresh = solve::run(&table_b, solver.as_ref());
+    assert!(covers(&table_b, &fresh.solution.tiles));
+    assert!(
+        warm.solution.size() <= fresh.solution.size() + fresh.solution.size() / 4,
+        "warm cover {} far above fresh cover {}",
+        warm.solution.size(),
+        fresh.solution.size()
+    );
+}
+
+/// Native reference detector with fixed, deterministic service times (the
+/// same shape as `pipeline_determinism.rs`).
+struct FixedCostInfer;
+
+impl Infer for FixedCostInfer {
+    fn infer(&self, frame: &[f32], blocks: Option<&[i32]>) -> Result<(Vec<f32>, f64)> {
+        let (grid, _) = NativeInfer.infer(frame, blocks)?;
+        let secs = match blocks {
+            None => 0.004,
+            Some(b) => 0.001 + 0.00004 * b.len() as f64,
+        };
+        Ok((grid, secs))
+    }
+}
+
+fn replan_opts(par: Parallelism, policy: ReplanPolicy) -> PipelineOptions {
+    PipelineOptions {
+        parallelism: par,
+        encode_cost: EncodeCost::PerFrame(0.02),
+        replan: policy,
+        ..PipelineOptions::default()
+    }
+}
+
+#[test]
+fn online_drift_run_replans_via_warm_start() {
+    let cfg = drift_config();
+    let scenario = Scenario::build(&cfg.scenario);
+    let (report, reported) = run_method_with(
+        &scenario,
+        &cfg.system,
+        &FixedCostInfer,
+        &Method::CrossRoi,
+        None,
+        &replan_opts(Parallelism::PerCamera, ReplanPolicy::Every(2)),
+    )
+    .unwrap();
+    // 10 s eval at 1 s segments, epoch every 2 segments → 4 boundaries
+    assert_eq!(report.replan_count, 4, "every-2 policy must fire at each boundary");
+    assert!(
+        report.replan_warm_count >= 1,
+        "no re-plan warm-started: {} of {}",
+        report.replan_warm_count,
+        report.replan_count
+    );
+    assert!(
+        report.replan_mask_churn > 0.0,
+        "drifting flow must churn the masks"
+    );
+    assert_eq!(report.replan_done_at.len(), 4);
+    // re-plans are timestamped after their epoch boundary on the DES clock
+    assert!(report.replan_done_at.iter().all(|&t| t > 0.0));
+    assert!(report.replan_seconds > 0.0);
+    // no dropped frames or segments: every eval frame was reported
+    let eval_frames = (cfg.scenario.eval_secs * cfg.scenario.fps).round() as usize;
+    assert_eq!(reported.len(), eval_frames);
+    assert_eq!(report.frames_total, eval_frames * cfg.scenario.n_cameras);
+}
+
+#[test]
+fn drift_policy_fires_only_on_drift() {
+    let cfg = drift_config();
+    let scenario = Scenario::build(&cfg.scenario);
+    // a threshold no window can reach: the plan is carried forward
+    let (calm, _) = run_method_with(
+        &scenario,
+        &cfg.system,
+        &FixedCostInfer,
+        &Method::CrossRoi,
+        None,
+        &replan_opts(
+            Parallelism::PerCamera,
+            ReplanPolicy::Drift { check_every: 2, threshold: 1.1 },
+        ),
+    )
+    .unwrap();
+    assert_eq!(calm.replan_count, 0, "unreachable threshold must never fire");
+    assert!(calm.replan_seconds > 0.0, "drift checks still cost wall time");
+    // a low threshold on a drifting scene must fire
+    let (hot, _) = run_method_with(
+        &scenario,
+        &cfg.system,
+        &FixedCostInfer,
+        &Method::CrossRoi,
+        None,
+        &replan_opts(
+            Parallelism::PerCamera,
+            ReplanPolicy::Drift { check_every: 2, threshold: 0.05 },
+        ),
+    )
+    .unwrap();
+    assert!(hot.replan_count >= 1, "drifting scene never crossed a 0.05 threshold");
+}
+
+#[test]
+fn mask_swap_is_byte_deterministic_across_schedules() {
+    let cfg = drift_config();
+    let scenario = Scenario::build(&cfg.scenario);
+    let json = |par: Parallelism| {
+        let (mut report, _) = run_method_with(
+            &scenario,
+            &cfg.system,
+            &FixedCostInfer,
+            &Method::CrossRoi,
+            None,
+            &replan_opts(par, ReplanPolicy::Every(2)),
+        )
+        .unwrap();
+        // wall-clock fields are the only non-deterministic part; zero the
+        // values but keep the shape (a dropped or duplicated re-plan
+        // would still change the byte stream)
+        report.offline_seconds = 0.0;
+        report.replan_seconds = 0.0;
+        report.replan_done_at = vec![0.0; report.replan_done_at.len()];
+        report.to_json().to_string_pretty(2)
+    };
+    let reference = json(Parallelism::Sequential);
+    assert!(reference.contains("\"replan_count\": 4"), "{reference}");
+    for par in [Parallelism::PerCamera, Parallelism::Workers(1), Parallelism::Workers(3)] {
+        let parallel = json(par);
+        assert_eq!(
+            reference, parallel,
+            "{par:?} diverged from the sequential reference under mid-run mask swaps"
+        );
+    }
+}
+
+#[test]
+#[allow(deprecated)]
+fn coordinator_offline_shim_still_resolves() {
+    // the deprecated re-export shim must keep the historical path working
+    // (warning, not breaking) until external callers migrate
+    let cfg = Config::test_small();
+    let scenario = Scenario::build(&cfg.scenario);
+    let plan = crossroi::coordinator::offline::build_plan(
+        &scenario,
+        &cfg.scenario,
+        &cfg.system,
+        &Method::Baseline,
+    )
+    .unwrap();
+    assert!((plan.masks.coverage(0) - 1.0).abs() < 1e-12);
+}
