@@ -1,0 +1,187 @@
+//! Online-phase scaling — the DES-replayed streaming pipeline from 4 to
+//! 16 cameras on one shared uplink, the online-side counterpart of
+//! `benches/offline_scaling.rs`:
+//!
+//! 1. **Shared-link contention sweep** (4→16 cameras, Baseline vs
+//!    CrossRoI): aggregate bitrate, link-queueing latency and the
+//!    end-to-end decomposition as the fleet outgrows the link.  The
+//!    paper's claim at fleet scale: Baseline saturates the uplink first,
+//!    CrossRoI's masks keep the same fleet under the knee.
+//! 2. **Component re-planning sweep** (disjoint intersections, drift in
+//!    exactly one): per-epoch re-plan cost under `--replan-scope
+//!    component` vs `fleet` at growing fleet sizes.  The component-scoped
+//!    epoch filters and re-solves only the drifted intersection, so its
+//!    cost should track the *component* size while the fleet-scoped
+//!    epoch pays for the whole fleet — with a noise-tolerant backstop
+//!    assert (component ≤ 1.25 × fleet) so a regression fails the bench.
+//!
+//! Runs uncontended (`Parallelism::Sequential`) with the native detector
+//! so the measured service times are comparable across fleet sizes.
+
+mod common;
+
+use std::sync::Arc;
+
+use crossroi::bench::Table;
+use crossroi::config::Config;
+use crossroi::coordinator::{run_method_with, Method};
+use crossroi::offline::{build_plan, OfflineOptions, Replanner};
+use crossroi::pipeline::{
+    EncodeCost, EpochPlanner as _, NativeInfer, Parallelism, PipelineOptions, PlanEpoch,
+    ReplanPolicy, ReplanScope,
+};
+use crossroi::sim::Scenario;
+
+fn link_sweep(base: &Config) {
+    let mut table = Table::new(&[
+        "cams",
+        "method",
+        "net Mbps",
+        "bytes",
+        "cam fps",
+        "e2e s",
+        "net lat s",
+        "p95 s",
+    ]);
+    let opts = PipelineOptions {
+        parallelism: Parallelism::Sequential,
+        encode_cost: EncodeCost::Measured,
+        ..PipelineOptions::default()
+    };
+    for cams in [4usize, 8, 16] {
+        let mut cfg = base.clone();
+        cfg.scenario.n_cameras = cams;
+        // keep the bench quick: the contention story is per-segment
+        cfg.scenario.profile_secs = 10.0;
+        cfg.scenario.eval_secs = 10.0;
+        let scenario = Scenario::build(&cfg.scenario);
+        for method in [Method::Baseline, Method::CrossRoi] {
+            let (report, _) = run_method_with(
+                &scenario,
+                &cfg.system,
+                &NativeInfer,
+                &method,
+                None,
+                &opts,
+            )
+            .unwrap();
+            table.row(vec![
+                format!("{cams}"),
+                report.method.clone(),
+                format!("{:.2}", report.network_mbps_total),
+                format!("{}", report.bytes_total),
+                format!("{:.1}", report.camera_fps),
+                format!("{:.3}", report.latency.total()),
+                format!("{:.3}", report.latency.network),
+                format!("{:.3}", report.latency_p95),
+            ]);
+        }
+    }
+    table.print("Online scaling (shared 1.8 Mbps uplink, 4-16 cameras, sequential measurement)");
+}
+
+fn replan_scope_sweep(base: &Config) {
+    let mut table = Table::new(&[
+        "intersections",
+        "cams",
+        "drift comp",
+        "fired/total",
+        "component ms",
+        "fleet ms",
+        "speedup",
+    ]);
+    for n_intersections in [2usize, 3, 4] {
+        let mut cfg = base.clone();
+        cfg.scenario.n_cameras = 4;
+        cfg.scenario.n_intersections = n_intersections;
+        cfg.scenario.profile_secs = 10.0;
+        cfg.scenario.eval_secs = 10.0;
+        // drift exactly one intersection mid-eval; the others stay put
+        cfg.scenario.drift_at_secs = 12.0;
+        cfg.scenario.drift_strength = 0.9;
+        cfg.scenario.drift_intersection = 0;
+        cfg.scenario.validate().unwrap();
+        let scenario = Scenario::build(&cfg.scenario);
+        let method = Method::CrossRoi;
+        let plan = build_plan(&scenario, &cfg.scenario, &cfg.system, &method).unwrap();
+        let n_cams = scenario.cameras.len();
+        let epoch0 = Arc::new(PlanEpoch::initial(
+            plan.groups.clone(),
+            plan.blocks.clone(),
+            vec![true; n_cams],
+            None,
+            plan.masks.total_size(),
+        ));
+        // one post-drift boundary, re-planned under each scope.  The
+        // drift policy gates on a threshold between the quiescent noise
+        // floor and the drifted component's signal, measured first.
+        let measure = Replanner::new(
+            &scenario,
+            &cfg.system,
+            &method,
+            OfflineOptions::default(),
+            ReplanPolicy::Every(2),
+            ReplanScope::Component,
+            5,
+            &plan,
+            60,
+        );
+        measure.plan_epoch(1, 8, &epoch0).unwrap();
+        let records = measure.records();
+        let drifts: Vec<f64> = records[0].components.iter().map(|c| c.drift).collect();
+        let hot = drifts.iter().cloned().fold(f64::MIN, f64::max);
+        let calm = drifts.iter().cloned().fold(f64::MAX, f64::min);
+        let threshold = (hot + calm) / 2.0;
+        let time_epoch = |policy: ReplanPolicy, scope: ReplanScope| -> (f64, usize, usize) {
+            let rp = Replanner::new(
+                &scenario,
+                &cfg.system,
+                &method,
+                OfflineOptions::default(),
+                policy,
+                scope,
+                5,
+                &plan,
+                60,
+            );
+            rp.plan_epoch(1, 8, &epoch0).unwrap();
+            let recs = rp.records();
+            (recs[0].seconds, recs[0].fired_components(), recs[0].components.len())
+        };
+        // component scope gates on the drift threshold (only the drifted
+        // intersection fires); the fleet-scoped reference re-plans the
+        // whole fleet as one instance — what every epoch cost before
+        // component-incremental re-planning
+        let (comp_s, comp_fired, comp_total) = time_epoch(
+            ReplanPolicy::Drift { check_every: 2, threshold },
+            ReplanScope::Component,
+        );
+        let (fleet_s, _, _) = time_epoch(ReplanPolicy::Every(2), ReplanScope::Fleet);
+        // the per-epoch cost must track the drifted component, not the
+        // fleet; the backstop only trips on a real regression
+        assert!(
+            comp_s <= fleet_s * 1.25,
+            "component-scoped epoch ({comp_s:.4}s) regressed past fleet-scoped \
+             ({fleet_s:.4}s) at {n_intersections} intersections"
+        );
+        table.row(vec![
+            format!("{n_intersections}"),
+            format!("{n_cams}"),
+            format!("{hot:.2}"),
+            format!("{comp_fired}/{comp_total}"),
+            format!("{:.1}", comp_s * 1e3),
+            format!("{:.1}", fleet_s * 1e3),
+            format!("{:.2}x", fleet_s / comp_s.max(1e-9)),
+        ]);
+    }
+    table.print(
+        "Component-incremental re-planning (single-intersection drift; per-epoch cost, \
+         component vs fleet scope)",
+    );
+}
+
+fn main() {
+    let base = common::bench_config();
+    link_sweep(&base);
+    replan_scope_sweep(&base);
+}

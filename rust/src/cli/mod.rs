@@ -21,6 +21,7 @@ pub const VALUE_FLAGS: &[&str] = &[
     "reducto-target", "eval-secs", "profile-secs", "cameras", "method", "out",
     "bandwidth-mbps", "qp", "offline-threads", "solver", "shards",
     "replan-every", "replan-drift", "drift-at", "drift-strength",
+    "replan-scope", "intersections", "spacing", "drift-intersection",
 ];
 
 impl Args {

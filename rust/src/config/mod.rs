@@ -45,6 +45,30 @@ pub struct ScenarioConfig {
     /// after, the roles swap — shifting object flow between the camera
     /// overlaps mid-run.  `1.0` silences the disfavoured road entirely.
     pub drift_strength: f64,
+    /// Number of intersections laid out along the EW axis (fleet
+    /// scenarios, CLI `--intersections`).  `1` (the default) is the
+    /// single-intersection world, bit-identical to pre-fleet builds;
+    /// above 1, `n_cameras` counts cameras *per intersection* and each
+    /// intersection runs its own independent traffic world (seed
+    /// `seed + k`) shifted `intersection_spacing` meters east.
+    pub n_intersections: usize,
+    /// Center-to-center spacing between adjacent intersections (m).  Must
+    /// exceed twice the approach-arm length so neither the vehicles nor
+    /// the per-intersection rigs of adjacent intersections ever share a
+    /// view — the co-occurrence partition then recovers one component per
+    /// intersection.
+    pub intersection_spacing: f64,
+    /// Fleet scenarios only: add a corridor-watching trio per adjacent
+    /// intersection pair (an east-facing camera at the west crossing, a
+    /// west-facing one at the east crossing, and a **bridge camera**
+    /// midway whose view overlaps both) — the bridge-camera topology the
+    /// constraint spill (DESIGN.md §8) is tested on.
+    pub bridge_cameras: bool,
+    /// Which intersection the traffic drift perturbs: `-1` (default)
+    /// drifts every intersection; `k ≥ 0` drifts only intersection `k`,
+    /// leaving the others stationary — the single-intersection-drift
+    /// scenario component-incremental re-planning re-solves selectively.
+    pub drift_intersection: i64,
 }
 
 impl Default for ScenarioConfig {
@@ -63,6 +87,10 @@ impl Default for ScenarioConfig {
             sensor_noise: 0.015,
             drift_at_secs: 0.0,
             drift_strength: 0.75,
+            n_intersections: 1,
+            intersection_spacing: 170.0,
+            bridge_cameras: false,
+            drift_intersection: -1,
         }
     }
 }
@@ -102,7 +130,51 @@ impl ScenarioConfig {
         if !(0.0..=1.0).contains(&self.drift_strength) {
             bail!("drift_strength must be in [0,1]");
         }
+        if self.n_intersections == 0 || self.n_intersections > 6 {
+            bail!("n_intersections must be in 1..=6, got {}", self.n_intersections);
+        }
+        if self.n_intersections > 1 {
+            // arms are ARM_LENGTH long on both sides; closer spacing would
+            // let adjacent intersections' vehicles share camera views and
+            // fuse the co-occurrence components
+            let min_spacing = 2.0 * crate::sim::world::ARM_LENGTH + 8.0;
+            if self.intersection_spacing < min_spacing {
+                bail!(
+                    "intersection_spacing must be at least {min_spacing} m \
+                     (2 x arm length + margin), got {}",
+                    self.intersection_spacing
+                );
+            }
+            if self.total_cameras() > 24 {
+                bail!(
+                    "fleet of {} cameras too large (max 24): {} intersections x {} cameras{}",
+                    self.total_cameras(),
+                    self.n_intersections,
+                    self.n_cameras,
+                    if self.bridge_cameras { " + corridor trios" } else { "" }
+                );
+            }
+        } else if self.bridge_cameras {
+            bail!("bridge_cameras needs n_intersections > 1");
+        }
+        if self.drift_intersection < -1 || self.drift_intersection >= self.n_intersections as i64
+        {
+            bail!(
+                "drift_intersection {} out of range (fleet has {} intersections; -1 = all)",
+                self.drift_intersection,
+                self.n_intersections
+            );
+        }
         Ok(())
+    }
+
+    /// Total cameras in the scenario: `n_cameras` per intersection, plus
+    /// a corridor trio (east-watcher, west-watcher, bridge) per adjacent
+    /// intersection pair when `bridge_cameras` is on.
+    pub fn total_cameras(&self) -> usize {
+        let gaps = self.n_intersections.saturating_sub(1);
+        self.n_cameras * self.n_intersections
+            + if self.bridge_cameras { 3 * gaps } else { 0 }
     }
 
     /// Set a field by dotted key (used by the TOML loader and CLI overrides).
@@ -122,6 +194,22 @@ impl ScenarioConfig {
             "drift_at_secs" => self.drift_at_secs = value.as_f64().context("drift_at_secs")?,
             "drift_strength" => {
                 self.drift_strength = value.as_f64().context("drift_strength")?
+            }
+            "n_intersections" => {
+                self.n_intersections = value.as_u64().context("n_intersections")? as usize
+            }
+            "intersection_spacing" => {
+                self.intersection_spacing = value.as_f64().context("intersection_spacing")?
+            }
+            "bridge_cameras" => {
+                self.bridge_cameras = value.as_bool().context("bridge_cameras")?
+            }
+            "drift_intersection" => {
+                let v = value.as_f64().context("drift_intersection")?;
+                if v.fract() != 0.0 {
+                    bail!("drift_intersection must be an integer, got {v}");
+                }
+                self.drift_intersection = v as i64;
             }
             other => bail!("unknown scenario key {other:?}"),
         }

@@ -56,14 +56,27 @@ pub struct MethodReport {
     pub regions_per_cam: Vec<usize>,
     /// Wall-clock cost of running the method's offline phase (seconds).
     pub offline_seconds: f64,
-    // --- continuous re-profiling (DESIGN.md §7; zero/empty when the
+    // --- continuous re-profiling (DESIGN.md §7–§8; zero/empty when the
     // policy is `Never`) ---
-    /// Re-plans executed over the run (epoch boundaries where the policy
-    /// fired; mere drift checks are not counted).
+    /// Component re-solves executed over the run: only components whose
+    /// window actually fired the policy are counted (under
+    /// `--replan-scope fleet` the whole fleet is one component, so this
+    /// is the number of fired epochs).  Mere drift checks — and carried
+    /// components — are not counted.
     pub replan_count: usize,
-    /// Executed re-plans served by the warm-started solver (vs fresh
-    /// from-scratch re-solves).
+    /// Executed component re-solves served by the warm-started solver
+    /// (vs fresh from-scratch re-solves).
     pub replan_warm_count: usize,
+    /// Components checked at an epoch boundary but carried forward
+    /// untouched (their cameras kept masks, encoder state and — for
+    /// frame-filter methods — thresholds).
+    pub replan_carried_components: usize,
+    /// Components that changed camera membership mid-run (the component
+    /// diff fired both the donor and the recipient fresh).
+    pub replan_migrations: usize,
+    /// Cameras whose Reducto frame-filter threshold was re-derived from
+    /// the sliding window because a re-plan changed their regions.
+    pub replan_reducto_rederived: usize,
     /// Mean mask churn (Jaccard distance between consecutive global tile
     /// sets) across executed re-plans.
     pub replan_mask_churn: f64,
@@ -124,6 +137,15 @@ impl MethodReport {
             ("offline_seconds", Json::Num(self.offline_seconds)),
             ("replan_count", Json::Num(self.replan_count as f64)),
             ("replan_warm_count", Json::Num(self.replan_warm_count as f64)),
+            (
+                "replan_carried_components",
+                Json::Num(self.replan_carried_components as f64),
+            ),
+            ("replan_migrations", Json::Num(self.replan_migrations as f64)),
+            (
+                "replan_reducto_rederived",
+                Json::Num(self.replan_reducto_rederived as f64),
+            ),
             ("replan_mask_churn", Json::Num(self.replan_mask_churn)),
             ("replan_seconds", Json::Num(self.replan_seconds)),
             ("replan_done_at", Json::arr_f64(&self.replan_done_at)),

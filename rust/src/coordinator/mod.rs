@@ -1,9 +1,10 @@
 //! The L3 coordinator: CrossRoI's two-phase workflow (§4.1).
 //!
-//! The offline planner lives in [`crate::offline`] (Profile → Filter →
-//! Associate → Solve → Group over the profile window, producing each
-//! camera's plan with a per-stage [`PlanReport`]; the historical
-//! [`offline`] path here is a deprecated shim).  [`online`] orchestrates
+//! The offline planner lives in [`crate::offline`] (Profile → [Shard] →
+//! Filter → Associate → Solve → Group over the profile window, producing
+//! each camera's plan with a per-stage [`PlanReport`]; the deprecated
+//! `coordinator::offline` re-export shim is gone — spell the planner
+//! path as `crate::offline`).  [`online`] orchestrates
 //! the staged streaming pipeline in [`crate::pipeline`] (⑤ per-camera
 //! crop/group/encode workers, ⑥ merged batched RoI-CNN inference) over
 //! the evaluation window — with real measured compute, a discrete-event
@@ -13,7 +14,6 @@
 
 pub mod method;
 pub mod metrics;
-pub mod offline;
 pub mod online;
 
 pub use method::Method;

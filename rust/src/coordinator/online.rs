@@ -91,20 +91,22 @@ pub fn run_method_with(
     let renderer = scenario.renderer();
     let layout = SegmentLayout { n_frames, frames_per_segment, fps };
 
-    // continuous re-profiling: epoch schedule + sliding-window re-planner
-    // (full-frame methods have no masks to chase, so the policy is inert
-    // for them).  The Reducto frame-filter thresholds stay profiled
-    // against the initial plan's regions — re-deriving them per epoch is
-    // an open item (ROADMAP).
+    // continuous re-profiling: epoch schedule + sliding-window,
+    // component-incremental re-planner (full-frame methods have no masks
+    // to chase, so the policy is inert for them).  Epoch 0 carries the
+    // offline-profiled Reducto thresholds; later epochs re-derive each
+    // camera's threshold from the sliding window whenever a re-plan
+    // changes its regions (DESIGN.md §8).
     let replan_setup: Option<(PlanSchedule, Replanner<'_>)> =
         match (opts.replan.check_every(), method.uses_roi_masks()) {
             (Some(check_every), true) => {
-                let epoch0 = PlanEpoch {
-                    groups: plan.groups.clone(),
-                    blocks: plan.blocks.clone(),
-                    use_roi: use_roi.clone(),
-                    mask_tiles: plan.masks.total_size(),
-                };
+                let epoch0 = PlanEpoch::initial(
+                    plan.groups.clone(),
+                    plan.blocks.clone(),
+                    use_roi.clone(),
+                    reducto_filter.as_ref().map(|f| f.thresholds.clone()),
+                    plan.masks.total_size(),
+                );
                 let schedule = PlanSchedule::new(layout.n_segments(), check_every, epoch0);
                 let replanner = Replanner::new(
                     scenario,
@@ -112,6 +114,7 @@ pub fn run_method_with(
                     method,
                     opts.offline,
                     opts.replan,
+                    opts.replan_scope,
                     frames_per_segment,
                     &plan,
                     infer.n_blocks(),
@@ -228,8 +231,18 @@ pub fn run_method_with(
         ),
         regions_per_cam: plan.groups.iter().map(|g| g.len()).collect(),
         offline_seconds: plan.seconds(),
-        replan_count: executed.len(),
-        replan_warm_count: executed.iter().filter(|r| r.warm).count(),
+        replan_count: replan_records.iter().map(|r| r.fired_components()).sum(),
+        replan_warm_count: replan_records
+            .iter()
+            .flat_map(|r| r.components.iter())
+            .filter(|c| c.fired && c.warm)
+            .count(),
+        replan_carried_components: replan_records
+            .iter()
+            .map(|r| r.carried_components())
+            .sum(),
+        replan_migrations: replan_records.iter().map(|r| r.migrated_components()).sum(),
+        replan_reducto_rederived: replan_records.iter().map(|r| r.reducto_rederived).sum(),
         replan_mask_churn: stats::mean(
             &executed.iter().map(|r| r.mask_churn).collect::<Vec<_>>(),
         ),

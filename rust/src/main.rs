@@ -47,9 +47,19 @@ flags:
   --replan-drift <t>       re-plan only when the window's constraint drift
                            reaches t in [0,1] (checked every --replan-every
                            segments, default 4)
+  --replan-scope <s>       fleet|component re-planning granularity: component
+                           (default) re-solves only drifted co-occurrence
+                           components and carries the rest forward
   --drift-at <s>           sim: shift the traffic flow between the two
                            roads at scenario time s (0 = stationary)
   --drift-strength <s>     sim: drift magnitude in [0,1] (default 0.75)
+  --intersections <n>      sim: number of intersections in the fleet
+                           (default 1; above 1, --cameras counts cameras
+                           per intersection)
+  --spacing <m>            sim: intersection spacing in meters (default 170)
+  --bridge                 sim: add a corridor trio (two watchers + a bridge
+                           camera) between adjacent intersections
+  --drift-intersection <k> sim: drift only intersection k (default -1 = all)
   --artifacts <dir>        AOT artifact directory (default: artifacts)
   --native                 use the native reference detector (no PJRT)
   --sequential             run the online pipeline single-threaded
@@ -105,6 +115,20 @@ fn build_config(args: &Args) -> Result<Config> {
     if let Some(v) = args.f64_flag("drift-strength")? {
         cfg.scenario.drift_strength = v;
     }
+    if let Some(n) = args.u64_flag("intersections")? {
+        cfg.scenario.n_intersections = n as usize;
+    }
+    if let Some(v) = args.f64_flag("spacing")? {
+        cfg.scenario.intersection_spacing = v;
+    }
+    if args.switch("bridge") {
+        cfg.scenario.bridge_cameras = true;
+    }
+    if let Some(v) = args.flag("drift-intersection") {
+        cfg.scenario.drift_intersection = v
+            .parse::<i64>()
+            .map_err(|_| anyhow::anyhow!("--drift-intersection {v:?} is not an integer"))?;
+    }
     cfg.scenario.validate()?;
     cfg.system.validate()?;
     Ok(cfg)
@@ -126,7 +150,7 @@ fn parse_method(args: &Args) -> Result<Method> {
 
 fn run() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
-    args.ensure_known_switches(&["native", "verbose", "sequential"])?;
+    args.ensure_known_switches(&["native", "verbose", "sequential", "bridge"])?;
     let cfg = build_config(&args)?;
 
     match args.subcommand.as_deref() {
@@ -160,13 +184,29 @@ fn run() -> Result<()> {
                     let cams: Vec<String> =
                         s.cameras.iter().map(|c| format!("C{}", c + 1)).collect();
                     println!(
-                        "  shard {i}: [{}] {} constraints, {} tiles, solve {:.3} s",
+                        "  shard {i}: [{}] {} constraints, {} tiles, {} spill groups, solve {:.3} s",
                         cams.join(" "),
                         s.n_constraints,
                         s.mask_tiles,
+                        s.spill_groups,
                         s.stage_seconds("solve").unwrap_or(0.0)
                     );
                 }
+            }
+            // only worth a line when the spill split *further* than the
+            // camera partition (each shard trivially contributes one group)
+            if plan.report.spill_groups > plan.report.shards.len().max(1) {
+                let bridges: Vec<String> = plan
+                    .report
+                    .bridge_cameras
+                    .iter()
+                    .map(|c| format!("C{}", c + 1))
+                    .collect();
+                println!(
+                    "constraint spill: {} tile-connected groups, bridge cameras [{}]",
+                    plan.report.spill_groups,
+                    bridges.join(" ")
+                );
             }
             if let Some(r) = &plan.filter_report {
                 println!(
@@ -207,14 +247,23 @@ fn run() -> Result<()> {
                 report.mask_tiles,
                 100.0 * report.mask_coverage
             );
-            if report.replan_count > 0 {
+            if report.replan_count > 0 || report.replan_carried_components > 0 {
                 println!(
-                    "  re-profiling: {} re-plans ({} warm-started), mean mask churn {:.2}, {:.2} s planning",
+                    "  re-profiling: {} component re-solves ({} warm-started), {} carried, \
+                     {} migrations, mean mask churn {:.2}, {:.2} s planning",
                     report.replan_count,
                     report.replan_warm_count,
+                    report.replan_carried_components,
+                    report.replan_migrations,
                     report.replan_mask_churn,
                     report.replan_seconds
                 );
+                if report.replan_reducto_rederived > 0 {
+                    println!(
+                        "  frame filter: {} per-epoch threshold re-derivations",
+                        report.replan_reducto_rederived
+                    );
+                }
             }
             Ok(())
         }
@@ -283,6 +332,9 @@ fn pipeline_options(args: &Args) -> Result<crossroi::pipeline::PipelineOptions> 
             }
         }
     };
+    if let Some(name) = args.flag("replan-scope") {
+        opts.replan_scope = crossroi::pipeline::ReplanScope::parse(name)?;
+    }
     Ok(opts)
 }
 

@@ -30,8 +30,8 @@ pub mod replan;
 pub mod shard;
 pub mod solve;
 
-pub use replan::{ReplanRecord, Replanner};
-pub use shard::ShardMode;
+pub use replan::{ComponentRecord, ReplanRecord, Replanner};
+pub use shard::{spill, ShardMode, SpillGroup, SpillPartition};
 pub use solve::SolverKind;
 
 use std::collections::HashSet;
@@ -98,6 +98,12 @@ pub struct ShardReport {
     pub n_constraints: usize,
     /// Mask tiles this shard contributed to the merged solution.
     pub mask_tiles: usize,
+    /// Tile-connected spill groups this shard's solve decomposed into
+    /// (1 = nothing to split).
+    pub spill_groups: usize,
+    /// Cameras whose constraints spanned several spill groups (bridge
+    /// cameras), ascending.
+    pub bridge_cameras: Vec<usize>,
 }
 
 impl ShardReport {
@@ -136,6 +142,12 @@ pub struct PlanReport {
     pub threads: usize,
     /// Solver that produced the masks.
     pub solver: &'static str,
+    /// Tile-connected spill groups the solve(s) decomposed into, summed
+    /// across shards (0 for full-frame methods and `--shards off`).
+    pub spill_groups: usize,
+    /// Bridge cameras — cameras whose constraints spanned several spill
+    /// groups — across the fleet, ascending.
+    pub bridge_cameras: Vec<usize>,
 }
 
 impl PlanReport {
@@ -339,10 +351,21 @@ fn plan_stream(
     let assoc = associate::run(&filtered.stream, tiling);
     report.record("associate", t);
 
-    // ④ Solve: RoI mask optimization
+    // ④ Solve: RoI mask optimization.  Under `--shards auto` the
+    // instance is first split along the bridge-camera constraint spill
+    // (DESIGN.md §8) — a camera bridging two intersections no longer
+    // fuses them into one giant solve — which is byte-identical to the
+    // fused solve and applies the exact certifier's cap per spill group.
     let t = Instant::now();
-    opts.solver.validate(&assoc.table)?;
-    let solved = solve::run(&assoc.table, opts.solver.build().as_ref());
+    let solved = if opts.shards == ShardMode::Auto {
+        let sp = shard::spill(&assoc.table);
+        report.spill_groups = sp.groups.len();
+        report.bridge_cameras = sp.bridge_cameras();
+        solve::run_spilled(&assoc.table, opts.solver, None, &sp)?
+    } else {
+        opts.solver.validate(&assoc.table)?;
+        solve::run(&assoc.table, opts.solver.build().as_ref())
+    };
     report.record("solve", t);
 
     // ⑤-prep Group: tile grouping (per-tile regions for No-Merging)
@@ -418,8 +441,13 @@ fn plan_sharded(
             acc.fn_removed += r.fn_removed;
         }
         tiles.extend(o.tiles.iter().copied());
+        report.spill_groups += o.report.spill_groups;
+        report.bridge_cameras.extend(o.report.bridge_cameras.iter().copied());
         report.shards.push(o.report);
     }
+    // shards are camera-disjoint, so their bridge lists never overlap;
+    // sorting restores the global ascending order
+    report.bridge_cameras.sort_unstable();
     let masks = RoiMasks::from_solution(tiling, &tiles);
     report.record("merge", t);
 
@@ -464,12 +492,12 @@ fn plan_one_shard(
     let assoc = associate::run(&filtered.stream, tiling);
     stages.push(StageTiming { stage: "associate", seconds: t.elapsed().as_secs_f64() });
 
-    // ④ Solve: shard-local set cover
+    // ④ Solve: shard-local set cover, decomposed along the shard's own
+    // spill partition (the certifier's cap applies per spill group)
     let t = Instant::now();
-    opts.solver
-        .validate(&assoc.table)
+    let sp = shard::spill(&assoc.table);
+    let solution = solve::solve_spilled(&assoc.table, opts.solver, None, &sp)
         .with_context(|| format!("shard of cameras {:?}", sh.cameras))?;
-    let solution = opts.solver.build().solve(&assoc.table);
     stages.push(StageTiming { stage: "solve", seconds: t.elapsed().as_secs_f64() });
 
     Ok(ShardOutcome {
@@ -478,6 +506,8 @@ fn plan_one_shard(
             stages,
             n_constraints: assoc.table.n_constraints(),
             mask_tiles: solution.size(),
+            spill_groups: sp.groups.len(),
+            bridge_cameras: sp.bridge_cameras(),
         },
         tiles: solution.tiles,
         filter_report: filtered.report,

@@ -1,5 +1,6 @@
 //! Continuous re-profiling — the offline planner's side of the loop
-//! (DESIGN.md §7): turn sliding profile windows into warm-started plans.
+//! (DESIGN.md §7–§8): turn sliding profile windows into warm-started,
+//! **component-incremental** plans.
 //!
 //! The paper's offline/online split assumes the cross-camera correlation
 //! profile stays valid, but §3.1 concedes traffic patterns drift and the
@@ -7,46 +8,93 @@
 //! correlation model online the same way).  [`Replanner`] implements
 //! [`EpochPlanner`] for the pipeline runner: at each epoch boundary it
 //! re-profiles a **sliding window** of the most recent
-//! `profile_secs`-worth of detection records, rebuilds the association
-//! table, and — when the policy fires — re-solves the RoI cover,
-//! **warm-starting** from the previous solution
-//! ([`crate::roi::setcover::Solver::resolve`] via
-//! [`solve::run_incremental`]) unless the table drifted so far that the
-//! seed would mostly drag stale tiles through the prune pass
-//! ([`FRESH_SOLVE_DRIFT`]).
+//! `profile_secs`-worth of detection records and rebuilds the raw
+//! association table.
 //!
-//! The drift signal is the **constraint drift**: the fraction of the new
-//! window's (deduplicated) association constraints absent from the table
-//! the current plan was solved on.  It is a pure function of the window —
-//! never of pipeline timing — so re-plan decisions, and with them the
-//! whole run, stay byte-identical across thread counts
-//! (`rust/tests/replan.rs`).
+//! Under the default [`ReplanScope::Component`], the window is first
+//! partitioned into **co-occurrence components** (the same union-find as
+//! [`crate::offline::shard`]; cross-camera correlations are spatially
+//! local — ReXCam, arXiv:1811.01268) and every decision is made *per
+//! component*: constraint drift, the fire/carry choice, the tandem
+//! filters (intra-component pairs only), and the solve — decomposed
+//! further along the bridge-camera constraint spill
+//! ([`crate::offline::shard::spill`]) and **warm-started** from the
+//! previous solution ([`crate::roi::setcover::Solver::resolve`] via
+//! [`solve::solve_spilled`]) unless the component drifted past
+//! [`FRESH_SOLVE_DRIFT`].  Quiescent components carry their cameras'
+//! previous tiles forward untouched; if *no* component fires, the whole
+//! previous epoch is carried forward by `Arc` pointer.  A camera
+//! *moving* between components mid-run (the **component diff**) forces a
+//! fresh solve of both its donor and its recipient component.
+//! [`ReplanScope::Fleet`] degenerates to one fleet-wide pseudo-component
+//! — the historical all-or-nothing behaviour.
+//!
+//! The drift signal is the **constraint drift**: the fraction of a
+//! window's (deduplicated, raw) association constraints absent from the
+//! table the current masks were solved on.  It is a pure function of the
+//! window — never of pipeline timing — so re-plan decisions, and with
+//! them the whole run, stay byte-identical across thread counts
+//! (`rust/tests/replan.rs`, `rust/tests/component_replan.rs`).
 
 use std::collections::HashSet;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
+use once_cell::sync::OnceCell;
 
 use crate::association::table::{AssociationTable, Constraint};
 use crate::association::tiles::{GlobalTile, Tiling};
 use crate::config::SystemConfig;
 use crate::coordinator::method::Method;
 use crate::offline::solve::SolverKind;
-use crate::offline::{associate, filter, group, solve, OfflineOptions, OfflinePlan};
+use crate::offline::{associate, filter, group, shard, solve, OfflineOptions, OfflinePlan};
 use crate::pipeline::infer::use_roi_path;
-use crate::pipeline::replan::{EpochPlanner, PlanEpoch, ReplanPolicy};
+use crate::pipeline::replan::{EpochPlanner, PlanEpoch, ReplanPolicy, ReplanScope};
 use crate::reid::error_model::{ErrorModelParams, RawReid};
 use crate::roi::masks::RoiMasks;
-use crate::roi::setcover::{Solution, Solver as _};
+use crate::roi::setcover::Solution;
 use crate::sim::Scenario;
+use crate::util::geometry::IRect;
 
 /// Above this constraint drift a warm seed reuses too little to pay for
 /// itself (most seeded tiles are stale and only burden the prune pass);
-/// the re-plan falls back to a from-scratch solve.
+/// the re-plan falls back to a from-scratch solve.  Applied per
+/// component under [`ReplanScope::Component`].
 pub const FRESH_SOLVE_DRIFT: f64 = 0.6;
 
-/// One epoch boundary's outcome — a check that may or may not have fired.
+/// One re-plan component's outcome at one epoch boundary.
+#[derive(Debug, Clone)]
+pub struct ComponentRecord {
+    /// Cameras of this co-occurrence component, ascending.  Under
+    /// [`ReplanScope::Fleet`] there is exactly one component covering
+    /// every camera.
+    pub cameras: Vec<usize>,
+    /// Fraction of the component's window constraints absent from the
+    /// drift baseline.
+    pub drift: f64,
+    /// Whether this component was re-solved (false = its cameras'
+    /// previous tiles were carried forward).
+    pub fired: bool,
+    /// Whether the executed solve warm-started from the previous
+    /// solution (always false when not fired).
+    pub warm: bool,
+    /// Whether a camera moved into or out of this component since the
+    /// last check — migration always fires and always solves fresh.
+    pub migrated: bool,
+    /// Tile-connected spill groups the component's solve decomposed into
+    /// (0 when carried).
+    pub spill_groups: usize,
+    /// The component's constraints in the raw window table.
+    pub n_constraints: usize,
+    /// Solver that produced the component's masks ("carried" when not
+    /// fired; may be "greedy" under `--solver exact` when the window
+    /// instance exceeded the certifier's per-group cap).
+    pub solver: &'static str,
+}
+
+/// One epoch boundary's outcome — a check that may or may not have fired
+/// for some (or all) of its components.
 #[derive(Debug, Clone)]
 pub struct ReplanRecord {
     /// Planning epoch (≥ 1; epoch 0 is the initial offline plan).
@@ -57,56 +105,85 @@ pub struct ReplanRecord {
     /// the DES clock).
     pub trigger_time: f64,
     /// Measured wall seconds of this check: window ReID + raw associate
-    /// for the drift signal, plus filter + associate + solve + group when
-    /// the policy fired.  The *first* check additionally carries the
+    /// for the drift signal, plus filter + associate + solve + group for
+    /// every fired component.  The *first* check additionally carries the
     /// one-time drift-baseline derivation (a profile-window ReID +
     /// associate pass) — the first re-plan genuinely completes that much
     /// later, so its DES timestamp includes it.
     pub seconds: f64,
-    /// Whether the policy fired (false = drift below threshold; the
-    /// previous plan was carried forward untouched).
+    /// Whether any component fired (false = every component — and the
+    /// whole plan, by pointer — was carried forward untouched).
     pub replanned: bool,
-    /// Whether the executed solve warm-started from the previous solution
-    /// (vs a from-scratch re-solve).
+    /// Whether every executed component solve warm-started from the
+    /// previous solution (false when none fired).
     pub warm: bool,
-    /// Fraction of the window's constraints absent from the table the
-    /// current plan was solved on.
+    /// Fleet-wide constraint drift: the fraction of the window's
+    /// constraints absent from the drift baseline.
     pub constraint_drift: f64,
     /// Jaccard distance between the previous and new global tile sets
     /// (0.0 when not replanned).
     pub mask_churn: f64,
-    /// Solver that produced this epoch's masks ("carried" when not
-    /// replanned).  May be "greedy" under a `--solver exact` run: re-plan
-    /// windows are solved unsharded, and when the exact certifier's cap
-    /// refuses the global table the epoch degrades to greedy rather than
-    /// failing the run mid-flight.
+    /// Solver that produced this epoch's masks ("carried" when nothing
+    /// fired; "greedy" when any `--solver exact` component degraded).
     pub solver: &'static str,
     /// Constraints in the window's *raw* (unfiltered) association table —
     /// the same series the drift signal is computed on, for carried and
-    /// fired checks alike (the tandem-filtered table the solver covers is
-    /// smaller).
+    /// fired checks alike (the tandem-filtered tables the solver covers
+    /// are smaller).
     pub n_constraints: usize,
     /// |M| after this boundary.
     pub mask_tiles: usize,
+    /// Scope the check ran under ("fleet" | "component").
+    pub scope: &'static str,
+    /// Per-component outcomes, in component order (one pseudo-component
+    /// under [`ReplanScope::Fleet`]).
+    pub components: Vec<ComponentRecord>,
+    /// Cameras whose Reducto frame-filter threshold was re-derived from
+    /// the sliding window because this re-plan changed their regions
+    /// (0 for methods without frame filtering).
+    pub reducto_rederived: usize,
+}
+
+impl ReplanRecord {
+    /// Components re-solved at this boundary.
+    pub fn fired_components(&self) -> usize {
+        self.components.iter().filter(|c| c.fired).count()
+    }
+
+    /// Components checked but carried forward at this boundary.
+    pub fn carried_components(&self) -> usize {
+        self.components.iter().filter(|c| !c.fired).count()
+    }
+
+    /// Components whose camera membership changed at this boundary.
+    pub fn migrated_components(&self) -> usize {
+        self.components.iter().filter(|c| c.migrated).count()
+    }
 }
 
 /// Chained re-plan state: everything epoch `k` inherits from `k - 1`.
 struct ReplanState {
     prev_solution: Solution,
-    /// *Raw* (unfiltered) constraint set of the window the current masks
-    /// were solved on — the drift baseline.  Raw-vs-raw keeps the signal
-    /// comparable across checks and free of the O(n²) pair fitting.
-    /// `None` until the first check derives the initial profile window's
-    /// baseline — lazily, on the planner thread, so the extra linear
-    /// ReID + associate pass overlaps the pipeline instead of delaying
-    /// its start (the offline plan does not retain its profile stream).
+    /// *Raw* (unfiltered) constraint set of the window(s) the current
+    /// masks were solved on — the drift baseline.  Raw-vs-raw keeps the
+    /// signal comparable across checks and free of the O(n²) pair
+    /// fitting.  `None` until the first check derives the initial
+    /// profile window's baseline — lazily, on the planner thread, so the
+    /// extra linear ReID + associate pass overlaps the pipeline instead
+    /// of delaying its start (the offline plan does not retain its
+    /// profile stream).  Fired components replace their share of the
+    /// baseline; quiescent ones keep accumulating drift against theirs.
     prev_constraints: Option<HashSet<Constraint>>,
+    /// Camera partition of the baseline window — the component-diff
+    /// reference a migration is detected against.  Seeded with the
+    /// baseline, replaced whenever an epoch fires.
+    prev_components: Vec<Vec<usize>>,
     records: Vec<ReplanRecord>,
 }
 
-/// The coordinator's [`EpochPlanner`]: sliding-window re-profiling with
-/// warm-started solves.  Construct once per run from the initial
-/// [`OfflinePlan`], hand to
+/// The coordinator's [`EpochPlanner`]: sliding-window, warm-started,
+/// component-incremental re-profiling.  Construct once per run from the
+/// initial [`OfflinePlan`], hand to
 /// [`crate::pipeline::run_pipeline_with_replan`], then collect
 /// [`Replanner::records`] for the report.
 pub struct Replanner<'a> {
@@ -115,6 +192,7 @@ pub struct Replanner<'a> {
     method: Method,
     opts: OfflineOptions,
     policy: ReplanPolicy,
+    scope: ReplanScope,
     tiling: Tiling,
     /// Sliding window length in frames (= the initial profile window's).
     window_frames: usize,
@@ -125,14 +203,23 @@ pub struct Replanner<'a> {
     /// Detector block count of the inference backend (dense-fallback
     /// policy, same rule as the static plan's).
     n_infer_blocks: usize,
+    /// Frame-filter accuracy target when the method runs Reducto
+    /// (threshold re-derivation is skipped at target ≥ 1.0 — a disabled
+    /// filter stays disabled).
+    reducto_target: Option<f64>,
+    /// Lazily-built renderer for threshold re-derivation, cached across
+    /// epochs — construction rasterizes every camera's static
+    /// background, which must not be paid per fired epoch.
+    renderer: OnceCell<crate::sim::Renderer<'a>>,
     state: Mutex<ReplanState>,
 }
 
 impl<'a> Replanner<'a> {
     /// Seed the re-planner from the initial offline plan.  The drift
-    /// baseline (the initial profile window's raw association table) is
-    /// derived lazily at the first check, on the planner thread, so
-    /// constructing a `Replanner` never delays the pipeline's start.
+    /// baseline (the initial profile window's raw association table and
+    /// camera partition) is derived lazily at the first check, on the
+    /// planner thread, so constructing a `Replanner` never delays the
+    /// pipeline's start.
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         scenario: &'a Scenario,
@@ -140,6 +227,7 @@ impl<'a> Replanner<'a> {
         method: &Method,
         opts: OfflineOptions,
         policy: ReplanPolicy,
+        scope: ReplanScope,
         frames_per_segment: usize,
         initial: &OfflinePlan,
         n_infer_blocks: usize,
@@ -150,14 +238,18 @@ impl<'a> Replanner<'a> {
             method: method.clone(),
             opts,
             policy,
+            scope,
             window_frames: scenario.profile_range().len().max(1),
             frames_per_segment: frames_per_segment.max(1),
             eval_start: scenario.eval_range().start,
             fps: scenario.cfg.fps,
             n_infer_blocks,
+            reducto_target: method.reducto_target(),
+            renderer: OnceCell::new(),
             state: Mutex::new(ReplanState {
                 prev_solution: solution_of(&initial.masks),
                 prev_constraints: None,
+                prev_components: Vec::new(),
                 records: Vec::new(),
             }),
             tiling: initial.masks.tiling.clone(),
@@ -167,6 +259,53 @@ impl<'a> Replanner<'a> {
     /// Every boundary's outcome so far, in epoch order.
     pub fn records(&self) -> Vec<ReplanRecord> {
         self.state.lock().unwrap().records.clone()
+    }
+
+    /// The window's camera partition under this re-planner's scope.
+    fn partition_scoped(&self, stream: &crate::reid::records::ReidStream) -> Vec<Vec<usize>> {
+        match self.scope {
+            ReplanScope::Fleet => vec![(0..self.tiling.n_cameras).collect()],
+            ReplanScope::Component => {
+                shard::partition(stream).into_iter().map(|s| s.cameras).collect()
+            }
+        }
+    }
+
+    /// Carry previous thresholds, re-deriving each camera whose regions
+    /// changed this epoch (`cam_epoch[c] == k`) from the sliding window
+    /// against its **new** regions.  Methods without frame filtering (or
+    /// with a disabled target ≥ 1.0) carry unchanged.
+    fn rederive_thresholds(
+        &self,
+        prev: &PlanEpoch,
+        groups: &[Vec<IRect>],
+        cam_epoch: &[usize],
+        k: usize,
+        window: std::ops::Range<usize>,
+    ) -> (Option<Vec<f64>>, usize) {
+        let (prev_th, target) = match (prev.thresholds.as_ref(), self.reducto_target) {
+            (Some(t), Some(target)) if target < 1.0 => (t, target),
+            _ => return (prev.thresholds.clone(), 0),
+        };
+        let changed: Vec<usize> =
+            (0..prev_th.len()).filter(|&cam| cam_epoch[cam] == k).collect();
+        if changed.is_empty() {
+            return (Some(prev_th.clone()), 0);
+        }
+        let renderer = self.renderer.get_or_init(|| self.scenario.renderer());
+        let mut th = prev_th.clone();
+        for &cam in &changed {
+            th[cam] = crate::reducto::ReductoFilter::profile_one(
+                self.scenario,
+                renderer,
+                cam,
+                &groups[cam],
+                window.clone(),
+                self.frames_per_segment,
+                target,
+            );
+        }
+        (Some(th), changed.len())
     }
 }
 
@@ -179,6 +318,7 @@ impl EpochPlanner for Replanner<'_> {
     ) -> Result<Arc<PlanEpoch>> {
         let t0 = Instant::now();
         let trigger_time = (start_seg * self.frames_per_segment) as f64 / self.fps;
+        let n_cams = self.tiling.n_cameras;
 
         // the sliding window: the last `window_frames` frames of detection
         // records before the boundary (absolute frame indexing; early
@@ -186,35 +326,100 @@ impl EpochPlanner for Replanner<'_> {
         let end_abs = (self.eval_start + start_seg * self.frames_per_segment)
             .min(self.scenario.n_frames());
         let window = end_abs.saturating_sub(self.window_frames)..end_abs;
-        let stream = RawReid::generate(self.scenario, window, &ErrorModelParams::default());
+        let stream = RawReid::generate(self.scenario, window.clone(), &ErrorModelParams::default());
 
         // drift signal on the *raw* (unfiltered) association table — one
         // linear pass, comparable with the raw baseline, and it keeps
-        // skipped checks from paying the O(n²) pair fitting
+        // carried components (and skipped checks) from paying the O(n²)
+        // pair fitting
         let raw_table = associate::run(&stream, &self.tiling).table;
+        let comps = self.partition_scoped(&stream);
+        let mut comp_of_cam = vec![0usize; n_cams];
+        for (i, comp) in comps.iter().enumerate() {
+            for &c in comp {
+                comp_of_cam[c] = i;
+            }
+        }
+        // a raw constraint's cameras all co-occur, so they lie inside one
+        // component — route it by any of its tiles
+        let mut comp_constraints: Vec<Vec<usize>> = vec![Vec::new(); comps.len()];
+        for (ci, c) in raw_table.constraints.iter().enumerate() {
+            if let Some(cam) = first_camera(c, &self.tiling) {
+                comp_constraints[comp_of_cam[cam]].push(ci);
+            }
+        }
+
         let mut st = self.state.lock().unwrap();
         if st.prev_constraints.is_none() {
-            // first check: derive the drift baseline from the initial
-            // profile window (the plan the epoch-0 masks were solved on)
+            // first check: derive the drift baseline (constraints + camera
+            // partition) from the initial profile window — the window the
+            // epoch-0 masks were solved on
             let baseline = RawReid::generate(
                 self.scenario,
                 self.scenario.profile_range(),
                 &ErrorModelParams::default(),
             );
+            st.prev_components = self.partition_scoped(&baseline);
             st.prev_constraints =
                 Some(constraint_set(&associate::run(&baseline, &self.tiling).table));
         }
-        let drift =
-            constraint_drift(&raw_table, st.prev_constraints.as_ref().expect("just seeded"));
-        let fire = match self.policy {
-            ReplanPolicy::Never => false,
-            ReplanPolicy::Every(_) => true,
-            ReplanPolicy::Drift { threshold, .. } => drift >= threshold,
-        };
-        if !fire {
-            // carried forward: the drift baseline intentionally stays the
-            // window the *current masks* were solved on, so slow cumulative
-            // drift accumulates until it crosses the threshold
+        let baseline = st.prev_constraints.as_ref().expect("just seeded");
+        let drift = constraint_drift(&raw_table, baseline);
+        let comp_drift: Vec<f64> = comp_constraints
+            .iter()
+            .map(|idxs| {
+                if idxs.is_empty() {
+                    return 0.0;
+                }
+                let novel = idxs
+                    .iter()
+                    .filter(|&&ci| !baseline.contains(&raw_table.constraints[ci]))
+                    .count();
+                novel as f64 / idxs.len() as f64
+            })
+            .collect();
+        let migrated: Vec<bool> = comps
+            .iter()
+            .map(|comp| component_migrated(&st.prev_components, comp))
+            .collect();
+        // whether a component's cameras still hold any mask tiles — an
+        // *empty* window component only needs a (trivial) re-solve when
+        // there are stale tiles to clear; otherwise firing it would be a
+        // pure no-op and would inflate the re-solve count
+        let mut comp_has_tiles = vec![false; comps.len()];
+        for &t in &st.prev_solution.tiles {
+            comp_has_tiles[comp_of_cam[self.tiling.camera_of(t)]] = true;
+        }
+        let fired: Vec<bool> = (0..comps.len())
+            .map(|i| {
+                fire_decision(
+                    self.policy,
+                    migrated[i],
+                    comp_drift[i],
+                    !comp_constraints[i].is_empty(),
+                    comp_has_tiles[i],
+                )
+            })
+            .collect();
+
+        if !fired.iter().any(|&f| f) {
+            // fully carried: the drift baseline intentionally stays the
+            // window(s) the *current masks* were solved on, so slow
+            // cumulative drift accumulates until it crosses the threshold
+            let components = comps
+                .iter()
+                .enumerate()
+                .map(|(i, comp)| ComponentRecord {
+                    cameras: comp.clone(),
+                    drift: comp_drift[i],
+                    fired: false,
+                    warm: false,
+                    migrated: migrated[i],
+                    spill_groups: 0,
+                    n_constraints: comp_constraints[i].len(),
+                    solver: "carried",
+                })
+                .collect();
             st.records.push(ReplanRecord {
                 epoch: k,
                 start_seg,
@@ -227,64 +432,151 @@ impl EpochPlanner for Replanner<'_> {
                 solver: "carried",
                 n_constraints: raw_table.n_constraints(),
                 mask_tiles: prev.mask_tiles,
+                scope: self.scope.name(),
+                components,
+                reducto_rederived: 0,
             });
             return Ok(prev.clone());
         }
 
-        // full quality path for the fired re-plan: tandem filters, then
-        // the association table the solver actually covers
+        // ---- fired path: full quality pipeline per fired component ----
+        let mut fired_cam = vec![false; n_cams];
+        for (i, comp) in comps.iter().enumerate() {
+            if fired[i] {
+                for &c in comp {
+                    fired_cam[c] = true;
+                }
+            }
+        }
+        // quiescent components carry their cameras' previous tiles
+        // forward untouched (tiles are camera-owned, components are
+        // camera-disjoint — the carry is exact)
+        let mut tiles: HashSet<GlobalTile> = st
+            .prev_solution
+            .tiles
+            .iter()
+            .copied()
+            .filter(|&t| !fired_cam[self.tiling.camera_of(t)])
+            .collect();
         let frame = (self.tiling.frame_w as f64, self.tiling.frame_h as f64);
-        let filtered = filter::run_scoped(
-            stream,
-            self.sys,
-            &self.method,
-            self.opts.effective_threads(),
-            None,
-            frame,
-        );
-        let assoc = associate::run(&filtered.stream, &self.tiling);
-        // Re-plan windows are solved as one unsharded instance, so the
-        // exact certifier's per-shard cap that admitted the *initial* plan
-        // may refuse the global window table here.  A run that planned
-        // successfully offline must not die mid-flight on that: degrade
-        // the epoch to the (never-failing) greedy solver and record which
-        // solver actually produced the masks.
-        let solver = match self.opts.solver.validate(&assoc.table) {
-            Ok(()) => self.opts.solver.build(),
-            Err(_) => SolverKind::Greedy.build(),
-        };
-        let warm = drift <= FRESH_SOLVE_DRIFT;
-        let solved = if warm {
-            solve::run_incremental(&assoc.table, solver.as_ref(), &st.prev_solution)
-        } else {
-            solve::run(&assoc.table, solver.as_ref())
-        };
-        let churn = mask_churn(&st.prev_solution.tiles, &solved.solution.tiles);
-        let grouped = group::run(&solved.masks, self.method.uses_merging());
-        let use_roi: Vec<bool> = (0..self.tiling.n_cameras)
+        let mut components: Vec<ComponentRecord> = Vec::with_capacity(comps.len());
+        let mut all_warm = true;
+        let mut degraded = false;
+        for (i, comp) in comps.iter().enumerate() {
+            if !fired[i] {
+                components.push(ComponentRecord {
+                    cameras: comp.clone(),
+                    drift: comp_drift[i],
+                    fired: false,
+                    warm: false,
+                    migrated: migrated[i],
+                    spill_groups: 0,
+                    n_constraints: comp_constraints[i].len(),
+                    solver: "carried",
+                });
+                continue;
+            }
+            // tandem filters over this component's substream only
+            // (intra-component pairs — identical to the fleet-wide
+            // filter restricted to these cameras), then association and
+            // the spilled, warm-started solve
+            let sub = shard::Shard { cameras: comp.clone() }.substream(&stream);
+            let filtered = filter::run_scoped(
+                sub,
+                self.sys,
+                &self.method,
+                self.opts.effective_threads(),
+                Some(comp),
+                frame,
+            );
+            let assoc = associate::run(&filtered.stream, &self.tiling);
+            let sp = shard::spill(&assoc.table);
+            let warm = warm_decision(migrated[i], comp_drift[i]);
+            let seed = if warm { Some(&st.prev_solution) } else { None };
+            // A run that planned successfully offline must not die
+            // mid-flight because `--solver exact` meets an oversized
+            // window instance: degrade the component to the
+            // (never-failing) greedy solver and record it.
+            let (solution, solver_name) =
+                match solve::solve_spilled(&assoc.table, self.opts.solver, seed, &sp) {
+                    Ok(s) => (s, self.opts.solver.name()),
+                    Err(_) => {
+                        degraded = true;
+                        (
+                            solve::solve_spilled(&assoc.table, SolverKind::Greedy, seed, &sp)
+                                .expect("the greedy solver never fails"),
+                            SolverKind::Greedy.name(),
+                        )
+                    }
+                };
+            all_warm &= warm;
+            tiles.extend(solution.tiles.iter().copied());
+            components.push(ComponentRecord {
+                cameras: comp.clone(),
+                drift: comp_drift[i],
+                fired: true,
+                warm,
+                migrated: migrated[i],
+                spill_groups: sp.groups.len(),
+                n_constraints: comp_constraints[i].len(),
+                solver: solver_name,
+            });
+        }
+
+        let masks = RoiMasks::from_solution(&self.tiling, &tiles);
+        let churn = mask_churn(&st.prev_solution.tiles, &tiles);
+        let grouped = group::run(&masks, self.method.uses_merging());
+        let use_roi: Vec<bool> = (0..n_cams)
             .map(|c| use_roi_path(&self.method, grouped.blocks[c].len(), self.n_infer_blocks))
             .collect();
-        let mask_tiles = solved.masks.total_size();
+        // content-compared epoch stamps: only cameras whose regions
+        // actually changed swap codec/filter state downstream — cameras
+        // of carried components keep their encoder motion reference
+        let cam_epoch: Vec<usize> = (0..n_cams)
+            .map(|c| if grouped.groups[c] == prev.groups[c] { prev.cam_epoch[c] } else { k })
+            .collect();
+        let (thresholds, rederived) =
+            self.rederive_thresholds(prev, &grouped.groups, &cam_epoch, k, window);
+
+        // baseline update: fired components adopt their window
+        // constraints (and the new partition becomes the component-diff
+        // reference); quiescent components keep accumulating drift
+        let baseline = st.prev_constraints.as_mut().expect("seeded above");
+        baseline.retain(|c| first_camera(c, &self.tiling).map_or(true, |cam| !fired_cam[cam]));
+        for (i, idxs) in comp_constraints.iter().enumerate() {
+            if fired[i] {
+                for &ci in idxs {
+                    baseline.insert(raw_table.constraints[ci].clone());
+                }
+            }
+        }
+        st.prev_components = comps;
+
+        let mask_tiles = masks.total_size();
         let epoch = Arc::new(PlanEpoch {
             groups: grouped.groups,
             blocks: grouped.blocks,
             use_roi,
+            cam_epoch,
+            thresholds,
             mask_tiles,
         });
-        st.prev_constraints = Some(constraint_set(&raw_table));
-        st.prev_solution = solved.solution;
+        st.prev_solution = Solution { tiles, unsatisfiable: 0 };
         st.records.push(ReplanRecord {
             epoch: k,
             start_seg,
             trigger_time,
             seconds: t0.elapsed().as_secs_f64(),
             replanned: true,
-            warm,
+            warm: all_warm,
             constraint_drift: drift,
             mask_churn: churn,
-            solver: solver.name(),
+            solver: if degraded { SolverKind::Greedy.name() } else { self.opts.solver.name() },
             n_constraints: raw_table.n_constraints(),
             mask_tiles,
+            scope: self.scope.name(),
+            components,
+            reducto_rederived: rederived,
         });
         Ok(epoch)
     }
@@ -315,6 +607,67 @@ fn constraint_drift(table: &AssociationTable, prev: &HashSet<Constraint>) -> f64
     novel as f64 / table.constraints.len() as f64
 }
 
+/// Camera owning a constraint (the camera of its first tile; a raw
+/// constraint's cameras always lie inside one co-occurrence component,
+/// so any tile identifies the component).  `None` for tile-less rows.
+fn first_camera(c: &Constraint, tiling: &Tiling) -> Option<usize> {
+    c.regions.iter().flat_map(|r| r.iter()).next().map(|&t| tiling.camera_of(t))
+}
+
+/// The per-component fire decision — the pure, unit-testable core of an
+/// epoch check:
+///
+/// * `Never` never fires;
+/// * `Every` fires any component with work — constraints to cover, or
+///   stale tiles to clear (an empty, untiled component would be a pure
+///   no-op and only inflate the re-solve count);
+/// * `Drift` fires on migration (the component diff — the instance
+///   changed *shape*, not just content, so the threshold does not
+///   apply), on the drift signal itself, or when a tiled component's
+///   window went **empty** — its drift is 0 by definition, so without
+///   this case its stale tiles would stream empty-road RoIs forever.
+fn fire_decision(
+    policy: ReplanPolicy,
+    migrated: bool,
+    drift: f64,
+    has_constraints: bool,
+    has_tiles: bool,
+) -> bool {
+    // a component with neither constraints to cover nor tiles to clear
+    // is a pure no-op whatever happened to its membership — solving it
+    // would only inflate the re-solve count
+    if !has_constraints && !has_tiles {
+        return false;
+    }
+    match policy {
+        ReplanPolicy::Never => false,
+        ReplanPolicy::Every(_) => true,
+        ReplanPolicy::Drift { threshold, .. } => {
+            migrated || drift >= threshold || !has_constraints
+        }
+    }
+}
+
+/// Whether a fired component's solve warm-starts: never after a
+/// migration (the donor/recipient instances changed shape, the old
+/// seed describes a different decomposition), and only while the drift
+/// stays under [`FRESH_SOLVE_DRIFT`].
+fn warm_decision(migrated: bool, drift: f64) -> bool {
+    !migrated && drift <= FRESH_SOLVE_DRIFT
+}
+
+/// The component diff: whether any camera of `comp` belonged to a
+/// differently-shaped component at the previous check.  A camera moving
+/// between components makes *both* its donor and its recipient report a
+/// changed membership, so both re-solve fresh.
+fn component_migrated(prev: &[Vec<usize>], comp: &[usize]) -> bool {
+    comp.iter().any(|c| {
+        prev.iter()
+            .find(|p| p.contains(c))
+            .map_or(true, |p| p.as_slice() != comp)
+    })
+}
+
 /// Jaccard distance between two global tile sets (0.0 = identical masks).
 fn mask_churn(a: &HashSet<GlobalTile>, b: &HashSet<GlobalTile>) -> f64 {
     if a.is_empty() && b.is_empty() {
@@ -339,6 +692,16 @@ mod tests {
             multiplicity: vec![1; n],
             total_occurrences: n,
         }
+    }
+
+    fn epoch_of_plan(plan: &OfflinePlan, n_cams: usize) -> Arc<PlanEpoch> {
+        Arc::new(PlanEpoch::initial(
+            plan.groups.clone(),
+            plan.blocks.clone(),
+            vec![true; n_cams],
+            None,
+            plan.masks.total_size(),
+        ))
     }
 
     #[test]
@@ -368,6 +731,76 @@ mod tests {
     }
 
     #[test]
+    fn migration_fires_fresh_for_donor_and_recipient() {
+        // a camera moving between components: both the recipient
+        // ({0,1,2}) and the donor's remainder ({3}) report a changed
+        // membership, fire even under an unreachable drift threshold,
+        // and must solve fresh
+        let policy = ReplanPolicy::Drift { check_every: 2, threshold: 1.1 };
+        let prev: Vec<Vec<usize>> = vec![vec![0, 1], vec![2, 3]];
+        for comp in [vec![0usize, 1, 2], vec![3]] {
+            let migrated = component_migrated(&prev, &comp);
+            assert!(migrated, "{comp:?} must report migration");
+            assert!(
+                fire_decision(policy, migrated, 0.0, true, true),
+                "{comp:?} must fire below the threshold"
+            );
+        }
+        // unaffected components stay gated on the threshold alone
+        assert!(!fire_decision(policy, false, 0.3, true, true));
+        // a migrated component with nothing to solve and nothing to
+        // clear is a no-op and must not fire at all
+        assert!(!fire_decision(policy, true, 0.0, false, false));
+        assert!(!warm_decision(true, 0.0), "migrated components must solve fresh");
+        assert!(warm_decision(false, 0.3));
+        assert!(!warm_decision(false, 0.7), "past FRESH_SOLVE_DRIFT solves fresh");
+    }
+
+    #[test]
+    fn empty_window_components_fire_only_to_clear_stale_tiles() {
+        let drift = ReplanPolicy::Drift { check_every: 2, threshold: 0.5 };
+        // a tiled component whose window went empty has drift 0 — it
+        // must still fire once to clear the stale tiles...
+        assert!(fire_decision(drift, false, 0.0, false, true));
+        // ...and stop firing once nothing is left to clear
+        assert!(!fire_decision(drift, false, 0.0, false, false));
+        let every = ReplanPolicy::Every(2);
+        assert!(fire_decision(every, false, 0.0, true, false));
+        assert!(fire_decision(every, false, 0.0, false, true));
+        assert!(!fire_decision(every, false, 0.0, false, false));
+        assert!(!fire_decision(ReplanPolicy::Never, true, 1.0, true, true));
+    }
+
+    #[test]
+    fn component_diff_detects_splits_merges_and_moves() {
+        let prev: Vec<Vec<usize>> = vec![vec![0, 1], vec![2, 3], vec![4]];
+        // unchanged membership: no migration
+        assert!(!component_migrated(&prev, &[0, 1]));
+        assert!(!component_migrated(&prev, &[4]));
+        // camera 2 moved to {0,1}: recipient {0,1,2} and donor {3} both
+        // report migration
+        assert!(component_migrated(&prev, &[0, 1, 2]));
+        assert!(component_migrated(&prev, &[3]));
+        // a split fires both halves
+        assert!(component_migrated(&prev, &[2]));
+        // a merge fires the union
+        assert!(component_migrated(&prev, &[2, 3, 4]));
+        // a camera never seen before is a migration too
+        assert!(component_migrated(&[], &[0]));
+    }
+
+    #[test]
+    fn first_camera_routes_by_any_tile() {
+        let tiling = Tiling::new(3, 320, 192, 16);
+        let c = Constraint { regions: vec![vec![300], vec![481]] };
+        assert_eq!(first_camera(&c, &tiling), Some(1));
+        let empty = Constraint { regions: vec![] };
+        assert_eq!(first_camera(&empty, &tiling), None);
+        let all_empty = Constraint { regions: vec![vec![]] };
+        assert_eq!(first_camera(&all_empty, &tiling), None);
+    }
+
+    #[test]
     fn replanner_epoch_on_a_static_window_keeps_the_plan_small() {
         // no drift scenario: the re-planner must still produce a valid
         // epoch whose masks stay in the same ballpark as the initial plan,
@@ -382,16 +815,12 @@ mod tests {
             &method,
             OfflineOptions::default(),
             ReplanPolicy::Every(2),
+            ReplanScope::Component,
             5,
             &plan,
             60,
         );
-        let epoch0 = Arc::new(PlanEpoch {
-            groups: plan.groups.clone(),
-            blocks: plan.blocks.clone(),
-            use_roi: vec![true; scenario.cameras.len()],
-            mask_tiles: plan.masks.total_size(),
-        });
+        let epoch0 = epoch_of_plan(&plan, scenario.cameras.len());
         let next = rp.plan_epoch(1, 2, &epoch0).unwrap();
         assert_eq!(next.groups.len(), scenario.cameras.len());
         assert!(next.mask_tiles > 0);
@@ -402,6 +831,20 @@ mod tests {
         assert!(records[0].seconds >= 0.0);
         assert_eq!(records[0].start_seg, 2);
         assert_eq!(records[0].solver, "greedy");
+        assert_eq!(records[0].scope, "component");
+        // the 5-camera rig overlaps at the crossing: one component, fired
+        assert!(records[0].fired_components() >= 1);
+        assert_eq!(records[0].carried_components() + records[0].fired_components(),
+                   records[0].components.len());
+        for c in &records[0].components {
+            if c.fired {
+                assert!(c.spill_groups >= 1);
+                assert_eq!(c.solver, "greedy");
+            }
+        }
+        // content-compared stamps: every stamp is 0 (unchanged) or 1
+        assert!(next.cam_epoch.iter().all(|&e| e == 0 || e == 1));
+        assert!(next.thresholds.is_none(), "CrossRoI runs without a frame filter");
     }
 
     #[test]
@@ -417,16 +860,12 @@ mod tests {
             OfflineOptions::default(),
             // threshold above 1.0 can never fire
             ReplanPolicy::Drift { check_every: 2, threshold: 1.1 },
+            ReplanScope::Component,
             5,
             &plan,
             60,
         );
-        let epoch0 = Arc::new(PlanEpoch {
-            groups: plan.groups.clone(),
-            blocks: plan.blocks.clone(),
-            use_roi: vec![true; scenario.cameras.len()],
-            mask_tiles: plan.masks.total_size(),
-        });
+        let epoch0 = epoch_of_plan(&plan, scenario.cameras.len());
         let next = rp.plan_epoch(1, 2, &epoch0).unwrap();
         assert!(Arc::ptr_eq(&next, &epoch0), "plan must be carried forward by pointer");
         let records = rp.records();
@@ -434,5 +873,38 @@ mod tests {
         assert!(!records[0].replanned);
         assert_eq!(records[0].mask_churn, 0.0);
         assert_eq!(records[0].solver, "carried");
+        assert_eq!(records[0].fired_components(), 0);
+        assert!(records[0].carried_components() >= 1);
+        assert!(records[0].components.iter().all(|c| !c.migrated),
+                "a static window must not report migrations");
+    }
+
+    #[test]
+    fn fleet_scope_uses_one_pseudo_component() {
+        let cfg = Config::test_small();
+        let scenario = Scenario::build(&cfg.scenario);
+        let method = Method::CrossRoi;
+        let plan = build_plan(&scenario, &cfg.scenario, &cfg.system, &method).unwrap();
+        let rp = Replanner::new(
+            &scenario,
+            &cfg.system,
+            &method,
+            OfflineOptions::default(),
+            ReplanPolicy::Every(2),
+            ReplanScope::Fleet,
+            5,
+            &plan,
+            60,
+        );
+        let epoch0 = epoch_of_plan(&plan, scenario.cameras.len());
+        rp.plan_epoch(1, 2, &epoch0).unwrap();
+        let records = rp.records();
+        assert_eq!(records[0].scope, "fleet");
+        assert_eq!(records[0].components.len(), 1);
+        assert_eq!(
+            records[0].components[0].cameras,
+            (0..scenario.cameras.len()).collect::<Vec<_>>()
+        );
+        assert!(!records[0].components[0].migrated, "the fleet pseudo-component never migrates");
     }
 }

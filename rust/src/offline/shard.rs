@@ -1,5 +1,7 @@
 //! Stage ②-prep — Shard: partition the fleet into overlap-connected
-//! camera clusters so the rest of the planner runs per cluster.
+//! camera clusters so the rest of the planner runs per cluster, and
+//! split each cluster's *solve instance* along its articulation
+//! structure (bridge-camera constraint spill, DESIGN.md §8).
 //!
 //! City-scale deployments are sparse (ReXCam, arXiv:1811.01268): cameras
 //! cluster around intersections, and a camera pair whose viewing fields
@@ -24,6 +26,8 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
+use crate::association::table::AssociationTable;
+use crate::association::tiles::GlobalTile;
 use crate::reid::records::ReidStream;
 
 /// Whether the planner partitions the fleet (CLI: `--shards auto|off`).
@@ -97,6 +101,151 @@ pub fn partition(stream: &ReidStream) -> Vec<Shard> {
         by_root.into_values().map(|cameras| Shard { cameras }).collect();
     shards.sort_by_key(|s| s.cameras[0]);
     shards
+}
+
+/// One spill sub-instance of a solve: a **tile-connected** group of
+/// constraints.  All tiles any of its constraints mention belong to this
+/// group and to no other, so solving each group independently and
+/// unioning the (disjoint) tile sets is byte-identical to solving the
+/// whole table at once — the greedy's scores and the prune's removal
+/// checks never cross tile-connectivity boundaries.
+#[derive(Debug, Clone)]
+pub struct SpillGroup {
+    /// Cameras owning this group's tiles, ascending.  A bridge camera
+    /// appears in several groups; [`SpillPartition::owner_of`] breaks the
+    /// tie.
+    pub cameras: Vec<usize>,
+    /// Indices into the source table's constraint list, ascending.
+    pub constraints: Vec<usize>,
+    /// Candidate tiles owned by this group.
+    pub n_tiles: usize,
+}
+
+impl SpillGroup {
+    /// This group's constraints as a standalone instance (order and
+    /// multiplicities preserved, so per-group solves replicate the global
+    /// solve's scoring exactly).
+    pub fn subtable(&self, table: &AssociationTable) -> AssociationTable {
+        AssociationTable {
+            tiling: table.tiling.clone(),
+            constraints: self
+                .constraints
+                .iter()
+                .map(|&ci| table.constraints[ci].clone())
+                .collect(),
+            multiplicity: self.constraints.iter().map(|&ci| table.multiplicity[ci]).collect(),
+            total_occurrences: self.constraints.iter().map(|&ci| table.multiplicity[ci]).sum(),
+        }
+    }
+}
+
+/// The bridge-camera constraint spill (DESIGN.md §8): a camera whose
+/// constraints span two otherwise-disjoint sub-fleets no longer fuses
+/// them into one giant solve instance.  Constraints are partitioned along
+/// the overlap graph's articulation structure, *refined to
+/// tile-connectivity*: two constraints share a group iff they are linked
+/// by a chain of shared candidate tiles.  Where a bridge camera's views
+/// of its two sides image into disjoint tile clusters, its constraint
+/// rows split between the sides; where traffic genuinely entangles the
+/// tiles, the groups fuse — exactly when splitting would change the
+/// solution.
+#[derive(Debug, Clone)]
+pub struct SpillPartition {
+    /// Tile-connected groups, ordered by their smallest tile id (tile
+    /// ownership is unique by construction, so the order is total).
+    pub groups: Vec<SpillGroup>,
+    /// Constraints mentioning no candidate tile at all (empty or
+    /// all-empty region lists); they join no group and contribute only
+    /// their unsatisfiable count.
+    pub residual: Vec<usize>,
+}
+
+impl SpillPartition {
+    /// Cameras whose tiles span more than one group — the articulation
+    /// (bridge) cameras of this instance, ascending.
+    pub fn bridge_cameras(&self) -> Vec<usize> {
+        let mut count: HashMap<usize, usize> = HashMap::new();
+        for g in &self.groups {
+            for &c in &g.cameras {
+                *count.entry(c).or_insert(0) += 1;
+            }
+        }
+        let mut out: Vec<usize> =
+            count.into_iter().filter(|&(_, n)| n >= 2).map(|(c, _)| c).collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// The group that owns camera `cam` for attribution purposes: the
+    /// lowest group id containing it (lowest shard id wins ties — the
+    /// deterministic ownership rule for bridge cameras).
+    pub fn owner_of(&self, cam: usize) -> Option<usize> {
+        self.groups.iter().position(|g| g.cameras.contains(&cam))
+    }
+}
+
+/// Split a solve instance into tile-connected constraint groups.
+///
+/// Determinism: groups are keyed by union-find roots but *ordered* by
+/// their smallest tile id, constraints ascend inside each group, and the
+/// partition is a pure function of the table (unions commute) — so the
+/// downstream group-order merge is byte-identical across runs and thread
+/// counts.
+pub fn spill(table: &AssociationTable) -> SpillPartition {
+    let tiles = table.candidate_tiles(); // sorted ascending
+    let id_of: HashMap<GlobalTile, usize> =
+        tiles.iter().enumerate().map(|(i, &t)| (t, i)).collect();
+    let mut uf = UnionFind::new(tiles.len());
+    let mut anchors: Vec<Option<usize>> = Vec::with_capacity(table.constraints.len());
+    let mut residual = Vec::new();
+    for (ci, c) in table.constraints.iter().enumerate() {
+        // every tile a constraint mentions — across all its alternative
+        // regions — must live in one group: the solve picks one region,
+        // and which one depends on every alternative's score
+        let mut first: Option<usize> = None;
+        for region in &c.regions {
+            for t in region {
+                let d = id_of[t];
+                match first {
+                    None => first = Some(d),
+                    Some(f) => uf.union(f, d),
+                }
+            }
+        }
+        if first.is_none() {
+            residual.push(ci);
+        }
+        anchors.push(first);
+    }
+    // dense ids ascend with tile id, so the first tile to reach a root is
+    // the group's smallest — walking tiles in order yields the group
+    // order and (camera-major tile ids) each group's cameras ascending
+    let mut group_of_root: HashMap<usize, usize> = HashMap::new();
+    let mut groups: Vec<SpillGroup> = Vec::new();
+    for (d, &tile) in tiles.iter().enumerate() {
+        let root = uf.find(d);
+        let gi = *group_of_root.entry(root).or_insert_with(|| {
+            groups.push(SpillGroup {
+                cameras: Vec::new(),
+                constraints: Vec::new(),
+                n_tiles: 0,
+            });
+            groups.len() - 1
+        });
+        let g = &mut groups[gi];
+        g.n_tiles += 1;
+        let cam = table.tiling.camera_of(tile);
+        if g.cameras.last() != Some(&cam) {
+            g.cameras.push(cam);
+        }
+    }
+    for (ci, a) in anchors.iter().enumerate() {
+        if let Some(d) = a {
+            let gi = group_of_root[&uf.find(*d)];
+            groups[gi].constraints.push(ci);
+        }
+    }
+    SpillPartition { groups, residual }
 }
 
 /// Union-find with path halving + union by size.
@@ -198,6 +347,98 @@ mod tests {
         assert_eq!(sub.n_cameras, 4, "global indexing must be preserved");
         assert_eq!(sub.len(), 2);
         assert!(sub.all().iter().all(|r| r.cam >= 2));
+    }
+
+    use crate::association::table::Constraint;
+    use crate::association::tiles::Tiling;
+
+    /// Table over `n_cams` cameras (240 tiles each: cam c owns ids
+    /// `c*240 .. (c+1)*240`).
+    fn spill_table(n_cams: usize, regions: Vec<Vec<Vec<GlobalTile>>>) -> AssociationTable {
+        let n = regions.len();
+        AssociationTable {
+            tiling: Tiling::new(n_cams, 320, 192, 16),
+            constraints: regions.into_iter().map(|r| Constraint { regions: r }).collect(),
+            multiplicity: vec![1; n],
+            total_occurrences: n,
+        }
+    }
+
+    #[test]
+    fn spill_splits_a_bridge_cameras_constraints() {
+        // cam 1 bridges cams 0 and 2: its left-half tile (240) shares a
+        // constraint with cam 0, its right-half tile (300) with cam 2 —
+        // tile-disjoint, so the instance splits at the articulation
+        let t = spill_table(
+            3,
+            vec![
+                vec![vec![1, 2], vec![240]],   // side A (cams 0 + bridge-left)
+                vec![vec![300], vec![481]],    // side B (bridge-right + cam 2)
+            ],
+        );
+        let sp = spill(&t);
+        assert_eq!(sp.groups.len(), 2);
+        assert_eq!(sp.groups[0].cameras, vec![0, 1]);
+        assert_eq!(sp.groups[0].constraints, vec![0]);
+        assert_eq!(sp.groups[0].n_tiles, 3);
+        assert_eq!(sp.groups[1].cameras, vec![1, 2]);
+        assert_eq!(sp.groups[1].constraints, vec![1]);
+        assert!(sp.residual.is_empty());
+        assert_eq!(sp.bridge_cameras(), vec![1]);
+        // ownership tie-break: the bridge camera belongs to the lowest
+        // group id containing it
+        assert_eq!(sp.owner_of(1), Some(0));
+        assert_eq!(sp.owner_of(0), Some(0));
+        assert_eq!(sp.owner_of(2), Some(1));
+        assert_eq!(sp.owner_of(9), None);
+    }
+
+    #[test]
+    fn spill_fuses_groups_that_share_tiles() {
+        // genuinely entangled constraints (shared tile 2) must stay one
+        // instance — splitting them would change the greedy's choices
+        let t = spill_table(1, vec![vec![vec![1, 2]], vec![vec![2, 3]], vec![vec![9]]]);
+        let sp = spill(&t);
+        assert_eq!(sp.groups.len(), 2);
+        assert_eq!(sp.groups[0].constraints, vec![0, 1]);
+        assert_eq!(sp.groups[1].constraints, vec![2]);
+        assert!(sp.bridge_cameras().is_empty());
+    }
+
+    #[test]
+    fn spill_connects_alternative_regions_of_one_constraint() {
+        // a constraint's alternative regions are one choice — their tiles
+        // must land in one group even across cameras
+        let t = spill_table(3, vec![vec![vec![1], vec![500]], vec![vec![600]]]);
+        let sp = spill(&t);
+        assert_eq!(sp.groups.len(), 2);
+        assert_eq!(sp.groups[0].cameras, vec![0, 2]);
+        assert_eq!(sp.groups[1].cameras, vec![2]);
+        assert_eq!(sp.owner_of(2), Some(0), "lowest group id wins the tie");
+    }
+
+    #[test]
+    fn spill_routes_tile_less_constraints_to_the_residual() {
+        let t = spill_table(1, vec![vec![], vec![vec![4]]]);
+        let sp = spill(&t);
+        assert_eq!(sp.groups.len(), 1);
+        assert_eq!(sp.residual, vec![0]);
+    }
+
+    #[test]
+    fn spill_subtable_preserves_order_and_multiplicity() {
+        let mut t = spill_table(1, vec![vec![vec![1]], vec![vec![50]], vec![vec![1, 2]]]);
+        t.multiplicity = vec![3, 7, 2];
+        let sp = spill(&t);
+        assert_eq!(sp.groups.len(), 2);
+        let sub = sp.groups[0].subtable(&t);
+        assert_eq!(sub.n_constraints(), 2);
+        assert_eq!(sub.constraints[0], t.constraints[0]);
+        assert_eq!(sub.constraints[1], t.constraints[2]);
+        assert_eq!(sub.multiplicity, vec![3, 2]);
+        assert_eq!(sub.total_occurrences, 5);
+        let sub1 = sp.groups[1].subtable(&t);
+        assert_eq!(sub1.multiplicity, vec![7]);
     }
 
     #[test]

@@ -1,9 +1,12 @@
 //! Stage ④ — Solve: optimize the RoI masks over the association table
-//! (§4.1.1 module ④, Eq. 1–2) with a pluggable [`Solver`].
+//! (§4.1.1 module ④, Eq. 1–2) with a pluggable [`Solver`] — either as one
+//! instance ([`run`] / [`run_incremental`]) or decomposed along the
+//! bridge-camera constraint spill ([`run_spilled`], DESIGN.md §8).
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context as _, Result};
 
 use crate::association::table::AssociationTable;
+use crate::offline::shard::SpillPartition;
 use crate::roi::masks::RoiMasks;
 use crate::roi::setcover::{ExactSolver, GreedySolver, Solution, Solver};
 
@@ -86,6 +89,57 @@ pub fn run_incremental(
     finish(table, solver.resolve(prev, table))
 }
 
+/// Solve an instance decomposed along its [`SpillPartition`]: each
+/// tile-connected constraint group is solved (or, with `prev`,
+/// warm-started via [`Solver::resolve`] — the seed restricts itself to
+/// the group's candidate tiles) independently and the disjoint tile sets
+/// are unioned in group order.  Because groups share no tiles, the union
+/// is **byte-identical** to solving the whole table at once with the same
+/// warm seed; the decomposition only shrinks each solve's universe.
+///
+/// The exact certifier's constraint cap applies **per group** here (the
+/// finest instance the certifier actually branches over), so `--solver
+/// exact` admits bridged fleets whose individual sides fit the cap even
+/// when the fused table would not.
+pub fn run_spilled(
+    table: &AssociationTable,
+    kind: SolverKind,
+    prev: Option<&Solution>,
+    sp: &SpillPartition,
+) -> Result<SolveArtifact> {
+    Ok(finish(table, solve_spilled(table, kind, prev, sp)?))
+}
+
+/// [`run_spilled`] without the per-camera mask split — for callers (the
+/// sharded planner's merge) that union solutions before building masks.
+pub fn solve_spilled(
+    table: &AssociationTable,
+    kind: SolverKind,
+    prev: Option<&Solution>,
+    sp: &SpillPartition,
+) -> Result<Solution> {
+    let solver = kind.build();
+    let mut tiles = std::collections::HashSet::new();
+    let mut unsatisfiable = 0usize;
+    for (gi, group) in sp.groups.iter().enumerate() {
+        let sub = group.subtable(table);
+        kind.validate(&sub)
+            .with_context(|| format!("spill group {gi} (cameras {:?})", group.cameras))?;
+        let solution = match prev {
+            Some(p) => solver.resolve(p, &sub),
+            None => solver.solve(&sub),
+        };
+        unsatisfiable += solution.unsatisfiable;
+        tiles.extend(solution.tiles);
+    }
+    for &ci in &sp.residual {
+        if table.constraints[ci].regions.is_empty() {
+            unsatisfiable += 1;
+        }
+    }
+    Ok(Solution { tiles, unsatisfiable })
+}
+
 fn finish(table: &AssociationTable, solution: Solution) -> SolveArtifact {
     let masks = RoiMasks::from_solution(&table.tiling, &solution.tiles);
     SolveArtifact { solution, masks }
@@ -154,5 +208,82 @@ mod tests {
         let first = run(&table, solver.as_ref());
         let second = run_incremental(&table, solver.as_ref(), &first.solution);
         assert_eq!(first.solution.tiles, second.solution.tiles);
+    }
+
+    fn bridge_table() -> AssociationTable {
+        // two tile-disjoint sides joined only through camera 1's frame
+        // (left tile 240 vs right tile 300) — the spill splits them
+        AssociationTable {
+            tiling: Tiling::new(3, 320, 192, 16),
+            constraints: vec![
+                Constraint { regions: vec![vec![1, 2], vec![240]] },
+                Constraint { regions: vec![vec![300], vec![481, 482]] },
+                Constraint { regions: vec![vec![1, 2]] },
+            ],
+            multiplicity: vec![1, 1, 1],
+            total_occurrences: 3,
+        }
+    }
+
+    #[test]
+    fn spilled_solve_matches_the_fused_solve() {
+        let table = bridge_table();
+        let sp = crate::offline::shard::spill(&table);
+        assert_eq!(sp.groups.len(), 2);
+        let fused = run(&table, SolverKind::Greedy.build().as_ref());
+        let spilled = run_spilled(&table, SolverKind::Greedy, None, &sp).unwrap();
+        assert_eq!(fused.solution.tiles, spilled.solution.tiles);
+        assert_eq!(fused.solution.unsatisfiable, spilled.solution.unsatisfiable);
+        for cam in 0..3 {
+            assert_eq!(fused.masks.tiles[cam], spilled.masks.tiles[cam]);
+        }
+    }
+
+    #[test]
+    fn spilled_warm_start_matches_the_fused_warm_start() {
+        let table = bridge_table();
+        let sp = crate::offline::shard::spill(&table);
+        let solver = SolverKind::Greedy.build();
+        let prev = run(&table, solver.as_ref()).solution;
+        let fused = run_incremental(&table, solver.as_ref(), &prev);
+        let spilled = run_spilled(&table, SolverKind::Greedy, Some(&prev), &sp).unwrap();
+        assert_eq!(fused.solution.tiles, spilled.solution.tiles);
+    }
+
+    #[test]
+    fn spilled_exact_cap_applies_per_group() {
+        // 30 tile-disjoint single-constraint groups: the fused table
+        // exceeds the exact certifier's cap, the per-group instances all
+        // fit it
+        let table = AssociationTable {
+            tiling: Tiling::new(1, 320, 192, 16),
+            constraints: (0..30).map(|i| Constraint { regions: vec![vec![i]] }).collect(),
+            multiplicity: vec![1; 30],
+            total_occurrences: 30,
+        };
+        let sp = crate::offline::shard::spill(&table);
+        assert_eq!(sp.groups.len(), 30);
+        assert!(SolverKind::Exact.validate(&table).is_err());
+        let solved = run_spilled(&table, SolverKind::Exact, None, &sp).unwrap();
+        assert_eq!(solved.solution.size(), 30);
+    }
+
+    #[test]
+    fn spilled_residual_counts_unsatisfiable_constraints() {
+        let table = AssociationTable {
+            tiling: Tiling::new(1, 320, 192, 16),
+            constraints: vec![
+                Constraint { regions: vec![] },
+                Constraint { regions: vec![vec![4]] },
+            ],
+            multiplicity: vec![1, 1],
+            total_occurrences: 2,
+        };
+        let sp = crate::offline::shard::spill(&table);
+        let spilled = run_spilled(&table, SolverKind::Greedy, None, &sp).unwrap();
+        let fused = run(&table, SolverKind::Greedy.build().as_ref());
+        assert_eq!(spilled.solution.unsatisfiable, 1);
+        assert_eq!(spilled.solution.unsatisfiable, fused.solution.unsatisfiable);
+        assert_eq!(spilled.solution.tiles, fused.solution.tiles);
     }
 }

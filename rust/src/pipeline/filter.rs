@@ -21,28 +21,32 @@ impl FilterStage for PassThroughFilter {
 /// Reducto keep/drop state for one camera, with the threshold learned
 /// offline ([`crate::reducto::ReductoFilter`]).  A negative threshold
 /// (the disabled filter) keeps even pixel-identical frames.
-pub struct ReductoFilterStage<'a> {
+///
+/// Owns its region list so a re-plan can swap both the regions the diff
+/// feature is restricted to and the threshold re-derived for them
+/// ([`FilterStage::replan`]) without borrowing from the plan epoch.
+pub struct ReductoFilterStage {
     /// RoI regions the diff feature is restricted to (Fig. 12).
-    regions: &'a [IRect],
+    regions: Vec<IRect>,
     threshold: f64,
     /// Previous rendered frame (diff reference), reused across frames.
     prev: Option<Frame>,
 }
 
-impl<'a> ReductoFilterStage<'a> {
-    pub fn new(regions: &'a [IRect], threshold: f64) -> Self {
-        ReductoFilterStage { regions, threshold, prev: None }
+impl ReductoFilterStage {
+    pub fn new(regions: &[IRect], threshold: f64) -> Self {
+        ReductoFilterStage { regions: regions.to_vec(), threshold, prev: None }
     }
 }
 
-impl FilterStage for ReductoFilterStage<'_> {
+impl FilterStage for ReductoFilterStage {
     fn keep(&mut self, frame: &Frame, segment_head: bool) -> bool {
         let keep = match &self.prev {
             // the very first frame has no reference and is always sent
             None => true,
             Some(prev) => {
                 segment_head
-                    || reducto::frame_diff(prev, frame, self.regions) > self.threshold
+                    || reducto::frame_diff(prev, frame, &self.regions) > self.threshold
             }
         };
         // update the diff reference in place, reusing its allocation
@@ -51,6 +55,15 @@ impl FilterStage for ReductoFilterStage<'_> {
             None => self.prev = Some(frame.clone()),
         }
         keep
+    }
+
+    /// Adopt a re-plan's regions and re-derived threshold.  The diff
+    /// reference (the previous *rendered* frame) survives the swap — it
+    /// is a property of the camera's pixel stream, not of the plan.
+    fn replan(&mut self, regions: &[IRect], threshold: f64) {
+        self.regions.clear();
+        self.regions.extend_from_slice(regions);
+        self.threshold = threshold;
     }
 }
 
@@ -104,6 +117,19 @@ mod tests {
         // +16 vs the last *kept* frame would trip the per-pixel delta;
         // vs the previous *rendered* frame it is another +8 -> dropped
         assert!(!f.keep(&flat(16), false));
+    }
+
+    #[test]
+    fn replan_swaps_regions_and_threshold_but_keeps_the_diff_reference() {
+        let regions = [IRect::new(0, 0, 32, 32)];
+        // threshold 10: nothing but heads would ever be kept
+        let mut f = ReductoFilterStage::new(&regions, 10.0);
+        assert!(f.keep(&flat(0), true));
+        assert!(!f.keep(&flat(100), false), "all-pixel diff still under a huge threshold");
+        // a re-plan lowers the threshold; the diff reference (last
+        // rendered frame, luma 100) must survive the swap
+        f.replan(&[IRect::new(0, 0, 32, 32)], 0.5);
+        assert!(f.keep(&flat(0), false), "diff vs the surviving reference trips the new threshold");
     }
 
     #[test]

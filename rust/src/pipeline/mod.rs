@@ -59,7 +59,7 @@ pub use infer::{
     DENSE_FALLBACK_FRACTION,
 };
 pub use query::{CarryOverQuery, QueryStage};
-pub use replan::{EpochPlanner, PlanEpoch, PlanSchedule, ReplanPolicy};
+pub use replan::{EpochPlanner, PlanEpoch, PlanSchedule, ReplanPolicy, ReplanScope};
 pub use runner::{
     run_pipeline, run_pipeline_with_replan, CameraStages, Parallelism, PipelineOptions,
     PipelineOutput, ReplanContext,

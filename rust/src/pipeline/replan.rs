@@ -62,6 +62,38 @@ impl ReplanPolicy {
     }
 }
 
+/// What one re-plan instance covers (CLI: `--replan-scope`, DESIGN.md
+/// §8): the whole fleet as one window, or — the default — each
+/// co-occurrence component independently, so only drifted components pay
+/// a re-solve and quiescent ones carry their sub-plan forward.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReplanScope {
+    /// Per-component drift, filtering and warm-started solves; quiescent
+    /// components carry forward untouched.
+    #[default]
+    Component,
+    /// One fleet-wide window and one fleet-wide fire/carry decision per
+    /// epoch (the historical behaviour).
+    Fleet,
+}
+
+impl ReplanScope {
+    pub fn parse(name: &str) -> anyhow::Result<ReplanScope> {
+        Ok(match name {
+            "component" => ReplanScope::Component,
+            "fleet" => ReplanScope::Fleet,
+            other => anyhow::bail!("unknown replan scope {other:?} (expected fleet|component)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReplanScope::Component => "component",
+            ReplanScope::Fleet => "fleet",
+        }
+    }
+}
+
 /// One planning epoch's per-camera artifacts — everything the online
 /// stages need from a plan (the `RoiMask` derivatives: codec regions,
 /// detector blocks, the RoI-vs-dense policy).
@@ -74,8 +106,35 @@ pub struct PlanEpoch {
     pub blocks: Vec<Vec<i32>>,
     /// Whether each camera takes the SBNet RoI inference path this epoch.
     pub use_roi: Vec<bool>,
+    /// Planning epoch at which each camera's regions last **changed**
+    /// (content-compared, so a component-scoped re-plan that left a
+    /// camera's plan intact keeps its stamp).  Workers swap codec
+    /// regions — and reset the codec's motion reference — only when this
+    /// stamp moves, so cameras of carried components keep their encoder
+    /// state across other components' re-plans.
+    pub cam_epoch: Vec<usize>,
+    /// Per-camera Reducto frame-filter thresholds for this epoch (`None`
+    /// when the method runs without frame filtering).  Re-derived from
+    /// the sliding window whenever a re-plan changes a camera's regions.
+    pub thresholds: Option<Vec<f64>>,
     /// |M| of this epoch's masks (diagnostics).
     pub mask_tiles: usize,
+}
+
+impl PlanEpoch {
+    /// Epoch 0: the initial offline plan's artifacts with every camera's
+    /// change stamp at 0 — the one construction the coordinator, tests
+    /// and benches share.
+    pub fn initial(
+        groups: Vec<Vec<IRect>>,
+        blocks: Vec<Vec<i32>>,
+        use_roi: Vec<bool>,
+        thresholds: Option<Vec<f64>>,
+        mask_tiles: usize,
+    ) -> PlanEpoch {
+        let n_cams = groups.len();
+        PlanEpoch { groups, blocks, use_roi, cam_epoch: vec![0; n_cams], thresholds, mask_tiles }
+    }
 }
 
 /// Produces the plan of each epoch `k ≥ 1`, in order, given the previous
@@ -186,6 +245,8 @@ mod tests {
             groups: vec![vec![IRect::new(0, 0, 16, 16)]],
             blocks: vec![vec![0]],
             use_roi: vec![true],
+            cam_epoch: vec![0],
+            thresholds: None,
             mask_tiles: tiles,
         }
     }
@@ -200,6 +261,16 @@ mod tests {
             Some(5)
         );
         assert_eq!(ReplanPolicy::default(), ReplanPolicy::Never);
+    }
+
+    #[test]
+    fn scope_parses_and_names() {
+        assert_eq!(ReplanScope::parse("fleet").unwrap(), ReplanScope::Fleet);
+        assert_eq!(ReplanScope::parse("component").unwrap(), ReplanScope::Component);
+        assert!(ReplanScope::parse("shard").is_err());
+        assert_eq!(ReplanScope::Fleet.name(), "fleet");
+        assert_eq!(ReplanScope::Component.name(), "component");
+        assert_eq!(ReplanScope::default(), ReplanScope::Component);
     }
 
     #[test]

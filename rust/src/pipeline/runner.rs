@@ -16,7 +16,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use crate::pipeline::infer::{InferOutcome, InferStage};
-use crate::pipeline::replan::{EpochPlanner, PlanEpoch, PlanSchedule, ReplanPolicy};
+use crate::pipeline::replan::{EpochPlanner, PlanEpoch, PlanSchedule, ReplanPolicy, ReplanScope};
 use crate::pipeline::stage::{
     CameraSegment, CaptureStage, EncodeStage, FilterStage, InferJob, SegmentLayout,
     SegmentRecord,
@@ -56,6 +56,10 @@ pub struct PipelineOptions {
     /// Continuous re-profiling policy (`--replan-every`, `--replan-drift`);
     /// [`ReplanPolicy::Never`] keeps the one-shot plan.
     pub replan: ReplanPolicy,
+    /// What each re-plan instance covers (`--replan-scope`): the whole
+    /// fleet, or (default) each co-occurrence component independently so
+    /// only drifted components re-solve.
+    pub replan_scope: ReplanScope,
 }
 
 impl Default for PipelineOptions {
@@ -75,6 +79,7 @@ impl Default for PipelineOptions {
             encode_cost: crate::pipeline::encode::EncodeCost::Measured,
             offline: crate::offline::OfflineOptions::default(),
             replan: ReplanPolicy::Never,
+            replan_scope: ReplanScope::default(),
         }
     }
 }
@@ -113,9 +118,13 @@ pub struct PipelineOutput {
 /// (downstream gone or failed) aborts the remaining segments.
 ///
 /// With a re-profiling `schedule`, the worker resolves its epoch at each
-/// segment boundary and — only when the published plan actually changed —
-/// swaps the encode regions and the streamed RoI mask before touching the
-/// segment's first frame, so a plan is never mixed within one segment.
+/// segment boundary and — only when **this camera's** plan actually
+/// changed, per the epoch's content-compared [`PlanEpoch::cam_epoch`]
+/// stamp — swaps the encode regions (resetting the codec's motion
+/// reference), the frame-filter regions/threshold and the streamed RoI
+/// mask before touching the segment's first frame.  A component-scoped
+/// re-plan that left this camera's component untouched therefore keeps
+/// its encoder state; a plan is never mixed within one segment.
 fn run_camera(
     cam: usize,
     stages: &mut CameraStages<'_>,
@@ -129,14 +138,20 @@ fn run_camera(
     let mut local = 0usize;
     let mut seg = 0usize;
     let mut cur_epoch = 0usize;
+    // epoch 0's plan is what the stages were constructed with
+    let mut applied_cam_epoch = 0usize;
     let mut cur_plan: Option<Arc<PlanEpoch>> = schedule.map(|s| s.wait(0));
     while local < layout.n_frames {
         if let Some(sched) = schedule {
             let epoch = sched.epoch_of(seg);
             if epoch != cur_epoch {
                 let plan = sched.wait(epoch);
-                if cur_plan.as_ref().map_or(true, |p| !Arc::ptr_eq(p, &plan)) {
+                if plan.cam_epoch[cam] != applied_cam_epoch {
                     stages.encode.set_regions(&plan.groups[cam]);
+                    if let Some(th) = &plan.thresholds {
+                        stages.filter.replan(&plan.groups[cam], th[cam]);
+                    }
+                    applied_cam_epoch = plan.cam_epoch[cam];
                 }
                 cur_plan = Some(plan);
                 cur_epoch = epoch;

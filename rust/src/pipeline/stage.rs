@@ -39,6 +39,13 @@ pub trait CaptureStage: Send {
 /// the GOP and the server's carry-over state).
 pub trait FilterStage: Send {
     fn keep(&mut self, frame: &Frame, segment_head: bool) -> bool;
+
+    /// Re-profiling swap: adopt the new plan's RoI regions and the
+    /// threshold re-derived for them — called by the runner at an epoch
+    /// boundary when this camera's plan actually changed, always between
+    /// segments.  Stages without region/threshold state ignore it (the
+    /// default).
+    fn replan(&mut self, _regions: &[crate::util::geometry::IRect], _threshold: f64) {}
 }
 
 /// Encodes one segment's kept frames (borrowed — the worker keeps

@@ -135,29 +135,53 @@ impl ReductoFilter {
         target: f64,
     ) -> ReductoFilter {
         let renderer = scenario.renderer();
-        let mut thresholds = Vec::with_capacity(scenario.cameras.len());
-        for cam in 0..scenario.cameras.len() {
-            let ids: Vec<usize> = frames.clone().collect();
-            let mut diffs = Vec::with_capacity(ids.len());
-            let mut prev: Option<Frame> = None;
-            for &f in &ids {
-                let cur = renderer.render(cam, f);
-                diffs.push(match &prev {
-                    None => 1.0,
-                    Some(p) => frame_diff(p, &cur, &regions_per_cam[cam]),
-                });
-                prev = Some(cur);
-            }
-            thresholds.push(profile_camera(
-                scenario,
-                cam,
-                &diffs,
-                frames.clone(),
-                frames_per_segment,
-                target,
-            ));
-        }
+        let thresholds = (0..scenario.cameras.len())
+            .map(|cam| {
+                ReductoFilter::profile_one(
+                    scenario,
+                    &renderer,
+                    cam,
+                    &regions_per_cam[cam],
+                    frames.clone(),
+                    frames_per_segment,
+                    target,
+                )
+            })
+            .collect();
         ReductoFilter { thresholds, target }
+    }
+
+    /// Profile a single camera's threshold over `frames` (absolute frame
+    /// indices) with the diff feature restricted to `regions` — the
+    /// continuous re-profiling hook: when a re-plan changes a camera's
+    /// RoI regions, its threshold is re-derived from the sliding window
+    /// against exactly those regions (DESIGN.md §8) instead of staying
+    /// profiled against the initial plan's.  The caller passes one
+    /// [`Renderer`] shared across cameras — constructing a renderer
+    /// rasterizes every camera's static background, which must not be
+    /// paid per camera.
+    #[allow(clippy::too_many_arguments)]
+    pub fn profile_one(
+        scenario: &Scenario,
+        renderer: &crate::sim::Renderer<'_>,
+        cam: usize,
+        regions: &[IRect],
+        frames: std::ops::Range<usize>,
+        frames_per_segment: usize,
+        target: f64,
+    ) -> f64 {
+        let ids: Vec<usize> = frames.clone().collect();
+        let mut diffs = Vec::with_capacity(ids.len());
+        let mut prev: Option<Frame> = None;
+        for &f in &ids {
+            let cur = renderer.render(cam, f);
+            diffs.push(match &prev {
+                None => 1.0,
+                Some(p) => frame_diff(p, &cur, regions),
+            });
+            prev = Some(cur);
+        }
+        profile_camera(scenario, cam, &diffs, frames, frames_per_segment, target)
     }
 
     /// A disabled filter (keeps every frame) — target 1.0 degenerates to

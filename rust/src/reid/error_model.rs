@@ -95,11 +95,21 @@ impl RawReid {
                             // identity break: deterministic fresh id
                             fresh_id(max_true, cam, chunk, det.vehicle_id)
                         } else if roll < params.p_fn + params.p_fp {
-                            // wrong match: steal another visible vehicle's id
+                            // wrong match: steal another visible vehicle's
+                            // id.  Confusion is local — the ReID gallery a
+                            // detection can be mismatched against is the
+                            // traffic of its own intersection — so a fleet
+                            // scenario's wrong matches never fabricate a
+                            // cross-intersection co-occurrence edge (which
+                            // would spuriously fuse overlap components).
+                            let home = scenario.intersection_of_vehicle(det.vehicle_id);
                             let others: Vec<u32> = scenario
                                 .unique_visible(frame)
                                 .into_iter()
-                                .filter(|&v| v != det.vehicle_id)
+                                .filter(|&v| {
+                                    v != det.vehicle_id
+                                        && scenario.intersection_of_vehicle(v) == home
+                                })
                                 .collect();
                             if others.is_empty() {
                                 det.vehicle_id
@@ -132,10 +142,13 @@ fn hash3(a: usize, b: usize, c: u32) -> u64 {
 }
 
 /// Deterministic fresh id for a broken chunk: unique per (cam, chunk,
-/// vehicle), strictly above every ground-truth id.
+/// vehicle), strictly above every ground-truth id, and drawn from a
+/// **per-camera** id space — a broken chunk means cross-camera identity
+/// was *lost*, so two cameras' fresh ids must never collide (a collision
+/// would fabricate a co-occurrence the overlap partition trusts).
 fn fresh_id(max_true: u32, cam: usize, chunk: usize, vehicle: u32) -> u32 {
     let h = hash3(cam, chunk, vehicle);
-    max_true + 1 + (h % 1_000_000) as u32
+    max_true + 1 + cam as u32 * 1_000_000 + (h % 1_000_000) as u32
 }
 
 #[cfg(test)]

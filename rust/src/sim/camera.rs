@@ -107,6 +107,77 @@ impl Camera {
         cams
     }
 
+    /// The whole scenario's rig: the single-intersection [`Camera::ring`]
+    /// for legacy configs, or one ring per intersection (ids
+    /// intersection-major, positions shifted east by the spacing) for
+    /// fleet configs.  With `bridge_cameras`, each adjacent pair
+    /// additionally gets a corridor trio:
+    ///
+    /// * an **east-watcher** at the west crossing looking east down the
+    ///   connecting road (coverage ends mid-corridor at its 75 m range,
+    ///   short of the next intersection's traffic),
+    /// * a **west-watcher** at the east crossing looking west (mirror),
+    /// * a **bridge camera** south of the corridor midpoint looking
+    ///   north, wide enough that its view overlaps *both* watchers'.
+    ///
+    /// The bridge camera co-occurs with cameras of both intersections and
+    /// is the only camera that does — the overlap graph's articulation
+    /// camera the constraint spill (DESIGN.md §8) splits on.  Because the
+    /// two intersections' arms end short of each other (spacing >
+    /// 2 × arm length), the corridor's middle stretch carries no traffic,
+    /// so the bridge's two views image into disjoint tile clusters.
+    pub fn fleet(cfg: &crate::config::ScenarioConfig) -> Vec<Camera> {
+        if cfg.n_intersections <= 1 {
+            return Camera::ring(cfg.n_cameras);
+        }
+        let mut cams: Vec<Camera> = Vec::new();
+        for k in 0..cfg.n_intersections {
+            let dx = k as f64 * cfg.intersection_spacing;
+            for c in Camera::ring(cfg.n_cameras) {
+                let id = cams.len();
+                cams.push(Camera::new(
+                    id,
+                    [c.pos[0] + dx, c.pos[1], c.pos[2]],
+                    c.yaw,
+                    c.pitch,
+                    c.hfov,
+                ));
+            }
+        }
+        if cfg.bridge_cameras {
+            let watcher_pitch = (10.0f64 / 45.0).atan();
+            for g in 0..cfg.n_intersections - 1 {
+                let west = g as f64 * cfg.intersection_spacing;
+                let east = (g + 1) as f64 * cfg.intersection_spacing;
+                let id = cams.len();
+                cams.push(Camera::new(
+                    id,
+                    [west, 6.0, 10.0],
+                    0.0, // looking east
+                    watcher_pitch,
+                    52f64.to_radians(),
+                ));
+                let id = cams.len();
+                cams.push(Camera::new(
+                    id,
+                    [east, 6.0, 10.0],
+                    std::f64::consts::PI, // looking west
+                    watcher_pitch,
+                    52f64.to_radians(),
+                ));
+                let id = cams.len();
+                cams.push(Camera::new(
+                    id,
+                    [(west + east) / 2.0, -38.0, 10.0],
+                    std::f64::consts::FRAC_PI_2, // looking north at the corridor
+                    (10.0f64 / 38.0).atan(),
+                    80f64.to_radians(),
+                ));
+            }
+        }
+        cams
+    }
+
     /// Project a world point; returns (u, v, depth) with depth along fwd.
     pub fn project(&self, p: [f64; 3]) -> Option<(f64, f64, f64)> {
         let v = [p[0] - self.pos[0], p[1] - self.pos[1], p[2] - self.pos[2]];

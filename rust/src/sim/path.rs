@@ -38,6 +38,15 @@ impl Path {
         *self.cumlen.last().unwrap()
     }
 
+    /// The same polyline shifted by `d` (lengths unchanged) — fleet
+    /// scenarios place each intersection's routes at its own offset.
+    pub fn translated(&self, d: Vec2) -> Path {
+        Path {
+            points: self.points.iter().map(|p| p.add(d)).collect(),
+            cumlen: self.cumlen.clone(),
+        }
+    }
+
     /// Position at distance `s` (clamped to the ends).
     pub fn point_at(&self, s: f64) -> Vec2 {
         let s = s.clamp(0.0, self.length());

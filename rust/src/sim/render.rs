@@ -124,6 +124,11 @@ pub struct Renderer<'a> {
 
 impl<'a> Renderer<'a> {
     pub fn new(scenario: &'a Scenario) -> Renderer<'a> {
+        // one NS road per intersection (fleet scenarios lay them out
+        // along the EW axis; the EW road is shared)
+        let ns_roads: Vec<f64> = (0..scenario.world.intersection_ids.len())
+            .map(|k| k as f64 * scenario.cfg.intersection_spacing)
+            .collect();
         let backgrounds = scenario
             .cameras
             .iter()
@@ -133,7 +138,7 @@ impl<'a> Renderer<'a> {
                     for x in 0..cam.width {
                         let base = match cam.pixel_to_ground(x as f64 + 0.5, y as f64 + 0.5) {
                             None => [0.72, 0.72, 0.74], // overcast sky
-                            Some(g) => ground_color(g.x, g.y),
+                            Some(g) => ground_color_at(g.x, g.y, &ns_roads),
                         };
                         // luminance-only static texture
                         let n = (hash_noise(cam.id as u64, x as u64, y as u64, 1) - 0.5) * 0.05;
@@ -218,8 +223,24 @@ impl<'a> Renderer<'a> {
     }
 }
 
-/// Static ground color at world position (x, y): roads, markings, concrete.
+/// Static ground color at world position (x, y): roads, markings,
+/// concrete — the single-intersection world (NS road at x = 0; the
+/// legacy-background regression tests pin this form).
+#[cfg(test)]
 fn ground_color(x: f64, y: f64) -> [f64; 3] {
+    ground_color_at(x, y, &[0.0])
+}
+
+/// [`ground_color`] for a fleet: one NS road per intersection center in
+/// `ns_roads`, sharing the one EW road.  With `ns_roads == [0.0]` this
+/// is exactly the legacy single-intersection background.
+fn ground_color_at(x: f64, y: f64, ns_roads: &[f64]) -> [f64; 3] {
+    // relative x to the nearest intersection's NS road
+    let x = ns_roads
+        .iter()
+        .map(|&ox| x - ox)
+        .min_by(|a, b| a.abs().partial_cmp(&b.abs()).unwrap())
+        .unwrap_or(x);
     let on_ns = x.abs() <= ROAD_HALF_WIDTH;
     let on_ew = y.abs() <= ROAD_HALF_WIDTH;
     if on_ns && on_ew {

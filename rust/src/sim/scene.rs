@@ -37,7 +37,7 @@ impl Scenario {
     /// Build the world, rig and ground truth for a configuration.
     pub fn build(cfg: &ScenarioConfig) -> Scenario {
         let world = World::generate(cfg);
-        let cameras = Camera::ring(cfg.n_cameras);
+        let cameras = Camera::fleet(cfg);
         let n_frames = cfg.total_frames();
         let mut gt = vec![Vec::with_capacity(n_frames); cameras.len()];
         for frame in 0..n_frames {
@@ -82,6 +82,12 @@ impl Scenario {
         ids.sort_unstable();
         ids.dedup();
         ids
+    }
+
+    /// Intersection whose traffic world spawned vehicle `id` (always 0 in
+    /// the legacy single-intersection world).
+    pub fn intersection_of_vehicle(&self, id: u32) -> usize {
+        self.world.intersection_of(id)
     }
 
     /// A renderer bound to this scenario's cameras and world.

@@ -33,6 +33,10 @@ pub enum Turn {
 pub struct World {
     pub vehicles: Vec<Vehicle>,
     pub duration: f64,
+    /// Vehicle-id range of each intersection's traffic (ids are assigned
+    /// intersection-major before the spawn-time sort, so each range is
+    /// contiguous).  One range for the legacy single-intersection world.
+    pub intersection_ids: Vec<std::ops::Range<u32>>,
 }
 
 /// Right-pointing unit vector relative to heading `d` (y-up world).
@@ -85,8 +89,8 @@ pub fn make_route(d: Vec2, turn: Turn) -> Path {
 /// (DESIGN.md §7) has to chase.  With drift disabled the weight is
 /// exactly 1, so the generated world is bit-identical to pre-drift
 /// builds.
-fn arm_weight(cfg: &ScenarioConfig, arm_idx: usize, t: f64) -> f64 {
-    if cfg.drift_at_secs <= 0.0 {
+fn arm_weight(cfg: &ScenarioConfig, drifts: bool, arm_idx: usize, t: f64) -> f64 {
+    if !drifts {
         return 1.0;
     }
     let ns_arm = arm_idx < 2;
@@ -101,8 +105,15 @@ fn arm_weight(cfg: &ScenarioConfig, arm_idx: usize, t: f64) -> f64 {
 impl World {
     /// Generate all vehicles for `cfg.total_secs()` seconds (plus a lead-in
     /// so the scene is already populated at t = 0).
+    ///
+    /// With `cfg.n_intersections > 1` each intersection runs its own
+    /// independent traffic world — seed `cfg.seed + k`, routes shifted
+    /// `k * intersection_spacing` m east, ids in disjoint contiguous
+    /// ranges ([`World::intersection_ids`]) — and the drift knobs perturb
+    /// only the intersection `cfg.drift_intersection` selects (`-1` =
+    /// all).  Intersection 0 of a fleet is bit-identical to the
+    /// single-intersection world of the same seed.
     pub fn generate(cfg: &ScenarioConfig) -> World {
-        let rng = Rng::new(cfg.seed).fork(0x77_6F72_6C64); // "world"
         let duration = cfg.total_secs();
         let arms = [
             Vec2::new(0.0, -1.0), // from north, heading south
@@ -112,54 +123,69 @@ impl World {
         ];
         let lead_in = ARM_LENGTH / cfg.speed_min; // populate the scene at t=0
         let mut vehicles = Vec::new();
+        let mut intersection_ids = Vec::with_capacity(cfg.n_intersections);
         let mut id = 0u32;
-        for (arm_idx, &d) in arms.iter().enumerate() {
-            let mut arm_rng = rng.fork(arm_idx as u64 + 1);
-            let mut t = -lead_in;
-            loop {
-                // piecewise-Poisson arrivals: headways are drawn at the
-                // rate in force when the gap opens; a gap that would cross
-                // the drift boundary is restarted there at the new rate —
-                // statistically exact (exponentials are memoryless) and it
-                // keeps a fully-starved arm (strength 1.0) from sleeping
-                // through its own post-drift revival on one infinite gap
-                let rate = cfg.arrival_rate * arm_weight(cfg, arm_idx, t);
-                let gap = arm_rng.exponential(rate).max(MIN_HEADWAY);
-                if cfg.drift_at_secs > 0.0
-                    && t < cfg.drift_at_secs
-                    && t + gap >= cfg.drift_at_secs
-                {
-                    t = cfg.drift_at_secs;
-                    continue;
+        for k in 0..cfg.n_intersections {
+            let first_id = id;
+            let rng = Rng::new(cfg.seed + k as u64).fork(0x77_6F72_6C64); // "world"
+            let offset = Vec2::new(k as f64 * cfg.intersection_spacing, 0.0);
+            let drifts = cfg.drift_at_secs > 0.0
+                && (cfg.drift_intersection < 0 || cfg.drift_intersection == k as i64);
+            for (arm_idx, &d) in arms.iter().enumerate() {
+                let mut arm_rng = rng.fork(arm_idx as u64 + 1);
+                let mut t = -lead_in;
+                loop {
+                    // piecewise-Poisson arrivals: headways are drawn at the
+                    // rate in force when the gap opens; a gap that would
+                    // cross the drift boundary is restarted there at the
+                    // new rate — statistically exact (exponentials are
+                    // memoryless) and it keeps a fully-starved arm
+                    // (strength 1.0) from sleeping through its own
+                    // post-drift revival on one infinite gap
+                    let rate = cfg.arrival_rate * arm_weight(cfg, drifts, arm_idx, t);
+                    let gap = arm_rng.exponential(rate).max(MIN_HEADWAY);
+                    if drifts && t < cfg.drift_at_secs && t + gap >= cfg.drift_at_secs {
+                        t = cfg.drift_at_secs;
+                        continue;
+                    }
+                    t += gap;
+                    if t > duration {
+                        break;
+                    }
+                    let turn = match arm_rng.f64() {
+                        x if x < 0.6 => Turn::Straight,
+                        x if x < 0.8 => Turn::Right,
+                        _ => Turn::Left,
+                    };
+                    let class = if arm_rng.chance(cfg.truck_fraction) {
+                        VehicleClass::Truck
+                    } else {
+                        VehicleClass::Car
+                    };
+                    vehicles.push(Vehicle {
+                        id,
+                        spawn_time: t,
+                        path: make_route(d, turn).translated(offset),
+                        speed: arm_rng.range(cfg.speed_min, cfg.speed_max),
+                        class,
+                        color: arm_rng.below(PALETTE.len()),
+                    });
+                    id += 1;
                 }
-                t += gap;
-                if t > duration {
-                    break;
-                }
-                let turn = match arm_rng.f64() {
-                    x if x < 0.6 => Turn::Straight,
-                    x if x < 0.8 => Turn::Right,
-                    _ => Turn::Left,
-                };
-                let class = if arm_rng.chance(cfg.truck_fraction) {
-                    VehicleClass::Truck
-                } else {
-                    VehicleClass::Car
-                };
-                vehicles.push(Vehicle {
-                    id,
-                    spawn_time: t,
-                    path: make_route(d, turn),
-                    speed: arm_rng.range(cfg.speed_min, cfg.speed_max),
-                    class,
-                    color: arm_rng.below(PALETTE.len()),
-                });
-                id += 1;
             }
+            intersection_ids.push(first_id..id);
         }
-        let _ = rng;
         vehicles.sort_by(|a, b| a.spawn_time.partial_cmp(&b.spawn_time).unwrap());
-        World { vehicles, duration }
+        World { vehicles, duration, intersection_ids }
+    }
+
+    /// Intersection whose traffic world spawned vehicle `id` (0 for the
+    /// legacy single-intersection world).
+    pub fn intersection_of(&self, id: u32) -> usize {
+        self.intersection_ids
+            .iter()
+            .position(|r| r.contains(&id))
+            .unwrap_or(0)
     }
 
     /// Poses of every vehicle present at time `t`, ordered by id.

@@ -69,6 +69,7 @@ pub mod fleet {
     use crate::offline::profile;
     use crate::reid::records::{RawDetection, ReidStream};
     use crate::sim::Scenario;
+    use crate::util::geometry::Rect;
 
     /// Profile `n_intersections` disjoint 4-camera intersections (seeds
     /// `base_seed + k`) and concatenate their streams into one fleet:
@@ -112,6 +113,64 @@ pub mod fleet {
             base.scenario.tile_px,
         );
         (stream, tiling)
+    }
+
+    /// [`disjoint_intersections`] (2 intersections) plus one **bridge
+    /// camera**: a deterministic subsample of intersection 0's camera-0
+    /// records re-appears in the bridge camera's *left* image half, and
+    /// of intersection 1's first camera (global camera 4) in its *right*
+    /// half, with the middle tile columns left empty.  The co-occurrence
+    /// partition therefore fuses the whole fleet into **one** camera
+    /// component through the bridge, while the bridge's two views image
+    /// into tile-disjoint clusters — exactly the topology the constraint
+    /// spill (DESIGN.md §8) splits back apart.  Returns the stream, the
+    /// tiling and the bridge camera's global index.
+    pub fn bridged_intersections(
+        base: &Config,
+        base_seed: u64,
+    ) -> (ReidStream, Tiling, usize) {
+        let (stream, _) = disjoint_intersections(base, 2, base_seed);
+        let bridge = 2 * 4;
+        let n_cams = bridge + 1;
+        let mut records: Vec<RawDetection> = stream.all().to_vec();
+        for rec in stream.all() {
+            let left = match rec.cam {
+                0 => true,
+                4 => false,
+                _ => continue,
+            };
+            if rec.frame % 2 != 0 {
+                continue; // subsample: the bridge sees the corridor part-time
+            }
+            // squeeze the source bbox into the bridge's left
+            // (intersection 0) or right (intersection 1) image half;
+            // x stays under 120+24=144 on the left and starts at 184 on
+            // the right, so tile columns 9–10 (x 144..176) never fill
+            // and the two clusters stay tile-disjoint
+            let w = rec.bbox.width.clamp(8.0, 24.0);
+            let h = rec.bbox.height.clamp(8.0, 24.0);
+            let x = if left {
+                rec.bbox.left * 120.0 / 320.0
+            } else {
+                184.0 + rec.bbox.left * 120.0 / 320.0
+            };
+            let y = (rec.bbox.top * 0.8).min(192.0 - h - 1.0);
+            records.push(RawDetection {
+                cam: bridge,
+                frame: rec.frame,
+                bbox: Rect::new(x, y, w, h),
+                raw_id: rec.raw_id,
+                true_id: rec.true_id,
+            });
+        }
+        let stream = ReidStream::new(n_cams, stream.n_frames, records);
+        let tiling = Tiling::new(
+            n_cams,
+            crate::sim::FRAME_W,
+            crate::sim::FRAME_H,
+            base.scenario.tile_px,
+        );
+        (stream, tiling, bridge)
     }
 }
 

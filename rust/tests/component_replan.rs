@@ -1,0 +1,280 @@
+//! Component-incremental re-planning over multi-intersection fleets
+//! (DESIGN.md §8): the sim's fleet scenarios partition into
+//! per-intersection components (joined only by an explicit bridge
+//! camera), re-plan epochs route through that partition so only drifted
+//! components re-solve, and component scope stays byte-identical to
+//! fleet scope — and across pipeline schedules — on everything the masks
+//! determine.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use crossroi::config::Config;
+use crossroi::coordinator::{run_method_with, Infer, Method, MethodReport, NativeInfer};
+use crossroi::offline::{associate, build_plan, spill, OfflineOptions, Replanner};
+use crossroi::pipeline::{
+    EncodeCost, EpochPlanner as _, Parallelism, PipelineOptions, PlanEpoch, ReplanPolicy,
+    ReplanScope,
+};
+use crossroi::reid::error_model::{ErrorModelParams, RawReid};
+use crossroi::sim::Scenario;
+
+/// Two 4-camera intersections, short windows.  `drift_intersection = 1`
+/// flips intersection 1's flow mid-eval while intersection 0 stays
+/// stationary.
+fn fleet_config(drifted: Option<i64>) -> Config {
+    let mut cfg = Config::test_small();
+    cfg.scenario.n_cameras = 4;
+    cfg.scenario.n_intersections = 2;
+    cfg.scenario.profile_secs = 8.0;
+    cfg.scenario.eval_secs = 8.0;
+    if let Some(k) = drifted {
+        cfg.scenario.drift_at_secs = 10.0;
+        cfg.scenario.drift_strength = 0.9;
+        cfg.scenario.drift_intersection = k;
+    }
+    cfg.scenario.validate().unwrap();
+    cfg
+}
+
+fn profile_partition(scenario: &Scenario) -> Vec<Vec<usize>> {
+    let stream = RawReid::generate(
+        scenario,
+        scenario.profile_range(),
+        &ErrorModelParams::default(),
+    );
+    crossroi::offline::shard::partition(&stream)
+        .into_iter()
+        .map(|s| s.cameras)
+        .collect()
+}
+
+#[test]
+fn disjoint_intersections_partition_into_per_intersection_components() {
+    let cfg = fleet_config(None);
+    let scenario = Scenario::build(&cfg.scenario);
+    assert_eq!(scenario.cameras.len(), 8);
+    let comps = profile_partition(&scenario);
+    assert_eq!(
+        comps,
+        vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]],
+        "the fleet must partition into its intersections"
+    );
+}
+
+#[test]
+fn bridge_camera_fuses_the_partition_and_spills_the_solve() {
+    // the corridor trio (east-watcher, west-watcher, bridge) chains the
+    // two intersections into ONE camera component; the vehicle-free
+    // middle stretch of the corridor images into an empty band of the
+    // bridge camera's frame, so the constraint spill splits the solve
+    // back apart at the bridge
+    let mut cfg = fleet_config(None);
+    cfg.scenario.bridge_cameras = true;
+    cfg.scenario.validate().unwrap();
+    let scenario = Scenario::build(&cfg.scenario);
+    assert_eq!(scenario.cameras.len(), 11, "2 rigs of 4 + the corridor trio");
+    let comps = profile_partition(&scenario);
+    assert_eq!(comps.len(), 1, "the bridge must fuse the fleet: {comps:?}");
+    assert_eq!(comps[0], (0..11).collect::<Vec<_>>());
+
+    let stream = RawReid::generate(
+        &scenario,
+        scenario.profile_range(),
+        &ErrorModelParams::default(),
+    );
+    let tiling = crossroi::association::tiles::Tiling::new(
+        11,
+        crossroi::sim::FRAME_W,
+        crossroi::sim::FRAME_H,
+        cfg.scenario.tile_px,
+    );
+    let table = associate::run(&stream, &tiling).table;
+    assert!(table.n_constraints() > 0);
+    let sp = spill(&table);
+    assert!(sp.groups.len() >= 2, "bridge topology must spill: {} groups", sp.groups.len());
+    // camera 10 is the bridge: its left half belongs to intersection 0's
+    // groups, its right half to intersection 1's
+    assert!(
+        sp.bridge_cameras().contains(&10),
+        "bridge camera not split: bridges {:?}",
+        sp.bridge_cameras()
+    );
+    // no spill group may mix the two rigs — they are joined only through
+    // the corridor cameras
+    for g in &sp.groups {
+        let rig0 = g.cameras.iter().any(|&c| c < 4);
+        let rig1 = g.cameras.iter().any(|&c| (4..8).contains(&c));
+        assert!(
+            !(rig0 && rig1),
+            "a spill group mixes both rigs: {:?}",
+            g.cameras
+        );
+    }
+}
+
+fn epoch_of_plan(plan: &crossroi::offline::OfflinePlan, n_cams: usize) -> Arc<PlanEpoch> {
+    Arc::new(PlanEpoch::initial(
+        plan.groups.clone(),
+        plan.blocks.clone(),
+        vec![true; n_cams],
+        None,
+        plan.masks.total_size(),
+    ))
+}
+
+/// The acceptance scenario: drift perturbs only intersection 1, so at a
+/// post-drift boundary the drifted component's constraint drift must
+/// dominate — and, with a threshold between the two, only that component
+/// re-solves while intersection 0 is carried forward.
+#[test]
+fn only_the_drifted_intersection_resolves() {
+    let cfg = fleet_config(Some(1));
+    let scenario = Scenario::build(&cfg.scenario);
+    let method = Method::CrossRoi;
+    let plan = build_plan(&scenario, &cfg.scenario, &cfg.system, &method).unwrap();
+    let epoch0 = epoch_of_plan(&plan, 8);
+    // boundary at segment 6 (t = 6 s into eval): the sliding window spans
+    // the drift point at 2 s into eval
+    let measure = Replanner::new(
+        &scenario,
+        &cfg.system,
+        &method,
+        OfflineOptions::default(),
+        ReplanPolicy::Every(2),
+        ReplanScope::Component,
+        5,
+        &plan,
+        60,
+    );
+    measure.plan_epoch(1, 6, &epoch0).unwrap();
+    let records = measure.records();
+    let rec = &records[0];
+    assert_eq!(rec.components.len(), 2, "fleet must check two components: {rec:?}");
+    let calm = rec.components.iter().find(|c| c.cameras == vec![0, 1, 2, 3]).unwrap();
+    let hot = rec.components.iter().find(|c| c.cameras == vec![4, 5, 6, 7]).unwrap();
+    assert!(!calm.migrated && !hot.migrated, "stable intersections must not migrate");
+    assert!(
+        hot.drift > calm.drift + 0.02,
+        "the drifted intersection must out-drift the stationary one: {} vs {}",
+        hot.drift,
+        calm.drift
+    );
+
+    // self-calibrating threshold between the two measured drifts: exactly
+    // the drifted component fires, the stationary one is carried
+    let threshold = (hot.drift + calm.drift) / 2.0;
+    let gated = Replanner::new(
+        &scenario,
+        &cfg.system,
+        &method,
+        OfflineOptions::default(),
+        ReplanPolicy::Drift { check_every: 2, threshold },
+        ReplanScope::Component,
+        5,
+        &plan,
+        60,
+    );
+    let next = gated.plan_epoch(1, 6, &epoch0).unwrap();
+    let records = gated.records();
+    let rec = &records[0];
+    assert!(rec.replanned);
+    let calm = rec.components.iter().find(|c| c.cameras == vec![0, 1, 2, 3]).unwrap();
+    let hot = rec.components.iter().find(|c| c.cameras == vec![4, 5, 6, 7]).unwrap();
+    assert!(hot.fired, "the drifted component must re-solve");
+    assert!(!calm.fired, "the stationary component must be carried");
+    assert_eq!(calm.solver, "carried");
+    assert_eq!(rec.fired_components(), 1);
+    assert_eq!(rec.carried_components(), 1);
+    // the carried intersection's cameras keep their plan: their region
+    // lists are byte-equal to epoch 0's and their epoch stamp stays 0
+    for cam in 0..4 {
+        assert_eq!(next.groups[cam], epoch0.groups[cam], "cam {cam} plan changed");
+        assert_eq!(next.cam_epoch[cam], 0, "cam {cam} must keep its epoch stamp");
+    }
+    // the drifted intersection's masks must actually move
+    assert!(
+        (4..8).any(|cam| next.groups[cam] != epoch0.groups[cam]),
+        "drifted component re-solved to an identical plan"
+    );
+}
+
+/// Native reference detector with fixed, deterministic service times.
+struct FixedCostInfer;
+
+impl Infer for FixedCostInfer {
+    fn infer(&self, frame: &[f32], blocks: Option<&[i32]>) -> Result<(Vec<f32>, f64)> {
+        let (grid, _) = NativeInfer.infer(frame, blocks)?;
+        let secs = match blocks {
+            None => 0.004,
+            Some(b) => 0.001 + 0.00004 * b.len() as f64,
+        };
+        Ok((grid, secs))
+    }
+}
+
+fn opts(par: Parallelism, scope: ReplanScope) -> PipelineOptions {
+    PipelineOptions {
+        parallelism: par,
+        encode_cost: EncodeCost::PerFrame(0.02),
+        replan: ReplanPolicy::Every(2),
+        replan_scope: scope,
+        ..PipelineOptions::default()
+    }
+}
+
+/// On a disjoint fleet, component scope must agree with fleet scope on
+/// everything the masks determine, and the component-scoped run itself
+/// must be byte-identical across pipeline schedules.
+#[test]
+fn component_scope_is_byte_identical_on_a_disjoint_fleet() {
+    let cfg = fleet_config(None);
+    let scenario = Scenario::build(&cfg.scenario);
+    let run = |par: Parallelism, scope: ReplanScope| -> MethodReport {
+        run_method_with(
+            &scenario,
+            &cfg.system,
+            &FixedCostInfer,
+            &Method::CrossRoi,
+            None,
+            &opts(par, scope),
+        )
+        .unwrap()
+        .0
+    };
+    let comp = run(Parallelism::PerCamera, ReplanScope::Component);
+    // canaries: stationary traffic keeps every solve warm and no camera
+    // migrates — the preconditions for cross-scope identity
+    assert_eq!(comp.replan_migrations, 0);
+    assert_eq!(comp.replan_warm_count, comp.replan_count);
+
+    let fleet = run(Parallelism::PerCamera, ReplanScope::Fleet);
+    assert_eq!(fleet.replan_warm_count, fleet.replan_count);
+    assert_eq!(fleet.accuracy, comp.accuracy);
+    assert_eq!(fleet.missed_per_frame, comp.missed_per_frame);
+    assert_eq!(fleet.bytes_total, comp.bytes_total);
+    assert_eq!(fleet.network_mbps_per_cam, comp.network_mbps_per_cam);
+    assert_eq!(fleet.mask_tiles, comp.mask_tiles);
+    assert_eq!(fleet.regions_per_cam, comp.regions_per_cam);
+    assert_eq!(fleet.latency.camera, comp.latency.camera);
+    assert_eq!(fleet.latency.network, comp.latency.network);
+    assert_eq!(fleet.latency.server, comp.latency.server);
+    assert_eq!(fleet.latency_p95, comp.latency_p95);
+
+    // byte-identity across schedules for the component-scoped run
+    let json = |par: Parallelism| -> String {
+        let mut r = run(par, ReplanScope::Component);
+        r.offline_seconds = 0.0;
+        r.replan_seconds = 0.0;
+        r.replan_done_at = vec![0.0; r.replan_done_at.len()];
+        r.to_json().to_string_pretty(2)
+    };
+    let reference = json(Parallelism::Sequential);
+    for par in [Parallelism::PerCamera, Parallelism::Workers(3)] {
+        assert_eq!(
+            reference,
+            json(par),
+            "{par:?} diverged from the sequential reference under component re-planning"
+        );
+    }
+}

@@ -219,6 +219,81 @@ fn disjoint_merged_masks_equal_the_per_fleet_concatenation() {
     assert_eq!(merged.n_constraints, total_constraints, "constraint counts must sum");
 }
 
+// ---- bridge-camera constraint spill (DESIGN.md §8) ----
+
+#[test]
+fn bridged_fleet_plans_byte_identically_sharded_and_not() {
+    // two disjoint intersections joined by one bridge camera: the camera
+    // partition fuses them into a single component (no shard split), but
+    // the solve decomposes along the tile-connectivity spill — and the
+    // plan must stay byte-identical to the fused `--shards off` solve at
+    // every thread count
+    let cfg = Config::test_small();
+    let (stream, tiling, bridge) =
+        crossroi::testing::fleet::bridged_intersections(&cfg, 7);
+    let auto = plan_stream_at(&stream, &tiling, &cfg, ShardMode::Auto, 2);
+    let off = plan_stream_at(&stream, &tiling, &cfg, ShardMode::Off, 2);
+    assert!(auto.report.shards.is_empty(), "bridge must fuse the camera partition");
+    assert!(
+        auto.report.spill_groups >= 2,
+        "bridge topology must spill: {} groups",
+        auto.report.spill_groups
+    );
+    assert!(
+        auto.report.bridge_cameras.contains(&bridge),
+        "bridge camera {bridge} not detected: {:?}",
+        auto.report.bridge_cameras
+    );
+    assert_eq!(off.report.spill_groups, 0, "--shards off must not spill");
+    assert_plans_identical(&auto, &off, "shards auto vs off, bridged fleet");
+    for threads in [1usize, 8] {
+        let t = plan_stream_at(&stream, &tiling, &cfg, ShardMode::Auto, threads);
+        assert_plans_identical(&auto, &t, &format!("bridged fleet, {threads} threads"));
+        assert_eq!(t.report.spill_groups, auto.report.spill_groups);
+        assert_eq!(t.report.bridge_cameras, auto.report.bridge_cameras);
+    }
+}
+
+#[test]
+fn spill_partition_and_tile_ownership_are_deterministic() {
+    use crossroi::offline::{associate, spill};
+    let cfg = Config::test_small();
+    let (stream, tiling, bridge) =
+        crossroi::testing::fleet::bridged_intersections(&cfg, 11);
+    let table = associate::run(&stream, &tiling).table;
+    let a = spill(&table);
+    let b = spill(&table);
+    assert!(a.groups.len() >= 2);
+    assert_eq!(a.groups.len(), b.groups.len());
+    for (ga, gb) in a.groups.iter().zip(&b.groups) {
+        assert_eq!(ga.cameras, gb.cameras);
+        assert_eq!(ga.constraints, gb.constraints);
+        assert_eq!(ga.n_tiles, gb.n_tiles);
+    }
+    assert_eq!(a.residual, b.residual);
+    // every constraint is owned by exactly one group
+    let mut owned = vec![0usize; table.n_constraints()];
+    for g in &a.groups {
+        for &ci in &g.constraints {
+            owned[ci] += 1;
+        }
+    }
+    for &ci in &a.residual {
+        owned[ci] += 1;
+    }
+    assert!(owned.iter().all(|&n| n == 1), "constraint ownership not a partition");
+    // the bridge camera spans groups, and its owner is the lowest of them
+    let bridging = a.bridge_cameras();
+    assert!(bridging.contains(&bridge), "{bridging:?}");
+    let owner = a.owner_of(bridge).expect("bridge camera owns tiles");
+    for (gi, g) in a.groups.iter().enumerate() {
+        if g.cameras.contains(&bridge) {
+            assert!(owner <= gi, "ownership must break ties toward the lowest group id");
+            break;
+        }
+    }
+}
+
 #[test]
 fn greedy_cover_is_certified_by_exact_on_a_small_instance() {
     // the acceptance tie-down: the incremental greedy's cover size is

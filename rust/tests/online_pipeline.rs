@@ -136,6 +136,48 @@ fn narrower_link_increases_latency_only() {
     );
 }
 
+#[test]
+fn sixteen_camera_fleet_contends_on_the_shared_link() {
+    // the online phase at 8–16 cameras (the offline side has swept this
+    // range since `benches/offline_scaling.rs`): the DES replay must
+    // stay consistent at fleet scale, and quadrupling the cameras on the
+    // same shared uplink must show up as link contention
+    let mut cfg = Config::test_small();
+    cfg.scenario.profile_secs = 8.0;
+    cfg.scenario.eval_secs = 6.0;
+    let run = |n: usize| {
+        let mut c = cfg.clone();
+        c.scenario.n_cameras = n;
+        c.scenario.validate().unwrap();
+        let sc = Scenario::build(&c.scenario);
+        run_method(&sc, &c.system, &NativeInfer, &Method::CrossRoi, None).unwrap()
+    };
+    let small = run(4);
+    let big = run(16);
+    let eval_frames = (cfg.scenario.eval_secs * cfg.scenario.fps).round() as usize;
+    assert_eq!(big.network_mbps_per_cam.len(), 16);
+    assert_eq!(big.frames_total, 16 * eval_frames);
+    assert!(big.bytes_total > small.bytes_total, "more cameras must stream more bytes");
+    assert!(
+        big.network_mbps_total > small.network_mbps_total,
+        "aggregate demand must grow with the fleet: {} vs {}",
+        big.network_mbps_total,
+        small.network_mbps_total
+    );
+    // same 1.8 Mbps shared link, ~4x the demand: queueing must push the
+    // network share of latency up
+    assert!(
+        big.latency.network > small.latency.network,
+        "16 cameras must queue longer on the shared link: {} vs {}",
+        big.latency.network,
+        small.latency.network
+    );
+    // the decomposition stays consistent at fleet scale
+    assert!(big.latency.camera >= 0.0 && big.latency.server > 0.0);
+    assert!(big.latency_p95 >= 0.0);
+    assert!((0.0..=1.0).contains(&big.accuracy), "accuracy out of range: {}", big.accuracy);
+}
+
 /// Property: the DES latency decomposition is consistent — every
 /// component non-negative and their mean sum equals the mean total.
 #[test]

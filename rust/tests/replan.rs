@@ -1,7 +1,10 @@
-//! Continuous re-profiling (DESIGN.md §7): sliding-window warm-started
+//! Continuous re-profiling (DESIGN.md §7–§8): sliding-window warm-started
 //! re-planning must chase a drifting scene — masks change, coverage stays
 //! complete — and the mid-run mask swap must be byte-deterministic across
-//! pipeline schedules (no reordered or dropped segments).
+//! pipeline schedules (no reordered or dropped segments).  Component
+//! scope (the default) must agree with fleet scope on everything the
+//! masks determine; the fleet-level integration tests live in
+//! `rust/tests/component_replan.rs`.
 
 use std::collections::HashSet;
 
@@ -9,9 +12,11 @@ use anyhow::Result;
 use crossroi::association::table::AssociationTable;
 use crossroi::association::tiles::{GlobalTile, Tiling};
 use crossroi::config::Config;
-use crossroi::coordinator::{run_method_with, Infer, Method, NativeInfer};
+use crossroi::coordinator::{run_method_with, Infer, Method, MethodReport, NativeInfer};
 use crossroi::offline::{associate, solve, SolverKind};
-use crossroi::pipeline::{EncodeCost, Parallelism, PipelineOptions, ReplanPolicy};
+use crossroi::pipeline::{
+    EncodeCost, Parallelism, PipelineOptions, ReplanPolicy, ReplanScope,
+};
 use crossroi::reid::error_model::{ErrorModelParams, RawReid};
 use crossroi::sim::Scenario;
 
@@ -91,11 +96,12 @@ impl Infer for FixedCostInfer {
     }
 }
 
-fn replan_opts(par: Parallelism, policy: ReplanPolicy) -> PipelineOptions {
+fn replan_opts(par: Parallelism, policy: ReplanPolicy, scope: ReplanScope) -> PipelineOptions {
     PipelineOptions {
         parallelism: par,
         encode_cost: EncodeCost::PerFrame(0.02),
         replan: policy,
+        replan_scope: scope,
         ..PipelineOptions::default()
     }
 }
@@ -110,14 +116,22 @@ fn online_drift_run_replans_via_warm_start() {
         &FixedCostInfer,
         &Method::CrossRoi,
         None,
-        &replan_opts(Parallelism::PerCamera, ReplanPolicy::Every(2)),
+        &replan_opts(Parallelism::PerCamera, ReplanPolicy::Every(2), ReplanScope::Component),
     )
     .unwrap();
-    // 10 s eval at 1 s segments, epoch every 2 segments → 4 boundaries
-    assert_eq!(report.replan_count, 4, "every-2 policy must fire at each boundary");
+    // 10 s eval at 1 s segments, epoch every 2 segments → 4 boundaries;
+    // every boundary fires at least its main component (component scope
+    // may additionally fire a momentarily-starved singleton to clear its
+    // stale tiles, so the component re-solve count can exceed 4)
+    assert!(
+        report.replan_count >= 4,
+        "every-2 policy must fire at each boundary: {}",
+        report.replan_count
+    );
+    assert_eq!(report.replan_done_at.len(), 4, "each boundary must execute a re-plan");
     assert!(
         report.replan_warm_count >= 1,
-        "no re-plan warm-started: {} of {}",
+        "no component re-solve warm-started: {} of {}",
         report.replan_warm_count,
         report.replan_count
     );
@@ -125,7 +139,6 @@ fn online_drift_run_replans_via_warm_start() {
         report.replan_mask_churn > 0.0,
         "drifting flow must churn the masks"
     );
-    assert_eq!(report.replan_done_at.len(), 4);
     // re-plans are timestamped after their epoch boundary on the DES clock
     assert!(report.replan_done_at.iter().all(|&t| t > 0.0));
     assert!(report.replan_seconds > 0.0);
@@ -139,7 +152,10 @@ fn online_drift_run_replans_via_warm_start() {
 fn drift_policy_fires_only_on_drift() {
     let cfg = drift_config();
     let scenario = Scenario::build(&cfg.scenario);
-    // a threshold no window can reach: the plan is carried forward
+    // a threshold no window can reach: the plan is carried forward.
+    // Fleet scope pins the check to pure drift gating — the fleet
+    // pseudo-component never migrates, while component scope could
+    // legitimately fire on a mid-run component split.
     let (calm, _) = run_method_with(
         &scenario,
         &cfg.system,
@@ -149,11 +165,13 @@ fn drift_policy_fires_only_on_drift() {
         &replan_opts(
             Parallelism::PerCamera,
             ReplanPolicy::Drift { check_every: 2, threshold: 1.1 },
+            ReplanScope::Fleet,
         ),
     )
     .unwrap();
     assert_eq!(calm.replan_count, 0, "unreachable threshold must never fire");
     assert!(calm.replan_seconds > 0.0, "drift checks still cost wall time");
+    assert!(calm.replan_carried_components >= 4, "each boundary carries the fleet forward");
     // a low threshold on a drifting scene must fire
     let (hot, _) = run_method_with(
         &scenario,
@@ -164,6 +182,7 @@ fn drift_policy_fires_only_on_drift() {
         &replan_opts(
             Parallelism::PerCamera,
             ReplanPolicy::Drift { check_every: 2, threshold: 0.05 },
+            ReplanScope::Component,
         ),
     )
     .unwrap();
@@ -181,9 +200,10 @@ fn mask_swap_is_byte_deterministic_across_schedules() {
             &FixedCostInfer,
             &Method::CrossRoi,
             None,
-            &replan_opts(par, ReplanPolicy::Every(2)),
+            &replan_opts(par, ReplanPolicy::Every(2), ReplanScope::Component),
         )
         .unwrap();
+        assert_eq!(report.replan_done_at.len(), 4, "each boundary must execute");
         // wall-clock fields are the only non-deterministic part; zero the
         // values but keep the shape (a dropped or duplicated re-plan
         // would still change the byte stream)
@@ -193,7 +213,7 @@ fn mask_swap_is_byte_deterministic_across_schedules() {
         report.to_json().to_string_pretty(2)
     };
     let reference = json(Parallelism::Sequential);
-    assert!(reference.contains("\"replan_count\": 4"), "{reference}");
+    assert!(reference.contains("\"replan_count\""), "{reference}");
     for par in [Parallelism::PerCamera, Parallelism::Workers(1), Parallelism::Workers(3)] {
         let parallel = json(par);
         assert_eq!(
@@ -203,19 +223,50 @@ fn mask_swap_is_byte_deterministic_across_schedules() {
     }
 }
 
+/// Everything the masks determine must agree between the two scopes on a
+/// connected fleet: the 5-camera rig is (mostly) one component, and a
+/// per-component decomposition of one component is exactly the fleet
+/// path.  Re-plan *diagnostics* (component counts) legitimately differ —
+/// component scope may additionally clear a starved singleton — so the
+/// comparison covers the pipeline-observable fields.
 #[test]
-#[allow(deprecated)]
-fn coordinator_offline_shim_still_resolves() {
-    // the deprecated re-export shim must keep the historical path working
-    // (warning, not breaking) until external callers migrate
-    let cfg = Config::test_small();
+fn component_scope_matches_fleet_scope_on_a_connected_fleet() {
+    // stationary traffic: sliding windows stay far under
+    // FRESH_SOLVE_DRIFT, so both scopes take the warm path at every
+    // boundary and no camera ever migrates between components — the
+    // preconditions for byte-identity (asserted below, not assumed)
+    let mut cfg = Config::test_small();
+    cfg.scenario.profile_secs = 10.0;
+    cfg.scenario.eval_secs = 10.0;
     let scenario = Scenario::build(&cfg.scenario);
-    let plan = crossroi::coordinator::offline::build_plan(
-        &scenario,
-        &cfg.scenario,
-        &cfg.system,
-        &Method::Baseline,
-    )
-    .unwrap();
-    assert!((plan.masks.coverage(0) - 1.0).abs() < 1e-12);
+    let run = |scope: ReplanScope| -> MethodReport {
+        run_method_with(
+            &scenario,
+            &cfg.system,
+            &FixedCostInfer,
+            &Method::CrossRoi,
+            None,
+            &replan_opts(Parallelism::PerCamera, ReplanPolicy::Every(2), scope),
+        )
+        .unwrap()
+        .0
+    };
+    let fleet = run(ReplanScope::Fleet);
+    let comp = run(ReplanScope::Component);
+    assert_eq!(comp.replan_migrations, 0, "stationary traffic must not migrate cameras");
+    assert_eq!(fleet.replan_warm_count, fleet.replan_count, "fleet run must stay warm");
+    assert_eq!(comp.replan_warm_count, comp.replan_count, "component run must stay warm");
+    assert_eq!(fleet.accuracy, comp.accuracy);
+    assert_eq!(fleet.missed_per_frame, comp.missed_per_frame);
+    assert_eq!(fleet.bytes_total, comp.bytes_total);
+    assert_eq!(fleet.network_mbps_per_cam, comp.network_mbps_per_cam);
+    assert_eq!(fleet.mask_tiles, comp.mask_tiles);
+    assert_eq!(fleet.mask_coverage, comp.mask_coverage);
+    assert_eq!(fleet.regions_per_cam, comp.regions_per_cam);
+    assert_eq!(fleet.frames_reduced, comp.frames_reduced);
+    assert_eq!(fleet.latency_p95, comp.latency_p95);
+    assert_eq!(fleet.latency.camera, comp.latency.camera);
+    assert_eq!(fleet.latency.network, comp.latency.network);
+    assert_eq!(fleet.latency.server, comp.latency.server);
+    assert_eq!(fleet.replan_mask_churn, comp.replan_mask_churn);
 }
