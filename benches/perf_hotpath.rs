@@ -1,61 +1,241 @@
-//! Hot-path microbenchmarks for the §Perf pass (EXPERIMENTS.md):
-//! L3 codec encode, renderer, DES, detector post-processing, and the real
-//! PJRT executables (dense + every RoI capacity).
+//! Hot-path scoreboard for the §Perf pass (EXPERIMENTS.md): per-kernel
+//! scalar-vs-SIMD timings (DCT, quantize, SAD, entropy, u8→f32 convert),
+//! whole-encoder segment throughput, renderer, DES, detector
+//! post-processing, and (with `--features pjrt`) the real PJRT
+//! executables.  Every encoder is constructed OUTSIDE the timed closure —
+//! `encode_segment` resets its GOPs internally, so the timed region is
+//! pure encode work, not setup.
+//!
+//! Besides the printed table the bench writes `BENCH_hotpath.json`
+//! (machine-readable rows: name, scalar_secs, simd_secs, speedup, iters,
+//! notes) so CI can archive the scoreboard per commit.
 //!
 //! Run: `cargo bench --bench perf_hotpath`
+//! Quick smoke (CI): `CROSSROI_BENCH_QUICK=1 cargo bench --bench perf_hotpath`
 
-use crossroi::bench::{time_it, Table};
-use crossroi::codec::SegmentEncoder;
+use crossroi::bench::{time_it, Table, Timing};
+use crossroi::codec::encoder::Planes;
+use crossroi::codec::{
+    avx2_supported, backend, dct, entropy, motion, set_backend, KernelBackend, SegmentEncoder,
+};
 use crossroi::config::Config;
 use crossroi::net::Des;
-use crossroi::runtime::{decode_objectness, Runtime};
+use crossroi::runtime::decode_objectness;
 use crossroi::sim::Scenario;
 use crossroi::util::geometry::IRect;
+use crossroi::util::json::Json;
+
+/// One scoreboard row: a component timed under the scalar backend and —
+/// when the host supports it — under the AVX2 backend.
+struct Row {
+    name: String,
+    scalar: Timing,
+    simd: Option<Timing>,
+    notes: String,
+}
+
+/// Iteration plan: (warmup, iters, target_secs), shrunk to a smoke run
+/// when `CROSSROI_BENCH_QUICK=1` (the CI leg only checks the bench runs
+/// end to end and emits well-formed JSON).
+struct Plan {
+    quick: bool,
+}
+
+impl Plan {
+    fn params(&self, warmup: usize, iters: usize, secs: f64) -> (usize, usize, f64) {
+        if self.quick {
+            (1, 3, 1.0)
+        } else {
+            (warmup, iters, secs)
+        }
+    }
+
+    /// Time `f` under the forced scalar backend, then (if supported) the
+    /// forced AVX2 backend; always restores auto-detection.  Safe to flip
+    /// mid-process because the two backends are byte-identical — state
+    /// carried across calls (encoder references, buffers) is unaffected.
+    fn pair<F: FnMut()>(
+        &self,
+        warmup: usize,
+        iters: usize,
+        secs: f64,
+        mut f: F,
+    ) -> (Timing, Option<Timing>) {
+        let (w, i, s) = self.params(warmup, iters, secs);
+        set_backend(Some(KernelBackend::Scalar));
+        let scalar = time_it(w, i, s, &mut f);
+        let simd = if avx2_supported() {
+            set_backend(Some(KernelBackend::Avx2));
+            Some(time_it(w, i, s, &mut f))
+        } else {
+            None
+        };
+        set_backend(None);
+        (scalar, simd)
+    }
+
+    fn single<F: FnMut()>(&self, warmup: usize, iters: usize, secs: f64, f: F) -> Timing {
+        let (w, i, s) = self.params(warmup, iters, secs);
+        time_it(w, i, s, f)
+    }
+}
+
+/// Deterministic pseudo-random DCT input blocks (codec-like magnitudes).
+fn sample_blocks(n: usize) -> Vec<[f32; 64]> {
+    let mut state = 0x9e3779b97f4a7c15u64;
+    (0..n)
+        .map(|_| {
+            let mut b = [0.0f32; 64];
+            for v in b.iter_mut() {
+                state = state
+                    .wrapping_mul(6364136223846793005)
+                    .wrapping_add(1442695040888963407);
+                *v = ((state >> 40) as f32 / (1u64 << 24) as f32 - 0.5) * 400.0;
+            }
+            b
+        })
+        .collect()
+}
 
 fn main() {
+    let plan = Plan {
+        quick: std::env::var("CROSSROI_BENCH_QUICK").ok().as_deref() == Some("1"),
+    };
     let cfg = Config::test_small();
     let scenario = Scenario::build(&cfg.scenario);
     let renderer = scenario.renderer();
-    let mut table = Table::new(&["component", "per-iter", "iters", "notes"]);
+    let mut rows: Vec<Row> = Vec::new();
 
-    // renderer
-    let t = time_it(3, 50, 5.0, || {
+    // renderer (no kernel dispatch on this path)
+    let t = plan.single(3, 50, 5.0, || {
         std::hint::black_box(renderer.render(0, 10));
     });
-    table.row(vec![
-        "render frame".into(),
-        t.per_iter_display(),
-        t.iters.to_string(),
-        "320x192 background+vehicles+noise".into(),
-    ]);
+    rows.push(Row {
+        name: "render frame".into(),
+        scalar: t,
+        simd: None,
+        notes: "320x192 background+vehicles+noise".into(),
+    });
 
-    // codec: full-frame segment (10 frames)
+    // ---- per-kernel scalar vs SIMD ----
+
+    let blocks = sample_blocks(256);
+    let (scalar, simd) = plan.pair(3, 50, 5.0, || {
+        for b in &blocks {
+            let mut fwd = *b;
+            dct::forward(&mut fwd);
+            dct::inverse(&mut fwd);
+            std::hint::black_box(&fwd);
+        }
+    });
+    rows.push(Row {
+        name: "dct forward+inverse".into(),
+        scalar,
+        simd,
+        notes: "256 8x8 blocks".into(),
+    });
+
+    let coeffs: Vec<[f32; 64]> = blocks
+        .iter()
+        .map(|b| {
+            let mut c = *b;
+            dct::forward(&mut c);
+            c
+        })
+        .collect();
+    let (scalar, simd) = plan.pair(3, 50, 5.0, || {
+        for c in &coeffs {
+            let q = dct::quantize(c, 6.0);
+            std::hint::black_box(dct::dequantize(&q, 6.0));
+        }
+    });
+    rows.push(Row {
+        name: "quantize+dequantize".into(),
+        scalar,
+        simd,
+        notes: "256 blocks, qp 6".into(),
+    });
+
+    let full = IRect::new(0, 0, 320, 192);
+    let plane_a = Planes::from_frame_region(&renderer.render(0, 0), full);
+    let plane_b = Planes::from_frame_region(&renderer.render(0, 1), full);
+    let pa = motion::Plane { w: plane_a.w, h: plane_a.h, data: &plane_a.y };
+    let pb = motion::Plane { w: plane_b.w, h: plane_b.h, data: &plane_b.y };
+    let n_mbs = (pa.w / 16) * (pa.h / 16);
+    let (scalar, simd) = plan.pair(3, 50, 5.0, || {
+        for by in (0..pa.h).step_by(16) {
+            for bx in (0..pa.w).step_by(16) {
+                std::hint::black_box(motion::sad(&pb, &pa, bx, by, 1, 1, f32::INFINITY));
+            }
+        }
+    });
+    rows.push(Row {
+        name: "motion SAD".into(),
+        scalar,
+        simd,
+        notes: format!("{n_mbs} MBs, (1,1) displacement"),
+    });
+
+    let levels: Vec<[i32; 64]> = coeffs.iter().map(|c| dct::quantize(c, 6.0)).collect();
+    let (scalar, simd) = plan.pair(3, 200, 5.0, || {
+        let mut prev_dc = 0i32;
+        for l in &levels {
+            let (bits, dc) = entropy::block_bits(l, prev_dc);
+            prev_dc = dc;
+            std::hint::black_box(bits);
+        }
+    });
+    rows.push(Row {
+        name: "entropy block_bits".into(),
+        scalar,
+        simd,
+        notes: "256 blocks, zig-zag+RLE cost".into(),
+    });
+
+    let frame = renderer.render(0, 10);
+    let roi = [IRect::new(64, 48, 160, 96)];
+    let mut masked_buf: Vec<f32> = Vec::new();
+    let (scalar, simd) = plan.pair(3, 200, 5.0, || {
+        frame.masked_f32_into(&roi, &mut masked_buf);
+        std::hint::black_box(&masked_buf);
+    });
+    rows.push(Row {
+        name: "masked u8->f32 convert".into(),
+        scalar,
+        simd,
+        notes: "25% RoI, reused buffer".into(),
+    });
+
+    // ---- whole-encoder throughput (all kernels in concert) ----
+
     let frames: Vec<_> = (0..10).map(|i| renderer.render(0, i)).collect();
-    let t = time_it(1, 20, 10.0, || {
-        let mut enc = SegmentEncoder::new(&[IRect::new(0, 0, 320, 192)], 6.0);
-        std::hint::black_box(enc.encode_segment(&frames));
+    let mut enc_full = SegmentEncoder::new(&[full], 6.0);
+    let (scalar, simd) = plan.pair(1, 20, 10.0, || {
+        std::hint::black_box(enc_full.encode_segment(&frames));
     });
-    table.row(vec![
-        "encode 10-frame segment (full)".into(),
-        t.per_iter_display(),
-        t.iters.to_string(),
-        format!("{:.1} fps", 10.0 / t.mean_secs),
-    ]);
-
-    // codec: quarter-frame RoI
-    let t = time_it(1, 20, 10.0, || {
-        let mut enc = SegmentEncoder::new(&[IRect::new(64, 48, 160, 96)], 6.0);
-        std::hint::black_box(enc.encode_segment(&frames));
+    let fps = 10.0 / simd.as_ref().unwrap_or(&scalar).mean_secs;
+    rows.push(Row {
+        name: "encode 10-frame segment (full)".into(),
+        scalar,
+        simd,
+        notes: format!("{fps:.1} fps best"),
     });
-    table.row(vec![
-        "encode 10-frame segment (25% RoI)".into(),
-        t.per_iter_display(),
-        t.iters.to_string(),
-        format!("{:.1} fps", 10.0 / t.mean_secs),
-    ]);
 
-    // DES throughput
-    let t = time_it(1, 10, 5.0, || {
+    let mut enc_roi = SegmentEncoder::new(&[IRect::new(64, 48, 160, 96)], 6.0);
+    let (scalar, simd) = plan.pair(1, 20, 10.0, || {
+        std::hint::black_box(enc_roi.encode_segment(&frames));
+    });
+    let fps = 10.0 / simd.as_ref().unwrap_or(&scalar).mean_secs;
+    rows.push(Row {
+        name: "encode 10-frame segment (25% RoI)".into(),
+        scalar,
+        simd,
+        notes: format!("{fps:.1} fps best"),
+    });
+
+    // ---- non-kernel hot paths ----
+
+    let t = plan.single(1, 10, 5.0, || {
         let mut des: Des<u64> = Des::new();
         for i in 0..10_000 {
             des.at(i as f64 * 0.001, i);
@@ -64,53 +244,110 @@ fn main() {
             std::hint::black_box(e);
         }
     });
-    table.row(vec![
-        "DES 10k events".into(),
-        t.per_iter_display(),
-        t.iters.to_string(),
-        format!("{:.1} M events/s", 10_000.0 / t.mean_secs / 1e6),
-    ]);
+    rows.push(Row {
+        name: "DES 10k events".into(),
+        scalar: t,
+        simd: None,
+        notes: "schedule + drain".into(),
+    });
 
-    // postproc
     let grid: Vec<f32> = (0..240).map(|i| if i % 7 == 0 { 0.8 } else { 0.0 }).collect();
-    let t = time_it(10, 1000, 2.0, || {
+    let t = plan.single(10, 1000, 2.0, || {
         std::hint::black_box(decode_objectness(&grid, 12, 20, 16, 0.25));
     });
-    table.row(vec![
-        "postproc decode".into(),
-        t.per_iter_display(),
-        t.iters.to_string(),
-        "12x20 grid".into(),
-    ]);
+    rows.push(Row {
+        name: "postproc decode".into(),
+        scalar: t,
+        simd: None,
+        notes: "12x20 grid".into(),
+    });
 
-    // PJRT executables (skipped when artifacts are absent)
-    match Runtime::load("artifacts") {
+    // ---- PJRT executables (feature-gated; skipped without artifacts) ----
+    #[cfg(feature = "pjrt")]
+    match crossroi::runtime::Runtime::load("artifacts") {
         Err(e) => println!("(skipping PJRT benches: {e:#})"),
         Ok(rt) => {
-            let frame = renderer.render(0, 10).to_f32();
-            let t = time_it(3, 50, 10.0, || {
-                std::hint::black_box(rt.infer_full(&frame).unwrap());
+            let f32_frame = renderer.render(0, 10).to_f32();
+            let t = plan.single(3, 50, 10.0, || {
+                std::hint::black_box(rt.infer_full(&f32_frame).unwrap());
             });
-            table.row(vec![
-                "HLO dense detector".into(),
-                t.per_iter_display(),
-                t.iters.to_string(),
-                format!("{:.1} Hz", 1.0 / t.mean_secs),
-            ]);
+            rows.push(Row {
+                name: "HLO dense detector".into(),
+                scalar: t,
+                simd: None,
+                notes: format!("{:.1} Hz", 1.0 / t.mean_secs),
+            });
             for &k in &[8usize, 16, 32, 60] {
                 let blocks: Vec<i32> = (0..k as i32).collect();
-                let t = time_it(3, 50, 10.0, || {
-                    std::hint::black_box(rt.infer_roi(&frame, &blocks).unwrap());
+                let t = plan.single(3, 50, 10.0, || {
+                    std::hint::black_box(rt.infer_roi(&f32_frame, &blocks).unwrap());
                 });
-                table.row(vec![
-                    format!("HLO RoI detector K={k}"),
-                    t.per_iter_display(),
-                    t.iters.to_string(),
-                    format!("{:.1} Hz, {} active blocks", 1.0 / t.mean_secs, k),
-                ]);
+                rows.push(Row {
+                    name: format!("HLO RoI detector K={k}"),
+                    scalar: t,
+                    simd: None,
+                    notes: format!("{:.1} Hz, {k} active blocks", 1.0 / t.mean_secs),
+                });
             }
         }
     }
 
-    table.print("perf_hotpath — per-component timings");
+    // ---- table + machine-readable scoreboard ----
+
+    let mut table = Table::new(&["component", "scalar", "simd", "speedup", "iters", "notes"]);
+    for r in &rows {
+        let (simd_col, speedup_col) = match &r.simd {
+            Some(s) => (
+                s.per_iter_display(),
+                format!("{:.2}x", r.scalar.mean_secs / s.mean_secs),
+            ),
+            None => ("-".into(), "-".into()),
+        };
+        table.row(vec![
+            r.name.clone(),
+            r.scalar.per_iter_display(),
+            simd_col,
+            speedup_col,
+            r.scalar.iters.to_string(),
+            r.notes.clone(),
+        ]);
+    }
+    table.print("perf_hotpath — scalar vs SIMD per-component timings");
+    println!(
+        "kernel backend: default {} (avx2 supported: {})",
+        backend().name(),
+        avx2_supported()
+    );
+
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::Str(r.name.clone())),
+                ("scalar_secs", Json::Num(r.scalar.mean_secs)),
+                (
+                    "simd_secs",
+                    r.simd.as_ref().map_or(Json::Null, |s| Json::Num(s.mean_secs)),
+                ),
+                (
+                    "speedup",
+                    r.simd
+                        .as_ref()
+                        .map_or(Json::Null, |s| Json::Num(r.scalar.mean_secs / s.mean_secs)),
+                ),
+                ("iters", Json::Num(r.scalar.iters as f64)),
+                ("notes", Json::Str(r.notes.clone())),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("perf_hotpath".into())),
+        ("avx2_supported", Json::Bool(avx2_supported())),
+        ("backend_default", Json::Str(backend().name().into())),
+        ("quick", Json::Bool(plan.quick)),
+        ("rows", Json::Arr(json_rows)),
+    ]);
+    let path = "BENCH_hotpath.json";
+    std::fs::write(path, doc.to_string_pretty(2) + "\n").expect("write scoreboard");
+    println!("scoreboard written to {path}");
 }

@@ -1,4 +1,8 @@
 //! 8×8 DCT-II / DCT-III (separable, precomputed basis) and quantization.
+//!
+//! Each public entry point dispatches between the scalar reference
+//! (`*_scalar`) and the AVX2 kernels in [`super::kernels`] (selected once
+//! at startup); the two paths are byte-identical — see DESIGN.md §9.
 
 use super::BLOCK;
 use once_cell::sync::Lazy;
@@ -17,8 +21,32 @@ static BASIS: Lazy<[[f32; BLOCK]; BLOCK]> = Lazy::new(|| {
     b
 });
 
+/// Transposed basis (`BASIS_T[x][k] = BASIS[k][x]`) — row-major access for
+/// the vectorized row pass.
+#[cfg(target_arch = "x86_64")]
+static BASIS_T: Lazy<[[f32; BLOCK]; BLOCK]> = Lazy::new(|| {
+    let mut t = [[0.0f32; BLOCK]; BLOCK];
+    for k in 0..BLOCK {
+        for x in 0..BLOCK {
+            t[x][k] = BASIS[k][x];
+        }
+    }
+    t
+});
+
 /// Forward 8×8 DCT (rows then columns), in place on a row-major block.
 pub fn forward(block: &mut [f32; BLOCK * BLOCK]) {
+    #[cfg(target_arch = "x86_64")]
+    if super::kernels::backend() == super::kernels::KernelBackend::Avx2 {
+        // SAFETY: AVX2 presence guaranteed by `backend()`
+        unsafe { super::kernels::avx2::dct_forward(block, &BASIS, &BASIS_T) };
+        return;
+    }
+    forward_scalar(block);
+}
+
+/// Scalar reference for [`forward`].
+pub fn forward_scalar(block: &mut [f32; BLOCK * BLOCK]) {
     let b = &*BASIS;
     let mut tmp = [0.0f32; BLOCK * BLOCK];
     // rows
@@ -45,6 +73,17 @@ pub fn forward(block: &mut [f32; BLOCK * BLOCK]) {
 
 /// Inverse 8×8 DCT, in place.
 pub fn inverse(block: &mut [f32; BLOCK * BLOCK]) {
+    #[cfg(target_arch = "x86_64")]
+    if super::kernels::backend() == super::kernels::KernelBackend::Avx2 {
+        // SAFETY: AVX2 presence guaranteed by `backend()`
+        unsafe { super::kernels::avx2::dct_inverse(block, &BASIS) };
+        return;
+    }
+    inverse_scalar(block);
+}
+
+/// Scalar reference for [`inverse`].
+pub fn inverse_scalar(block: &mut [f32; BLOCK * BLOCK]) {
     let b = &*BASIS;
     let mut tmp = [0.0f32; BLOCK * BLOCK];
     // cols (transpose of forward)
@@ -87,6 +126,18 @@ const QWEIGHT: [f32; BLOCK * BLOCK] = {
 /// Quantize DCT coefficients with quality parameter `qp` (≥ 1; higher ⇒
 /// coarser).  Returns integer levels.
 pub fn quantize(coeffs: &[f32; BLOCK * BLOCK], qp: f32) -> [i32; BLOCK * BLOCK] {
+    #[cfg(target_arch = "x86_64")]
+    if super::kernels::backend() == super::kernels::KernelBackend::Avx2 {
+        let mut out = [0i32; BLOCK * BLOCK];
+        // SAFETY: AVX2 presence guaranteed by `backend()`
+        unsafe { super::kernels::avx2::quantize(coeffs, &QWEIGHT, qp, &mut out) };
+        return out;
+    }
+    quantize_scalar(coeffs, qp)
+}
+
+/// Scalar reference for [`quantize`].
+pub fn quantize_scalar(coeffs: &[f32; BLOCK * BLOCK], qp: f32) -> [i32; BLOCK * BLOCK] {
     let mut out = [0i32; BLOCK * BLOCK];
     for i in 0..BLOCK * BLOCK {
         let step = QWEIGHT[i] * qp;
@@ -97,6 +148,18 @@ pub fn quantize(coeffs: &[f32; BLOCK * BLOCK], qp: f32) -> [i32; BLOCK * BLOCK] 
 
 /// Dequantize levels back to coefficient space.
 pub fn dequantize(levels: &[i32; BLOCK * BLOCK], qp: f32) -> [f32; BLOCK * BLOCK] {
+    #[cfg(target_arch = "x86_64")]
+    if super::kernels::backend() == super::kernels::KernelBackend::Avx2 {
+        let mut out = [0.0f32; BLOCK * BLOCK];
+        // SAFETY: AVX2 presence guaranteed by `backend()`
+        unsafe { super::kernels::avx2::dequantize(levels, &QWEIGHT, qp, &mut out) };
+        return out;
+    }
+    dequantize_scalar(levels, qp)
+}
+
+/// Scalar reference for [`dequantize`].
+pub fn dequantize_scalar(levels: &[i32; BLOCK * BLOCK], qp: f32) -> [f32; BLOCK * BLOCK] {
     let mut out = [0.0f32; BLOCK * BLOCK];
     for i in 0..BLOCK * BLOCK {
         out[i] = levels[i] as f32 * QWEIGHT[i] * qp;
@@ -171,5 +234,76 @@ mod tests {
         let nz = |qp: f32| quantize(&c, qp).iter().filter(|&&l| l != 0).count();
         assert!(nz(1.0) >= nz(6.0));
         assert!(nz(6.0) >= nz(20.0));
+    }
+
+    /// The dispatched path must be byte-identical to the scalar reference
+    /// (vacuous when the host resolves to the scalar backend anyway).
+    #[test]
+    fn dispatched_dct_matches_scalar_bitwise() {
+        let src = sample_block();
+        let mut a = src;
+        let mut b = src;
+        forward(&mut a);
+        forward_scalar(&mut b);
+        assert_eq!(bits(&a), bits(&b), "forward diverged");
+        inverse(&mut a);
+        inverse_scalar(&mut b);
+        assert_eq!(bits(&a), bits(&b), "inverse diverged");
+    }
+
+    #[test]
+    fn dispatched_quantize_matches_scalar_bitwise() {
+        let mut c = sample_block();
+        forward(&mut c);
+        for qp in [1.0f32, 3.5, 6.0, 20.0] {
+            let a = quantize(&c, qp);
+            let b = quantize_scalar(&c, qp);
+            assert_eq!(a, b, "quantize diverged at qp {qp}");
+            let da = dequantize(&a, qp);
+            let db = dequantize_scalar(&b, qp);
+            assert_eq!(bits(&da), bits(&db), "dequantize diverged at qp {qp}");
+        }
+    }
+
+    /// Exact-half quotients must round away from zero on both paths (the
+    /// AVX2 kernel emulates `f32::round`; `_mm256_round_ps` would give
+    /// half-to-even here).  `step * (k + 0.5)` does not always divide back
+    /// to the exact tie in f32, so each lane scans ±2 ULP for a
+    /// coefficient whose quotient lands exactly on the tie.
+    #[test]
+    fn quantize_ties_round_away_from_zero() {
+        let qp = 2.0f32;
+        let mut coeffs = [0.0f32; 64];
+        let mut tie = [false; 64];
+        for i in 0..64 {
+            let step = QWEIGHT[i] * qp;
+            let k = (i % 7) as f32 - 3.0;
+            let target = k + 0.5; // ties at ±0.5, ±1.5, ±2.5, ±3.5
+            let base = (step * target).to_bits() as i64;
+            for delta in -2i64..=2 {
+                let c = f32::from_bits((base + delta) as u32);
+                if c / step == target {
+                    coeffs[i] = c;
+                    tie[i] = true;
+                    break;
+                }
+            }
+        }
+        assert!(tie.iter().filter(|&&t| t).count() >= 16, "too few exact ties found");
+        let a = quantize(&coeffs, qp);
+        let b = quantize_scalar(&coeffs, qp);
+        assert_eq!(a, b);
+        for i in 0..64 {
+            if !tie[i] {
+                continue;
+            }
+            let k = (i % 7) as i32 - 3;
+            let expected = if k >= 0 { k + 1 } else { k };
+            assert_eq!(b[i], expected, "tie at index {i}");
+        }
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|f| f.to_bits()).collect()
     }
 }

@@ -32,14 +32,43 @@ impl Planes {
         }
     }
 
+    /// Zero-capacity placeholder (reusable target for
+    /// [`Planes::from_frame_region_into`]).
+    pub fn empty() -> Planes {
+        Planes { w: 0, h: 0, y: Vec::new(), cb: Vec::new(), cr: Vec::new() }
+    }
+
     /// Extract a region from an RGB frame, padded (edge-replicated) to a
     /// macroblock multiple, converted to YCbCr with 4:2:0 subsampling.
     pub fn from_frame_region(frame: &Frame, region: IRect) -> Planes {
+        let mut out = Planes::empty();
+        let (mut cbf, mut crf) = (Vec::new(), Vec::new());
+        Planes::from_frame_region_into(frame, region, &mut out, &mut cbf, &mut crf);
+        out
+    }
+
+    /// [`Planes::from_frame_region`] writing through reusable buffers:
+    /// `out`'s planes and the two full-resolution chroma scratch vectors
+    /// are cleared and resized in place (allocation-free once warm).
+    /// Produces values identical to the allocating constructor.
+    pub fn from_frame_region_into(
+        frame: &Frame,
+        region: IRect,
+        out: &mut Planes,
+        cbf: &mut Vec<f32>,
+        crf: &mut Vec<f32>,
+    ) {
         let w = pad_to(region.w as usize, MB);
         let h = pad_to(region.h as usize, MB);
-        let mut y = vec![0.0f32; w * h];
-        let mut cbf = vec![0.0f32; w * h];
-        let mut crf = vec![0.0f32; w * h];
+        out.w = w;
+        out.h = h;
+        let y = &mut out.y;
+        y.clear();
+        y.resize(w * h, 0.0);
+        cbf.clear();
+        cbf.resize(w * h, 0.0);
+        crf.clear();
+        crf.resize(w * h, 0.0);
         for py in 0..h {
             let sy = (region.y as usize + py.min(region.h as usize - 1)).min(frame.h as usize - 1);
             for px in 0..w {
@@ -55,8 +84,12 @@ impl Planes {
         // 2x2 average subsample
         let cw = w / 2;
         let ch = h / 2;
-        let mut cb = vec![0.0f32; cw * ch];
-        let mut cr = vec![0.0f32; cw * ch];
+        let cb = &mut out.cb;
+        let cr = &mut out.cr;
+        cb.clear();
+        cb.resize(cw * ch, 0.0);
+        cr.clear();
+        cr.resize(cw * ch, 0.0);
         for cy in 0..ch {
             for cx in 0..cw {
                 let mut sb = 0.0;
@@ -71,7 +104,6 @@ impl Planes {
                 cr[cy * cw + cx] = sr / 4.0;
             }
         }
-        Planes { w, h, y, cb, cr }
     }
 
     /// Luma PSNR against another plane set (dB).
@@ -97,10 +129,20 @@ fn pad_to(v: usize, m: usize) -> usize {
 }
 
 /// One independently-decodable region stream.
+///
+/// Holds its working buffers across frames: `cur` (the converted source
+/// planes), `spare` (the reconstruction retired two frames ago, recycled
+/// as the next frame's target) and the two full-resolution chroma scratch
+/// vectors.  After a two-frame warm-up, [`RegionStream::encode_frame`]
+/// performs no heap allocation.
 pub struct RegionStream {
     pub region: IRect,
     qp: f32,
     prev: Option<Planes>,
+    cur: Planes,
+    spare: Option<Planes>,
+    cbf: Vec<f32>,
+    crf: Vec<f32>,
 }
 
 /// Outcome of encoding one frame of one region.
@@ -114,12 +156,26 @@ pub struct FrameStats {
 impl RegionStream {
     pub fn new(region: IRect, qp: f32) -> RegionStream {
         assert!(region.w > 0 && region.h > 0, "empty region");
-        RegionStream { region, qp, prev: None }
+        RegionStream {
+            region,
+            qp,
+            prev: None,
+            cur: Planes::empty(),
+            spare: None,
+            cbf: Vec::new(),
+            crf: Vec::new(),
+        }
     }
 
     /// Reset the reference (segment boundary: next frame will be intra).
+    /// The retired reference is recycled as the next reconstruction
+    /// target instead of being dropped.
     pub fn reset_gop(&mut self) {
-        self.prev = None;
+        if let Some(p) = self.prev.take() {
+            if self.spare.is_none() {
+                self.spare = Some(p);
+            }
+        }
     }
 
     pub fn last_recon(&self) -> Option<&Planes> {
@@ -128,8 +184,17 @@ impl RegionStream {
 
     /// Encode one frame; updates the reconstruction reference.
     pub fn encode_frame(&mut self, frame: &Frame) -> FrameStats {
-        let cur = Planes::from_frame_region(frame, self.region);
-        let mut recon = Planes::new_black(cur.w, cur.h);
+        // take the stream-owned buffers so `self.prev` stays borrowable
+        // inside `code_block`; put back (rotated) at the end
+        let mut cur = std::mem::replace(&mut self.cur, Planes::empty());
+        Planes::from_frame_region_into(frame, self.region, &mut cur, &mut self.cbf, &mut self.crf);
+        // the reconstruction is fully overwritten below (the MB grid
+        // covers every luma and chroma block), so a recycled buffer of
+        // the right shape is equivalent to a fresh black one
+        let mut recon = match self.spare.take() {
+            Some(p) if p.w == cur.w && p.h == cur.h => p,
+            _ => Planes::new_black(cur.w, cur.h),
+        };
         let mut stats = FrameStats { bits: 0, intra_mbs: 0, inter_mbs: 0 };
         let mut prev_dc = [0i32; 3]; // per-plane DC predictor
 
@@ -210,7 +275,9 @@ impl RegionStream {
                 stats.bits += (bits_cb + bits_cr) as u64;
             }
         }
+        self.spare = self.prev.take();
         self.prev = Some(recon);
+        self.cur = cur;
         stats
     }
 
@@ -462,6 +529,32 @@ mod tests {
         let s2 = enc.encode_segment(&fs);
         // identical input segments → identical sizes (reference was reset)
         assert_eq!(s1.bytes, s2.bytes);
+    }
+
+    /// Buffer-reusing conversion must equal a fresh conversion bit-for-bit,
+    /// including when the reused buffers change shape between regions
+    /// (odd offsets exercise edge replication and clamping).
+    #[test]
+    fn from_frame_region_into_reuses_buffers_exactly() {
+        let fs = frames(2);
+        let mut out = Planes::empty();
+        let (mut cbf, mut crf) = (Vec::new(), Vec::new());
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        let regions = [
+            IRect::new(0, 0, 320, 192),
+            IRect::new(64, 48, 160, 96),
+            IRect::new(63, 47, 161, 97),
+        ];
+        for region in regions {
+            for f in &fs {
+                Planes::from_frame_region_into(f, region, &mut out, &mut cbf, &mut crf);
+                let fresh = Planes::from_frame_region(f, region);
+                assert_eq!((out.w, out.h), (fresh.w, fresh.h));
+                assert_eq!(bits(&out.y), bits(&fresh.y));
+                assert_eq!(bits(&out.cb), bits(&fresh.cb));
+                assert_eq!(bits(&out.cr), bits(&fresh.cr));
+            }
+        }
     }
 
     #[test]

@@ -47,17 +47,39 @@ pub const ZIGZAG: [usize; 64] = {
     order
 };
 
+/// [`ZIGZAG`] as i32 — gather indices for the AVX2 scan kernel.
+pub const ZIGZAG_I32: [i32; 64] = {
+    let mut order = [0i32; 64];
+    let mut i = 0;
+    while i < 64 {
+        order[i] = ZIGZAG[i] as i32;
+        i += 1;
+    }
+    order
+};
+
 /// Bits to encode magnitude `v` (category + sign/value bits).
 #[inline]
-fn magnitude_bits(v: i32) -> u32 {
+pub(crate) fn magnitude_bits(v: i32) -> u32 {
     let a = v.unsigned_abs();
     // category = position of highest set bit
     32 - a.leading_zeros()
 }
 
 /// Bit cost of one quantized 8×8 block: DC differential + AC (run, level)
-/// pairs + end-of-block marker.
+/// pairs + end-of-block marker.  Dispatches to the AVX2 gather/scan
+/// kernel when selected (integer ops — identical by construction).
 pub fn block_bits(levels: &[i32; BLOCK * BLOCK], prev_dc: i32) -> (u32, i32) {
+    #[cfg(target_arch = "x86_64")]
+    if super::kernels::backend() == super::kernels::KernelBackend::Avx2 {
+        // SAFETY: AVX2 presence guaranteed by `backend()`
+        return unsafe { super::kernels::avx2::block_bits(levels, prev_dc, &ZIGZAG_I32) };
+    }
+    block_bits_scalar(levels, prev_dc)
+}
+
+/// Scalar reference for [`block_bits`].
+pub fn block_bits_scalar(levels: &[i32; BLOCK * BLOCK], prev_dc: i32) -> (u32, i32) {
     let dc = levels[0];
     let diff = dc - prev_dc;
     // DC: ~4-bit category code + magnitude bits
@@ -148,5 +170,43 @@ mod tests {
     fn mv_bits_grow_with_length() {
         assert!(mv_bits(0, 0) <= mv_bits(1, 0));
         assert!(mv_bits(1, 1) < mv_bits(8, 8));
+    }
+
+    /// Dispatched bit costing must agree exactly with the scalar scan on
+    /// sparse, dense, negative and long-run blocks.
+    #[test]
+    fn dispatched_block_bits_matches_scalar() {
+        let mut cases: Vec<[i32; 64]> = vec![[0i32; 64]];
+        let mut sparse = [0i32; 64];
+        sparse[0] = 10;
+        sparse[ZIGZAG[5]] = -3;
+        sparse[ZIGZAG[40]] = 1; // long zero run (run/16 escape path)
+        sparse[ZIGZAG[63]] = -7; // nonzero in the last scan position
+        cases.push(sparse);
+        let mut dense = [0i32; 64];
+        for (i, v) in dense.iter_mut().enumerate() {
+            *v = (i as i32 % 11) - 5;
+        }
+        cases.push(dense);
+        let mut rng = 0x9e3779b97f4a7c15u64;
+        for _ in 0..50 {
+            let mut b = [0i32; 64];
+            for v in b.iter_mut() {
+                rng = rng.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                // mostly zero, occasionally large — codec-like statistics
+                let r = (rng >> 33) as i32;
+                *v = if r % 5 == 0 { (r >> 8) % 512 } else { 0 };
+            }
+            cases.push(b);
+        }
+        for (n, levels) in cases.iter().enumerate() {
+            for prev_dc in [0, -13, 200] {
+                assert_eq!(
+                    block_bits(levels, prev_dc),
+                    block_bits_scalar(levels, prev_dc),
+                    "case {n} prev_dc {prev_dc}"
+                );
+            }
+        }
     }
 }

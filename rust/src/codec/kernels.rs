@@ -1,0 +1,428 @@
+//! Runtime-dispatched SIMD kernels for the per-frame hot path.
+//!
+//! The codec's three inner loops — 8×8 DCT, motion-search SAD and the
+//! entropy zig-zag scan — plus the detector-input u8→f32 conversion are
+//! implemented twice: a portable scalar reference and an AVX2 version
+//! (stable `std::arch` intrinsics behind `is_x86_feature_detected!`).
+//! The backend is picked **once** at startup ([`backend`]) and the two
+//! paths are **byte-identical**: every SIMD kernel performs the same
+//! f32 operations in the same per-lane order as its scalar reference
+//! (multiplies and adds only — no FMA contraction, which would change
+//! rounding), so reports, determinism tests and recorded experiments do
+//! not depend on the host's ISA.  See DESIGN.md §9.
+//!
+//! The env var `CROSSROI_KERNELS` overrides detection: `scalar` forces
+//! the fallback (CI runs the whole suite this way), `simd`/`avx2`
+//! requests the vector path (falling back with a warning when the host
+//! lacks AVX2), `auto` (default) detects.  [`set_backend`] is the
+//! in-process override used by the scalar-vs-SIMD bench columns.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use once_cell::sync::Lazy;
+
+/// Which kernel implementations [`backend`] dispatches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelBackend {
+    /// Portable reference implementation (always available).
+    Scalar,
+    /// AVX2 vector implementation (x86-64 hosts with AVX2).
+    Avx2,
+}
+
+impl KernelBackend {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Avx2 => "avx2",
+        }
+    }
+}
+
+const OVERRIDE_NONE: u8 = 0;
+const OVERRIDE_SCALAR: u8 = 1;
+const OVERRIDE_AVX2: u8 = 2;
+
+/// In-process override ([`set_backend`]); beats [`DETECTED`] when set.
+static OVERRIDE: AtomicU8 = AtomicU8::new(OVERRIDE_NONE);
+
+/// Does this host support the AVX2 kernels?
+pub fn avx2_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Backend resolved once from `CROSSROI_KERNELS` + feature detection.
+static DETECTED: Lazy<KernelBackend> = Lazy::new(|| {
+    let auto = || if avx2_supported() { KernelBackend::Avx2 } else { KernelBackend::Scalar };
+    match std::env::var("CROSSROI_KERNELS").ok().as_deref() {
+        Some("scalar") => KernelBackend::Scalar,
+        Some("simd") | Some("avx2") => {
+            if avx2_supported() {
+                KernelBackend::Avx2
+            } else {
+                eprintln!(
+                    "CROSSROI_KERNELS=simd requested but this host lacks AVX2; \
+                     using the scalar fallback"
+                );
+                KernelBackend::Scalar
+            }
+        }
+        Some("auto") | None => auto(),
+        Some(other) => {
+            eprintln!(
+                "unknown CROSSROI_KERNELS={other:?} (expected scalar|simd|auto); detecting"
+            );
+            auto()
+        }
+    }
+});
+
+/// The kernel backend every dispatching entry point uses.  Resolved once
+/// (env override + feature detection); both paths produce byte-identical
+/// output, so this only decides speed.
+#[inline]
+pub fn backend() -> KernelBackend {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        OVERRIDE_SCALAR => KernelBackend::Scalar,
+        OVERRIDE_AVX2 => KernelBackend::Avx2,
+        _ => *DETECTED,
+    }
+}
+
+/// Force a backend in-process (`None` restores detection) — the hook the
+/// scalar-vs-SIMD bench columns and identity tests use.  Panics if
+/// [`KernelBackend::Avx2`] is forced on a host without AVX2.
+pub fn set_backend(forced: Option<KernelBackend>) {
+    let v = match forced {
+        None => OVERRIDE_NONE,
+        Some(KernelBackend::Scalar) => OVERRIDE_SCALAR,
+        Some(KernelBackend::Avx2) => {
+            assert!(avx2_supported(), "cannot force AVX2 kernels: host lacks AVX2");
+            OVERRIDE_AVX2
+        }
+    };
+    OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// u8 → f32/255 conversion of `src` into `dst` (same length) — the
+/// detector-input hot loop ([`crate::sim::render::Frame::masked_f32`]).
+#[inline]
+pub fn convert_u8_to_f32(src: &[u8], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len());
+    #[cfg(target_arch = "x86_64")]
+    if backend() == KernelBackend::Avx2 {
+        // SAFETY: AVX2 presence is guaranteed by `backend()`; slice
+        // lengths are equal (asserted above).
+        unsafe { avx2::convert_u8_to_f32(src, dst) };
+        return;
+    }
+    convert_u8_to_f32_scalar(src, dst);
+}
+
+/// Scalar reference for [`convert_u8_to_f32`].
+#[inline]
+pub fn convert_u8_to_f32_scalar(src: &[u8], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = s as f32 / 255.0;
+    }
+}
+
+/// AVX2 implementations.  Every function here mirrors its scalar
+/// reference operation-for-operation (see the module doc's byte-identity
+/// contract); callers must only dispatch here after feature detection.
+#[cfg(target_arch = "x86_64")]
+pub mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum with the fixed reduction tree
+    /// `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))` — the scalar SAD reference
+    /// ([`crate::codec::motion::sad_scalar`]) sums its eight lane
+    /// accumulators in exactly this order.
+    #[inline]
+    unsafe fn hsum256(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let s = _mm_add_ps(lo, hi); // [l0+l4, l1+l5, l2+l6, l3+l7]
+        let t = _mm_add_ps(s, _mm_movehl_ps(s, s)); // [s0+s2, s1+s3, ..]
+        let u = _mm_add_ss(t, _mm_shuffle_ps::<0x55>(t, t)); // t0 + t1
+        _mm_cvtss_f32(u)
+    }
+
+    /// Forward 8×8 DCT, rows then columns, one `__m256` per output row.
+    /// Per lane this is the scalar triple loop's exact op sequence:
+    /// accumulators start at `0.0` and gain `mul` + `add` per tap in
+    /// ascending tap order (no FMA).
+    ///
+    /// # Safety
+    /// Caller must guarantee the host supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dct_forward(
+        block: &mut [f32; 64],
+        basis: &[[f32; 8]; 8],
+        basis_t: &[[f32; 8]; 8],
+    ) {
+        let mut tmp = [0.0f32; 64];
+        // rows: tmp[y][k] = Σ_x basis[k][x] * block[y][x]; lane k reads
+        // the transposed basis row basis_t[x][k] = basis[k][x]
+        for y in 0..8 {
+            let mut acc = _mm256_setzero_ps();
+            for x in 0..8 {
+                let v = _mm256_set1_ps(block[y * 8 + x]);
+                let row = _mm256_loadu_ps(basis_t[x].as_ptr());
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(row, v));
+            }
+            _mm256_storeu_ps(tmp.as_mut_ptr().add(y * 8), acc);
+        }
+        // cols: block[k][x] = Σ_y basis[k][y] * tmp[y][x]
+        for k in 0..8 {
+            let mut acc = _mm256_setzero_ps();
+            for y in 0..8 {
+                let v = _mm256_set1_ps(basis[k][y]);
+                let row = _mm256_loadu_ps(tmp.as_ptr().add(y * 8));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(row, v));
+            }
+            _mm256_storeu_ps(block.as_mut_ptr().add(k * 8), acc);
+        }
+    }
+
+    /// Inverse 8×8 DCT (transpose of [`dct_forward`]), same per-lane op
+    /// order as the scalar reference.
+    ///
+    /// # Safety
+    /// Caller must guarantee the host supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dct_inverse(block: &mut [f32; 64], basis: &[[f32; 8]; 8]) {
+        let mut tmp = [0.0f32; 64];
+        // cols: tmp[y][x] = Σ_k basis[k][y] * block[k][x]
+        for y in 0..8 {
+            let mut acc = _mm256_setzero_ps();
+            for k in 0..8 {
+                let v = _mm256_set1_ps(basis[k][y]);
+                let row = _mm256_loadu_ps(block.as_ptr().add(k * 8));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(row, v));
+            }
+            _mm256_storeu_ps(tmp.as_mut_ptr().add(y * 8), acc);
+        }
+        // rows: block[y][x] = Σ_k basis[k][x] * tmp[y][k]; lane x reads
+        // basis[k] directly (mul is commutative bit-for-bit)
+        for y in 0..8 {
+            let mut acc = _mm256_setzero_ps();
+            for k in 0..8 {
+                let v = _mm256_set1_ps(tmp[y * 8 + k]);
+                let row = _mm256_loadu_ps(basis[k].as_ptr());
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(row, v));
+            }
+            _mm256_storeu_ps(block.as_mut_ptr().add(y * 8), acc);
+        }
+    }
+
+    /// Quantize 64 coefficients: `(c / (w*qp)).round() as i32`, eight
+    /// lanes at a time.  `round()` (half-away-from-zero, like
+    /// `f32::round`) is emulated as `trunc + (|frac| >= 0.5 ? ±1 : 0)`
+    /// because `_mm256_round_ps`'s nearest mode is half-to-even; the
+    /// trunc/frac arithmetic is exact for the codec's coefficient range,
+    /// so the result matches the scalar reference bit-for-bit.
+    ///
+    /// # Safety
+    /// Caller must guarantee the host supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quantize(
+        coeffs: &[f32; 64],
+        qweight: &[f32; 64],
+        qp: f32,
+        out: &mut [i32; 64],
+    ) {
+        let qpv = _mm256_set1_ps(qp);
+        let sign = _mm256_set1_ps(-0.0);
+        let half = _mm256_set1_ps(0.5);
+        let one = _mm256_set1_ps(1.0);
+        for i in 0..8 {
+            let c = _mm256_loadu_ps(coeffs.as_ptr().add(i * 8));
+            let w = _mm256_loadu_ps(qweight.as_ptr().add(i * 8));
+            let step = _mm256_mul_ps(w, qpv);
+            let q = _mm256_div_ps(c, step);
+            // trunc via the i32 round trip (exact: |q| << 2^31 here)
+            let t = _mm256_cvtepi32_ps(_mm256_cvttps_epi32(q));
+            let f = _mm256_sub_ps(q, t); // exact (Sterbenz)
+            let af = _mm256_andnot_ps(sign, f);
+            let bump = _mm256_cmp_ps::<_CMP_GE_OQ>(af, half);
+            let signed_one = _mm256_or_ps(_mm256_and_ps(q, sign), one);
+            let r = _mm256_add_ps(t, _mm256_and_ps(bump, signed_one));
+            _mm256_storeu_si256(
+                out.as_mut_ptr().add(i * 8) as *mut __m256i,
+                _mm256_cvttps_epi32(r),
+            );
+        }
+    }
+
+    /// Dequantize 64 levels: `(l as f32 * w) * qp`, eight lanes at a time
+    /// (same multiply order as the scalar reference).
+    ///
+    /// # Safety
+    /// Caller must guarantee the host supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequantize(
+        levels: &[i32; 64],
+        qweight: &[f32; 64],
+        qp: f32,
+        out: &mut [f32; 64],
+    ) {
+        let qpv = _mm256_set1_ps(qp);
+        for i in 0..8 {
+            let l = _mm256_loadu_si256(levels.as_ptr().add(i * 8) as *const __m256i);
+            let w = _mm256_loadu_ps(qweight.as_ptr().add(i * 8));
+            let r = _mm256_mul_ps(_mm256_mul_ps(_mm256_cvtepi32_ps(l), w), qpv);
+            _mm256_storeu_ps(out.as_mut_ptr().add(i * 8), r);
+        }
+    }
+
+    /// SAD of one 16×16 macroblock, two `__m256` loads per row, abs-diff
+    /// accumulated into eight lane sums, early-exit checked once per row
+    /// on the [`hsum256`] partial — exactly the lane/reduction structure
+    /// of [`crate::codec::motion::sad_scalar`].
+    ///
+    /// # Safety
+    /// Caller must guarantee AVX2 and that `cur`/`refp` point at 16 rows
+    /// of 16 valid f32s under the given strides.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sad_16x16(
+        cur: *const f32,
+        cur_stride: usize,
+        refp: *const f32,
+        ref_stride: usize,
+        early_exit: f32,
+    ) -> f32 {
+        let sign = _mm256_set1_ps(-0.0);
+        let mut acc = _mm256_setzero_ps();
+        for y in 0..16 {
+            let a0 = _mm256_loadu_ps(cur.add(y * cur_stride));
+            let a1 = _mm256_loadu_ps(cur.add(y * cur_stride + 8));
+            let b0 = _mm256_loadu_ps(refp.add(y * ref_stride));
+            let b1 = _mm256_loadu_ps(refp.add(y * ref_stride + 8));
+            let d0 = _mm256_andnot_ps(sign, _mm256_sub_ps(a0, b0));
+            let d1 = _mm256_andnot_ps(sign, _mm256_sub_ps(a1, b1));
+            acc = _mm256_add_ps(acc, _mm256_add_ps(d0, d1));
+            let partial = hsum256(acc);
+            if partial > early_exit {
+                return partial;
+            }
+        }
+        hsum256(acc)
+    }
+
+    /// Zig-zag gather + nonzero scan of one quantized block, then the
+    /// run-length bit costing on the 64-bit nonzero mask.  Integer ops
+    /// only, so identical to the scalar scan by construction.
+    ///
+    /// # Safety
+    /// Caller must guarantee the host supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn block_bits(
+        levels: &[i32; 64],
+        prev_dc: i32,
+        zigzag: &[i32; 64],
+    ) -> (u32, i32) {
+        let mut zz = [0i32; 64];
+        let mut nz_mask = 0u64;
+        let zero = _mm256_setzero_si256();
+        for i in 0..8 {
+            let idx = _mm256_loadu_si256(zigzag.as_ptr().add(i * 8) as *const __m256i);
+            let v = _mm256_i32gather_epi32::<4>(levels.as_ptr(), idx);
+            _mm256_storeu_si256(zz.as_mut_ptr().add(i * 8) as *mut __m256i, v);
+            let is_zero = _mm256_cmpeq_epi32(v, zero);
+            let zbits = _mm256_movemask_ps(_mm256_castsi256_ps(is_zero)) as u32;
+            nz_mask |= (((!zbits) & 0xff) as u64) << (i * 8);
+        }
+        let dc = zz[0];
+        let mut bits = 4 + crate::codec::entropy::magnitude_bits(dc - prev_dc) + 1;
+        // AC: walk the set bits; the zero-run before a nonzero at zig-zag
+        // position p is p - prev_nonzero_pos - 1 (prev starts at the DC)
+        let mut prev_pos = 0usize;
+        let mut m = nz_mask & !1u64;
+        while m != 0 {
+            let pos = m.trailing_zeros() as usize;
+            let run = (pos - prev_pos - 1) as u32;
+            bits += 6 + (run / 16) * 7 + crate::codec::entropy::magnitude_bits(zz[pos]) + 1;
+            prev_pos = pos;
+            m &= m - 1;
+        }
+        bits += 4; // EOB
+        (bits, dc)
+    }
+
+    /// u8 → f32/255, eight pixels per step (`_mm256_div_ps` rounds like
+    /// scalar division, so this is exact).
+    ///
+    /// # Safety
+    /// Caller must guarantee AVX2 and `src.len() == dst.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn convert_u8_to_f32(src: &[u8], dst: &mut [f32]) {
+        let n = src.len();
+        let denom = _mm256_set1_ps(255.0);
+        let mut i = 0;
+        while i + 8 <= n {
+            let bytes = _mm_loadl_epi64(src.as_ptr().add(i) as *const __m128i);
+            let ints = _mm256_cvtepu8_epi32(bytes);
+            let f = _mm256_cvtepi32_ps(ints);
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_div_ps(f, denom));
+            i += 8;
+        }
+        while i < n {
+            *dst.get_unchecked_mut(i) = *src.get_unchecked(i) as f32 / 255.0;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn backend_names() {
+        assert_eq!(KernelBackend::Scalar.name(), "scalar");
+        assert_eq!(KernelBackend::Avx2.name(), "avx2");
+    }
+
+    #[test]
+    fn convert_dispatch_matches_scalar() {
+        let mut rng = Rng::new(7);
+        for len in [0usize, 1, 7, 8, 9, 24, 100, 961] {
+            let src: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+            let mut a = vec![0.0f32; len];
+            let mut b = vec![1.0f32; len];
+            convert_u8_to_f32(&src, &mut a);
+            convert_u8_to_f32_scalar(&src, &mut b);
+            assert_eq!(a, b, "len {len}");
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_convert_is_bit_identical() {
+        if !avx2_supported() {
+            return;
+        }
+        let mut rng = Rng::new(11);
+        for len in [1usize, 8, 13, 640] {
+            let src: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+            let mut a = vec![0.0f32; len];
+            let mut b = vec![0.0f32; len];
+            unsafe { avx2::convert_u8_to_f32(&src, &mut a) };
+            convert_u8_to_f32_scalar(&src, &mut b);
+            assert_eq!(
+                a.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+            );
+        }
+    }
+}

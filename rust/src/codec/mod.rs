@@ -16,9 +16,11 @@
 pub mod dct;
 pub mod encoder;
 pub mod entropy;
+pub mod kernels;
 pub mod motion;
 
 pub use encoder::{EncodedSegment, RegionStream, SegmentEncoder};
+pub use kernels::{avx2_supported, backend, set_backend, KernelBackend};
 
 /// Macroblock size in pixels.
 pub const MB: usize = 16;

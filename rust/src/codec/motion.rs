@@ -5,8 +5,20 @@
 //! reference pixels outside themselves, so finer tilings find worse
 //! predictions for objects crossing boundaries — the compression-efficacy
 //! degradation CrossRoI's tile-grouping fights (§2.2, Table 3).
+//!
+//! SAD is defined over eight lane accumulators with a fixed reduction
+//! tree (not a single sequential sum): both the scalar reference and the
+//! AVX2 kernel ([`super::kernels::avx2::sad_16x16`]) accumulate column
+//! lanes `j` and `j+8` together and reduce with the same
+//! `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))` tree, so the two paths are
+//! byte-identical (f32 addition is not associative — a sequential scalar
+//! sum could not be vectorized exactly).  Early exit happens at row
+//! granularity on the reduced partial in both paths.
 
 use super::MB;
+
+// the lane split (j, j+8) and the AVX2 kernel both hard-code 16 columns
+const _: () = assert!(MB == 16, "SAD lane structure assumes 16x16 macroblocks");
 
 /// A single luma plane with dimensions (row-major f32).
 pub struct Plane<'a> {
@@ -24,7 +36,8 @@ impl<'a> Plane<'a> {
 
 /// Sum of absolute differences between the MB at (bx,by) in `cur` and the
 /// MB at (bx+dx, by+dy) in `reference`; `None` if displaced outside.
-/// `early_exit`: give up once the partial SAD exceeds it.
+/// `early_exit`: give up once the partial SAD exceeds it (checked once
+/// per row).
 pub fn sad(
     cur: &Plane,
     reference: &Plane,
@@ -40,16 +53,82 @@ pub fn sad(
         return None;
     }
     let (rx, ry) = (rx as usize, ry as usize);
-    let mut acc = 0.0f32;
+    // the current MB must itself be in bounds (callers walk an MB-aligned
+    // grid); checked explicitly because the AVX2 path reads raw pointers
+    assert!(bx + MB <= cur.w && by + MB <= cur.h, "current MB out of bounds");
+    assert!(cur.data.len() >= cur.w * cur.h);
+    assert!(reference.data.len() >= reference.w * reference.h);
+    #[cfg(target_arch = "x86_64")]
+    if super::kernels::backend() == super::kernels::KernelBackend::Avx2 {
+        // SAFETY: AVX2 presence guaranteed by `backend()`; both MB
+        // windows were bounds-checked above, so every row of 16 f32s the
+        // kernel reads is inside the plane slices.
+        let s = unsafe {
+            super::kernels::avx2::sad_16x16(
+                cur.data.as_ptr().add(by * cur.w + bx),
+                cur.w,
+                reference.data.as_ptr().add(ry * reference.w + rx),
+                reference.w,
+                early_exit,
+            )
+        };
+        return Some(s);
+    }
+    Some(sad_lanes(cur, reference, bx, by, rx, ry, early_exit))
+}
+
+/// Scalar reference for [`sad`] (same signature, never dispatches).
+pub fn sad_scalar(
+    cur: &Plane,
+    reference: &Plane,
+    bx: usize,
+    by: usize,
+    dx: i32,
+    dy: i32,
+    early_exit: f32,
+) -> Option<f32> {
+    let rx = bx as i32 + dx;
+    let ry = by as i32 + dy;
+    if rx < 0 || ry < 0 || rx as usize + MB > reference.w || ry as usize + MB > reference.h {
+        return None;
+    }
+    let (rx, ry) = (rx as usize, ry as usize);
+    assert!(bx + MB <= cur.w && by + MB <= cur.h, "current MB out of bounds");
+    Some(sad_lanes(cur, reference, bx, by, rx, ry, early_exit))
+}
+
+/// Eight-lane SAD accumulation with per-row early exit — the scalar
+/// mirror of the AVX2 kernel's lane and reduction structure.
+fn sad_lanes(
+    cur: &Plane,
+    reference: &Plane,
+    bx: usize,
+    by: usize,
+    rx: usize,
+    ry: usize,
+    early_exit: f32,
+) -> f32 {
+    let mut lanes = [0.0f32; 8];
     for y in 0..MB {
-        for x in 0..MB {
-            acc += (cur.at(bx + x, by + y) - reference.at(rx + x, ry + y)).abs();
+        for (j, lane) in lanes.iter_mut().enumerate() {
+            let d0 = (cur.at(bx + j, by + y) - reference.at(rx + j, ry + y)).abs();
+            let d1 = (cur.at(bx + j + 8, by + y) - reference.at(rx + j + 8, ry + y)).abs();
+            *lane += d0 + d1;
         }
-        if acc > early_exit {
-            return Some(acc);
+        let partial = hsum8(&lanes);
+        if partial > early_exit {
+            return partial;
         }
     }
-    Some(acc)
+    hsum8(&lanes)
+}
+
+/// Fixed reduction tree matching the AVX2 `hsum256` exactly.
+#[inline]
+fn hsum8(l: &[f32; 8]) -> f32 {
+    let s = [l[0] + l[4], l[1] + l[5], l[2] + l[6], l[3] + l[7]];
+    let t = [s[0] + s[2], s[1] + s[3]];
+    t[0] + t[1]
 }
 
 /// Rate-distortion λ for MV cost in SAD units per MV grid step: longer
@@ -165,5 +244,33 @@ mod tests {
         let pc = Plane { w, h, data: &cur };
         let (_, _, s) = three_step_search(&pc, &pp, 0, 0);
         assert!(s > 100.0, "confined search should not find the true motion");
+    }
+
+    /// The dispatched SAD must match the scalar reference bit-for-bit,
+    /// including on plane widths that are not a multiple of the SIMD
+    /// lane width (strides are arbitrary, only the MB is 16-wide).
+    #[test]
+    fn dispatched_sad_matches_scalar_bitwise() {
+        for (w, h, bx, by) in [(64usize, 48usize, 16usize, 16usize), (37, 21, 13, 2), (16, 16, 0, 0)] {
+            let prev = gradient_plane(w, h, 0);
+            let cur = gradient_plane(w, h, 2);
+            let pp = Plane { w, h, data: &prev };
+            let pc = Plane { w, h, data: &cur };
+            for (dx, dy) in [(0i32, 0i32), (1, 0), (-2, 1), (0, -1)] {
+                for early in [f32::INFINITY, 500.0, 10.0] {
+                    let a = sad(&pc, &pp, bx, by, dx, dy, early);
+                    let b = sad_scalar(&pc, &pp, bx, by, dx, dy, early);
+                    match (a, b) {
+                        (None, None) => {}
+                        (Some(a), Some(b)) => assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "w={w} bx={bx} dx={dx} dy={dy} early={early}: {a} vs {b}"
+                        ),
+                        _ => panic!("bounds decision diverged"),
+                    }
+                }
+            }
+        }
     }
 }

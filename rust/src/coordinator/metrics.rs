@@ -1,5 +1,6 @@
 //! Metrics reported per method — one row of Fig. 8 / Table 4.
 
+use crate::offline::replan::ReplanRecord;
 use crate::util::json::Json;
 
 /// End-to-end latency decomposition (Fig. 8f's stacked bars).
@@ -87,6 +88,20 @@ pub struct MethodReport {
     /// trigger + measured planning seconds, timestamped by the transport
     /// replay).
     pub replan_done_at: Vec<f64>,
+    /// Full per-epoch re-plan records, including each component's
+    /// disposition (fired/carried/migrated, solver, drift) — serialized
+    /// into the JSON dump after [`MethodReport::zero_wall_clock`] zeroes
+    /// each record's wall-clock `seconds`.
+    pub replan_records: Vec<ReplanRecord>,
+    // --- buffer-arena diagnostics (DESIGN.md §9; counters depend on
+    // thread interleaving, so they are NOT serialized in `to_json` —
+    // the byte-compared determinism contract excludes them) ---
+    /// Fresh frame buffers allocated by camera workers.
+    pub arena_frame_allocs: usize,
+    /// Fresh detector-input pixel buffers allocated.
+    pub arena_pixel_allocs: usize,
+    /// Detector-input pixel buffers recycled through the arena.
+    pub arena_pixel_reuses: usize,
 }
 
 impl MethodReport {
@@ -149,7 +164,27 @@ impl MethodReport {
             ("replan_mask_churn", Json::Num(self.replan_mask_churn)),
             ("replan_seconds", Json::Num(self.replan_seconds)),
             ("replan_done_at", Json::arr_f64(&self.replan_done_at)),
+            (
+                "replan_records",
+                Json::Arr(self.replan_records.iter().map(ReplanRecord::to_json).collect()),
+            ),
         ])
+    }
+
+    /// Zero every inherently wall-clock field in place, preserving shape
+    /// (lengths, counts) — the determinism tests byte-compare the JSON of
+    /// runs across pipeline schedules, and only these fields (plus the
+    /// unserialized arena counters) may legitimately differ.
+    pub fn zero_wall_clock(&mut self) {
+        self.offline_seconds = 0.0;
+        self.replan_seconds = 0.0;
+        self.replan_done_at = vec![0.0; self.replan_done_at.len()];
+        for rec in &mut self.replan_records {
+            rec.seconds = 0.0;
+        }
+        self.arena_frame_allocs = 0;
+        self.arena_pixel_allocs = 0;
+        self.arena_pixel_reuses = 0;
     }
 }
 
@@ -187,5 +222,91 @@ mod tests {
         assert_eq!(parsed.get("missed_per_frame").unwrap().as_arr().unwrap().len(), 3);
         // identical reports serialize identically (byte-wise)
         assert_eq!(text, r.clone().to_json().to_string_pretty(2));
+    }
+
+    fn sample_record() -> ReplanRecord {
+        use crate::offline::replan::ComponentRecord;
+        ReplanRecord {
+            epoch: 2,
+            start_seg: 4,
+            trigger_time: 12.5,
+            seconds: 0.031,
+            replanned: true,
+            warm: true,
+            constraint_drift: 0.25,
+            mask_churn: 0.1,
+            solver: "greedy",
+            n_constraints: 40,
+            mask_tiles: 77,
+            scope: "component",
+            components: vec![
+                ComponentRecord {
+                    cameras: vec![0, 2],
+                    drift: 0.3,
+                    fired: true,
+                    warm: true,
+                    migrated: false,
+                    spill_groups: 2,
+                    n_constraints: 25,
+                    solver: "greedy",
+                },
+                ComponentRecord {
+                    cameras: vec![1],
+                    drift: 0.0,
+                    fired: false,
+                    warm: false,
+                    migrated: false,
+                    spill_groups: 0,
+                    n_constraints: 15,
+                    solver: "carried",
+                },
+            ],
+            reducto_rederived: 1,
+        }
+    }
+
+    #[test]
+    fn replan_records_round_trip_through_json() {
+        let mut r = MethodReport::default();
+        r.method = "CrossRoI".to_string();
+        r.replan_records = vec![sample_record()];
+        let text = r.to_json().to_string_pretty(2);
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let records = parsed.get("replan_records").unwrap().as_arr().unwrap();
+        assert_eq!(records.len(), 1);
+        let rec = &records[0];
+        assert_eq!(rec.get("epoch").unwrap().as_f64(), Some(2.0));
+        assert_eq!(rec.get("trigger_time").unwrap().as_f64(), Some(12.5));
+        assert_eq!(rec.get("solver").unwrap().as_str(), Some("greedy"));
+        assert_eq!(rec.get("scope").unwrap().as_str(), Some("component"));
+        assert_eq!(rec.get("replanned").unwrap(), &Json::Bool(true));
+        let comps = rec.get("components").unwrap().as_arr().unwrap();
+        assert_eq!(comps.len(), 2);
+        assert_eq!(comps[0].get("cameras").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(comps[0].get("fired").unwrap(), &Json::Bool(true));
+        assert_eq!(comps[1].get("fired").unwrap(), &Json::Bool(false));
+        assert_eq!(comps[1].get("solver").unwrap().as_str(), Some("carried"));
+        assert_eq!(comps[0].get("spill_groups").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn zero_wall_clock_keeps_shape_and_deterministic_fields() {
+        let mut r = MethodReport::default();
+        r.offline_seconds = 3.5;
+        r.replan_seconds = 1.25;
+        r.replan_done_at = vec![10.0, 12.0];
+        r.replan_records = vec![sample_record()];
+        r.arena_frame_allocs = 7;
+        r.arena_pixel_allocs = 9;
+        r.arena_pixel_reuses = 40;
+        r.zero_wall_clock();
+        assert_eq!(r.offline_seconds, 0.0);
+        assert_eq!(r.replan_seconds, 0.0);
+        assert_eq!(r.replan_done_at, vec![0.0, 0.0], "shape must be preserved");
+        assert_eq!(r.replan_records[0].seconds, 0.0);
+        // virtual-clock and outcome fields survive
+        assert_eq!(r.replan_records[0].trigger_time, 12.5);
+        assert!(r.replan_records[0].replanned);
+        assert_eq!(r.arena_pixel_reuses, 0);
     }
 }

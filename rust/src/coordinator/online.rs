@@ -248,6 +248,10 @@ pub fn run_method_with(
         ),
         replan_seconds: replan_records.iter().map(|r| r.seconds).sum(),
         replan_done_at,
+        replan_records,
+        arena_frame_allocs: out.arena.frame_allocs,
+        arena_pixel_allocs: out.arena.pixel_allocs,
+        arena_pixel_reuses: out.arena.pixel_reuses,
     };
     Ok((report, reported))
 }

@@ -247,6 +247,13 @@ fn run() -> Result<()> {
                 report.mask_tiles,
                 100.0 * report.mask_coverage
             );
+            println!(
+                "  kernels: {} backend; arena: {} frame allocs, {} pixel allocs, {} pixel reuses",
+                crossroi::codec::backend().name(),
+                report.arena_frame_allocs,
+                report.arena_pixel_allocs,
+                report.arena_pixel_reuses
+            );
             if report.replan_count > 0 || report.replan_carried_components > 0 {
                 println!(
                     "  re-profiling: {} component re-solves ({} warm-started), {} carried, \

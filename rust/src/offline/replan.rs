@@ -56,6 +56,7 @@ use crate::roi::masks::RoiMasks;
 use crate::roi::setcover::Solution;
 use crate::sim::Scenario;
 use crate::util::geometry::IRect;
+use crate::util::json::Json;
 
 /// Above this constraint drift a warm seed reuses too little to pay for
 /// itself (most seeded tiles are stale and only burden the prune pass);
@@ -158,6 +159,50 @@ impl ReplanRecord {
     /// Components whose camera membership changed at this boundary.
     pub fn migrated_components(&self) -> usize {
         self.components.iter().filter(|c| c.migrated).count()
+    }
+
+    /// Full record as JSON — nested under `replan_records` in the
+    /// `MethodReport` dump.  `seconds` is wall-clock; determinism tests
+    /// zero it via `MethodReport::zero_wall_clock` before byte-comparing.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("epoch", Json::Num(self.epoch as f64)),
+            ("start_seg", Json::Num(self.start_seg as f64)),
+            ("trigger_time", Json::Num(self.trigger_time)),
+            ("seconds", Json::Num(self.seconds)),
+            ("replanned", Json::Bool(self.replanned)),
+            ("warm", Json::Bool(self.warm)),
+            ("constraint_drift", Json::Num(self.constraint_drift)),
+            ("mask_churn", Json::Num(self.mask_churn)),
+            ("solver", Json::Str(self.solver.to_string())),
+            ("n_constraints", Json::Num(self.n_constraints as f64)),
+            ("mask_tiles", Json::Num(self.mask_tiles as f64)),
+            ("scope", Json::Str(self.scope.to_string())),
+            (
+                "components",
+                Json::Arr(self.components.iter().map(ComponentRecord::to_json).collect()),
+            ),
+            ("reducto_rederived", Json::Num(self.reducto_rederived as f64)),
+        ])
+    }
+}
+
+impl ComponentRecord {
+    /// One component's disposition as JSON (see [`ReplanRecord::to_json`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "cameras",
+                Json::Arr(self.cameras.iter().map(|&c| Json::Num(c as f64)).collect()),
+            ),
+            ("drift", Json::Num(self.drift)),
+            ("fired", Json::Bool(self.fired)),
+            ("warm", Json::Bool(self.warm)),
+            ("migrated", Json::Bool(self.migrated)),
+            ("spill_groups", Json::Num(self.spill_groups as f64)),
+            ("n_constraints", Json::Num(self.n_constraints as f64)),
+            ("solver", Json::Str(self.solver.to_string())),
+        ])
     }
 }
 

@@ -39,6 +39,7 @@
 //! the shared [`PlanSchedule`], so masks follow traffic drift without
 //! stalling the pipeline or breaking schedule determinism.
 
+pub mod arena;
 pub mod capture;
 pub mod encode;
 pub mod filter;
@@ -49,6 +50,7 @@ pub mod runner;
 pub mod stage;
 pub mod transport;
 
+pub use arena::{Arena, ArenaStats, FramePool};
 pub use capture::SimCapture;
 pub use encode::{CodecEncodeStage, EncodeCost};
 pub use filter::{PassThroughFilter, ReductoFilterStage};

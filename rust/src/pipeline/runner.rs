@@ -15,6 +15,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
+use crate::pipeline::arena::{Arena, ArenaStats};
 use crate::pipeline::infer::{InferOutcome, InferStage};
 use crate::pipeline::replan::{EpochPlanner, PlanEpoch, PlanSchedule, ReplanPolicy, ReplanScope};
 use crate::pipeline::stage::{
@@ -111,6 +112,9 @@ pub struct PipelineOutput {
     pub frame_sets: Vec<Vec<Option<HashSet<u32>>>>,
     /// Frames discarded by the filter stage.
     pub frames_reduced: usize,
+    /// Buffer-arena counters: proof the steady state recycles instead of
+    /// allocating (schedule-dependent — diagnostics, not byte-compared).
+    pub arena: ArenaStats,
 }
 
 /// Drive one camera's stages over every segment of the window, handing
@@ -130,11 +134,12 @@ fn run_camera(
     stages: &mut CameraStages<'_>,
     layout: &SegmentLayout,
     schedule: Option<&PlanSchedule>,
+    arena: &Arena,
     emit: &mut dyn FnMut(CameraSegment) -> bool,
 ) {
     // free-list of frame buffers: capture renders into a recycled buffer,
     // kept frames hold theirs until the segment is encoded and masked
-    let mut pool: Vec<Frame> = Vec::new();
+    let mut pool = arena.frame_pool();
     let mut local = 0usize;
     let mut seg = 0usize;
     let mut cur_epoch = 0usize;
@@ -165,13 +170,13 @@ fn run_camera(
         let mut kept: Vec<(usize, Frame)> = Vec::new();
         let mut dropped = 0usize;
         for (k, lf) in (local..end).enumerate() {
-            let mut buf = pool.pop().unwrap_or_else(|| Frame::new(1, 1));
+            let mut buf = pool.take();
             stages.capture.capture(lf, &mut buf);
             if stages.filter.keep(&buf, k == 0) {
                 kept.push((lf, buf));
             } else {
                 dropped += 1;
-                pool.push(buf);
+                pool.put(buf);
             }
         }
         let refs: Vec<&Frame> = kept.iter().map(|(_, f)| f).collect();
@@ -179,14 +184,20 @@ fn run_camera(
         drop(refs);
         let jobs: Vec<InferJob> = kept
             .iter()
-            .map(|(lf, f)| InferJob {
-                local: *lf,
-                capture_time: (*lf as f64 + 1.0) / layout.fps,
-                pixels: f.masked_f32(mask),
+            .map(|(lf, f)| {
+                // detector-input buffers travel to the server stage and
+                // come back through the arena once the segment is inferred
+                let mut pixels = arena.take_pixels();
+                f.masked_f32_into(mask, &mut pixels);
+                InferJob {
+                    local: *lf,
+                    capture_time: (*lf as f64 + 1.0) / layout.fps,
+                    pixels,
+                }
             })
             .collect();
         for (_, f) in kept {
-            pool.push(f);
+            pool.put(f);
         }
         let keep_going = emit(CameraSegment {
             cam,
@@ -205,13 +216,15 @@ fn run_camera(
     }
 }
 
-/// Fold one inferred segment into the output accumulators.
+/// Fold one inferred segment into the output accumulators and return its
+/// consumed detector-input buffers to the arena.
 fn finish_segment(
     cs: CameraSegment,
     outcomes: Vec<InferOutcome>,
     frame_sets: &mut [Vec<Option<HashSet<u32>>>],
     segments: &mut Vec<SegmentRecord>,
     frames_reduced: &mut usize,
+    arena: &Arena,
 ) {
     debug_assert_eq!(cs.jobs.len(), outcomes.len());
     let mut frames = Vec::with_capacity(outcomes.len());
@@ -228,6 +241,9 @@ fn finish_segment(
         encode_secs: cs.encode_secs,
         frames,
     });
+    for job in cs.jobs {
+        arena.put_pixels(job.pixels);
+    }
 }
 
 /// Run the full compute pass: camera-side stages (scheduled per
@@ -265,6 +281,7 @@ pub fn run_pipeline_with_replan(
     let mut segments: Vec<SegmentRecord> = Vec::new();
     let mut frames_reduced = 0usize;
     let schedule = replan.map(|ctx| ctx.schedule);
+    let arena = Arena::new();
 
     match parallelism {
         Parallelism::Sequential => {
@@ -284,7 +301,7 @@ pub fn run_pipeline_with_replan(
             let mut cams = cams;
             let mut first_err: Option<anyhow::Error> = None;
             for (ci, stages) in cams.iter_mut().enumerate() {
-                run_camera(ci, stages, layout, schedule, &mut |cs| {
+                run_camera(ci, stages, layout, schedule, &arena, &mut |cs| {
                     match infer.infer_merged(std::slice::from_ref(&cs)) {
                         Ok(mut outcomes) => {
                             let outcome = outcomes.pop().expect("one segment in, one out");
@@ -294,6 +311,7 @@ pub fn run_pipeline_with_replan(
                                 &mut frame_sets,
                                 &mut segments,
                                 &mut frames_reduced,
+                                &arena,
                             );
                             true
                         }
@@ -366,13 +384,14 @@ pub fn run_pipeline_with_replan(
                 // `rx` drops on an inference error and blocked senders
                 // unblock before the scope joins its workers.
                 let (tx, rx) = mpsc::sync_channel::<CameraSegment>(2 * n_cams.max(1));
+                let arena_ref = &arena;
                 for bucket in buckets {
                     let tx = tx.clone();
                     scope.spawn(move || {
                         for (ci, mut stages) in bucket {
                             // a dead receiver means the inference stage
                             // failed: stop burning compute on this camera
-                            run_camera(ci, &mut stages, &layout, schedule, &mut |cs| {
+                            run_camera(ci, &mut stages, &layout, schedule, arena_ref, &mut |cs| {
                                 tx.send(cs).is_ok()
                             });
                         }
@@ -394,6 +413,7 @@ pub fn run_pipeline_with_replan(
                             &mut frame_sets,
                             &mut segments,
                             &mut frames_reduced,
+                            &arena,
                         );
                     }
                 }
@@ -407,7 +427,7 @@ pub fn run_pipeline_with_replan(
         }
     }
 
-    Ok(PipelineOutput { segments, frame_sets, frames_reduced })
+    Ok(PipelineOutput { segments, frame_sets, frames_reduced, arena: arena.stats() })
 }
 
 #[cfg(test)]
@@ -515,6 +535,21 @@ mod tests {
                 assert_eq!(x.frames, y.frames);
             }
         }
+    }
+
+    #[test]
+    fn arena_recycles_buffers_across_segments() {
+        // 3 segments per camera stream through sequentially, so segment 2+
+        // must reuse the detector-input buffers segment 1 released
+        let out = run(Parallelism::Sequential, 2);
+        assert!(out.arena.pixel_allocs > 0);
+        assert!(
+            out.arena.pixel_reuses > 0,
+            "later segments must recycle released pixel buffers: {:?}",
+            out.arena
+        );
+        // frame buffers never exceed one segment's worth per camera
+        assert!(out.arena.frame_allocs <= 2 * 4, "frame pool leaked: {:?}", out.arena);
     }
 
     #[test]

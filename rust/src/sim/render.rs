@@ -65,14 +65,34 @@ impl Frame {
 
     /// Frame as HWC f32 in [0, 1] — the L2 detector's input layout.
     pub fn to_f32(&self) -> Vec<f32> {
-        self.data.iter().map(|&b| b as f32 / 255.0).collect()
+        let mut out = Vec::new();
+        self.to_f32_into(&mut out);
+        out
+    }
+
+    /// [`Frame::to_f32`] writing through a reusable buffer (cleared and
+    /// resized in place; allocation-free once warm).
+    pub fn to_f32_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.data.len(), 0.0);
+        crate::codec::kernels::convert_u8_to_f32(&self.data, out);
     }
 
     /// RoI-masked detector input: like `masked_keep(keep).to_f32()` but
     /// without materializing the intermediate frame — the streaming
     /// pipeline calls this once per kept frame on the hot path.
     pub fn masked_f32(&self, keep: &[crate::util::geometry::IRect]) -> Vec<f32> {
-        let mut out = vec![0.0f32; self.data.len()];
+        let mut out = Vec::new();
+        self.masked_f32_into(keep, &mut out);
+        out
+    }
+
+    /// [`Frame::masked_f32`] writing through a reusable buffer: the mask
+    /// and the u8→f32 conversion are fused into one pass per kept row
+    /// (the conversion dispatches to the SIMD kernel when selected).
+    pub fn masked_f32_into(&self, keep: &[crate::util::geometry::IRect], out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.data.len(), 0.0);
         for r in keep {
             if r.x >= self.w || r.y >= self.h {
                 continue;
@@ -82,12 +102,12 @@ impl Frame {
             for y in r.y..y1 {
                 let start = self.idx(r.x, y);
                 let len = ((x1 - r.x) * 3) as usize;
-                for i in start..start + len {
-                    out[i] = self.data[i] as f32 / 255.0;
-                }
+                crate::codec::kernels::convert_u8_to_f32(
+                    &self.data[start..start + len],
+                    &mut out[start..start + len],
+                );
             }
         }
-        out
     }
 
     /// Zero out everything except the given pixel rectangles (RoI crop:
@@ -373,6 +393,27 @@ mod tests {
         let f = r.render(0, 0);
         let keep = vec![IRect::new(32, 32, 64, 32), IRect::new(200, 100, 50, 40)];
         assert_eq!(f.masked_f32(&keep), f.masked_keep(&keep).to_f32());
+    }
+
+    #[test]
+    fn masked_f32_into_reuses_buffer_with_odd_offsets() {
+        let sc = scenario();
+        let r = sc.renderer();
+        let f = r.render(0, 2);
+        let mut buf = Vec::new();
+        let cases: Vec<Vec<IRect>> = vec![
+            vec![IRect::new(63, 47, 161, 97)], // odd offsets, non-lane-multiple width
+            vec![IRect::new(32, 32, 64, 32), IRect::new(200, 100, 50, 40)],
+            vec![IRect::new(300, 180, 100, 100)], // clamped at the frame edge
+            vec![],                               // all-black
+        ];
+        for keep in cases {
+            f.masked_f32_into(&keep, &mut buf);
+            assert_eq!(buf, f.masked_keep(&keep).to_f32(), "{keep:?}");
+        }
+        // stale contents from the previous mask must not leak through
+        f.masked_f32_into(&[], &mut buf);
+        assert!(buf.iter().all(|&v| v == 0.0));
     }
 
     #[test]

@@ -264,9 +264,7 @@ fn component_scope_is_byte_identical_on_a_disjoint_fleet() {
     // byte-identity across schedules for the component-scoped run
     let json = |par: Parallelism| -> String {
         let mut r = run(par, ReplanScope::Component);
-        r.offline_seconds = 0.0;
-        r.replan_seconds = 0.0;
-        r.replan_done_at = vec![0.0; r.replan_done_at.len()];
+        r.zero_wall_clock();
         r.to_json().to_string_pretty(2)
     };
     let reference = json(Parallelism::Sequential);

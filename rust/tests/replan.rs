@@ -129,6 +129,11 @@ fn online_drift_run_replans_via_warm_start() {
         report.replan_count
     );
     assert_eq!(report.replan_done_at.len(), 4, "each boundary must execute a re-plan");
+    assert_eq!(report.replan_records.len(), 4, "one record per epoch boundary");
+    assert!(
+        report.replan_records.iter().all(|r| !r.components.is_empty()),
+        "every record must carry its component dispositions"
+    );
     assert!(
         report.replan_warm_count >= 1,
         "no component re-solve warm-started: {} of {}",
@@ -207,13 +212,14 @@ fn mask_swap_is_byte_deterministic_across_schedules() {
         // wall-clock fields are the only non-deterministic part; zero the
         // values but keep the shape (a dropped or duplicated re-plan
         // would still change the byte stream)
-        report.offline_seconds = 0.0;
-        report.replan_seconds = 0.0;
-        report.replan_done_at = vec![0.0; report.replan_done_at.len()];
+        report.zero_wall_clock();
         report.to_json().to_string_pretty(2)
     };
     let reference = json(Parallelism::Sequential);
     assert!(reference.contains("\"replan_count\""), "{reference}");
+    // the serialized dump carries the full per-component records
+    assert!(reference.contains("\"replan_records\""), "{reference}");
+    assert!(reference.contains("\"components\""), "{reference}");
     for par in [Parallelism::PerCamera, Parallelism::Workers(1), Parallelism::Workers(3)] {
         let parallel = json(par);
         assert_eq!(

@@ -1,0 +1,170 @@
+//! Byte-identity of the SIMD codec kernels against their scalar
+//! references (DESIGN.md §9): on a host with AVX2 the dispatched path and
+//! the `*_scalar` reference must agree bit-for-bit on random inputs —
+//! including non-lane-multiple widths and odd-offset 25%-RoI rects — and
+//! a whole segment encode must be invariant under the forced backend.
+//! On hosts without AVX2 the dispatched comparisons are vacuous (both
+//! sides run scalar) and the forced-backend test skips.
+
+use crossroi::codec::{dct, entropy, motion, KernelBackend, SegmentEncoder};
+use crossroi::codec::{avx2_supported, set_backend};
+use crossroi::config::Config;
+use crossroi::sim::render::Frame;
+use crossroi::sim::Scenario;
+use crossroi::util::geometry::IRect;
+use crossroi::util::rng::Rng;
+
+fn rand_f32(rng: &mut Rng, amp: f32) -> f32 {
+    // uniform in [-amp, amp] with codec-realistic magnitudes
+    ((rng.next_u64() >> 40) as f32 / (1u64 << 24) as f32 * 2.0 - 1.0) * amp
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+#[test]
+fn dct_roundtrip_identity_on_random_blocks() {
+    let mut rng = Rng::new(0xD07);
+    for case in 0..200 {
+        let mut src = [0.0f32; 64];
+        for v in src.iter_mut() {
+            *v = rand_f32(&mut rng, 255.0);
+        }
+        let mut a = src;
+        let mut b = src;
+        dct::forward(&mut a);
+        dct::forward_scalar(&mut b);
+        assert_eq!(bits(&a), bits(&b), "forward diverged on case {case}");
+        for qp in [1.0f32, 6.0, 14.5] {
+            let qa = dct::quantize(&a, qp);
+            let qb = dct::quantize_scalar(&b, qp);
+            assert_eq!(qa, qb, "quantize diverged on case {case} qp {qp}");
+            let mut da = dct::dequantize(&qa, qp);
+            let mut db = dct::dequantize_scalar(&qb, qp);
+            assert_eq!(bits(&da), bits(&db), "dequantize diverged on case {case} qp {qp}");
+            dct::inverse(&mut da);
+            dct::inverse_scalar(&mut db);
+            assert_eq!(bits(&da), bits(&db), "inverse diverged on case {case} qp {qp}");
+        }
+    }
+}
+
+#[test]
+fn sad_identity_on_random_planes_with_odd_strides() {
+    let mut rng = Rng::new(0x5AD);
+    // widths deliberately not multiples of the 8-lane width
+    for (w, h) in [(37usize, 25usize), (41, 33), (64, 48)] {
+        let cur: Vec<f32> = (0..w * h).map(|_| rand_f32(&mut rng, 255.0)).collect();
+        let reference: Vec<f32> = (0..w * h).map(|_| rand_f32(&mut rng, 255.0)).collect();
+        let pc = motion::Plane { w, h, data: &cur };
+        let pr = motion::Plane { w, h, data: &reference };
+        for bx in [0usize, 5, w - 16] {
+            for by in [0usize, 3, h - 16] {
+                for (dx, dy) in [(0i32, 0i32), (2, -1), (-3, 2), (15, 0)] {
+                    for early in [f32::INFINITY, 2000.0, 100.0, 0.0] {
+                        let a = motion::sad(&pc, &pr, bx, by, dx, dy, early);
+                        let b = motion::sad_scalar(&pc, &pr, bx, by, dx, dy, early);
+                        match (a, b) {
+                            (None, None) => {}
+                            (Some(a), Some(b)) => assert_eq!(
+                                a.to_bits(),
+                                b.to_bits(),
+                                "w={w} bx={bx} by={by} d=({dx},{dy}) early={early}"
+                            ),
+                            _ => panic!("bounds decision diverged"),
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn block_bits_identity_on_random_levels() {
+    let mut rng = Rng::new(0xB17);
+    for density in [2u64, 5, 20, 64] {
+        for _ in 0..100 {
+            let mut levels = [0i32; 64];
+            for v in levels.iter_mut() {
+                if rng.next_u64() % density == 0 {
+                    *v = (rng.next_u64() % 1023) as i32 - 511;
+                }
+            }
+            for prev_dc in [0i32, -100, 511] {
+                assert_eq!(
+                    entropy::block_bits(&levels, prev_dc),
+                    entropy::block_bits_scalar(&levels, prev_dc),
+                    "levels {levels:?} prev_dc {prev_dc}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn masked_convert_identity_on_odd_offset_rects() {
+    let cfg = Config::test_small();
+    let scenario = Scenario::build(&cfg.scenario);
+    let frame = scenario.renderer().render(0, 4);
+    let scalar_reference = |f: &Frame, keep: &[IRect]| -> Vec<f32> {
+        let mut out = vec![0.0f32; f.data.len()];
+        for r in keep {
+            if r.x >= f.w || r.y >= f.h {
+                continue;
+            }
+            let x1 = (r.x + r.w).min(f.w);
+            let y1 = (r.y + r.h).min(f.h);
+            for y in r.y..y1 {
+                let start = f.idx(r.x, y);
+                let len = ((x1 - r.x) * 3) as usize;
+                for i in start..start + len {
+                    out[i] = f.data[i] as f32 / 255.0;
+                }
+            }
+        }
+        out
+    };
+    let cases: Vec<Vec<IRect>> = vec![
+        vec![IRect::new(64, 48, 160, 96)],  // the 25%-RoI bench rect
+        vec![IRect::new(63, 47, 161, 97)],  // odd offsets, odd span
+        vec![IRect::new(1, 0, 7, 5)],       // narrower than one SIMD lane row
+        vec![IRect::new(32, 32, 64, 32), IRect::new(60, 40, 50, 40)], // overlap
+        vec![IRect::new(300, 180, 100, 100)], // clamped at the frame edge
+    ];
+    for keep in cases {
+        let got = frame.masked_f32(&keep);
+        let want = scalar_reference(&frame, &keep);
+        assert_eq!(bits(&got), bits(&want), "{keep:?}");
+    }
+    assert_eq!(bits(&frame.to_f32()), bits(&scalar_reference(&frame, &[IRect::new(0, 0, 320, 192)])));
+}
+
+/// Whole-encoder invariance under the forced backend: every kernel in
+/// concert (DCT, quantize, SAD-driven mode decisions, entropy costing)
+/// must give the same segment bytes either way.  Skips without AVX2.
+#[test]
+fn segment_encode_is_backend_invariant() {
+    if !avx2_supported() {
+        return;
+    }
+    let cfg = Config::test_small();
+    let scenario = Scenario::build(&cfg.scenario);
+    let renderer = scenario.renderer();
+    let frames: Vec<Frame> = (0..6).map(|i| renderer.render(0, i)).collect();
+    // odd-offset 25% RoI plus a second small region (multi-stream path)
+    let regions = [IRect::new(63, 47, 161, 97), IRect::new(16, 16, 48, 32)];
+    let encode_with = |backend: KernelBackend| {
+        set_backend(Some(backend));
+        let mut enc = SegmentEncoder::new(&regions, 6.0);
+        let out = enc.encode_segment(&frames);
+        set_backend(None);
+        out
+    };
+    let scalar = encode_with(KernelBackend::Scalar);
+    let simd = encode_with(KernelBackend::Avx2);
+    assert_eq!(scalar.bytes, simd.bytes, "segment bytes diverged across backends");
+    assert_eq!(scalar.region_bits, simd.region_bits, "per-region bits diverged");
+    assert_eq!(scalar.n_frames, simd.n_frames);
+}
