@@ -1,0 +1,174 @@
+//! Planner-pool scaling — per-epoch re-plan latency as the fleet grows
+//! from 1×4 to 8×32 (intersections × total cameras), with the epoch's
+//! compute phase fanned out over 1 vs 4 pool workers
+//! (`--planner-threads`).
+//!
+//! Every intersection drifts mid-eval and the policy is `Every`, so a
+//! measured epoch re-solves *all* of its components — the worst case the
+//! pool exists for.  Per-epoch wall latency is recorded as p50/p99 per
+//! thread count, plus the pool speedup (sequential p50 / pooled p50).
+//! The final epochs of both pool sizes are asserted identical — the
+//! snapshot/compute/commit phases must not let the thread count leak
+//! into the plan (the full byte-identity gate lives in
+//! `rust/tests/component_replan.rs`).
+//!
+//! Besides the printed table the bench writes `BENCH_replan.json`.
+//!
+//! Quick smoke (CI): `CROSSROI_BENCH_QUICK=1 cargo bench --bench replan_scaling`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crossroi::bench::Table;
+use crossroi::config::Config;
+use crossroi::coordinator::Method;
+use crossroi::offline::{build_plan, OfflineOptions, Replanner};
+use crossroi::pipeline::{EpochPlanner as _, PlanEpoch, ReplanPolicy, ReplanScope};
+use crossroi::sim::Scenario;
+use crossroi::util::json::Json;
+use crossroi::util::stats::percentile;
+
+/// Epoch latencies for one (fleet size, thread count) cell, plus the
+/// final plan the identity check compares across thread counts.
+struct Cell {
+    p50_ms: f64,
+    p99_ms: f64,
+    fired: usize,
+    components: usize,
+    final_epoch: Arc<PlanEpoch>,
+}
+
+fn time_epochs(
+    scenario: &Scenario,
+    cfg: &Config,
+    plan: &crossroi::offline::OfflinePlan,
+    epoch0: &Arc<PlanEpoch>,
+    threads: usize,
+    iters: usize,
+) -> Cell {
+    let method = Method::CrossRoi;
+    let rp = Replanner::new(
+        scenario,
+        &cfg.system,
+        &method,
+        OfflineOptions::default(),
+        ReplanPolicy::Every(2),
+        ReplanScope::Component,
+        5,
+        plan,
+        60,
+    )
+    .with_planner_threads(threads);
+    // warm-up epoch (pre-drift boundary): pays the one-time drift-baseline
+    // derivation so the timed epochs measure steady-state re-plans only
+    let mut prev = rp.plan_epoch(1, 4, epoch0).expect("warm-up epoch");
+    // timed epochs at a fixed post-drift boundary: the window is the same
+    // every iteration, so each epoch re-solves the same fired instance
+    let mut lat: Vec<f64> = Vec::with_capacity(iters);
+    for it in 0..iters {
+        let t0 = Instant::now();
+        prev = rp.plan_epoch(2 + it, 8, &prev).expect("timed epoch");
+        lat.push(t0.elapsed().as_secs_f64());
+    }
+    let records = rp.records();
+    let last = records.last().expect("timed epochs recorded");
+    assert!(last.replanned, "an Every-policy post-drift epoch must fire");
+    let stats = rp.pool_stats();
+    assert_eq!(stats.epochs_computed, 1 + iters);
+    assert!(stats.max_concurrent >= 1);
+    Cell {
+        p50_ms: percentile(&lat, 50.0) * 1e3,
+        p99_ms: percentile(&lat, 99.0) * 1e3,
+        fired: last.fired_components(),
+        components: last.components.len(),
+        final_epoch: prev,
+    }
+}
+
+fn main() {
+    let quick = std::env::var("CROSSROI_BENCH_QUICK").ok().as_deref() == Some("1");
+    let sweep: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4, 8] };
+    let iters = if quick { 2 } else { 6 };
+
+    let mut table = Table::new(&[
+        "intersections",
+        "cams",
+        "fired/total",
+        "p50 1t ms",
+        "p99 1t ms",
+        "p50 4t ms",
+        "p99 4t ms",
+        "speedup",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+    for &n_intersections in sweep {
+        let mut cfg = Config::paper();
+        cfg.scenario.n_cameras = 4;
+        cfg.scenario.n_intersections = n_intersections;
+        cfg.scenario.profile_secs = 10.0;
+        cfg.scenario.eval_secs = 10.0;
+        // every intersection drifts: the measured epochs re-solve the
+        // whole fleet, component by component, on the pool
+        cfg.scenario.drift_at_secs = 12.0;
+        cfg.scenario.drift_strength = 0.9;
+        cfg.scenario.drift_intersection = -1;
+        cfg.scenario.validate().unwrap();
+        let scenario = Scenario::build(&cfg.scenario);
+        let method = Method::CrossRoi;
+        let plan = build_plan(&scenario, &cfg.scenario, &cfg.system, &method).unwrap();
+        let n_cams = scenario.cameras.len();
+        let epoch0 = Arc::new(PlanEpoch::initial(
+            plan.groups.clone(),
+            plan.blocks.clone(),
+            vec![true; n_cams],
+            None,
+            plan.masks.total_size(),
+        ));
+
+        let seq = time_epochs(&scenario, &cfg, &plan, &epoch0, 1, iters);
+        let pool = time_epochs(&scenario, &cfg, &plan, &epoch0, 4, iters);
+        // the thread count must not leak into the plan
+        assert_eq!(
+            seq.final_epoch.groups, pool.final_epoch.groups,
+            "pooled re-plan diverged from sequential at {n_intersections} intersections"
+        );
+        assert_eq!(seq.final_epoch.mask_tiles, pool.final_epoch.mask_tiles);
+        assert_eq!((seq.fired, seq.components), (pool.fired, pool.components));
+
+        let speedup = seq.p50_ms / pool.p50_ms.max(1e-9);
+        table.row(vec![
+            format!("{n_intersections}"),
+            format!("{n_cams}"),
+            format!("{}/{}", pool.fired, pool.components),
+            format!("{:.1}", seq.p50_ms),
+            format!("{:.1}", seq.p99_ms),
+            format!("{:.1}", pool.p50_ms),
+            format!("{:.1}", pool.p99_ms),
+            format!("{speedup:.2}x"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("intersections", Json::Num(n_intersections as f64)),
+            ("cameras", Json::Num(n_cams as f64)),
+            ("fired_components", Json::Num(pool.fired as f64)),
+            ("components", Json::Num(pool.components as f64)),
+            ("p50_ms_1t", Json::Num(seq.p50_ms)),
+            ("p99_ms_1t", Json::Num(seq.p99_ms)),
+            ("p50_ms_4t", Json::Num(pool.p50_ms)),
+            ("p99_ms_4t", Json::Num(pool.p99_ms)),
+            ("speedup_4t", Json::Num(speedup)),
+        ]));
+    }
+    table.print(
+        "Per-epoch re-plan latency, planner pool 1 vs 4 workers (all intersections drifted)",
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("replan_scaling".into())),
+        ("quick", Json::Bool(quick)),
+        ("iters_per_cell", Json::Num(iters as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let path = "BENCH_replan.json";
+    std::fs::write(path, doc.to_string_pretty(2) + "\n").expect("write scoreboard");
+    println!("wrote {path}");
+}

@@ -47,23 +47,34 @@ impl AssociationTable {
     /// `(frame, raw_id)`; each camera where the id appears contributes one
     /// appearance region.
     pub fn build(stream: &ReidStream, tiling: &Tiling) -> AssociationTable {
+        Self::build_par(stream, tiling, 1)
+    }
+
+    /// [`AssociationTable::build`] with the per-frame grouping fanned out
+    /// over up to `threads` scoped workers
+    /// ([`crate::util::parallel::ordered_map`]), one contiguous frame
+    /// chunk each.
+    ///
+    /// Byte-identical to the sequential build at every thread count:
+    /// frames are independent (grouping never crosses a frame), the
+    /// partial dedup maps merge by *adding* multiplicities (addition is
+    /// associative and commutative over the chunk partition), and the
+    /// final order comes from one total sort on `regions` — a
+    /// [`Constraint`]'s only field, so the sort key is unique and the
+    /// order cannot depend on which chunk saw a constraint first.
+    pub fn build_par(stream: &ReidStream, tiling: &Tiling, threads: usize) -> AssociationTable {
+        let threads = threads.clamp(1, stream.n_frames.max(1));
+        let chunk = stream.n_frames.div_ceil(threads.max(1)).max(1);
+        let starts: Vec<usize> = (0..stream.n_frames).step_by(chunk).collect();
+        let partials = crate::util::parallel::ordered_map(&starts, threads, |&start| {
+            collect_frames(stream, tiling, start..(start + chunk).min(stream.n_frames))
+        });
         let mut unique: HashMap<Constraint, usize> = HashMap::new();
         let mut total = 0usize;
-        for frame in 0..stream.n_frames {
-            // group this frame's records by raw id
-            let mut groups: HashMap<u32, Vec<Vec<GlobalTile>>> = HashMap::new();
-            for cam in 0..stream.n_cameras {
-                for rec in stream.at(cam, frame) {
-                    let region = tiling.appearance_region(cam, &rec.bbox);
-                    if !region.is_empty() {
-                        groups.entry(rec.raw_id).or_default().push(region);
-                    }
-                }
-            }
-            for (_, regions) in groups {
-                total += 1;
-                let c = Constraint::canonical(regions);
-                *unique.entry(c).or_insert(0) += 1;
+        for (map, sub_total) in partials {
+            total += sub_total;
+            for (c, m) in map {
+                *unique.entry(c).or_insert(0) += m;
             }
         }
         let mut constraints = Vec::with_capacity(unique.len());
@@ -98,6 +109,36 @@ impl AssociationTable {
         tiles.dedup();
         tiles
     }
+}
+
+/// Dedup one frame range of the stream into (constraint → multiplicity)
+/// plus its raw occurrence count — one worker's share of
+/// [`AssociationTable::build_par`].
+fn collect_frames(
+    stream: &ReidStream,
+    tiling: &Tiling,
+    frames: std::ops::Range<usize>,
+) -> (HashMap<Constraint, usize>, usize) {
+    let mut unique: HashMap<Constraint, usize> = HashMap::new();
+    let mut total = 0usize;
+    for frame in frames {
+        // group this frame's records by raw id
+        let mut groups: HashMap<u32, Vec<Vec<GlobalTile>>> = HashMap::new();
+        for cam in 0..stream.n_cameras {
+            for rec in stream.at(cam, frame) {
+                let region = tiling.appearance_region(cam, &rec.bbox);
+                if !region.is_empty() {
+                    groups.entry(rec.raw_id).or_default().push(region);
+                }
+            }
+        }
+        for (_, regions) in groups {
+            total += 1;
+            let c = Constraint::canonical(regions);
+            *unique.entry(c).or_insert(0) += 1;
+        }
+    }
+    (unique, total)
 }
 
 #[cfg(test)]
@@ -164,5 +205,25 @@ mod tests {
         let b = AssociationTable::build(&s, &tiling());
         assert_eq!(a.constraints, b.constraints);
         assert_eq!(a.multiplicity, b.multiplicity);
+    }
+
+    #[test]
+    fn parallel_build_is_byte_identical() {
+        // constraints repeating across chunk boundaries force the
+        // multiplicity merge; distinct ones exercise the total sort
+        let mut recs = Vec::new();
+        for f in 0..23 {
+            recs.push(det(0, f, 1, 32.0, 32.0));
+            recs.push(det(1, f, 1, 64.0, 64.0));
+            recs.push(det(0, f, 2, (f % 5) as f64 * 48.0, 16.0));
+        }
+        let s = ReidStream::new(2, 23, recs);
+        let seq = AssociationTable::build(&s, &tiling());
+        for threads in [2, 3, 7, 32] {
+            let par = AssociationTable::build_par(&s, &tiling(), threads);
+            assert_eq!(seq.constraints, par.constraints, "threads={threads}");
+            assert_eq!(seq.multiplicity, par.multiplicity, "threads={threads}");
+            assert_eq!(seq.total_occurrences, par.total_occurrences);
+        }
     }
 }

@@ -21,7 +21,8 @@ pub const VALUE_FLAGS: &[&str] = &[
     "reducto-target", "eval-secs", "profile-secs", "cameras", "method", "out",
     "bandwidth-mbps", "qp", "offline-threads", "solver", "shards",
     "replan-every", "replan-drift", "drift-at", "drift-strength",
-    "replan-scope", "intersections", "spacing", "drift-intersection",
+    "replan-scope", "planner-threads", "intersections", "spacing",
+    "drift-intersection",
 ];
 
 impl Args {

@@ -102,6 +102,20 @@ pub struct MethodReport {
     pub arena_pixel_allocs: usize,
     /// Detector-input pixel buffers recycled through the arena.
     pub arena_pixel_reuses: usize,
+    /// Fresh inference-grid buffers allocated on the server side.
+    pub arena_grid_allocs: usize,
+    /// Inference-grid buffers recycled through the arena.
+    pub arena_grid_reuses: usize,
+    // --- planner-pool diagnostics (DESIGN.md §10; same contract as the
+    // arena counters: schedule-dependent, NOT serialized in `to_json`) ---
+    /// Epoch boundaries whose compute phase ran (carried or fired).
+    pub planner_epochs_computed: usize,
+    /// Component solves dispatched to the planner pool.
+    pub planner_components_solved: usize,
+    /// High-water mark of component solves running simultaneously.
+    pub planner_max_concurrent: usize,
+    /// Total seconds component solves waited for a pool worker.
+    pub planner_queue_wait_secs: f64,
 }
 
 impl MethodReport {
@@ -181,10 +195,20 @@ impl MethodReport {
         self.replan_done_at = vec![0.0; self.replan_done_at.len()];
         for rec in &mut self.replan_records {
             rec.seconds = 0.0;
+            for comp in &mut rec.components {
+                comp.seconds = 0.0;
+                comp.queue_wait = 0.0;
+            }
         }
         self.arena_frame_allocs = 0;
         self.arena_pixel_allocs = 0;
         self.arena_pixel_reuses = 0;
+        self.arena_grid_allocs = 0;
+        self.arena_grid_reuses = 0;
+        self.planner_epochs_computed = 0;
+        self.planner_components_solved = 0;
+        self.planner_max_concurrent = 0;
+        self.planner_queue_wait_secs = 0.0;
     }
 }
 
@@ -249,6 +273,8 @@ mod tests {
                     spill_groups: 2,
                     n_constraints: 25,
                     solver: "greedy",
+                    seconds: 0.012,
+                    queue_wait: 0.002,
                 },
                 ComponentRecord {
                     cameras: vec![1],
@@ -259,6 +285,8 @@ mod tests {
                     spill_groups: 0,
                     n_constraints: 15,
                     solver: "carried",
+                    seconds: 0.0,
+                    queue_wait: 0.0,
                 },
             ],
             reducto_rederived: 1,
@@ -299,14 +327,28 @@ mod tests {
         r.arena_frame_allocs = 7;
         r.arena_pixel_allocs = 9;
         r.arena_pixel_reuses = 40;
+        r.arena_grid_allocs = 3;
+        r.arena_grid_reuses = 21;
+        r.planner_epochs_computed = 4;
+        r.planner_components_solved = 6;
+        r.planner_max_concurrent = 3;
+        r.planner_queue_wait_secs = 0.5;
         r.zero_wall_clock();
         assert_eq!(r.offline_seconds, 0.0);
         assert_eq!(r.replan_seconds, 0.0);
         assert_eq!(r.replan_done_at, vec![0.0, 0.0], "shape must be preserved");
         assert_eq!(r.replan_records[0].seconds, 0.0);
+        // per-component wall-clock (solve time, pool queue wait) zeroes too
+        assert!(r.replan_records[0]
+            .components
+            .iter()
+            .all(|c| c.seconds == 0.0 && c.queue_wait == 0.0));
         // virtual-clock and outcome fields survive
         assert_eq!(r.replan_records[0].trigger_time, 12.5);
         assert!(r.replan_records[0].replanned);
         assert_eq!(r.arena_pixel_reuses, 0);
+        assert_eq!(r.arena_grid_reuses, 0);
+        assert_eq!(r.planner_components_solved, 0);
+        assert_eq!(r.planner_queue_wait_secs, 0.0);
     }
 }

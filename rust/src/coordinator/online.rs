@@ -27,7 +27,7 @@ use crate::coordinator::metrics::{LatencyBreakdown, MethodReport};
 use crate::offline::replan::{Replanner, ReplanRecord};
 use crate::offline::{build_plan_with, OfflinePlan};
 use crate::pipeline::{
-    run_pipeline_with_replan, use_roi_path, BatchedInfer, CameraStages, CarryOverQuery,
+    run_pipeline_in, use_roi_path, Arena, BatchedInfer, CameraStages, CarryOverQuery,
     CodecEncodeStage, DesTransport, FilterStage, Infer, PassThroughFilter, PipelineOptions,
     PlanEpoch, PlanSchedule, QueryStage, ReductoFilterStage, ReplanContext, SegmentLayout,
     SimCapture,
@@ -118,7 +118,8 @@ pub fn run_method_with(
                     frames_per_segment,
                     &plan,
                     infer.n_blocks(),
-                );
+                )
+                .with_planner_threads(opts.planner_threads);
                 Some((schedule, replanner))
             }
             _ => None,
@@ -139,6 +140,9 @@ pub fn run_method_with(
             }
         })
         .collect();
+    // one buffer arena spans the whole run: camera-side frame/pixel
+    // buffers and the server's inference-grid buffers all recycle here
+    let arena = Arena::new();
     let server = BatchedInfer {
         infer,
         scenario,
@@ -147,8 +151,9 @@ pub fn run_method_with(
         schedule: replan_setup.as_ref().map(|(s, _)| s),
         objectness_threshold: sys.objectness_threshold,
         eval_start: eval.start,
+        arena: Some(&arena),
     };
-    let out = run_pipeline_with_replan(
+    let out = run_pipeline_in(
         cams,
         &server,
         &layout,
@@ -156,9 +161,11 @@ pub fn run_method_with(
         replan_setup
             .as_ref()
             .map(|(schedule, planner)| ReplanContext { schedule, planner }),
+        &arena,
     )?;
     let replan_records: Vec<ReplanRecord> =
         replan_setup.as_ref().map(|(_, r)| r.records()).unwrap_or_default();
+    let pool = replan_setup.as_ref().map(|(_, r)| r.pool_stats()).unwrap_or_default();
 
     // ---- query scoring (carry-over for filtered frames) ----
     let reported = CarryOverQuery.fuse(&out.frame_sets, n_frames);
@@ -252,6 +259,12 @@ pub fn run_method_with(
         arena_frame_allocs: out.arena.frame_allocs,
         arena_pixel_allocs: out.arena.pixel_allocs,
         arena_pixel_reuses: out.arena.pixel_reuses,
+        arena_grid_allocs: out.arena.grid_allocs,
+        arena_grid_reuses: out.arena.grid_reuses,
+        planner_epochs_computed: pool.epochs_computed,
+        planner_components_solved: pool.components_solved,
+        planner_max_concurrent: pool.max_concurrent,
+        planner_queue_wait_secs: pool.queue_wait_secs,
     };
     Ok((report, reported))
 }

@@ -50,6 +50,9 @@ flags:
   --replan-scope <s>       fleet|component re-planning granularity: component
                            (default) re-solves only drifted co-occurrence
                            components and carries the rest forward
+  --planner-threads <n>    worker threads for one re-plan epoch's compute
+                           phase (drift profile + fired-component solves;
+                           0 = inherit --offline-threads, the default)
   --drift-at <s>           sim: shift the traffic flow between the two
                            roads at scenario time s (0 = stationary)
   --drift-strength <s>     sim: drift magnitude in [0,1] (default 0.75)
@@ -248,11 +251,14 @@ fn run() -> Result<()> {
                 100.0 * report.mask_coverage
             );
             println!(
-                "  kernels: {} backend; arena: {} frame allocs, {} pixel allocs, {} pixel reuses",
+                "  kernels: {} backend; arena: {} frame allocs, {} pixel allocs, \
+                 {} pixel reuses, {} grid allocs, {} grid reuses",
                 crossroi::codec::backend().name(),
                 report.arena_frame_allocs,
                 report.arena_pixel_allocs,
-                report.arena_pixel_reuses
+                report.arena_pixel_reuses,
+                report.arena_grid_allocs,
+                report.arena_grid_reuses
             );
             if report.replan_count > 0 || report.replan_carried_components > 0 {
                 println!(
@@ -269,6 +275,16 @@ fn run() -> Result<()> {
                     println!(
                         "  frame filter: {} per-epoch threshold re-derivations",
                         report.replan_reducto_rederived
+                    );
+                }
+                if report.planner_epochs_computed > 0 {
+                    println!(
+                        "  planner pool: {} epochs computed, {} component solves \
+                         ({} max concurrent), {:.3} s total queue wait",
+                        report.planner_epochs_computed,
+                        report.planner_components_solved,
+                        report.planner_max_concurrent,
+                        report.planner_queue_wait_secs
                     );
                 }
             }
@@ -341,6 +357,9 @@ fn pipeline_options(args: &Args) -> Result<crossroi::pipeline::PipelineOptions> 
     };
     if let Some(name) = args.flag("replan-scope") {
         opts.replan_scope = crossroi::pipeline::ReplanScope::parse(name)?;
+    }
+    if let Some(n) = args.u64_flag("planner-threads")? {
+        opts.planner_threads = n as usize;
     }
     Ok(opts)
 }

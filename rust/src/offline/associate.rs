@@ -17,6 +17,13 @@ pub fn run(stream: &ReidStream, tiling: &Tiling) -> AssociateArtifact {
     AssociateArtifact { table: AssociationTable::build(stream, tiling) }
 }
 
+/// [`run`] with the per-frame grouping fanned out over up to `threads`
+/// scoped workers — byte-identical at every thread count (see
+/// [`AssociationTable::build_par`]).
+pub fn run_par(stream: &ReidStream, tiling: &Tiling, threads: usize) -> AssociateArtifact {
+    AssociateArtifact { table: AssociationTable::build_par(stream, tiling, threads) }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -37,6 +37,7 @@
 //! (`rust/tests/replan.rs`, `rust/tests/component_replan.rs`).
 
 use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -57,6 +58,7 @@ use crate::roi::setcover::Solution;
 use crate::sim::Scenario;
 use crate::util::geometry::IRect;
 use crate::util::json::Json;
+use crate::util::parallel::{ordered_map, PoolGauge};
 
 /// Above this constraint drift a warm seed reuses too little to pay for
 /// itself (most seeded tiles are stale and only burden the prune pass);
@@ -92,6 +94,14 @@ pub struct ComponentRecord {
     /// fired; may be "greedy" under `--solver exact` when the window
     /// instance exceeded the certifier's per-group cap).
     pub solver: &'static str,
+    /// Measured wall seconds of this component's filter → associate →
+    /// spill → solve, on whichever pool worker ran it (0.0 when carried).
+    /// Wall-clock: zeroed by `MethodReport::zero_wall_clock` before
+    /// byte-comparison.
+    pub seconds: f64,
+    /// Wall seconds this component's solve waited between the epoch
+    /// fan-out and a pool worker picking it up (0.0 when carried).
+    pub queue_wait: f64,
 }
 
 /// One epoch boundary's outcome — a check that may or may not have fired
@@ -202,6 +212,8 @@ impl ComponentRecord {
             ("spill_groups", Json::Num(self.spill_groups as f64)),
             ("n_constraints", Json::Num(self.n_constraints as f64)),
             ("solver", Json::Str(self.solver.to_string())),
+            ("seconds", Json::Num(self.seconds)),
+            ("queue_wait", Json::Num(self.queue_wait)),
         ])
     }
 }
@@ -218,7 +230,11 @@ struct ReplanState {
     /// of delaying its start (the offline plan does not retain its
     /// profile stream).  Fired components replace their share of the
     /// baseline; quiescent ones keep accumulating drift against theirs.
-    prev_constraints: Option<HashSet<Constraint>>,
+    /// Behind an `Arc` so an epoch's compute phase can snapshot it by
+    /// pointer under a brief lock instead of cloning the set (or holding
+    /// the lock across the solves); the commit phase mutates it in place
+    /// via `Arc::make_mut` after the compute phase drops its handle.
+    prev_constraints: Option<Arc<HashSet<Constraint>>>,
     /// Camera partition of the baseline window — the component-diff
     /// reference a migration is detected against.  Seeded with the
     /// baseline, replaced whenever an epoch fires.
@@ -256,7 +272,32 @@ pub struct Replanner<'a> {
     /// epochs — construction rasterizes every camera's static
     /// background, which must not be paid per fired epoch.
     renderer: OnceCell<crate::sim::Renderer<'a>>,
+    /// Worker budget for one epoch's compute phase (drift-signal profile
+    /// + fired-component fan-out).  `0` falls back to the offline
+    /// planner's `effective_threads`.
+    planner_threads: usize,
+    /// Concurrency gauge over the fired-component fan-out — feeds the
+    /// planner-pool counters beside (never inside) byte-compared output.
+    pool: PoolGauge,
+    /// Epoch boundaries whose compute phase ran (carried or fired).
+    epochs_computed: AtomicUsize,
     state: Mutex<ReplanState>,
+}
+
+/// Aggregate planner-pool counters for one run — surfaced on
+/// `MethodReport` and printed by `crossroi run`.  Schedule-dependent
+/// diagnostics: excluded from the byte-compared JSON.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlannerPoolStats {
+    /// Epoch boundaries whose compute phase ran.
+    pub epochs_computed: usize,
+    /// Component solves dispatched to the pool (fired components only).
+    pub components_solved: usize,
+    /// High-water mark of component solves running simultaneously.
+    pub max_concurrent: usize,
+    /// Total seconds component solves waited between the epoch fan-out
+    /// and a pool worker picking them up.
+    pub queue_wait_secs: f64,
 }
 
 impl<'a> Replanner<'a> {
@@ -291,6 +332,9 @@ impl<'a> Replanner<'a> {
             n_infer_blocks,
             reducto_target: method.reducto_target(),
             renderer: OnceCell::new(),
+            planner_threads: 0,
+            pool: PoolGauge::new(),
+            epochs_computed: AtomicUsize::new(0),
             state: Mutex::new(ReplanState {
                 prev_solution: solution_of(&initial.masks),
                 prev_constraints: None,
@@ -298,6 +342,33 @@ impl<'a> Replanner<'a> {
                 records: Vec::new(),
             }),
             tiling: initial.masks.tiling.clone(),
+        }
+    }
+
+    /// Override the epoch compute phase's worker budget (`0` = inherit
+    /// the offline planner's `effective_threads`; the default).
+    pub fn with_planner_threads(mut self, threads: usize) -> Replanner<'a> {
+        self.planner_threads = threads;
+        self
+    }
+
+    /// The compute phase's resolved worker budget.
+    fn effective_planner_threads(&self) -> usize {
+        if self.planner_threads == 0 {
+            self.opts.effective_threads()
+        } else {
+            self.planner_threads
+        }
+    }
+
+    /// Aggregate planner-pool counters across every epoch so far.
+    pub fn pool_stats(&self) -> PlannerPoolStats {
+        let s = self.pool.stats();
+        PlannerPoolStats {
+            epochs_computed: self.epochs_computed.load(Ordering::Relaxed),
+            components_solved: s.tasks,
+            max_concurrent: s.max_concurrent,
+            queue_wait_secs: s.queue_wait_secs,
         }
     }
 
@@ -362,22 +433,34 @@ impl EpochPlanner for Replanner<'_> {
         prev: &Arc<PlanEpoch>,
     ) -> Result<Arc<PlanEpoch>> {
         let t0 = Instant::now();
+        self.epochs_computed.fetch_add(1, Ordering::Relaxed);
+        let threads = self.effective_planner_threads();
         let trigger_time = (start_seg * self.frames_per_segment) as f64 / self.fps;
         let n_cams = self.tiling.n_cameras;
 
+        // ---- compute phase (no state lock held anywhere below until the
+        // commit): snapshot → decide → solve in parallel → merge ----
+
         // the sliding window: the last `window_frames` frames of detection
         // records before the boundary (absolute frame indexing; early
-        // boundaries reach back into the original profile window)
+        // boundaries reach back into the original profile window).  The
+        // drift-signal profile (linear ReID + raw associate over the full
+        // window) runs on the same worker budget as the component solves.
         let end_abs = (self.eval_start + start_seg * self.frames_per_segment)
             .min(self.scenario.n_frames());
         let window = end_abs.saturating_sub(self.window_frames)..end_abs;
-        let stream = RawReid::generate(self.scenario, window.clone(), &ErrorModelParams::default());
+        let stream = RawReid::generate_par(
+            self.scenario,
+            window.clone(),
+            &ErrorModelParams::default(),
+            threads,
+        );
 
         // drift signal on the *raw* (unfiltered) association table — one
         // linear pass, comparable with the raw baseline, and it keeps
         // carried components (and skipped checks) from paying the O(n²)
         // pair fitting
-        let raw_table = associate::run(&stream, &self.tiling).table;
+        let raw_table = associate::run_par(&stream, &self.tiling, threads).table;
         let comps = self.partition_scoped(&stream);
         let mut comp_of_cam = vec![0usize; n_cams];
         for (i, comp) in comps.iter().enumerate() {
@@ -394,22 +477,45 @@ impl EpochPlanner for Replanner<'_> {
             }
         }
 
-        let mut st = self.state.lock().unwrap();
-        if st.prev_constraints.is_none() {
-            // first check: derive the drift baseline (constraints + camera
-            // partition) from the initial profile window — the window the
-            // epoch-0 masks were solved on
-            let baseline = RawReid::generate(
+        // first check: derive the drift baseline (constraints + camera
+        // partition) from the initial profile window — the window the
+        // epoch-0 masks were solved on.  Derived *outside* the lock (the
+        // pass is a full profile-window ReID + associate) and installed
+        // under it.
+        let needs_baseline = self.state.lock().unwrap().prev_constraints.is_none();
+        let seeded = if needs_baseline {
+            let baseline_stream = RawReid::generate_par(
                 self.scenario,
                 self.scenario.profile_range(),
                 &ErrorModelParams::default(),
+                threads,
             );
-            st.prev_components = self.partition_scoped(&baseline);
-            st.prev_constraints =
-                Some(constraint_set(&associate::run(&baseline, &self.tiling).table));
-        }
-        let baseline = st.prev_constraints.as_ref().expect("just seeded");
-        let drift = constraint_drift(&raw_table, baseline);
+            let parts = self.partition_scoped(&baseline_stream);
+            let set = constraint_set(
+                &associate::run_par(&baseline_stream, &self.tiling, threads).table,
+            );
+            Some((parts, Arc::new(set)))
+        } else {
+            None
+        };
+
+        // snapshot under a brief lock: the baseline by `Arc` pointer, the
+        // previous solution and partition by value.  The sequential loop
+        // never mutated any of these mid-epoch, so decisions and solves
+        // made against the snapshot are byte-identical to its output.
+        let (prev_solution, baseline, prev_components) = {
+            let mut st = self.state.lock().unwrap();
+            if let Some((parts, set)) = seeded {
+                st.prev_components = parts;
+                st.prev_constraints = Some(set);
+            }
+            (
+                st.prev_solution.clone(),
+                Arc::clone(st.prev_constraints.as_ref().expect("seeded above")),
+                st.prev_components.clone(),
+            )
+        };
+        let drift = constraint_drift(&raw_table, &baseline);
         let comp_drift: Vec<f64> = comp_constraints
             .iter()
             .map(|idxs| {
@@ -425,14 +531,14 @@ impl EpochPlanner for Replanner<'_> {
             .collect();
         let migrated: Vec<bool> = comps
             .iter()
-            .map(|comp| component_migrated(&st.prev_components, comp))
+            .map(|comp| component_migrated(&prev_components, comp))
             .collect();
         // whether a component's cameras still hold any mask tiles — an
         // *empty* window component only needs a (trivial) re-solve when
         // there are stale tiles to clear; otherwise firing it would be a
         // pure no-op and would inflate the re-solve count
         let mut comp_has_tiles = vec![false; comps.len()];
-        for &t in &st.prev_solution.tiles {
+        for &t in &prev_solution.tiles {
             comp_has_tiles[comp_of_cam[self.tiling.camera_of(t)]] = true;
         }
         let fired: Vec<bool> = (0..comps.len())
@@ -463,9 +569,11 @@ impl EpochPlanner for Replanner<'_> {
                     spill_groups: 0,
                     n_constraints: comp_constraints[i].len(),
                     solver: "carried",
+                    seconds: 0.0,
+                    queue_wait: 0.0,
                 })
                 .collect();
-            st.records.push(ReplanRecord {
+            self.state.lock().unwrap().records.push(ReplanRecord {
                 epoch: k,
                 start_seg,
                 trigger_time,
@@ -484,7 +592,8 @@ impl EpochPlanner for Replanner<'_> {
             return Ok(prev.clone());
         }
 
-        // ---- fired path: full quality pipeline per fired component ----
+        // ---- fired path: full quality pipeline per fired component,
+        // fanned out over the shared worker pool ----
         let mut fired_cam = vec![false; n_cams];
         for (i, comp) in comps.iter().enumerate() {
             if fired[i] {
@@ -496,14 +605,71 @@ impl EpochPlanner for Replanner<'_> {
         // quiescent components carry their cameras' previous tiles
         // forward untouched (tiles are camera-owned, components are
         // camera-disjoint — the carry is exact)
-        let mut tiles: HashSet<GlobalTile> = st
-            .prev_solution
+        let mut tiles: HashSet<GlobalTile> = prev_solution
             .tiles
             .iter()
             .copied()
             .filter(|&t| !fired_cam[self.tiling.camera_of(t)])
             .collect();
         let frame = (self.tiling.frame_w as f64, self.tiling.frame_h as f64);
+
+        // one pool task per fired component.  The worker budget inside a
+        // component (its pair fitting) is split by pair count — the same
+        // weighting as the static plan's shard split — so a lone big
+        // component still saturates the pool.  `ordered_map` returns the
+        // solves in `fired_idx` order, so the merge below is a plain
+        // sequential fold in component order, byte-identical to the old
+        // in-loop solve at every thread count.
+        let fired_idx: Vec<usize> = (0..comps.len()).filter(|&i| fired[i]).collect();
+        let pair_count = |i: usize| comps[i].len() * comps[i].len().saturating_sub(1);
+        let total_pairs: usize = fired_idx.iter().map(|&i| pair_count(i)).sum();
+        let queued_at = Instant::now();
+        let solves = ordered_map(&fired_idx, threads, |&i| {
+            let queue_wait = queued_at.elapsed().as_secs_f64();
+            self.pool.track(queued_at, || {
+                let t_comp = Instant::now();
+                let comp = &comps[i];
+                let inner = (threads * pair_count(i) / total_pairs.max(1)).max(1);
+                // tandem filters over this component's substream only
+                // (intra-component pairs — identical to the fleet-wide
+                // filter restricted to these cameras), then association
+                // and the spilled, warm-started solve
+                let sub = shard::Shard { cameras: comp.clone() }.substream(&stream);
+                let filtered =
+                    filter::run_scoped(sub, self.sys, &self.method, inner, Some(comp), frame);
+                let assoc = associate::run(&filtered.stream, &self.tiling);
+                let sp = shard::spill(&assoc.table);
+                let warm = warm_decision(migrated[i], comp_drift[i]);
+                let seed = if warm { Some(&prev_solution) } else { None };
+                // A run that planned successfully offline must not die
+                // mid-flight because `--solver exact` meets an oversized
+                // window instance: degrade the component to the
+                // (never-failing) greedy solver and record it.
+                let (solution, solver, degraded) =
+                    match solve::solve_spilled(&assoc.table, self.opts.solver, seed, &sp) {
+                        Ok(s) => (s, self.opts.solver.name(), false),
+                        Err(_) => (
+                            solve::solve_spilled(&assoc.table, SolverKind::Greedy, seed, &sp)
+                                .expect("the greedy solver never fails"),
+                            SolverKind::Greedy.name(),
+                            true,
+                        ),
+                    };
+                ComponentSolve {
+                    tiles: solution.tiles,
+                    spill_groups: sp.groups.len(),
+                    warm,
+                    solver,
+                    degraded,
+                    seconds: t_comp.elapsed().as_secs_f64(),
+                    queue_wait,
+                }
+            })
+        });
+
+        // merge in deterministic component order (carried components
+        // interleave with fired ones exactly as the sequential loop did)
+        let mut solves = solves.into_iter();
         let mut components: Vec<ComponentRecord> = Vec::with_capacity(comps.len());
         let mut all_warm = true;
         let mut degraded = false;
@@ -518,58 +684,31 @@ impl EpochPlanner for Replanner<'_> {
                     spill_groups: 0,
                     n_constraints: comp_constraints[i].len(),
                     solver: "carried",
+                    seconds: 0.0,
+                    queue_wait: 0.0,
                 });
                 continue;
             }
-            // tandem filters over this component's substream only
-            // (intra-component pairs — identical to the fleet-wide
-            // filter restricted to these cameras), then association and
-            // the spilled, warm-started solve
-            let sub = shard::Shard { cameras: comp.clone() }.substream(&stream);
-            let filtered = filter::run_scoped(
-                sub,
-                self.sys,
-                &self.method,
-                self.opts.effective_threads(),
-                Some(comp),
-                frame,
-            );
-            let assoc = associate::run(&filtered.stream, &self.tiling);
-            let sp = shard::spill(&assoc.table);
-            let warm = warm_decision(migrated[i], comp_drift[i]);
-            let seed = if warm { Some(&st.prev_solution) } else { None };
-            // A run that planned successfully offline must not die
-            // mid-flight because `--solver exact` meets an oversized
-            // window instance: degrade the component to the
-            // (never-failing) greedy solver and record it.
-            let (solution, solver_name) =
-                match solve::solve_spilled(&assoc.table, self.opts.solver, seed, &sp) {
-                    Ok(s) => (s, self.opts.solver.name()),
-                    Err(_) => {
-                        degraded = true;
-                        (
-                            solve::solve_spilled(&assoc.table, SolverKind::Greedy, seed, &sp)
-                                .expect("the greedy solver never fails"),
-                            SolverKind::Greedy.name(),
-                        )
-                    }
-                };
-            all_warm &= warm;
-            tiles.extend(solution.tiles.iter().copied());
+            let s = solves.next().expect("one solve per fired component");
+            all_warm &= s.warm;
+            degraded |= s.degraded;
+            tiles.extend(s.tiles.iter().copied());
             components.push(ComponentRecord {
                 cameras: comp.clone(),
                 drift: comp_drift[i],
                 fired: true,
-                warm,
+                warm: s.warm,
                 migrated: migrated[i],
-                spill_groups: sp.groups.len(),
+                spill_groups: s.spill_groups,
                 n_constraints: comp_constraints[i].len(),
-                solver: solver_name,
+                solver: s.solver,
+                seconds: s.seconds,
+                queue_wait: s.queue_wait,
             });
         }
 
         let masks = RoiMasks::from_solution(&self.tiling, &tiles);
-        let churn = mask_churn(&st.prev_solution.tiles, &tiles);
+        let churn = mask_churn(&prev_solution.tiles, &tiles);
         let grouped = group::run(&masks, self.method.uses_merging());
         let use_roi: Vec<bool> = (0..n_cams)
             .map(|c| use_roi_path(&self.method, grouped.blocks[c].len(), self.n_infer_blocks))
@@ -583,20 +722,6 @@ impl EpochPlanner for Replanner<'_> {
         let (thresholds, rederived) =
             self.rederive_thresholds(prev, &grouped.groups, &cam_epoch, k, window);
 
-        // baseline update: fired components adopt their window
-        // constraints (and the new partition becomes the component-diff
-        // reference); quiescent components keep accumulating drift
-        let baseline = st.prev_constraints.as_mut().expect("seeded above");
-        baseline.retain(|c| first_camera(c, &self.tiling).map_or(true, |cam| !fired_cam[cam]));
-        for (i, idxs) in comp_constraints.iter().enumerate() {
-            if fired[i] {
-                for &ci in idxs {
-                    baseline.insert(raw_table.constraints[ci].clone());
-                }
-            }
-        }
-        st.prev_components = comps;
-
         let mask_tiles = masks.total_size();
         let epoch = Arc::new(PlanEpoch {
             groups: grouped.groups,
@@ -606,6 +731,25 @@ impl EpochPlanner for Replanner<'_> {
             thresholds,
             mask_tiles,
         });
+
+        // ---- commit phase, under the second brief lock: baseline
+        // update (fired components adopt their window constraints and
+        // the new partition becomes the component-diff reference;
+        // quiescent components keep accumulating drift), solution, and
+        // record.  The compute snapshot's `Arc` is dropped first so
+        // `Arc::make_mut` mutates the shared set in place.
+        drop(baseline);
+        let mut st = self.state.lock().unwrap();
+        let base = Arc::make_mut(st.prev_constraints.as_mut().expect("seeded above"));
+        base.retain(|c| baseline_keeps(c, &self.tiling, &fired_cam));
+        for (i, idxs) in comp_constraints.iter().enumerate() {
+            if fired[i] {
+                for &ci in idxs {
+                    base.insert(raw_table.constraints[ci].clone());
+                }
+            }
+        }
+        st.prev_components = comps;
         st.prev_solution = Solution { tiles, unsatisfiable: 0 };
         st.records.push(ReplanRecord {
             epoch: k,
@@ -625,6 +769,28 @@ impl EpochPlanner for Replanner<'_> {
         });
         Ok(epoch)
     }
+}
+
+/// One fired component's solve output, produced on a pool worker and
+/// merged sequentially in component order by the epoch's commit.
+struct ComponentSolve {
+    tiles: HashSet<GlobalTile>,
+    spill_groups: usize,
+    warm: bool,
+    solver: &'static str,
+    degraded: bool,
+    seconds: f64,
+    queue_wait: f64,
+}
+
+/// Whether the baseline keeps a constraint after the components over
+/// `fired_cam` re-solved: fired components' constraints are replaced
+/// wholesale by their window's.  Tile-less rows are dropped too — they
+/// route to no component, so the old `map_or(true, ..)` rule kept them
+/// forever; they can never be covered or drift, and only grew the
+/// baseline without bound.
+fn baseline_keeps(c: &Constraint, tiling: &Tiling, fired_cam: &[bool]) -> bool {
+    first_camera(c, tiling).is_some_and(|cam| !fired_cam[cam])
 }
 
 /// The global tile set of per-camera masks, as a warm-start seed.
@@ -832,6 +998,28 @@ mod tests {
         assert!(component_migrated(&prev, &[2, 3, 4]));
         // a camera never seen before is a migration too
         assert!(component_migrated(&[], &[0]));
+    }
+
+    #[test]
+    fn baseline_retention_drops_fired_and_tile_less_constraints() {
+        let tiling = Tiling::new(2, 320, 192, 16);
+        let cam0 = Constraint { regions: vec![vec![3]] };
+        let cam1 = Constraint { regions: vec![vec![300]] };
+        let fired_cam = vec![true, false];
+        // fired camera's constraints are replaced wholesale
+        assert!(!baseline_keeps(&cam0, &tiling, &fired_cam));
+        // quiescent camera's keep accumulating drift
+        assert!(baseline_keeps(&cam1, &tiling, &fired_cam));
+        // regression: tile-less rows used to survive every retain
+        // (`map_or(true, ..)`) and grow the baseline forever — they
+        // route to no component and must be dropped
+        for orphan in [
+            Constraint { regions: vec![] },
+            Constraint { regions: vec![vec![]] },
+        ] {
+            assert!(!baseline_keeps(&orphan, &tiling, &fired_cam));
+            assert!(!baseline_keeps(&orphan, &tiling, &[false, false]));
+        }
     }
 
     #[test]

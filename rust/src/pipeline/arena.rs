@@ -27,9 +27,14 @@ use crate::sim::render::Frame;
 #[derive(Debug, Default)]
 pub struct Arena {
     pixels: Mutex<Vec<Vec<f32>>>,
+    /// Server-side objectness-grid buffers ([`crate::pipeline::infer::Infer::infer_batch_into`]
+    /// outputs) — taken per merged batch, returned after decode.
+    grids: Mutex<Vec<Vec<f32>>>,
     frame_allocs: AtomicUsize,
     pixel_allocs: AtomicUsize,
     pixel_reuses: AtomicUsize,
+    grid_allocs: AtomicUsize,
+    grid_reuses: AtomicUsize,
 }
 
 /// Snapshot of the arena's allocation counters.
@@ -41,6 +46,10 @@ pub struct ArenaStats {
     pub pixel_allocs: usize,
     /// Detector-input vectors recycled from the free list.
     pub pixel_reuses: usize,
+    /// Fresh inference-grid vectors created on the server side.
+    pub grid_allocs: usize,
+    /// Inference-grid vectors recycled from the free list.
+    pub grid_reuses: usize,
 }
 
 impl Arena {
@@ -69,6 +78,27 @@ impl Arena {
         self.pixels.lock().expect("arena lock poisoned").push(buf);
     }
 
+    /// Take an inference-grid buffer from the free list (or a fresh empty
+    /// one).  The caller overwrites it completely (`infer_batch_into`).
+    pub fn take_grid(&self) -> Vec<f32> {
+        let recycled = self.grids.lock().expect("arena lock poisoned").pop();
+        match recycled {
+            Some(buf) => {
+                self.grid_reuses.fetch_add(1, Ordering::Relaxed);
+                buf
+            }
+            None => {
+                self.grid_allocs.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            }
+        }
+    }
+
+    /// Return a decoded grid buffer to the free list.
+    pub fn put_grid(&self, buf: Vec<f32>) {
+        self.grids.lock().expect("arena lock poisoned").push(buf);
+    }
+
     /// A worker-local frame recycler that counts its fresh allocations
     /// against this arena.
     pub fn frame_pool(&self) -> FramePool<'_> {
@@ -80,6 +110,8 @@ impl Arena {
             frame_allocs: self.frame_allocs.load(Ordering::Relaxed),
             pixel_allocs: self.pixel_allocs.load(Ordering::Relaxed),
             pixel_reuses: self.pixel_reuses.load(Ordering::Relaxed),
+            grid_allocs: self.grid_allocs.load(Ordering::Relaxed),
+            grid_reuses: self.grid_reuses.load(Ordering::Relaxed),
         }
     }
 }
@@ -121,6 +153,22 @@ mod tests {
         let s = arena.stats();
         assert_eq!(s.pixel_allocs, 1);
         assert_eq!(s.pixel_reuses, 1);
+    }
+
+    #[test]
+    fn grid_buffers_recycle() {
+        let arena = Arena::new();
+        let a = arena.take_grid();
+        let b = arena.take_grid();
+        assert_eq!(arena.stats().grid_allocs, 2);
+        arena.put_grid(a);
+        arena.put_grid(b);
+        let _c = arena.take_grid();
+        let s = arena.stats();
+        assert_eq!(s.grid_allocs, 2);
+        assert_eq!(s.grid_reuses, 1);
+        // grid and pixel free lists are independent
+        assert_eq!(s.pixel_allocs, 0);
     }
 
     #[test]

@@ -14,7 +14,7 @@ use anyhow::Result;
 
 use crate::pipeline::stage::CameraSegment;
 use crate::query;
-use crate::runtime::postproc::decode_objectness;
+use crate::runtime::postproc::decode_objectness_into;
 use crate::sim::Scenario;
 
 /// When the RoI covers at least this fraction of blocks, fall back to the
@@ -65,6 +65,39 @@ pub trait Infer: Sync {
         requests.iter().map(|r| self.infer(r.frame, r.blocks)).collect()
     }
 
+    /// Run the detector writing the grid into `out` (cleared and
+    /// overwritten), returning the measured inference seconds.  The
+    /// default forwards to [`Infer::infer`] and copies; allocation-free
+    /// backends override it to fill `out`'s recycled capacity directly.
+    fn infer_into(&self, frame: &[f32], blocks: Option<&[i32]>, out: &mut Vec<f32>) -> Result<f64> {
+        let (grid, secs) = self.infer(frame, blocks)?;
+        out.clear();
+        out.extend_from_slice(&grid);
+        Ok(secs)
+    }
+
+    /// Run a merged batch writing each request's grid into the matching
+    /// `grids` slot (the server stage passes recycled arena buffers).
+    /// The default forwards to [`Infer::infer_into`] per request;
+    /// backends with a real batch dimension override this.
+    fn infer_batch_into(
+        &self,
+        requests: &[InferRequest<'_>],
+        grids: &mut [Vec<f32>],
+    ) -> Result<Vec<f64>> {
+        anyhow::ensure!(
+            grids.len() == requests.len(),
+            "infer_batch_into got {} grids for {} requests",
+            grids.len(),
+            requests.len()
+        );
+        requests
+            .iter()
+            .zip(grids.iter_mut())
+            .map(|(r, g)| self.infer_into(r.frame, r.blocks, g))
+            .collect()
+    }
+
     /// Total detector blocks (for the dense-fallback policy).
     fn n_blocks(&self) -> usize {
         60
@@ -97,12 +130,31 @@ pub struct NativeInfer;
 
 impl Infer for NativeInfer {
     fn infer(&self, frame: &[f32], blocks: Option<&[i32]>) -> Result<(Vec<f32>, f64)> {
-        let t0 = Instant::now();
-        let grid = match blocks {
-            None => crate::runtime::native::detect_full(frame, 192, 320),
-            Some(b) => crate::runtime::native::detect_roi(frame, 192, 320, b, 32, 10),
-        };
-        Ok((grid, t0.elapsed().as_secs_f64()))
+        let mut out = Vec::new();
+        let secs = self.infer_into(frame, blocks, &mut out)?;
+        Ok((out, secs))
+    }
+
+    /// Allocation-free steady state: the detector's intermediates live in
+    /// a thread-local [`crate::runtime::native::DetectScratch`] and the
+    /// grid fills the caller's recycled buffer.
+    fn infer_into(&self, frame: &[f32], blocks: Option<&[i32]>, out: &mut Vec<f32>) -> Result<f64> {
+        thread_local! {
+            static SCRATCH: std::cell::RefCell<crate::runtime::native::DetectScratch> =
+                std::cell::RefCell::new(crate::runtime::native::DetectScratch::new());
+        }
+        SCRATCH.with(|s| {
+            let mut guard = s.borrow_mut();
+            let scratch = &mut *guard;
+            let t0 = Instant::now();
+            match blocks {
+                None => crate::runtime::native::detect_full_into(frame, 192, 320, scratch, out),
+                Some(b) => crate::runtime::native::detect_roi_into(
+                    frame, 192, 320, b, 32, 10, scratch, out,
+                ),
+            }
+            Ok(t0.elapsed().as_secs_f64())
+        })
     }
 }
 
@@ -147,6 +199,9 @@ pub struct BatchedInfer<'a> {
     pub objectness_threshold: f64,
     /// Absolute frame index of the evaluation window's first frame.
     pub eval_start: usize,
+    /// Buffer arena to recycle grid outputs through (`None` = allocate
+    /// per batch — tests and benches that don't thread an arena in).
+    pub arena: Option<&'a crate::pipeline::arena::Arena>,
 }
 
 impl InferStage for BatchedInfer<'_> {
@@ -179,31 +234,66 @@ impl InferStage for BatchedInfer<'_> {
                 });
             }
         }
-        let results = self.infer.infer_batch(&requests)?;
+        // grid outputs come from the arena's free list when one is
+        // installed, so the steady-state server loop allocates nothing
+        let mut grids: Vec<Vec<f32>> = match self.arena {
+            Some(a) => (0..requests.len()).map(|_| a.take_grid()).collect(),
+            None => vec![Vec::new(); requests.len()],
+        };
+        let times = self.infer.infer_batch_into(&requests, &mut grids)?;
         anyhow::ensure!(
-            results.len() == requests.len(),
-            "infer_batch returned {} results for {} requests",
-            results.len(),
+            times.len() == requests.len(),
+            "infer_batch_into returned {} results for {} requests",
+            times.len(),
             requests.len()
         );
-        let mut it = results.into_iter();
-        let mut out = Vec::with_capacity(segments.len());
-        for s in segments {
-            let mut frames = Vec::with_capacity(s.jobs.len());
-            for job in &s.jobs {
-                let (grid, secs) = it.next().expect("length checked above");
-                let dets = decode_objectness(&grid, 12, 20, 16, self.objectness_threshold);
-                let abs = self.eval_start + job.local;
-                let matched =
-                    query::match_detections(&dets, self.scenario.detections(s.cam, abs));
-                frames.push(InferOutcome {
-                    local: job.local,
-                    capture_time: job.capture_time,
-                    secs,
-                    matched,
-                });
+        // decode through thread-local reusable traversal buffers — the
+        // same allocation-free contract as the backend's scratch
+        thread_local! {
+            static DECODE: std::cell::RefCell<(
+                crate::runtime::postproc::DecodeScratch,
+                Vec<crate::runtime::postproc::Detection>,
+            )> = std::cell::RefCell::new((
+                crate::runtime::postproc::DecodeScratch::new(),
+                Vec::new(),
+            ));
+        }
+        let out = DECODE.with(|cell| {
+            let mut guard = cell.borrow_mut();
+            let (scratch, dets) = &mut *guard;
+            let mut idx = 0;
+            let mut out = Vec::with_capacity(segments.len());
+            for s in segments {
+                let mut frames = Vec::with_capacity(s.jobs.len());
+                for job in &s.jobs {
+                    decode_objectness_into(
+                        &grids[idx],
+                        12,
+                        20,
+                        16,
+                        self.objectness_threshold,
+                        scratch,
+                        dets,
+                    );
+                    let abs = self.eval_start + job.local;
+                    let matched =
+                        query::match_detections(dets, self.scenario.detections(s.cam, abs));
+                    frames.push(InferOutcome {
+                        local: job.local,
+                        capture_time: job.capture_time,
+                        secs: times[idx],
+                        matched,
+                    });
+                    idx += 1;
+                }
+                out.push(frames);
             }
-            out.push(frames);
+            out
+        });
+        if let Some(a) = self.arena {
+            for g in grids {
+                a.put_grid(g);
+            }
         }
         Ok(out)
     }
@@ -221,9 +311,17 @@ mod tests {
             Ok((vec![0.0; 12 * 20], 0.001))
         }
 
-        fn infer_batch(&self, requests: &[InferRequest<'_>]) -> Result<Vec<(Vec<f32>, f64)>> {
+        fn infer_batch_into(
+            &self,
+            requests: &[InferRequest<'_>],
+            grids: &mut [Vec<f32>],
+        ) -> Result<Vec<f64>> {
             self.0.lock().unwrap().push(requests.len());
-            requests.iter().map(|r| self.infer(r.frame, r.blocks)).collect()
+            requests
+                .iter()
+                .zip(grids.iter_mut())
+                .map(|(r, g)| self.infer_into(r.frame, r.blocks, g))
+                .collect()
         }
     }
 
@@ -235,6 +333,7 @@ mod tests {
         let cfg = Config::test_small();
         let sc = Scenario::build(&cfg.scenario);
         let backend = CountingInfer(std::sync::Mutex::new(Vec::new()));
+        let arena = crate::pipeline::arena::Arena::new();
         let blocks: Vec<Vec<i32>> = vec![Vec::new(); sc.cameras.len()];
         let use_roi = vec![false; sc.cameras.len()];
         let stage = BatchedInfer {
@@ -245,6 +344,7 @@ mod tests {
             schedule: None,
             objectness_threshold: 0.25,
             eval_start: sc.eval_range().start,
+            arena: Some(&arena),
         };
         let job = |local: usize| InferJob {
             local,
@@ -278,5 +378,12 @@ mod tests {
         // both segments' jobs were merged into a single batch call
         assert_eq!(*backend.0.lock().unwrap(), vec![3]);
         assert!((out[0][1].capture_time - 0.4).abs() < 1e-12);
+        // the batch's grid buffers came fresh from, and returned to, the
+        // arena: a second merged batch recycles instead of allocating
+        assert_eq!(arena.stats().grid_allocs, 3);
+        stage.infer_merged(&segs).unwrap();
+        let s = arena.stats();
+        assert_eq!(s.grid_allocs, 3, "second batch must reuse the free list");
+        assert_eq!(s.grid_reuses, 3);
     }
 }

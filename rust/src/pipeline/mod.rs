@@ -63,8 +63,8 @@ pub use infer::{
 pub use query::{CarryOverQuery, QueryStage};
 pub use replan::{EpochPlanner, PlanEpoch, PlanSchedule, ReplanPolicy, ReplanScope};
 pub use runner::{
-    run_pipeline, run_pipeline_with_replan, CameraStages, Parallelism, PipelineOptions,
-    PipelineOutput, ReplanContext,
+    run_pipeline, run_pipeline_in, run_pipeline_with_replan, CameraStages, Parallelism,
+    PipelineOptions, PipelineOutput, ReplanContext,
 };
 pub use stage::{
     CameraSegment, CaptureStage, EncodeStage, FilterStage, InferJob, SegmentLayout,

@@ -61,6 +61,11 @@ pub struct PipelineOptions {
     /// fleet, or (default) each co-occurrence component independently so
     /// only drifted components re-solve.
     pub replan_scope: ReplanScope,
+    /// Worker budget for one re-plan epoch's compute phase
+    /// (`--planner-threads`): the drift-signal profile and the fired
+    /// components fan out over this many shared pool workers.  `0`
+    /// (default) inherits the offline planner's `effective_threads`.
+    pub planner_threads: usize,
 }
 
 impl Default for PipelineOptions {
@@ -81,6 +86,7 @@ impl Default for PipelineOptions {
             offline: crate::offline::OfflineOptions::default(),
             replan: ReplanPolicy::Never,
             replan_scope: ReplanScope::default(),
+            planner_threads: 0,
         }
     }
 }
@@ -275,13 +281,27 @@ pub fn run_pipeline_with_replan(
     parallelism: Parallelism,
     replan: Option<ReplanContext<'_>>,
 ) -> Result<PipelineOutput> {
+    let arena = Arena::new();
+    run_pipeline_in(cams, infer, layout, parallelism, replan, &arena)
+}
+
+/// [`run_pipeline_with_replan`] against a caller-owned [`Arena`], so the
+/// server-side inference stage (which the caller builds around the same
+/// arena) can recycle its grid buffers through the run's free lists too.
+pub fn run_pipeline_in(
+    cams: Vec<CameraStages<'_>>,
+    infer: &dyn InferStage,
+    layout: &SegmentLayout,
+    parallelism: Parallelism,
+    replan: Option<ReplanContext<'_>>,
+    arena: &Arena,
+) -> Result<PipelineOutput> {
     let n_cams = cams.len();
     let mut frame_sets: Vec<Vec<Option<HashSet<u32>>>> =
         vec![vec![None; layout.n_frames]; n_cams];
     let mut segments: Vec<SegmentRecord> = Vec::new();
     let mut frames_reduced = 0usize;
     let schedule = replan.map(|ctx| ctx.schedule);
-    let arena = Arena::new();
 
     match parallelism {
         Parallelism::Sequential => {
@@ -301,7 +321,7 @@ pub fn run_pipeline_with_replan(
             let mut cams = cams;
             let mut first_err: Option<anyhow::Error> = None;
             for (ci, stages) in cams.iter_mut().enumerate() {
-                run_camera(ci, stages, layout, schedule, &arena, &mut |cs| {
+                run_camera(ci, stages, layout, schedule, arena, &mut |cs| {
                     match infer.infer_merged(std::slice::from_ref(&cs)) {
                         Ok(mut outcomes) => {
                             let outcome = outcomes.pop().expect("one segment in, one out");
@@ -311,7 +331,7 @@ pub fn run_pipeline_with_replan(
                                 &mut frame_sets,
                                 &mut segments,
                                 &mut frames_reduced,
-                                &arena,
+                                arena,
                             );
                             true
                         }
@@ -384,7 +404,7 @@ pub fn run_pipeline_with_replan(
                 // `rx` drops on an inference error and blocked senders
                 // unblock before the scope joins its workers.
                 let (tx, rx) = mpsc::sync_channel::<CameraSegment>(2 * n_cams.max(1));
-                let arena_ref = &arena;
+                let arena_ref = arena;
                 for bucket in buckets {
                     let tx = tx.clone();
                     scope.spawn(move || {
@@ -413,7 +433,7 @@ pub fn run_pipeline_with_replan(
                             &mut frame_sets,
                             &mut segments,
                             &mut frames_reduced,
-                            &arena,
+                            arena,
                         );
                     }
                 }

@@ -66,72 +66,108 @@ impl RawReid {
         range: std::ops::Range<usize>,
         params: &ErrorModelParams,
     ) -> ReidStream {
-        let rng = Rng::new(params.seed).fork(0x7265_6964);
+        Self::generate_par(scenario, range, params, 1)
+    }
+
+    /// [`RawReid::generate`] with each camera's records produced on up to
+    /// `threads` scoped workers ([`crate::util::parallel::ordered_map`]).
+    ///
+    /// Byte-identical to the sequential generation at every thread count:
+    /// every identity decision is a pure function of
+    /// `(seed, camera, chunk, vehicle)` — the memo only avoids re-rolling,
+    /// it never couples cameras — and the per-camera record vectors are
+    /// concatenated in camera order, exactly the order the sequential
+    /// camera-major loop appends in.
+    pub fn generate_par(
+        scenario: &Scenario,
+        range: std::ops::Range<usize>,
+        params: &ErrorModelParams,
+        threads: usize,
+    ) -> ReidStream {
         let n_cams = scenario.cameras.len();
         let max_true = scenario.world.vehicles.iter().map(|v| v.id).max().unwrap_or(0);
-        let mut records = Vec::new();
-        // id decision memo: one identity per (camera, chunk, vehicle)
-        let mut assigned: std::collections::HashMap<(usize, usize, u32), u32> =
-            std::collections::HashMap::new();
-
-        for cam in 0..n_cams {
-            for frame in range.clone() {
-                for det in scenario.detections(cam, frame) {
-                    if det.occluded {
-                        let mut r = rng.fork(hash3(cam, frame, det.vehicle_id));
-                        if r.chance(params.p_miss_occluded) {
-                            continue;
-                        }
-                    }
-                    // one decision per (vehicle, camera, chunk), made when
-                    // the chunk is first seen and memoized for coherence
-                    let chunk = frame / params.chunk_frames;
-                    let key = (cam, chunk, det.vehicle_id);
-                    let raw_id = *assigned.entry(key).or_insert_with(|| {
-                        let mut chunk_rng =
-                            Rng::new(params.seed).fork(hash3(cam, chunk, det.vehicle_id));
-                        let roll = chunk_rng.f64();
-                        if roll < params.p_fn {
-                            // identity break: deterministic fresh id
-                            fresh_id(max_true, cam, chunk, det.vehicle_id)
-                        } else if roll < params.p_fn + params.p_fp {
-                            // wrong match: steal another visible vehicle's
-                            // id.  Confusion is local — the ReID gallery a
-                            // detection can be mismatched against is the
-                            // traffic of its own intersection — so a fleet
-                            // scenario's wrong matches never fabricate a
-                            // cross-intersection co-occurrence edge (which
-                            // would spuriously fuse overlap components).
-                            let home = scenario.intersection_of_vehicle(det.vehicle_id);
-                            let others: Vec<u32> = scenario
-                                .unique_visible(frame)
-                                .into_iter()
-                                .filter(|&v| {
-                                    v != det.vehicle_id
-                                        && scenario.intersection_of_vehicle(v) == home
-                                })
-                                .collect();
-                            if others.is_empty() {
-                                det.vehicle_id
-                            } else {
-                                others[chunk_rng.below(others.len())]
-                            }
-                        } else {
-                            det.vehicle_id
-                        }
-                    });
-                    records.push(RawDetection {
-                        cam,
-                        frame: frame - range.start,
-                        bbox: det.bbox,
-                        raw_id,
-                        true_id: det.vehicle_id,
-                    });
-                }
-            }
+        let cams: Vec<usize> = (0..n_cams).collect();
+        let per_cam = crate::util::parallel::ordered_map(&cams, threads, |&cam| {
+            camera_records(scenario, cam, range.clone(), params, max_true)
+        });
+        let mut records = Vec::with_capacity(per_cam.iter().map(Vec::len).sum());
+        for v in per_cam {
+            records.extend(v);
         }
         ReidStream::new(n_cams, range.len(), records)
     }
+}
+
+/// One camera's raw records over the window — the sequential generation's
+/// inner loop, extracted so cameras can run on separate workers.
+fn camera_records(
+    scenario: &Scenario,
+    cam: usize,
+    range: std::ops::Range<usize>,
+    params: &ErrorModelParams,
+    max_true: u32,
+) -> Vec<RawDetection> {
+    let rng = Rng::new(params.seed).fork(0x7265_6964);
+    let mut records = Vec::new();
+    // id decision memo: one identity per (chunk, vehicle) of this camera
+    let mut assigned: std::collections::HashMap<(usize, u32), u32> =
+        std::collections::HashMap::new();
+
+    for frame in range.clone() {
+        for det in scenario.detections(cam, frame) {
+            if det.occluded {
+                let mut r = rng.fork(hash3(cam, frame, det.vehicle_id));
+                if r.chance(params.p_miss_occluded) {
+                    continue;
+                }
+            }
+            // one decision per (vehicle, camera, chunk), made when
+            // the chunk is first seen and memoized for coherence
+            let chunk = frame / params.chunk_frames;
+            let key = (chunk, det.vehicle_id);
+            let raw_id = *assigned.entry(key).or_insert_with(|| {
+                let mut chunk_rng =
+                    Rng::new(params.seed).fork(hash3(cam, chunk, det.vehicle_id));
+                let roll = chunk_rng.f64();
+                if roll < params.p_fn {
+                    // identity break: deterministic fresh id
+                    fresh_id(max_true, cam, chunk, det.vehicle_id)
+                } else if roll < params.p_fn + params.p_fp {
+                    // wrong match: steal another visible vehicle's
+                    // id.  Confusion is local — the ReID gallery a
+                    // detection can be mismatched against is the
+                    // traffic of its own intersection — so a fleet
+                    // scenario's wrong matches never fabricate a
+                    // cross-intersection co-occurrence edge (which
+                    // would spuriously fuse overlap components).
+                    let home = scenario.intersection_of_vehicle(det.vehicle_id);
+                    let others: Vec<u32> = scenario
+                        .unique_visible(frame)
+                        .into_iter()
+                        .filter(|&v| {
+                            v != det.vehicle_id
+                                && scenario.intersection_of_vehicle(v) == home
+                        })
+                        .collect();
+                    if others.is_empty() {
+                        det.vehicle_id
+                    } else {
+                        others[chunk_rng.below(others.len())]
+                    }
+                } else {
+                    det.vehicle_id
+                }
+            });
+            records.push(RawDetection {
+                cam,
+                frame: frame - range.start,
+                bbox: det.bbox,
+                raw_id,
+                true_id: det.vehicle_id,
+            });
+        }
+    }
+    records
 }
 
 fn hash3(a: usize, b: usize, c: u32) -> u64 {
@@ -182,6 +218,20 @@ mod tests {
         assert_eq!(a.len(), b.len());
         for (x, y) in a.all().iter().zip(b.all()) {
             assert_eq!(x.raw_id, y.raw_id);
+        }
+    }
+
+    #[test]
+    fn parallel_generation_is_byte_identical() {
+        let sc = scenario();
+        let params = ErrorModelParams::default();
+        let seq = RawReid::generate(&sc, 0..60, &params);
+        for threads in [2, 3, 8] {
+            let par = RawReid::generate_par(&sc, 0..60, &params, threads);
+            assert_eq!(seq.len(), par.len(), "threads={threads}");
+            for (x, y) in seq.all().iter().zip(par.all()) {
+                assert_eq!((x.cam, x.frame, x.raw_id), (y.cam, y.frame, y.raw_id));
+            }
         }
     }
 

@@ -9,14 +9,56 @@
 //!   would dominate (never used for reported throughput numbers — those
 //!   always come from the real executables).
 
+/// Reusable intermediate buffers for the native detector — one per
+/// thread lets the steady-state inference path run allocation-free
+/// (`rust/tests/hotpath_alloc.rs`); the buffers grow to the frame's
+/// working-set size on first use and are fully overwritten per call.
+#[derive(Debug, Default)]
+pub struct DetectScratch {
+    opp: Vec<f32>,
+    sum1: Vec<f32>,
+    blur: Vec<f32>,
+    dense: Vec<f32>,
+}
+
+impl DetectScratch {
+    pub fn new() -> DetectScratch {
+        DetectScratch::default()
+    }
+}
+
+/// Clear and zero-fill a scratch vector to `n` without shrinking its
+/// capacity — allocation-free once warm.
+fn reset(buf: &mut Vec<f32>, n: usize) {
+    buf.clear();
+    buf.resize(n, 0.0);
+}
+
 /// Full-frame native detector: HWC f32 frame → (cells_h × cells_w) grid.
+///
+/// Allocating convenience wrapper over [`detect_full_into`].
+pub fn detect_full(frame: &[f32], h: usize, w: usize) -> Vec<f32> {
+    let mut scratch = DetectScratch::default();
+    let mut out = Vec::new();
+    detect_full_into(frame, h, w, &mut scratch, &mut out);
+    out
+}
+
+/// Full-frame native detector writing the grid into `out` (cleared and
+/// overwritten), with every intermediate in `scratch`.
 ///
 /// Pipeline (identical to model.py's analytic weights):
 ///   pad 3 → conv1 = six color-opponency half-differences (center tap)
 ///         → conv2 = per-channel 3×3 box blur
 ///         → conv3 = relu(1.5 · Σ opponency − 0.15) (center tap)
 ///         → head = channel 0 → 16×16 mean pool.
-pub fn detect_full(frame: &[f32], h: usize, w: usize) -> Vec<f32> {
+pub fn detect_full_into(
+    frame: &[f32],
+    h: usize,
+    w: usize,
+    scratch: &mut DetectScratch,
+    out: &mut Vec<f32>,
+) {
     assert_eq!(frame.len(), h * w * 3);
     // padded geometry: x is (h+6, w+6), conv1 out (h+4, w+4),
     // conv2 out (h+2, w+2), conv3 out (h, w)
@@ -34,7 +76,8 @@ pub fn detect_full(frame: &[f32], h: usize, w: usize) -> Vec<f32> {
     // input(y+1, x+1)
     let c1w = w + 4;
     let c1h = h + 4;
-    let mut opp = vec![0.0f32; c1h * c1w * 6];
+    let opp = &mut scratch.opp;
+    reset(opp, c1h * c1w * 6);
     for y in 0..c1h {
         for x in 0..c1w {
             let r = px(y + 1, x + 1, 0);
@@ -51,13 +94,15 @@ pub fn detect_full(frame: &[f32], h: usize, w: usize) -> Vec<f32> {
     }
     // conv2: per-channel box blur, VALID -> (h+2, w+2); we only need the
     // channel *sum* downstream, so blur the sum (linearity).
-    let mut sum1 = vec![0.0f32; c1h * c1w];
+    let sum1 = &mut scratch.sum1;
+    reset(sum1, c1h * c1w);
     for i in 0..c1h * c1w {
         sum1[i] = opp[i * 6..i * 6 + 6].iter().sum();
     }
     let c2w = w + 2;
     let c2h = h + 2;
-    let mut blur = vec![0.0f32; c2h * c2w];
+    let blur = &mut scratch.blur;
+    reset(blur, c2h * c2w);
     for y in 0..c2h {
         for x in 0..c2w {
             let mut acc = 0.0;
@@ -73,7 +118,7 @@ pub fn detect_full(frame: &[f32], h: usize, w: usize) -> Vec<f32> {
     // then 16x16 mean pool
     let cells_h = h / 16;
     let cells_w = w / 16;
-    let mut grid = vec![0.0f32; cells_h * cells_w];
+    reset(out, cells_h * cells_w);
     for cy in 0..cells_h {
         for cx in 0..cells_w {
             let mut acc = 0.0;
@@ -85,15 +130,16 @@ pub fn detect_full(frame: &[f32], h: usize, w: usize) -> Vec<f32> {
                     acc += v.max(0.0);
                 }
             }
-            grid[cy * cells_w + cx] = acc / 256.0;
+            out[cy * cells_w + cx] = acc / 256.0;
         }
     }
-    grid
 }
 
 /// RoI-restricted native detector: the dense grid with non-active blocks
 /// zeroed (equivalent to the HLO RoI variant by the block-locality of the
 /// conv stack — validated in tests).
+///
+/// Allocating convenience wrapper over [`detect_roi_into`].
 pub fn detect_roi(
     frame: &[f32],
     h: usize,
@@ -102,11 +148,33 @@ pub fn detect_roi(
     block_px: usize,
     grid_bw: usize,
 ) -> Vec<f32> {
-    let dense = detect_full(frame, h, w);
+    let mut scratch = DetectScratch::default();
+    let mut out = Vec::new();
+    detect_roi_into(frame, h, w, blocks, block_px, grid_bw, &mut scratch, &mut out);
+    out
+}
+
+/// [`detect_roi`] writing into `out` with every intermediate — including
+/// the dense grid the RoI restriction copies from — in `scratch`.
+#[allow(clippy::too_many_arguments)]
+pub fn detect_roi_into(
+    frame: &[f32],
+    h: usize,
+    w: usize,
+    blocks: &[i32],
+    block_px: usize,
+    grid_bw: usize,
+    scratch: &mut DetectScratch,
+    out: &mut Vec<f32>,
+) {
+    // the dense grid lives in the scratch (taken out around the inner
+    // call so `scratch` and the destination never alias)
+    let mut dense = std::mem::take(&mut scratch.dense);
+    detect_full_into(frame, h, w, scratch, &mut dense);
     let cells_w = w / 16;
     let cells_h = h / 16;
     let cpb = block_px / 16;
-    let mut out = vec![0.0f32; dense.len()];
+    reset(out, dense.len());
     for &b in blocks {
         if b < 0 {
             continue;
@@ -122,7 +190,7 @@ pub fn detect_roi(
             }
         }
     }
-    out
+    scratch.dense = dense;
 }
 
 #[cfg(test)]
@@ -189,5 +257,31 @@ mod tests {
     fn black_frame_is_silent() {
         let grid = detect_full(&gray_frame(192, 320, 0.0), 192, 320);
         assert!(grid.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn into_variants_match_allocating_api_across_reuses() {
+        let (h, w) = (192, 320);
+        let mut frame = gray_frame(h, w, 0.45);
+        for y in 64..96 {
+            for x in 128..176 {
+                let i = (y * w + x) * 3;
+                frame[i] = 0.85;
+                frame[i + 1] = 0.15;
+                frame[i + 2] = 0.12;
+            }
+        }
+        let dense = detect_full(&frame, h, w);
+        let roi = detect_roi(&frame, h, w, &[0, 14], 32, 10);
+        let mut scratch = DetectScratch::new();
+        let mut out = Vec::new();
+        // repeated calls through one scratch must keep matching (stale
+        // buffer contents must never leak into the next grid)
+        for _ in 0..2 {
+            detect_full_into(&frame, h, w, &mut scratch, &mut out);
+            assert_eq!(out, dense);
+            detect_roi_into(&frame, h, w, &[0, 14], 32, 10, &mut scratch, &mut out);
+            assert_eq!(out, roi);
+        }
     }
 }

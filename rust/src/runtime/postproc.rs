@@ -15,8 +15,26 @@ pub struct Detection {
     pub score: f64,
 }
 
+/// Reusable traversal buffers for [`decode_objectness_into`] — one per
+/// thread lets the server's steady-state decode run allocation-free;
+/// the buffers grow to the grid size on first use.
+#[derive(Debug, Default)]
+pub struct DecodeScratch {
+    active: Vec<bool>,
+    visited: Vec<bool>,
+    stack: Vec<usize>,
+}
+
+impl DecodeScratch {
+    pub fn new() -> DecodeScratch {
+        DecodeScratch::default()
+    }
+}
+
 /// Decode an objectness grid (`cells_h × cells_w`, row-major, cell size
 /// `cell_px`) into detections.
+///
+/// Allocating convenience wrapper over [`decode_objectness_into`].
 pub fn decode_objectness(
     grid: &[f32],
     cells_h: usize,
@@ -24,16 +42,39 @@ pub fn decode_objectness(
     cell_px: usize,
     threshold: f64,
 ) -> Vec<Detection> {
-    assert_eq!(grid.len(), cells_h * cells_w);
-    let active: Vec<bool> = grid.iter().map(|&v| v as f64 > threshold).collect();
-    let mut visited = vec![false; grid.len()];
+    let mut scratch = DecodeScratch::default();
     let mut out = Vec::new();
+    decode_objectness_into(grid, cells_h, cells_w, cell_px, threshold, &mut scratch, &mut out);
+    out
+}
+
+/// [`decode_objectness`] writing into `out` (cleared and overwritten)
+/// with the component traversal's buffers in `scratch`.
+pub fn decode_objectness_into(
+    grid: &[f32],
+    cells_h: usize,
+    cells_w: usize,
+    cell_px: usize,
+    threshold: f64,
+    scratch: &mut DecodeScratch,
+    out: &mut Vec<Detection>,
+) {
+    assert_eq!(grid.len(), cells_h * cells_w);
+    out.clear();
+    let active = &mut scratch.active;
+    active.clear();
+    active.extend(grid.iter().map(|&v| v as f64 > threshold));
+    let visited = &mut scratch.visited;
+    visited.clear();
+    visited.resize(grid.len(), false);
+    let stack = &mut scratch.stack;
     for start in 0..grid.len() {
         if !active[start] || visited[start] {
             continue;
         }
         // BFS over the component
-        let mut stack = vec![start];
+        stack.clear();
+        stack.push(start);
         visited[start] = true;
         let (mut min_x, mut max_x) = (cells_w, 0usize);
         let (mut min_y, mut max_y) = (cells_h, 0usize);
@@ -74,7 +115,6 @@ pub fn decode_objectness(
             score: peak,
         });
     }
-    out
 }
 
 #[cfg(test)]
@@ -117,6 +157,23 @@ mod tests {
         let g = grid_with(&[(1, 1, 0.5), (2, 2, 0.5)], 12, 20);
         let dets = decode_objectness(&g, 12, 20, 16, 0.25);
         assert_eq!(dets.len(), 2, "4-connectivity must not merge diagonals");
+    }
+
+    #[test]
+    fn into_variant_matches_allocating_api_across_reuses() {
+        let a = grid_with(&[(2, 3, 0.9), (2, 4, 0.8), (3, 3, 0.7)], 12, 20);
+        let b = grid_with(&[(0, 0, 0.5), (11, 19, 0.6)], 12, 20);
+        let mut scratch = DecodeScratch::new();
+        let mut dets = Vec::new();
+        // alternating grids through one scratch: stale active/visited
+        // state must never leak between decodes
+        for _ in 0..2 {
+            decode_objectness_into(&a, 12, 20, 16, 0.25, &mut scratch, &mut dets);
+            assert_eq!(dets.len(), 1);
+            assert_eq!(dets[0].bbox, Rect::new(48.0, 32.0, 32.0, 32.0));
+            decode_objectness_into(&b, 12, 20, 16, 0.25, &mut scratch, &mut dets);
+            assert_eq!(dets.len(), 2);
+        }
     }
 
     #[test]

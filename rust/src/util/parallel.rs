@@ -5,6 +5,9 @@
 //! pipeline, DESIGN.md §4; used by the offline planner's pair fitting,
 //! DESIGN.md §5).
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Instant;
+
 /// Map `f` over `items` on up to `threads` scoped worker threads.
 ///
 /// Items are strided over the workers (worker `w` takes items `w`,
@@ -47,6 +50,60 @@ where
     slots.into_iter().map(|s| s.expect("every item mapped exactly once")).collect()
 }
 
+/// Concurrency gauge for a shared worker pool: counts tasks, tracks the
+/// high-water mark of simultaneously running tasks, and accumulates
+/// queue-wait (time between a task being enqueued and starting to run).
+///
+/// The counters are relaxed atomics — diagnostics whose exact values
+/// depend on scheduling, so consumers surface them beside (never inside)
+/// byte-compared output, the same contract as the buffer-arena counters.
+#[derive(Debug, Default)]
+pub struct PoolGauge {
+    tasks: AtomicUsize,
+    active: AtomicUsize,
+    max_concurrent: AtomicUsize,
+    queue_wait_ns: AtomicU64,
+}
+
+/// Snapshot of a [`PoolGauge`]'s counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolStats {
+    /// Tasks run through the pool.
+    pub tasks: usize,
+    /// High-water mark of tasks running simultaneously.
+    pub max_concurrent: usize,
+    /// Total seconds tasks spent waiting between enqueue and start.
+    pub queue_wait_secs: f64,
+}
+
+impl PoolGauge {
+    pub fn new() -> PoolGauge {
+        PoolGauge::default()
+    }
+
+    /// Run `f` as one tracked task: `queued_at` is when the task was
+    /// handed to the pool, so `now - queued_at` at entry is its queue
+    /// wait.  Returns `f`'s result unchanged.
+    pub fn track<R>(&self, queued_at: Instant, f: impl FnOnce() -> R) -> R {
+        let wait = queued_at.elapsed().as_nanos() as u64;
+        self.queue_wait_ns.fetch_add(wait, Ordering::Relaxed);
+        let running = self.active.fetch_add(1, Ordering::Relaxed) + 1;
+        self.max_concurrent.fetch_max(running, Ordering::Relaxed);
+        let out = f();
+        self.active.fetch_sub(1, Ordering::Relaxed);
+        self.tasks.fetch_add(1, Ordering::Relaxed);
+        out
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            tasks: self.tasks.load(Ordering::Relaxed),
+            max_concurrent: self.max_concurrent.load(Ordering::Relaxed),
+            queue_wait_secs: self.queue_wait_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -73,5 +130,26 @@ mod tests {
         let seq = ordered_map(&items, 1, |&x| x.wrapping_mul(x) ^ 0xABCD);
         let par = ordered_map(&items, 7, |&x| x.wrapping_mul(x) ^ 0xABCD);
         assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn gauge_counts_tasks_and_high_water_mark() {
+        let gauge = PoolGauge::new();
+        let queued = Instant::now();
+        let items: Vec<usize> = (0..16).collect();
+        let out = ordered_map(&items, 4, |&i| gauge.track(queued, || i * 2));
+        assert_eq!(out, (0..16).map(|i| i * 2).collect::<Vec<_>>());
+        let s = gauge.stats();
+        assert_eq!(s.tasks, 16);
+        assert!(s.max_concurrent >= 1 && s.max_concurrent <= 4);
+        assert!(s.queue_wait_secs >= 0.0);
+    }
+
+    #[test]
+    fn gauge_track_passes_results_through() {
+        let gauge = PoolGauge::new();
+        assert_eq!(gauge.track(Instant::now(), || 41 + 1), 42);
+        assert_eq!(gauge.stats().tasks, 1);
+        assert_eq!(gauge.stats().max_concurrent, 1);
     }
 }

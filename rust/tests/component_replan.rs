@@ -276,3 +276,55 @@ fn component_scope_is_byte_identical_on_a_disjoint_fleet() {
         );
     }
 }
+
+/// Each epoch's compute phase fans fired components out over the shared
+/// planner pool; the report must stay byte-identical across pool sizes
+/// on both the drifted-intersection fleet and the bridge-fused fleet
+/// (whose single giant component exercises the inner-thread split).
+#[test]
+fn planner_pool_is_byte_identical_across_thread_counts() {
+    let mut bridged = fleet_config(None);
+    bridged.scenario.bridge_cameras = true;
+    bridged.scenario.validate().unwrap();
+    for cfg in [fleet_config(Some(1)), bridged] {
+        let scenario = Scenario::build(&cfg.scenario);
+        let json_of = |threads: usize| -> String {
+            let pipe = PipelineOptions {
+                planner_threads: threads,
+                ..opts(Parallelism::PerCamera, ReplanScope::Component)
+            };
+            let (mut r, _) = run_method_with(
+                &scenario,
+                &cfg.system,
+                &FixedCostInfer,
+                &Method::CrossRoi,
+                None,
+                &pipe,
+            )
+            .unwrap();
+            // the pool counters and grid recycling are schedule-dependent
+            // diagnostics — asserted here before zero_wall_clock strips
+            // them from the byte-compared JSON
+            assert!(r.planner_epochs_computed > 0, "re-plan epochs must have computed");
+            assert!(r.replan_count > 0, "Every(2) must fire component solves");
+            assert_eq!(r.planner_components_solved, r.replan_count);
+            assert!(r.planner_max_concurrent >= 1);
+            assert!(
+                r.arena_grid_reuses > 0,
+                "server-side grid buffers must recycle: {} allocs, {} reuses",
+                r.arena_grid_allocs,
+                r.arena_grid_reuses
+            );
+            r.zero_wall_clock();
+            r.to_json().to_string_pretty(2)
+        };
+        let reference = json_of(1);
+        for threads in [2, 8] {
+            assert_eq!(
+                reference,
+                json_of(threads),
+                "--planner-threads {threads} diverged from the single-threaded re-plan"
+            );
+        }
+    }
+}

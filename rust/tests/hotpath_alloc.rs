@@ -1,8 +1,9 @@
 //! Steady-state allocation audit for the per-frame hot path (DESIGN.md
 //! §9): after warm-up, render → Reducto filter → masked convert → encode
-//! must perform ZERO heap allocations per frame.  A counting global
-//! allocator wraps the system allocator; this file holds exactly one
-//! test so no concurrent test can pollute the counter.
+//! → RoI inference → objectness decode must perform ZERO heap
+//! allocations per frame.  A counting global allocator wraps the system
+//! allocator; this file holds exactly one test so no concurrent test can
+//! pollute the counter.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -10,8 +11,10 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use crossroi::codec::RegionStream;
 use crossroi::config::Config;
 use crossroi::pipeline::{FilterStage, ReductoFilterStage};
+use crossroi::runtime::native::{detect_roi_into, DetectScratch};
+use crossroi::runtime::postproc::{decode_objectness_into, DecodeScratch, Detection};
 use crossroi::sim::render::Frame;
-use crossroi::sim::Scenario;
+use crossroi::sim::{Scenario, FRAME_H, FRAME_W};
 use crossroi::util::geometry::IRect;
 
 static ALLOCATIONS: AtomicUsize = AtomicUsize::new(0);
@@ -69,22 +72,68 @@ fn steady_state_frame_loop_is_allocation_free() {
     let mut frame = Frame::new(1, 1);
     let mut pixels: Vec<f32> = Vec::new();
 
-    let mut step = |i: usize, frame: &mut Frame, pixels: &mut Vec<f32>| -> bool {
+    // the server side of the path: RoI-restricted native inference into a
+    // reused grid, then objectness decode into reused traversal buffers —
+    // the same `_into` surfaces `BatchedInfer` recycles through the arena
+    // and its thread-local scratch
+    let blocks: [i32; 3] = [0, 11, 25];
+    let mut det_scratch = DetectScratch::new();
+    let mut grid: Vec<f32> = Vec::new();
+    let mut dec_scratch = DecodeScratch::new();
+    // 3 active 32px blocks expose at most 12 grid cells, so 16 bounds
+    // the detection count whatever the scene does per frame
+    let mut dets: Vec<Detection> = Vec::with_capacity(16);
+
+    let mut step = |i: usize,
+                    frame: &mut Frame,
+                    pixels: &mut Vec<f32>,
+                    det_scratch: &mut DetectScratch,
+                    grid: &mut Vec<f32>,
+                    dec_scratch: &mut DecodeScratch,
+                    dets: &mut Vec<Detection>|
+     -> bool {
         renderer.render_into(0, i, frame);
         let kept = filter.keep(frame, i == 0);
         frame.masked_f32_into(&mask, pixels);
         stream.encode_frame(frame);
+        detect_roi_into(
+            pixels,
+            FRAME_H as usize,
+            FRAME_W as usize,
+            &blocks,
+            32,
+            10,
+            det_scratch,
+            grid,
+        );
+        decode_objectness_into(grid, 12, 20, 16, 0.25, dec_scratch, dets);
         kept
     };
 
     for i in 0..WARM_UP_FRAMES {
-        step(i, &mut frame, &mut pixels);
+        step(
+            i,
+            &mut frame,
+            &mut pixels,
+            &mut det_scratch,
+            &mut grid,
+            &mut dec_scratch,
+            &mut dets,
+        );
     }
 
     let before = ALLOCATIONS.load(Ordering::Relaxed);
     let mut kept_frames = 0usize;
     for i in WARM_UP_FRAMES..WARM_UP_FRAMES + 10 {
-        if step(i, &mut frame, &mut pixels) {
+        if step(
+            i,
+            &mut frame,
+            &mut pixels,
+            &mut det_scratch,
+            &mut grid,
+            &mut dec_scratch,
+            &mut dets,
+        ) {
             kept_frames += 1;
         }
     }
