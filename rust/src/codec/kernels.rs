@@ -146,14 +146,21 @@ pub mod avx2 {
     /// `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))` — the scalar SAD reference
     /// ([`crate::codec::motion::sad_scalar`]) sums its eight lane
     /// accumulators in exactly this order.
+    ///
+    /// # Safety
+    /// Caller must guarantee the host supports AVX2.
     #[inline]
     unsafe fn hsum256(v: __m256) -> f32 {
-        let lo = _mm256_castps256_ps128(v);
-        let hi = _mm256_extractf128_ps::<1>(v);
-        let s = _mm_add_ps(lo, hi); // [l0+l4, l1+l5, l2+l6, l3+l7]
-        let t = _mm_add_ps(s, _mm_movehl_ps(s, s)); // [s0+s2, s1+s3, ..]
-        let u = _mm_add_ss(t, _mm_shuffle_ps::<0x55>(t, t)); // t0 + t1
-        _mm_cvtss_f32(u)
+        // SAFETY: register-only AVX/SSE intrinsics; the caller's contract
+        // (AVX2 host) covers the required CPU features.
+        unsafe {
+            let lo = _mm256_castps256_ps128(v);
+            let hi = _mm256_extractf128_ps::<1>(v);
+            let s = _mm_add_ps(lo, hi); // [l0+l4, l1+l5, l2+l6, l3+l7]
+            let t = _mm_add_ps(s, _mm_movehl_ps(s, s)); // [s0+s2, s1+s3, ..]
+            let u = _mm_add_ss(t, _mm_shuffle_ps::<0x55>(t, t)); // t0 + t1
+            _mm_cvtss_f32(u)
+        }
     }
 
     /// Forward 8×8 DCT, rows then columns, one `__m256` per output row.
@@ -169,27 +176,32 @@ pub mod avx2 {
         basis: &[[f32; 8]; 8],
         basis_t: &[[f32; 8]; 8],
     ) {
-        let mut tmp = [0.0f32; 64];
-        // rows: tmp[y][k] = Σ_x basis[k][x] * block[y][x]; lane k reads
-        // the transposed basis row basis_t[x][k] = basis[k][x]
-        for y in 0..8 {
-            let mut acc = _mm256_setzero_ps();
-            for x in 0..8 {
-                let v = _mm256_set1_ps(block[y * 8 + x]);
-                let row = _mm256_loadu_ps(basis_t[x].as_ptr());
-                acc = _mm256_add_ps(acc, _mm256_mul_ps(row, v));
-            }
-            _mm256_storeu_ps(tmp.as_mut_ptr().add(y * 8), acc);
-        }
-        // cols: block[k][x] = Σ_y basis[k][y] * tmp[y][x]
-        for k in 0..8 {
-            let mut acc = _mm256_setzero_ps();
+        // SAFETY: all loads/stores stay inside the fixed-size `[f32; 64]`
+        // / `[[f32; 8]; 8]` borrows (offsets ≤ 56 + 8 lanes); AVX2 is the
+        // caller's contract.
+        unsafe {
+            let mut tmp = [0.0f32; 64];
+            // rows: tmp[y][k] = Σ_x basis[k][x] * block[y][x]; lane k reads
+            // the transposed basis row basis_t[x][k] = basis[k][x]
             for y in 0..8 {
-                let v = _mm256_set1_ps(basis[k][y]);
-                let row = _mm256_loadu_ps(tmp.as_ptr().add(y * 8));
-                acc = _mm256_add_ps(acc, _mm256_mul_ps(row, v));
+                let mut acc = _mm256_setzero_ps();
+                for x in 0..8 {
+                    let v = _mm256_set1_ps(block[y * 8 + x]);
+                    let row = _mm256_loadu_ps(basis_t[x].as_ptr());
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(row, v));
+                }
+                _mm256_storeu_ps(tmp.as_mut_ptr().add(y * 8), acc);
             }
-            _mm256_storeu_ps(block.as_mut_ptr().add(k * 8), acc);
+            // cols: block[k][x] = Σ_y basis[k][y] * tmp[y][x]
+            for k in 0..8 {
+                let mut acc = _mm256_setzero_ps();
+                for y in 0..8 {
+                    let v = _mm256_set1_ps(basis[k][y]);
+                    let row = _mm256_loadu_ps(tmp.as_ptr().add(y * 8));
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(row, v));
+                }
+                _mm256_storeu_ps(block.as_mut_ptr().add(k * 8), acc);
+            }
         }
     }
 
@@ -200,27 +212,31 @@ pub mod avx2 {
     /// Caller must guarantee the host supports AVX2.
     #[target_feature(enable = "avx2")]
     pub unsafe fn dct_inverse(block: &mut [f32; 64], basis: &[[f32; 8]; 8]) {
-        let mut tmp = [0.0f32; 64];
-        // cols: tmp[y][x] = Σ_k basis[k][y] * block[k][x]
-        for y in 0..8 {
-            let mut acc = _mm256_setzero_ps();
-            for k in 0..8 {
-                let v = _mm256_set1_ps(basis[k][y]);
-                let row = _mm256_loadu_ps(block.as_ptr().add(k * 8));
-                acc = _mm256_add_ps(acc, _mm256_mul_ps(row, v));
+        // SAFETY: all loads/stores stay inside the fixed-size `[f32; 64]`
+        // / `[[f32; 8]; 8]` borrows; AVX2 is the caller's contract.
+        unsafe {
+            let mut tmp = [0.0f32; 64];
+            // cols: tmp[y][x] = Σ_k basis[k][y] * block[k][x]
+            for y in 0..8 {
+                let mut acc = _mm256_setzero_ps();
+                for k in 0..8 {
+                    let v = _mm256_set1_ps(basis[k][y]);
+                    let row = _mm256_loadu_ps(block.as_ptr().add(k * 8));
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(row, v));
+                }
+                _mm256_storeu_ps(tmp.as_mut_ptr().add(y * 8), acc);
             }
-            _mm256_storeu_ps(tmp.as_mut_ptr().add(y * 8), acc);
-        }
-        // rows: block[y][x] = Σ_k basis[k][x] * tmp[y][k]; lane x reads
-        // basis[k] directly (mul is commutative bit-for-bit)
-        for y in 0..8 {
-            let mut acc = _mm256_setzero_ps();
-            for k in 0..8 {
-                let v = _mm256_set1_ps(tmp[y * 8 + k]);
-                let row = _mm256_loadu_ps(basis[k].as_ptr());
-                acc = _mm256_add_ps(acc, _mm256_mul_ps(row, v));
+            // rows: block[y][x] = Σ_k basis[k][x] * tmp[y][k]; lane x reads
+            // basis[k] directly (mul is commutative bit-for-bit)
+            for y in 0..8 {
+                let mut acc = _mm256_setzero_ps();
+                for k in 0..8 {
+                    let v = _mm256_set1_ps(tmp[y * 8 + k]);
+                    let row = _mm256_loadu_ps(basis[k].as_ptr());
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(row, v));
+                }
+                _mm256_storeu_ps(block.as_mut_ptr().add(y * 8), acc);
             }
-            _mm256_storeu_ps(block.as_mut_ptr().add(y * 8), acc);
         }
     }
 
@@ -240,26 +256,30 @@ pub mod avx2 {
         qp: f32,
         out: &mut [i32; 64],
     ) {
-        let qpv = _mm256_set1_ps(qp);
-        let sign = _mm256_set1_ps(-0.0);
-        let half = _mm256_set1_ps(0.5);
-        let one = _mm256_set1_ps(1.0);
-        for i in 0..8 {
-            let c = _mm256_loadu_ps(coeffs.as_ptr().add(i * 8));
-            let w = _mm256_loadu_ps(qweight.as_ptr().add(i * 8));
-            let step = _mm256_mul_ps(w, qpv);
-            let q = _mm256_div_ps(c, step);
-            // trunc via the i32 round trip (exact: |q| << 2^31 here)
-            let t = _mm256_cvtepi32_ps(_mm256_cvttps_epi32(q));
-            let f = _mm256_sub_ps(q, t); // exact (Sterbenz)
-            let af = _mm256_andnot_ps(sign, f);
-            let bump = _mm256_cmp_ps::<_CMP_GE_OQ>(af, half);
-            let signed_one = _mm256_or_ps(_mm256_and_ps(q, sign), one);
-            let r = _mm256_add_ps(t, _mm256_and_ps(bump, signed_one));
-            _mm256_storeu_si256(
-                out.as_mut_ptr().add(i * 8) as *mut __m256i,
-                _mm256_cvttps_epi32(r),
-            );
+        // SAFETY: loads/stores cover exactly the 64-element borrows in
+        // eight 8-lane steps; AVX2 is the caller's contract.
+        unsafe {
+            let qpv = _mm256_set1_ps(qp);
+            let sign = _mm256_set1_ps(-0.0);
+            let half = _mm256_set1_ps(0.5);
+            let one = _mm256_set1_ps(1.0);
+            for i in 0..8 {
+                let c = _mm256_loadu_ps(coeffs.as_ptr().add(i * 8));
+                let w = _mm256_loadu_ps(qweight.as_ptr().add(i * 8));
+                let step = _mm256_mul_ps(w, qpv);
+                let q = _mm256_div_ps(c, step);
+                // trunc via the i32 round trip (exact: |q| << 2^31 here)
+                let t = _mm256_cvtepi32_ps(_mm256_cvttps_epi32(q));
+                let f = _mm256_sub_ps(q, t); // exact (Sterbenz)
+                let af = _mm256_andnot_ps(sign, f);
+                let bump = _mm256_cmp_ps::<_CMP_GE_OQ>(af, half);
+                let signed_one = _mm256_or_ps(_mm256_and_ps(q, sign), one);
+                let r = _mm256_add_ps(t, _mm256_and_ps(bump, signed_one));
+                _mm256_storeu_si256(
+                    out.as_mut_ptr().add(i * 8) as *mut __m256i,
+                    _mm256_cvttps_epi32(r),
+                );
+            }
         }
     }
 
@@ -275,12 +295,16 @@ pub mod avx2 {
         qp: f32,
         out: &mut [f32; 64],
     ) {
-        let qpv = _mm256_set1_ps(qp);
-        for i in 0..8 {
-            let l = _mm256_loadu_si256(levels.as_ptr().add(i * 8) as *const __m256i);
-            let w = _mm256_loadu_ps(qweight.as_ptr().add(i * 8));
-            let r = _mm256_mul_ps(_mm256_mul_ps(_mm256_cvtepi32_ps(l), w), qpv);
-            _mm256_storeu_ps(out.as_mut_ptr().add(i * 8), r);
+        // SAFETY: loads/stores cover exactly the 64-element borrows in
+        // eight 8-lane steps; AVX2 is the caller's contract.
+        unsafe {
+            let qpv = _mm256_set1_ps(qp);
+            for i in 0..8 {
+                let l = _mm256_loadu_si256(levels.as_ptr().add(i * 8) as *const __m256i);
+                let w = _mm256_loadu_ps(qweight.as_ptr().add(i * 8));
+                let r = _mm256_mul_ps(_mm256_mul_ps(_mm256_cvtepi32_ps(l), w), qpv);
+                _mm256_storeu_ps(out.as_mut_ptr().add(i * 8), r);
+            }
         }
     }
 
@@ -300,22 +324,27 @@ pub mod avx2 {
         ref_stride: usize,
         early_exit: f32,
     ) -> f32 {
-        let sign = _mm256_set1_ps(-0.0);
-        let mut acc = _mm256_setzero_ps();
-        for y in 0..16 {
-            let a0 = _mm256_loadu_ps(cur.add(y * cur_stride));
-            let a1 = _mm256_loadu_ps(cur.add(y * cur_stride + 8));
-            let b0 = _mm256_loadu_ps(refp.add(y * ref_stride));
-            let b1 = _mm256_loadu_ps(refp.add(y * ref_stride + 8));
-            let d0 = _mm256_andnot_ps(sign, _mm256_sub_ps(a0, b0));
-            let d1 = _mm256_andnot_ps(sign, _mm256_sub_ps(a1, b1));
-            acc = _mm256_add_ps(acc, _mm256_add_ps(d0, d1));
-            let partial = hsum256(acc);
-            if partial > early_exit {
-                return partial;
+        // SAFETY: the caller guarantees 16 rows of 16 valid f32s behind
+        // `cur`/`refp` under the given strides, so every offset below is
+        // in bounds; AVX2 is the caller's contract.
+        unsafe {
+            let sign = _mm256_set1_ps(-0.0);
+            let mut acc = _mm256_setzero_ps();
+            for y in 0..16 {
+                let a0 = _mm256_loadu_ps(cur.add(y * cur_stride));
+                let a1 = _mm256_loadu_ps(cur.add(y * cur_stride + 8));
+                let b0 = _mm256_loadu_ps(refp.add(y * ref_stride));
+                let b1 = _mm256_loadu_ps(refp.add(y * ref_stride + 8));
+                let d0 = _mm256_andnot_ps(sign, _mm256_sub_ps(a0, b0));
+                let d1 = _mm256_andnot_ps(sign, _mm256_sub_ps(a1, b1));
+                acc = _mm256_add_ps(acc, _mm256_add_ps(d0, d1));
+                let partial = hsum256(acc);
+                if partial > early_exit {
+                    return partial;
+                }
             }
+            hsum256(acc)
         }
-        hsum256(acc)
     }
 
     /// Zig-zag gather + nonzero scan of one quantized block, then the
@@ -332,14 +361,20 @@ pub mod avx2 {
     ) -> (u32, i32) {
         let mut zz = [0i32; 64];
         let mut nz_mask = 0u64;
-        let zero = _mm256_setzero_si256();
-        for i in 0..8 {
-            let idx = _mm256_loadu_si256(zigzag.as_ptr().add(i * 8) as *const __m256i);
-            let v = _mm256_i32gather_epi32::<4>(levels.as_ptr(), idx);
-            _mm256_storeu_si256(zz.as_mut_ptr().add(i * 8) as *mut __m256i, v);
-            let is_zero = _mm256_cmpeq_epi32(v, zero);
-            let zbits = _mm256_movemask_ps(_mm256_castsi256_ps(is_zero)) as u32;
-            nz_mask |= (((!zbits) & 0xff) as u64) << (i * 8);
+        // SAFETY: gathers index `levels` by the zig-zag table, whose 64
+        // entries are all in 0..64, so every lane stays inside the
+        // borrow; stores cover exactly `zz`; AVX2 is the caller's
+        // contract.
+        unsafe {
+            let zero = _mm256_setzero_si256();
+            for i in 0..8 {
+                let idx = _mm256_loadu_si256(zigzag.as_ptr().add(i * 8) as *const __m256i);
+                let v = _mm256_i32gather_epi32::<4>(levels.as_ptr(), idx);
+                _mm256_storeu_si256(zz.as_mut_ptr().add(i * 8) as *mut __m256i, v);
+                let is_zero = _mm256_cmpeq_epi32(v, zero);
+                let zbits = _mm256_movemask_ps(_mm256_castsi256_ps(is_zero)) as u32;
+                nz_mask |= (((!zbits) & 0xff) as u64) << (i * 8);
+            }
         }
         let dc = zz[0];
         let mut bits = 4 + crate::codec::entropy::magnitude_bits(dc - prev_dc) + 1;
@@ -365,19 +400,25 @@ pub mod avx2 {
     /// Caller must guarantee AVX2 and `src.len() == dst.len()`.
     #[target_feature(enable = "avx2")]
     pub unsafe fn convert_u8_to_f32(src: &[u8], dst: &mut [f32]) {
-        let n = src.len();
-        let denom = _mm256_set1_ps(255.0);
-        let mut i = 0;
-        while i + 8 <= n {
-            let bytes = _mm_loadl_epi64(src.as_ptr().add(i) as *const __m128i);
-            let ints = _mm256_cvtepu8_epi32(bytes);
-            let f = _mm256_cvtepi32_ps(ints);
-            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_div_ps(f, denom));
-            i += 8;
-        }
-        while i < n {
-            *dst.get_unchecked_mut(i) = *src.get_unchecked(i) as f32 / 255.0;
-            i += 1;
+        // SAFETY: the caller guarantees `src.len() == dst.len()`; the
+        // vector loop only touches `i..i + 8 ≤ n` and the scalar tail
+        // `i < n`, so all accesses are in bounds; AVX2 is the caller's
+        // contract.
+        unsafe {
+            let n = src.len();
+            let denom = _mm256_set1_ps(255.0);
+            let mut i = 0;
+            while i + 8 <= n {
+                let bytes = _mm_loadl_epi64(src.as_ptr().add(i) as *const __m128i);
+                let ints = _mm256_cvtepu8_epi32(bytes);
+                let f = _mm256_cvtepi32_ps(ints);
+                _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_div_ps(f, denom));
+                i += 8;
+            }
+            while i < n {
+                *dst.get_unchecked_mut(i) = *src.get_unchecked(i) as f32 / 255.0;
+                i += 1;
+            }
         }
     }
 }
@@ -407,6 +448,7 @@ mod tests {
     }
 
     #[cfg(target_arch = "x86_64")]
+    #[cfg_attr(miri, ignore)] // Miri has no AVX2 intrinsics; the scalar path is covered above
     #[test]
     fn avx2_convert_is_bit_identical() {
         if !avx2_supported() {
@@ -417,6 +459,8 @@ mod tests {
             let src: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect();
             let mut a = vec![0.0f32; len];
             let mut b = vec![0.0f32; len];
+            // SAFETY: AVX2 presence checked at the top of the test; the
+            // two slices have equal length by construction.
             unsafe { avx2::convert_u8_to_f32(&src, &mut a) };
             convert_u8_to_f32_scalar(&src, &mut b);
             assert_eq!(

@@ -23,22 +23,48 @@
 //! work fully offline.  See `DESIGN.md` for the substitution table and
 //! experiment index.
 
+// Unsafe discipline (DESIGN.md §11, checked by `cargo xtask analyze`):
+// unsafe code is confined to the two modules with a reason to exist —
+// the SIMD kernels under `codec` and the PJRT FFI under `runtime` —
+// and even there every unsafe operation must sit in an explicit block
+// with a `// SAFETY:` justification.  Everything else forbids unsafe
+// outright.
+
+#[forbid(unsafe_code)]
 pub mod association;
+#[forbid(unsafe_code)]
 pub mod bench;
+#[forbid(unsafe_code)]
 pub mod cli;
+#[deny(unsafe_op_in_unsafe_fn)]
 pub mod codec;
+#[forbid(unsafe_code)]
 pub mod config;
+#[forbid(unsafe_code)]
 pub mod coordinator;
+#[forbid(unsafe_code)]
 pub mod filters;
+#[forbid(unsafe_code)]
 pub mod net;
+#[forbid(unsafe_code)]
 pub mod offline;
+#[forbid(unsafe_code)]
 pub mod pipeline;
+#[forbid(unsafe_code)]
 pub mod query;
+#[forbid(unsafe_code)]
 pub mod reducto;
+#[forbid(unsafe_code)]
 pub mod reid;
+#[forbid(unsafe_code)]
 pub mod roi;
+#[deny(unsafe_op_in_unsafe_fn)]
 pub mod runtime;
+#[forbid(unsafe_code)]
 pub mod sim;
+#[forbid(unsafe_code)]
 pub mod testing;
+#[forbid(unsafe_code)]
 pub mod tilegroup;
+#[forbid(unsafe_code)]
 pub mod util;

@@ -1,3 +1,8 @@
+// lint: wall-clock-file — every Instant reading in this module lands in a
+// PlanReport/MethodReport `*_seconds` stage timing, all of which
+// `MethodReport::zero_wall_clock` zeroes before reports are byte-compared
+// (rust/tests/report_shape.rs pins the field inventory).
+
 //! The staged offline planner (§4.1.1, modules ①–④ plus grouping):
 //! Profile → [Shard] → Filter → Associate → Solve → Group, each stage a
 //! typed function producing a named artifact, timed into a [`PlanReport`].
@@ -440,6 +445,7 @@ fn plan_sharded(
             acc.fp_rewritten += r.fp_rewritten;
             acc.fn_removed += r.fn_removed;
         }
+        // lint: order-insensitive — set-to-set union
         tiles.extend(o.tiles.iter().copied());
         report.spill_groups += o.report.spill_groups;
         report.bridge_cameras.extend(o.report.bridge_cameras.iter().copied());

@@ -1,3 +1,8 @@
+// lint: wall-clock-file — Instant readings here feed ReplanRecord /
+// ComponentRecord timing fields (`seconds`, `queue_wait`, `done_at`) and
+// the planner-pool stats, all zeroed by `MethodReport::zero_wall_clock`
+// before byte-comparison (rust/tests/report_shape.rs pins the inventory).
+
 //! Continuous re-profiling — the offline planner's side of the loop
 //! (DESIGN.md §7–§8): turn sliding profile windows into warm-started,
 //! **component-incremental** plans.
@@ -38,7 +43,7 @@
 
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -59,6 +64,7 @@ use crate::sim::Scenario;
 use crate::util::geometry::IRect;
 use crate::util::json::Json;
 use crate::util::parallel::{ordered_map, PoolGauge};
+use crate::util::sync::StateCell;
 
 /// Above this constraint drift a warm seed reuses too little to pay for
 /// itself (most seeded tiles are stale and only burden the prune pass);
@@ -281,7 +287,9 @@ pub struct Replanner<'a> {
     pool: PoolGauge,
     /// Epoch boundaries whose compute phase ran (carried or fired).
     epochs_computed: AtomicUsize,
-    state: Mutex<ReplanState>,
+    /// Chained state behind the snapshot → compute → commit protocol
+    /// (`util::sync`, loom-modeled in `rust/tests/loom_epoch.rs`).
+    state: StateCell<ReplanState>,
 }
 
 /// Aggregate planner-pool counters for one run — surfaced on
@@ -335,7 +343,7 @@ impl<'a> Replanner<'a> {
             planner_threads: 0,
             pool: PoolGauge::new(),
             epochs_computed: AtomicUsize::new(0),
-            state: Mutex::new(ReplanState {
+            state: StateCell::new(ReplanState {
                 prev_solution: solution_of(&initial.masks),
                 prev_constraints: None,
                 prev_components: Vec::new(),
@@ -374,7 +382,7 @@ impl<'a> Replanner<'a> {
 
     /// Every boundary's outcome so far, in epoch order.
     pub fn records(&self) -> Vec<ReplanRecord> {
-        self.state.lock().unwrap().records.clone()
+        self.state.snapshot(|st| st.records.clone())
     }
 
     /// The window's camera partition under this re-planner's scope.
@@ -482,7 +490,7 @@ impl EpochPlanner for Replanner<'_> {
         // epoch-0 masks were solved on.  Derived *outside* the lock (the
         // pass is a full profile-window ReID + associate) and installed
         // under it.
-        let needs_baseline = self.state.lock().unwrap().prev_constraints.is_none();
+        let needs_baseline = self.state.snapshot(|st| st.prev_constraints.is_none());
         let seeded = if needs_baseline {
             let baseline_stream = RawReid::generate_par(
                 self.scenario,
@@ -503,8 +511,7 @@ impl EpochPlanner for Replanner<'_> {
         // previous solution and partition by value.  The sequential loop
         // never mutated any of these mid-epoch, so decisions and solves
         // made against the snapshot are byte-identical to its output.
-        let (prev_solution, baseline, prev_components) = {
-            let mut st = self.state.lock().unwrap();
+        let (prev_solution, baseline, prev_components) = self.state.snapshot(|st| {
             if let Some((parts, set)) = seeded {
                 st.prev_components = parts;
                 st.prev_constraints = Some(set);
@@ -514,7 +521,7 @@ impl EpochPlanner for Replanner<'_> {
                 Arc::clone(st.prev_constraints.as_ref().expect("seeded above")),
                 st.prev_components.clone(),
             )
-        };
+        });
         let drift = constraint_drift(&raw_table, &baseline);
         let comp_drift: Vec<f64> = comp_constraints
             .iter()
@@ -538,6 +545,7 @@ impl EpochPlanner for Replanner<'_> {
         // there are stale tiles to clear; otherwise firing it would be a
         // pure no-op and would inflate the re-solve count
         let mut comp_has_tiles = vec![false; comps.len()];
+        // lint: order-insensitive — only sets idempotent flags
         for &t in &prev_solution.tiles {
             comp_has_tiles[comp_of_cam[self.tiling.camera_of(t)]] = true;
         }
@@ -573,7 +581,7 @@ impl EpochPlanner for Replanner<'_> {
                     queue_wait: 0.0,
                 })
                 .collect();
-            self.state.lock().unwrap().records.push(ReplanRecord {
+            self.state.commit(|st| st.records.push(ReplanRecord {
                 epoch: k,
                 start_seg,
                 trigger_time,
@@ -588,7 +596,7 @@ impl EpochPlanner for Replanner<'_> {
                 scope: self.scope.name(),
                 components,
                 reducto_rederived: 0,
-            });
+            }));
             return Ok(prev.clone());
         }
 
@@ -692,6 +700,7 @@ impl EpochPlanner for Replanner<'_> {
             let s = solves.next().expect("one solve per fired component");
             all_warm &= s.warm;
             degraded |= s.degraded;
+            // lint: order-insensitive — set-to-set union
             tiles.extend(s.tiles.iter().copied());
             components.push(ComponentRecord {
                 cameras: comp.clone(),
@@ -732,40 +741,44 @@ impl EpochPlanner for Replanner<'_> {
             mask_tiles,
         });
 
-        // ---- commit phase, under the second brief lock: baseline
+        // ---- commit phase, one atomic `StateCell::commit`: baseline
         // update (fired components adopt their window constraints and
         // the new partition becomes the component-diff reference;
         // quiescent components keep accumulating drift), solution, and
-        // record.  The compute snapshot's `Arc` is dropped first so
-        // `Arc::make_mut` mutates the shared set in place.
+        // record — all inside one closure, so a concurrent `records()`
+        // snapshot can never observe the record without its baseline
+        // update (the invariant the loom model checks).  The compute
+        // snapshot's `Arc` is dropped first so `Arc::make_mut` mutates
+        // the shared set in place.
         drop(baseline);
-        let mut st = self.state.lock().unwrap();
-        let base = Arc::make_mut(st.prev_constraints.as_mut().expect("seeded above"));
-        base.retain(|c| baseline_keeps(c, &self.tiling, &fired_cam));
-        for (i, idxs) in comp_constraints.iter().enumerate() {
-            if fired[i] {
-                for &ci in idxs {
-                    base.insert(raw_table.constraints[ci].clone());
+        self.state.commit(|st| {
+            let base = Arc::make_mut(st.prev_constraints.as_mut().expect("seeded above"));
+            base.retain(|c| baseline_keeps(c, &self.tiling, &fired_cam));
+            for (i, idxs) in comp_constraints.iter().enumerate() {
+                if fired[i] {
+                    for &ci in idxs {
+                        base.insert(raw_table.constraints[ci].clone());
+                    }
                 }
             }
-        }
-        st.prev_components = comps;
-        st.prev_solution = Solution { tiles, unsatisfiable: 0 };
-        st.records.push(ReplanRecord {
-            epoch: k,
-            start_seg,
-            trigger_time,
-            seconds: t0.elapsed().as_secs_f64(),
-            replanned: true,
-            warm: all_warm,
-            constraint_drift: drift,
-            mask_churn: churn,
-            solver: if degraded { SolverKind::Greedy.name() } else { self.opts.solver.name() },
-            n_constraints: raw_table.n_constraints(),
-            mask_tiles,
-            scope: self.scope.name(),
-            components,
-            reducto_rederived: rederived,
+            st.prev_components = comps;
+            st.prev_solution = Solution { tiles, unsatisfiable: 0 };
+            st.records.push(ReplanRecord {
+                epoch: k,
+                start_seg,
+                trigger_time,
+                seconds: t0.elapsed().as_secs_f64(),
+                replanned: true,
+                warm: all_warm,
+                constraint_drift: drift,
+                mask_churn: churn,
+                solver: if degraded { SolverKind::Greedy.name() } else { self.opts.solver.name() },
+                n_constraints: raw_table.n_constraints(),
+                mask_tiles,
+                scope: self.scope.name(),
+                components,
+                reducto_rederived: rederived,
+            });
         });
         Ok(epoch)
     }
@@ -797,6 +810,7 @@ fn baseline_keeps(c: &Constraint, tiling: &Tiling, fired_cam: &[bool]) -> bool {
 fn solution_of(masks: &RoiMasks) -> Solution {
     let mut tiles: HashSet<GlobalTile> = HashSet::new();
     for cam in 0..masks.tiling.n_cameras {
+        // lint: order-insensitive — set-to-set rebuild
         for &(tx, ty) in &masks.tiles[cam] {
             tiles.insert(masks.tiling.tile_id(cam, tx, ty));
         }
@@ -873,6 +887,7 @@ fn warm_decision(migrated: bool, drift: f64) -> bool {
 /// changed membership, so both re-solve fresh.
 fn component_migrated(prev: &[Vec<usize>], comp: &[usize]) -> bool {
     comp.iter().any(|c| {
+        // lint: order-insensitive — `prev` is a slice of sorted partitions
         prev.iter()
             .find(|p| p.contains(c))
             .map_or(true, |p| p.as_slice() != comp)

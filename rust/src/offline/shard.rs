@@ -194,6 +194,7 @@ impl SpillPartition {
 pub fn spill(table: &AssociationTable) -> SpillPartition {
     let tiles = table.candidate_tiles(); // sorted ascending
     let id_of: HashMap<GlobalTile, usize> =
+        // lint: order-insensitive — `tiles` is the sorted Vec from candidate_tiles()
         tiles.iter().enumerate().map(|(i, &t)| (t, i)).collect();
     let mut uf = UnionFind::new(tiles.len());
     let mut anchors: Vec<Option<usize>> = Vec::with_capacity(table.constraints.len());
@@ -222,6 +223,7 @@ pub fn spill(table: &AssociationTable) -> SpillPartition {
     // order and (camera-major tile ids) each group's cameras ascending
     let mut group_of_root: HashMap<usize, usize> = HashMap::new();
     let mut groups: Vec<SpillGroup> = Vec::new();
+    // lint: order-insensitive — `tiles` is the sorted Vec from candidate_tiles()
     for (d, &tile) in tiles.iter().enumerate() {
         let root = uf.find(d);
         let gi = *group_of_root.entry(root).or_insert_with(|| {

@@ -35,6 +35,8 @@ impl CodecEncodeStage {
 
 impl EncodeStage for CodecEncodeStage {
     fn encode(&mut self, kept: &[&Frame]) -> (EncodedSegment, f64) {
+        // lint: wall-clock — measured cost feeds latency fields zeroed by
+        // zero_wall_clock; determinism tests inject EncodeCost::PerFrame
         let t0 = Instant::now();
         let encoded = self.enc.encode_segment_refs(kept);
         let secs = match self.cost {

@@ -111,6 +111,8 @@ pub struct RuntimeInfer<'a>(pub &'a crate::runtime::Runtime);
 #[cfg(feature = "pjrt")]
 impl Infer for RuntimeInfer<'_> {
     fn infer(&self, frame: &[f32], blocks: Option<&[i32]>) -> Result<(Vec<f32>, f64)> {
+        // lint: wall-clock — measured cost feeds latency fields zeroed by
+        // zero_wall_clock; determinism tests use FixedCostInfer instead
         let t0 = Instant::now();
         let grid = match blocks {
             None => self.0.infer_full(frame)?,
@@ -146,6 +148,8 @@ impl Infer for NativeInfer {
         SCRATCH.with(|s| {
             let mut guard = s.borrow_mut();
             let scratch = &mut *guard;
+            // lint: wall-clock — measured cost feeds latency fields zeroed by
+            // zero_wall_clock; determinism tests use FixedCostInfer instead
             let t0 = Instant::now();
             match blocks {
                 None => crate::runtime::native::detect_full_into(frame, 192, 320, scratch, out),

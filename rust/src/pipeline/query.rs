@@ -28,12 +28,15 @@ impl QueryStage for CarryOverQuery {
         n_frames: usize,
     ) -> Vec<HashSet<u32>> {
         let mut reported: Vec<HashSet<u32>> = vec![HashSet::new(); n_frames];
+        // lint: order-insensitive — `frame_sets` is a camera-ordered slice,
+        // and the union below is commutative anyway
         for cam_sets in frame_sets {
             let mut last: HashSet<u32> = HashSet::new();
             for lf in 0..n_frames {
                 if let Some(s) = &cam_sets[lf] {
                     last = s.clone();
                 }
+                // lint: order-insensitive — set-to-set union
                 for &v in &last {
                     reported[lf].insert(v);
                 }

@@ -24,11 +24,12 @@
 //! [`PlanSchedule::wait`] in the degenerate case where it reaches a
 //! boundary before the planner has published that epoch.
 
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::util::geometry::IRect;
+use crate::util::sync::EpochTable;
 
 /// When to re-derive the RoI plan during the online phase
 /// (CLI: `--replan-every` / `--replan-drift`).
@@ -160,14 +161,13 @@ pub trait EpochPlanner: Sync {
 /// the planner publishes them.  Epoch boundaries are segment indices
 /// (`epoch = seg / check_every`), so pickup is atomic *between* segments
 /// by construction — a worker never changes plan mid-segment.
+///
+/// Storage and blocking live in [`EpochTable`] (`util::sync`), the
+/// loom-modeled write-once slot table; this type adds the segment ↔
+/// epoch arithmetic and the epoch-0 bootstrap.
 pub struct PlanSchedule {
     check_every: usize,
-    cells: Vec<Cell>,
-}
-
-struct Cell {
-    slot: Mutex<Option<Arc<PlanEpoch>>>,
-    ready: Condvar,
+    epochs: EpochTable<PlanEpoch>,
 }
 
 impl PlanSchedule {
@@ -177,10 +177,7 @@ impl PlanSchedule {
     pub fn new(n_segments: usize, check_every: usize, initial: PlanEpoch) -> PlanSchedule {
         let check_every = check_every.max(1);
         let n_epochs = n_segments.div_ceil(check_every).max(1);
-        let cells = (0..n_epochs)
-            .map(|_| Cell { slot: Mutex::new(None), ready: Condvar::new() })
-            .collect();
-        let sched = PlanSchedule { check_every, cells };
+        let sched = PlanSchedule { check_every, epochs: EpochTable::new(n_epochs) };
         sched.publish(0, Arc::new(initial));
         sched
     }
@@ -191,12 +188,12 @@ impl PlanSchedule {
     }
 
     pub fn n_epochs(&self) -> usize {
-        self.cells.len()
+        self.epochs.len()
     }
 
     /// Epoch owning segment `seg`.
     pub fn epoch_of(&self, seg: usize) -> usize {
-        (seg / self.check_every).min(self.cells.len() - 1)
+        (seg / self.check_every).min(self.epochs.len() - 1)
     }
 
     /// First segment of epoch `k`.
@@ -209,30 +206,18 @@ impl PlanSchedule {
     /// path may flood the remaining epochs with the last good plan
     /// without racing the planner.
     pub fn publish(&self, k: usize, plan: Arc<PlanEpoch>) {
-        let mut slot = self.cells[k].slot.lock().unwrap();
-        if slot.is_none() {
-            *slot = Some(plan);
-        }
-        drop(slot);
-        self.cells[k].ready.notify_all();
+        self.epochs.publish(k, plan);
     }
 
     /// Epoch `k`'s plan, blocking until published.
     pub fn wait(&self, k: usize) -> Arc<PlanEpoch> {
-        let cell = &self.cells[k];
-        let mut slot = cell.slot.lock().unwrap();
-        loop {
-            if let Some(plan) = slot.as_ref() {
-                return plan.clone();
-            }
-            slot = cell.ready.wait(slot).unwrap();
-        }
+        self.epochs.wait(k)
     }
 
     /// Epoch `k`'s plan if already published (the server side only sees
     /// segments whose epoch the camera worker already picked up).
     pub fn get(&self, k: usize) -> Option<Arc<PlanEpoch>> {
-        self.cells[k].slot.lock().unwrap().clone()
+        self.epochs.get(k)
     }
 }
 

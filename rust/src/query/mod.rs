@@ -52,6 +52,8 @@ pub fn accuracy(
     let mut err_sum = 0.0;
     let mut n = 0usize;
     let mut missed = Vec::with_capacity(reference.len());
+    // lint: order-insensitive — frame-indexed slices; per-frame math uses
+    // only counts (difference().count(), len()), never element order
     for (c, r) in reference.iter().zip(reported) {
         let miss = c.difference(r).count();
         missed.push(miss);
@@ -70,7 +72,7 @@ pub fn accuracy(
 /// Total vehicle appearances in the reference (the paper quotes "8 missed
 /// of 15424 appearances").
 pub fn total_appearances(reference: &[HashSet<u32>]) -> usize {
-    reference.iter().map(|s| s.len()).sum()
+    reference.iter().map(|s| s.len()).sum() // lint: order-insensitive — commutative sum
 }
 
 #[cfg(test)]

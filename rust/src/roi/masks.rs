@@ -19,6 +19,7 @@ impl RoiMasks {
     /// Split a global solution into per-camera masks.
     pub fn from_solution(tiling: &Tiling, solution: &HashSet<GlobalTile>) -> RoiMasks {
         let mut tiles = vec![HashSet::new(); tiling.n_cameras];
+        // lint: order-insensitive — set-to-set split
         for &t in solution {
             let (cam, tx, ty) = tiling.tile_pos(t);
             tiles[cam].insert((tx, ty));
@@ -29,6 +30,7 @@ impl RoiMasks {
     /// A full-frame mask (the Baseline methods).
     pub fn full(tiling: &Tiling) -> RoiMasks {
         let mut tiles = vec![HashSet::new(); tiling.n_cameras];
+        // lint: order-insensitive — `tiles` is the per-camera Vec of masks
         for mask in tiles.iter_mut() {
             for ty in 0..tiling.tiles_y {
                 for tx in 0..tiling.tiles_x {
@@ -46,7 +48,7 @@ impl RoiMasks {
 
     /// |M| — total tiles across cameras (the optimization objective).
     pub fn total_size(&self) -> usize {
-        self.tiles.iter().map(|t| t.len()).sum()
+        self.tiles.iter().map(|t| t.len()).sum() // lint: order-insensitive — commutative sum
     }
 
     /// Fraction of a camera's frame covered by its mask.

@@ -233,6 +233,7 @@ impl<'a> DenseTable<'a> {
     fn build(table: &'a AssociationTable) -> DenseTable<'a> {
         let tiles = table.candidate_tiles();
         let id_of: HashMap<GlobalTile, u32> =
+            // lint: order-insensitive — `tiles` is the sorted Vec from candidate_tiles()
             tiles.iter().enumerate().map(|(i, &t)| (t, i as u32)).collect();
         let mut region_tiles = Vec::new();
         let mut region_constraint = Vec::new();
@@ -357,6 +358,7 @@ fn greedy_cover(table: &AssociationTable, seed: &HashSet<GlobalTile>, prune_afte
     // no constraint mentions serve nothing and are dropped here — pruning
     // would remove them anyway)
     let mut seed_dense: Vec<u32> = Vec::new();
+    // lint: order-insensitive — `dense.tiles` is the sorted Vec from candidate_tiles()
     for (i, t) in dense.tiles.iter().enumerate() {
         if seed.contains(t) {
             seed_dense.push(i as u32);

@@ -8,3 +8,4 @@ pub mod matrix;
 pub mod parallel;
 pub mod rng;
 pub mod stats;
+pub mod sync;

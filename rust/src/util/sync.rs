@@ -1,0 +1,196 @@
+//! Concurrency facade for the planner's epoch-publication machinery
+//! (DESIGN.md §11).
+//!
+//! The re-planning path has exactly two shared-state protocols:
+//!
+//! * **epoch publication** — the planner thread publishes one immutable
+//!   [`std::sync::Arc`]'d plan per epoch into a fixed-size table; stage
+//!   workers block until their epoch's slot fills ([`EpochTable`]);
+//! * **snapshot → compute → commit** — the component re-planner copies
+//!   its baseline under a brief lock, solves outside the lock, then
+//!   merges the result back under a second brief lock ([`StateCell`]).
+//!
+//! Both are built here on a `Mutex`/`Condvar` pair that swaps to the
+//! in-tree `loom` model checker under `--cfg loom`, so
+//! `rust/tests/loom_epoch.rs` can exhaustively enumerate every
+//! interleaving of publish/wait/commit.  Production builds re-export
+//! `std::sync` and compile to exactly the code the pipeline ran before
+//! the facade existed.
+
+#[cfg(loom)]
+pub use loom::sync::{Condvar, Mutex, MutexGuard};
+#[cfg(not(loom))]
+pub use std::sync::{Condvar, Mutex, MutexGuard};
+
+use std::sync::Arc;
+
+/// A fixed-size table of write-once epoch slots.
+///
+/// `publish` fills a slot (first write wins — late duplicate plans from a
+/// racing planner are dropped, so every reader of epoch `k` observes the
+/// same `Arc`), `wait` blocks until a slot fills, `get` peeks without
+/// blocking.  The value behind the `Arc` is immutable once published:
+/// readers can never observe a torn epoch (fields from two different
+/// plans) because the only shared mutation is the single
+/// `None → Some(arc)` slot transition under the slot's mutex.
+pub struct EpochTable<T> {
+    cells: Vec<EpochCell<T>>,
+}
+
+struct EpochCell<T> {
+    slot: Mutex<Option<Arc<T>>>,
+    ready: Condvar,
+}
+
+impl<T> EpochTable<T> {
+    /// A table with `n_epochs` empty slots (at least one).
+    pub fn new(n_epochs: usize) -> EpochTable<T> {
+        let cells = (0..n_epochs.max(1))
+            .map(|_| EpochCell {
+                slot: Mutex::new(None),
+                ready: Condvar::new(),
+            })
+            .collect();
+        EpochTable { cells }
+    }
+
+    /// Number of epoch slots.
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Tables always hold at least one slot.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Publish `value` into slot `k`; first write wins.  Returns whether
+    /// this call installed the value (`false` = an earlier publish won
+    /// and `value` was dropped).  Waiters on `k` are woken either way.
+    pub fn publish(&self, k: usize, value: Arc<T>) -> bool {
+        let cell = &self.cells[k];
+        let mut slot = cell.slot.lock().unwrap();
+        let installed = if slot.is_none() {
+            *slot = Some(value);
+            true
+        } else {
+            false
+        };
+        drop(slot);
+        cell.ready.notify_all();
+        installed
+    }
+
+    /// Block until slot `k` is published, then return the shared plan.
+    pub fn wait(&self, k: usize) -> Arc<T> {
+        let cell = &self.cells[k];
+        let mut slot = cell.slot.lock().unwrap();
+        loop {
+            if let Some(v) = slot.as_ref() {
+                return Arc::clone(v);
+            }
+            slot = cell.ready.wait(slot).unwrap();
+        }
+    }
+
+    /// Non-blocking peek at slot `k`.
+    pub fn get(&self, k: usize) -> Option<Arc<T>> {
+        self.cells[k].slot.lock().unwrap().clone()
+    }
+}
+
+/// Mutex-held state driven through the snapshot → compute → commit
+/// protocol (DESIGN.md §8).
+///
+/// Both methods take the lock only for the duration of the closure; the
+/// expensive solve happens between a `snapshot` and its `commit`, off the
+/// lock, so stage workers reading records never block behind the solver.
+/// The protocol invariant the loom model checks: a commit closure runs
+/// atomically, so an observer snapshotting between commits sees either
+/// none or all of a commit's writes — a pushed record can never be
+/// observed without the baseline update committed alongside it.
+pub struct StateCell<S> {
+    inner: Mutex<S>,
+}
+
+impl<S> StateCell<S> {
+    pub fn new(state: S) -> StateCell<S> {
+        StateCell {
+            inner: Mutex::new(state),
+        }
+    }
+
+    /// Read (or lazily seed) the state under a brief lock.
+    ///
+    /// Snapshot closures may write — the re-planner seeds its baseline on
+    /// first use — but must copy out anything the compute phase needs:
+    /// nothing borrowed from the state survives the call.
+    pub fn snapshot<R>(&self, read: impl FnOnce(&mut S) -> R) -> R {
+        read(&mut self.inner.lock().unwrap())
+    }
+
+    /// Merge a computed result back under a brief lock.
+    ///
+    /// All writes belonging to one logical commit must happen inside a
+    /// single closure call; splitting them across two `commit` calls
+    /// would let observers see the torn intermediate state.
+    pub fn commit<R>(&self, write: impl FnOnce(&mut S) -> R) -> R {
+        write(&mut self.inner.lock().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn publish_then_wait_roundtrips() {
+        let table: EpochTable<u32> = EpochTable::new(3);
+        assert_eq!(table.len(), 3);
+        assert!(!table.is_empty());
+        assert!(table.get(1).is_none());
+        assert!(table.publish(1, Arc::new(7)));
+        assert_eq!(*table.wait(1), 7);
+        assert_eq!(table.get(1).as_deref(), Some(&7));
+    }
+
+    #[test]
+    fn publish_is_first_write_wins() {
+        let table: EpochTable<u32> = EpochTable::new(1);
+        assert!(table.publish(0, Arc::new(1)));
+        assert!(!table.publish(0, Arc::new(2)));
+        assert_eq!(*table.wait(0), 1);
+    }
+
+    #[test]
+    fn zero_slot_table_rounds_up_to_one() {
+        let table: EpochTable<u32> = EpochTable::new(0);
+        assert_eq!(table.len(), 1);
+    }
+
+    #[test]
+    fn wait_blocks_until_published() {
+        let table: Arc<EpochTable<u32>> = Arc::new(EpochTable::new(2));
+        let t2 = Arc::clone(&table);
+        let waiter = std::thread::spawn(move || *t2.wait(1));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        table.publish(1, Arc::new(42));
+        assert_eq!(waiter.join().unwrap(), 42);
+    }
+
+    #[test]
+    fn state_cell_snapshot_and_commit() {
+        let cell = StateCell::new(Vec::<u32>::new());
+        cell.commit(|v| v.push(1));
+        let copy = cell.snapshot(|v| v.clone());
+        assert_eq!(copy, vec![1]);
+        // snapshot may seed lazily
+        cell.snapshot(|v| {
+            if v.len() == 1 {
+                v.push(2);
+            }
+        });
+        assert_eq!(cell.snapshot(|v| v.len()), 2);
+    }
+}

@@ -1,0 +1,331 @@
+//! Shape-exhaustiveness + stable-serialization regression tests
+//! (DESIGN.md §11, satellite of the static-analysis PR).
+//!
+//! The first half pins the *field inventory* of the byte-compared report
+//! types: each struct is destructured with **no `..`**, so adding a field
+//! to `MethodReport`, `ReplanRecord` or `ComponentRecord` fails to
+//! compile here until the author decides whether the new field is
+//! wall-clock (→ extend `zero_wall_clock` and the xtask manifest) or
+//! deterministic (→ safe to serialize).  That decision is exactly what
+//! the `cargo xtask analyze` wall-clock pass enforces textually; this
+//! file is its compile-time twin.
+//!
+//! The second half is the order-determinism regression suite: the mask
+//! and query surfaces that *consume* hash collections must produce
+//! byte-identical serialized output regardless of set insertion order.
+
+use std::collections::HashSet;
+
+use crossroi::association::Tiling;
+use crossroi::coordinator::{LatencyBreakdown, MethodReport};
+use crossroi::offline::{ComponentRecord, ReplanRecord};
+use crossroi::query;
+use crossroi::roi::RoiMasks;
+
+fn sample_component() -> ComponentRecord {
+    ComponentRecord {
+        cameras: vec![0, 2],
+        drift: 0.25,
+        fired: true,
+        warm: true,
+        migrated: false,
+        spill_groups: 2,
+        n_constraints: 17,
+        solver: "greedy",
+        seconds: 0.75,
+        queue_wait: 0.05,
+    }
+}
+
+fn sample_record() -> ReplanRecord {
+    ReplanRecord {
+        epoch: 1,
+        start_seg: 12,
+        trigger_time: 12.5,
+        seconds: 2.0,
+        replanned: true,
+        warm: true,
+        constraint_drift: 0.3,
+        mask_churn: 0.1,
+        solver: "greedy",
+        n_constraints: 17,
+        mask_tiles: 40,
+        scope: "component",
+        components: vec![sample_component()],
+        reducto_rederived: 1,
+    }
+}
+
+/// Every `MethodReport` field is either zeroed by `zero_wall_clock` or
+/// must survive it untouched — the no-`..` destructure makes a new field
+/// a compile error here until it is classified.
+#[test]
+fn method_report_inventory_is_classified() {
+    let mut r = MethodReport::default();
+    r.method = "CrossRoI".to_string();
+    r.accuracy = 0.99;
+    r.missed_per_frame = vec![0, 1];
+    r.total_appearances = 100;
+    r.network_mbps_per_cam = vec![1.0, 2.0];
+    r.network_mbps_total = 3.0;
+    r.bytes_total = 4096;
+    r.server_hz = 120.0;
+    r.camera_fps = 30.0;
+    r.latency = LatencyBreakdown { camera: 0.5, network: 0.1, server: 0.2 };
+    r.latency_p95 = 0.9;
+    r.frames_reduced = 5;
+    r.frames_total = 300;
+    r.mask_tiles = 40;
+    r.mask_coverage = 0.33;
+    r.regions_per_cam = vec![2, 3];
+    r.offline_seconds = 7.5;
+    r.replan_count = 1;
+    r.replan_warm_count = 1;
+    r.replan_carried_components = 2;
+    r.replan_migrations = 0;
+    r.replan_reducto_rederived = 1;
+    r.replan_mask_churn = 0.1;
+    r.replan_seconds = 2.0;
+    r.replan_done_at = vec![14.5];
+    r.replan_records = vec![sample_record()];
+    r.arena_frame_allocs = 8;
+    r.arena_pixel_allocs = 8;
+    r.arena_pixel_reuses = 32;
+    r.arena_grid_allocs = 2;
+    r.arena_grid_reuses = 10;
+    r.planner_epochs_computed = 1;
+    r.planner_components_solved = 1;
+    r.planner_max_concurrent = 1;
+    r.planner_queue_wait_secs = 0.05;
+    r.zero_wall_clock();
+
+    let MethodReport {
+        method,
+        accuracy,
+        missed_per_frame,
+        total_appearances,
+        network_mbps_per_cam,
+        network_mbps_total,
+        bytes_total,
+        server_hz,
+        camera_fps,
+        latency,
+        latency_p95,
+        frames_reduced,
+        frames_total,
+        mask_tiles,
+        mask_coverage,
+        regions_per_cam,
+        offline_seconds,
+        replan_count,
+        replan_warm_count,
+        replan_carried_components,
+        replan_migrations,
+        replan_reducto_rederived,
+        replan_mask_churn,
+        replan_seconds,
+        replan_done_at,
+        replan_records,
+        arena_frame_allocs,
+        arena_pixel_allocs,
+        arena_pixel_reuses,
+        arena_grid_allocs,
+        arena_grid_reuses,
+        planner_epochs_computed,
+        planner_components_solved,
+        planner_max_concurrent,
+        planner_queue_wait_secs,
+    } = r;
+
+    // wall-clock families: zeroed (the xtask manifest mirrors this list)
+    assert_eq!(offline_seconds, 0.0);
+    assert_eq!(replan_seconds, 0.0);
+    assert_eq!(replan_done_at, vec![0.0], "shape preserved, values zeroed");
+    assert_eq!(arena_frame_allocs, 0);
+    assert_eq!(arena_pixel_allocs, 0);
+    assert_eq!(arena_pixel_reuses, 0);
+    assert_eq!(arena_grid_allocs, 0);
+    assert_eq!(arena_grid_reuses, 0);
+    assert_eq!(planner_epochs_computed, 0);
+    assert_eq!(planner_components_solved, 0);
+    assert_eq!(planner_max_concurrent, 0);
+    assert_eq!(planner_queue_wait_secs, 0.0);
+
+    // deterministic fields: survive untouched
+    assert_eq!(method, "CrossRoI");
+    assert_eq!(accuracy, 0.99);
+    assert_eq!(missed_per_frame, vec![0, 1]);
+    assert_eq!(total_appearances, 100);
+    assert_eq!(network_mbps_per_cam, vec![1.0, 2.0]);
+    assert_eq!(network_mbps_total, 3.0);
+    assert_eq!(bytes_total, 4096);
+    assert_eq!(server_hz, 120.0);
+    assert_eq!(camera_fps, 30.0);
+    assert_eq!(latency.camera, 0.5);
+    assert_eq!(latency_p95, 0.9);
+    assert_eq!(frames_reduced, 5);
+    assert_eq!(frames_total, 300);
+    assert_eq!(mask_tiles, 40);
+    assert_eq!(mask_coverage, 0.33);
+    assert_eq!(regions_per_cam, vec![2, 3]);
+    assert_eq!(replan_count, 1);
+    assert_eq!(replan_warm_count, 1);
+    assert_eq!(replan_carried_components, 2);
+    assert_eq!(replan_migrations, 0);
+    assert_eq!(replan_reducto_rederived, 1);
+    assert_eq!(replan_mask_churn, 0.1);
+    assert_eq!(replan_records.len(), 1);
+}
+
+/// The per-epoch record: wall-clock is `seconds` (and, per component,
+/// `seconds` + `queue_wait`); everything else is DES-clock or outcome
+/// data and must survive zeroing.
+#[test]
+fn replan_record_inventory_is_classified() {
+    let mut report = MethodReport::default();
+    report.replan_records = vec![sample_record()];
+    report.zero_wall_clock();
+    let rec = report.replan_records.into_iter().next().unwrap();
+
+    let ReplanRecord {
+        epoch,
+        start_seg,
+        trigger_time,
+        seconds,
+        replanned,
+        warm,
+        constraint_drift,
+        mask_churn,
+        solver,
+        n_constraints,
+        mask_tiles,
+        scope,
+        components,
+        reducto_rederived,
+    } = rec;
+
+    assert_eq!(seconds, 0.0, "wall-clock");
+    assert_eq!(epoch, 1);
+    assert_eq!(start_seg, 12);
+    assert_eq!(trigger_time, 12.5, "DES clock, not wall clock");
+    assert!(replanned);
+    assert!(warm);
+    assert_eq!(constraint_drift, 0.3);
+    assert_eq!(mask_churn, 0.1);
+    assert_eq!(solver, "greedy");
+    assert_eq!(n_constraints, 17);
+    assert_eq!(mask_tiles, 40);
+    assert_eq!(scope, "component");
+    assert_eq!(reducto_rederived, 1);
+
+    let comp = components.into_iter().next().unwrap();
+    let ComponentRecord {
+        cameras,
+        drift,
+        fired,
+        warm,
+        migrated,
+        spill_groups,
+        n_constraints,
+        solver,
+        seconds,
+        queue_wait,
+    } = comp;
+    assert_eq!(seconds, 0.0, "wall-clock");
+    assert_eq!(queue_wait, 0.0, "wall-clock");
+    assert_eq!(cameras, vec![0, 2]);
+    assert_eq!(drift, 0.25);
+    assert!(fired);
+    assert!(warm);
+    assert!(!migrated);
+    assert_eq!(spill_groups, 2);
+    assert_eq!(n_constraints, 17);
+    assert_eq!(solver, "greedy");
+}
+
+// ---------------------------------------------------------------------
+// order-determinism regressions: hash-set consumers must serialize
+// byte-identically for every insertion order
+// ---------------------------------------------------------------------
+
+fn tiling() -> Tiling {
+    Tiling::new(2, 320, 192, 16)
+}
+
+/// A solution set inserted in two opposite orders must produce identical
+/// masks, tile rects and active blocks — `from_solution` iterates the
+/// hash set, so this pins that the iteration feeds only order-insensitive
+/// sinks (per-camera sets) and that the serializing surfaces sort.
+#[test]
+fn mask_serialization_is_insertion_order_invariant() {
+    let t = tiling();
+    let ids: Vec<u32> = vec![
+        t.tile_id(0, 3, 2),
+        t.tile_id(0, 4, 2),
+        t.tile_id(1, 0, 0),
+        t.tile_id(1, 19, 11),
+        t.tile_id(0, 10, 7),
+        t.tile_id(1, 5, 5),
+    ];
+    let fwd: HashSet<u32> = ids.iter().copied().collect();
+    let rev: HashSet<u32> = ids.iter().rev().copied().collect();
+    let m1 = RoiMasks::from_solution(&t, &fwd);
+    let m2 = RoiMasks::from_solution(&t, &rev);
+    for cam in 0..t.n_cameras {
+        assert_eq!(
+            format!("{:?}", m1.tile_rects(cam)),
+            format!("{:?}", m2.tile_rects(cam)),
+            "tile_rects must be byte-stable"
+        );
+        assert_eq!(
+            m1.active_blocks(cam, 32, t.frame_w),
+            m2.active_blocks(cam, 32, t.frame_w),
+            "active_blocks must be byte-stable"
+        );
+    }
+    // and sorted ascending — the runtime's RoI HLO contract
+    let blocks = m1.active_blocks(0, 32, t.frame_w);
+    let mut sorted = blocks.clone();
+    sorted.sort_unstable();
+    assert_eq!(blocks, sorted);
+}
+
+/// Query accuracy consumes per-frame hash sets; only counts may matter.
+/// Rebuilding the same sets with different insertion orders must yield
+/// bit-identical accuracy and missed-counts.
+#[test]
+fn query_accuracy_is_insertion_order_invariant() {
+    let frames: Vec<Vec<u32>> = vec![vec![1, 2, 3, 4], vec![5, 6], vec![], vec![7, 8, 9]];
+    let build = |rev: bool| -> Vec<HashSet<u32>> {
+        frames
+            .iter()
+            .map(|f| {
+                if rev {
+                    f.iter().rev().copied().collect()
+                } else {
+                    f.iter().copied().collect()
+                }
+            })
+            .collect()
+    };
+    let reference = build(false);
+    let reported_fwd: Vec<HashSet<u32>> =
+        vec![vec![1, 2, 3], vec![5, 6], vec![], vec![7, 9]]
+            .into_iter()
+            .map(|f| f.into_iter().collect())
+            .collect();
+    let reported_rev: Vec<HashSet<u32>> =
+        vec![vec![3, 2, 1], vec![6, 5], vec![], vec![9, 7]]
+            .into_iter()
+            .map(|f| f.into_iter().collect())
+            .collect();
+
+    let (acc1, missed1) = query::accuracy(&reference, &reported_fwd);
+    let (acc2, missed2) = query::accuracy(&build(true), &reported_rev);
+    assert_eq!(acc1.to_bits(), acc2.to_bits(), "accuracy must be bit-identical");
+    assert_eq!(missed1, missed2);
+    assert_eq!(
+        query::total_appearances(&reference),
+        query::total_appearances(&build(true))
+    );
+}

@@ -1,0 +1,534 @@
+//! Offline stub of the [loom](https://github.com/tokio-rs/loom) model
+//! checker (DESIGN.md §11).
+//!
+//! The repo's build is fully offline, so — like `third_party/xla-stub` —
+//! the subset of loom's API the epoch-publication models use is
+//! reimplemented in-tree: [`model`] runs a closure under **every
+//! sequentially-consistent interleaving** of its visible operations and
+//! panics (replaying the failing schedule's trace) if any interleaving
+//! panics or deadlocks.
+//!
+//! # How it explores
+//!
+//! Exactly one logical thread runs at a time (a token passed through one
+//! scheduler mutex, which also provides the happens-before edges that
+//! make the shared-state handoff sound).  Before every **visible
+//! operation** — mutex acquire, condvar wait/notify, spawn, join, thread
+//! exit — the scheduler picks which runnable thread performs the next
+//! one.  Each pick is recorded as `(choice, n_candidates)`; when a run
+//! completes, the deepest pick with an unexplored sibling is bumped and
+//! the program replays from the start down that branch (depth-first over
+//! decision vectors), until no pick anywhere has an untried alternative.
+//! A run with no runnable thread and unfinished threads is reported as a
+//! deadlock — which is how a lost wakeup manifests.
+//!
+//! # Subset semantics
+//!
+//! * Sequential consistency only: no weak-memory reorderings, no
+//!   `UnsafeCell`/atomics instrumentation — protocols must share state
+//!   through [`sync::Mutex`]/[`sync::Condvar`] to be checked.
+//! * No spurious condvar wakeups; `notify_one` wakes the lowest-id
+//!   waiter (real loom branches over the choice).
+//! * [`sync::Arc`] is `std`'s — immutable payloads behind an `Arc` need
+//!   no modeling.
+//!
+//! Mutex unlock is *not* a decision point: a correct model only shares
+//! data through these primitives, so the schedule between an unlock and
+//! the unlocking thread's next visible op is observationally equivalent
+//! for every other thread.
+
+use std::cell::{RefCell, UnsafeCell};
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::sync::{Arc as StdArc, Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdGuard};
+
+/// Sentinel panic payload used to unwind parked threads when a run
+/// aborts (a real panic elsewhere, or a deadlock); never user-visible.
+struct AbortRun;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ThreadState {
+    Runnable,
+    /// Parked until the mutex is free.
+    BlockedMutex(usize),
+    /// Parked on a condvar; a notify re-parks the thread on its mutex.
+    BlockedCondvar { cv: usize, mutex: usize },
+    /// Parked until the target thread finishes.
+    BlockedJoin(usize),
+    Finished,
+}
+
+struct SchedState {
+    threads: Vec<ThreadState>,
+    /// Logical thread holding the run token (`usize::MAX` = none; the
+    /// run is over or aborting).
+    running: usize,
+    /// Mutex id → owning thread.
+    mutexes: Vec<Option<usize>>,
+    n_condvars: usize,
+    /// Decision vector of this run: `(choice, n_candidates)` per pick.
+    trace: Vec<(usize, usize)>,
+    /// Choices to replay before exploring first-candidate-first.
+    prefix: Vec<usize>,
+    step: usize,
+    aborting: bool,
+    panic_payload: Option<Box<dyn std::any::Any + Send>>,
+    deadlock: Option<String>,
+}
+
+struct Scheduler {
+    state: StdMutex<SchedState>,
+    cv: StdCondvar,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<(StdArc<Scheduler>, usize)>> = const { RefCell::new(None) };
+}
+
+fn current() -> (StdArc<Scheduler>, usize) {
+    CURRENT
+        .with(|c| c.borrow().clone())
+        .expect("loom primitives may only be used inside loom::model")
+}
+
+impl Scheduler {
+    fn new(prefix: Vec<usize>) -> Scheduler {
+        Scheduler {
+            state: StdMutex::new(SchedState {
+                threads: vec![ThreadState::Runnable],
+                running: 0,
+                mutexes: Vec::new(),
+                n_condvars: 0,
+                trace: Vec::new(),
+                prefix,
+                step: 0,
+                aborting: false,
+                panic_payload: None,
+                deadlock: None,
+            }),
+            cv: StdCondvar::new(),
+        }
+    }
+
+    /// The scheduler mutex ignores poisoning: threads unwind out of
+    /// `wait_my_turn` (dropping the guard mid-panic) as part of the
+    /// normal abort path.
+    fn lock_state(&self) -> StdGuard<'_, SchedState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn enabled(st: &SchedState, tid: usize) -> bool {
+        match st.threads[tid] {
+            ThreadState::Runnable => true,
+            ThreadState::BlockedMutex(m) => st.mutexes[m].is_none(),
+            ThreadState::BlockedCondvar { .. } => false,
+            ThreadState::BlockedJoin(t) => st.threads[t] == ThreadState::Finished,
+            ThreadState::Finished => false,
+        }
+    }
+
+    /// One scheduling decision: pick the next thread to run among the
+    /// enabled ones, recording the branch.  The chosen thread is marked
+    /// `Runnable` — its blocking condition was part of enabledness, and
+    /// nothing can run between the pick and its resumption.
+    fn pick_next(&self, st: &mut SchedState) {
+        let enabled: Vec<usize> =
+            (0..st.threads.len()).filter(|&t| Scheduler::enabled(st, t)).collect();
+        if enabled.is_empty() {
+            if st.threads.iter().all(|&t| t == ThreadState::Finished) {
+                st.running = usize::MAX;
+                return;
+            }
+            st.deadlock = Some(format!(
+                "deadlock: no runnable thread (states {:?}, trace {:?})",
+                st.threads, st.trace
+            ));
+            st.aborting = true;
+            st.running = usize::MAX;
+            return;
+        }
+        let choice = if st.step < st.prefix.len() { st.prefix[st.step] } else { 0 };
+        assert!(
+            choice < enabled.len(),
+            "loom-stub: non-deterministic model (replay diverged: choice {choice} of {} candidates)",
+            enabled.len()
+        );
+        st.trace.push((choice, enabled.len()));
+        st.step += 1;
+        let next = enabled[choice];
+        st.threads[next] = ThreadState::Runnable;
+        st.running = next;
+    }
+
+    /// Park until this thread holds the run token (or the run aborts).
+    fn wait_my_turn<'a>(
+        &'a self,
+        mut st: StdGuard<'a, SchedState>,
+        me: usize,
+    ) -> StdGuard<'a, SchedState> {
+        loop {
+            if st.aborting {
+                drop(st);
+                panic::panic_any(AbortRun);
+            }
+            if st.running == me {
+                return st;
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Run one visible operation for thread `me`: a scheduling decision,
+    /// then the op.  `op` returns `None` to park (having set `me`'s
+    /// blocked state); it is retried when the scheduler hands the token
+    /// back, which it only does once the blocking condition cleared.
+    fn visible_op<R>(&self, me: usize, mut op: impl FnMut(&mut SchedState) -> Option<R>) -> R {
+        let mut st = self.lock_state();
+        st.threads[me] = ThreadState::Runnable;
+        self.pick_next(&mut st);
+        self.cv.notify_all();
+        st = self.wait_my_turn(st, me);
+        loop {
+            if let Some(r) = op(&mut st) {
+                return r;
+            }
+            self.pick_next(&mut st);
+            self.cv.notify_all();
+            st = self.wait_my_turn(st, me);
+        }
+    }
+
+    fn register_mutex(&self) -> usize {
+        let mut st = self.lock_state();
+        st.mutexes.push(None);
+        st.mutexes.len() - 1
+    }
+
+    fn register_condvar(&self) -> usize {
+        let mut st = self.lock_state();
+        st.n_condvars += 1;
+        st.n_condvars - 1
+    }
+
+    fn register_thread(&self) -> usize {
+        let mut st = self.lock_state();
+        st.threads.push(ThreadState::Runnable);
+        st.threads.len() - 1
+    }
+
+    /// Thread exit: a real panic payload aborts the whole run.
+    fn finish(&self, me: usize, panicked: Option<Box<dyn std::any::Any + Send>>) {
+        let mut st = self.lock_state();
+        st.threads[me] = ThreadState::Finished;
+        if let Some(p) = panicked {
+            st.aborting = true;
+            if st.panic_payload.is_none() {
+                st.panic_payload = Some(p);
+            }
+            st.running = usize::MAX;
+        } else if st.running == me {
+            self.pick_next(&mut st);
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Atomic condvar wait: release the mutex and park in one step (no
+    /// decision point in between — the real primitive guarantees this),
+    /// then re-acquire once notified and rescheduled.
+    fn condvar_wait(&self, me: usize, cv_id: usize, mutex_id: usize) {
+        let mut st = self.lock_state();
+        if st.aborting {
+            drop(st);
+            panic::panic_any(AbortRun);
+        }
+        debug_assert_eq!(st.mutexes[mutex_id], Some(me));
+        st.mutexes[mutex_id] = None;
+        st.threads[me] = ThreadState::BlockedCondvar { cv: cv_id, mutex: mutex_id };
+        self.pick_next(&mut st);
+        self.cv.notify_all();
+        st = self.wait_my_turn(st, me);
+        // the scheduler only picked us once the mutex was free, and no
+        // other thread has run since the pick
+        st.mutexes[mutex_id] = Some(me);
+    }
+
+    fn wait_all_finished(&self) {
+        let mut st = self.lock_state();
+        while !st.threads.iter().all(|&t| t == ThreadState::Finished) {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+pub mod sync {
+    use super::*;
+
+    pub use std::sync::Arc;
+
+    /// Model-checked mutex.  The payload lives in an `UnsafeCell`;
+    /// exclusivity is the scheduler's logical ownership (one thread runs
+    /// at a time, and a guard only exists while its thread owns the
+    /// mutex id), with happens-before provided by the scheduler's own
+    /// lock on every handoff.
+    pub struct Mutex<T> {
+        id: usize,
+        data: UnsafeCell<T>,
+    }
+
+    // SAFETY: access to `data` is serialized by the scheduler — a
+    // `MutexGuard` is only handed to the single running thread after it
+    // acquired logical ownership under the scheduler's std mutex, which
+    // also carries the memory fence between consecutive owners.
+    unsafe impl<T: Send> Send for Mutex<T> {}
+    // SAFETY: as above — `&Mutex<T>` only yields `&T`/`&mut T` through a
+    // guard, and guards are exclusive across threads by construction.
+    unsafe impl<T: Send> Sync for Mutex<T> {}
+
+    pub struct MutexGuard<'a, T> {
+        mutex: &'a Mutex<T>,
+    }
+
+    impl<T> Mutex<T> {
+        /// Register a mutex with the ambient scheduler: like every loom
+        /// primitive, only constructible inside [`crate::model`].
+        #[allow(clippy::new_without_default)]
+        pub fn new(value: T) -> Mutex<T> {
+            let (sched, _) = current();
+            Mutex { id: sched.register_mutex(), data: UnsafeCell::new(value) }
+        }
+
+        pub fn lock(&self) -> std::sync::LockResult<MutexGuard<'_, T>> {
+            let (sched, me) = current();
+            sched.visible_op(me, |st| {
+                if st.mutexes[self.id].is_none() {
+                    st.mutexes[self.id] = Some(me);
+                    Some(())
+                } else {
+                    st.threads[me] = ThreadState::BlockedMutex(self.id);
+                    None
+                }
+            });
+            Ok(MutexGuard { mutex: self })
+        }
+    }
+
+    impl<T> std::ops::Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            // SAFETY: this guard's thread holds the scheduler-tracked
+            // ownership of `mutex.id` until drop; no other guard exists.
+            unsafe { &*self.mutex.data.get() }
+        }
+    }
+
+    impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            // SAFETY: as in `deref` — exclusive logical ownership.
+            unsafe { &mut *self.mutex.data.get() }
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            let (sched, me) = current();
+            let mut st = sched.lock_state();
+            debug_assert_eq!(st.mutexes[self.mutex.id], Some(me));
+            st.mutexes[self.mutex.id] = None;
+        }
+    }
+
+    pub struct Condvar {
+        id: usize,
+    }
+
+    impl Condvar {
+        #[allow(clippy::new_without_default)]
+        pub fn new() -> Condvar {
+            let (sched, _) = current();
+            Condvar { id: sched.register_condvar() }
+        }
+
+        pub fn wait<'a, T>(
+            &self,
+            guard: MutexGuard<'a, T>,
+        ) -> std::sync::LockResult<MutexGuard<'a, T>> {
+            let (sched, me) = current();
+            let mutex = guard.mutex;
+            // released by the scheduler inside `condvar_wait`, not by
+            // the guard's destructor
+            std::mem::forget(guard);
+            sched.condvar_wait(me, self.id, mutex.id);
+            Ok(MutexGuard { mutex })
+        }
+
+        pub fn notify_all(&self) {
+            let (sched, me) = current();
+            sched.visible_op(me, |st| {
+                for t in 0..st.threads.len() {
+                    if let ThreadState::BlockedCondvar { cv, mutex } = st.threads[t] {
+                        if cv == self.id {
+                            st.threads[t] = ThreadState::BlockedMutex(mutex);
+                        }
+                    }
+                }
+                Some(())
+            });
+        }
+
+        /// Wakes the lowest-id waiter (real loom branches over which).
+        pub fn notify_one(&self) {
+            let (sched, me) = current();
+            sched.visible_op(me, |st| {
+                for t in 0..st.threads.len() {
+                    if let ThreadState::BlockedCondvar { cv, mutex } = st.threads[t] {
+                        if cv == self.id {
+                            st.threads[t] = ThreadState::BlockedMutex(mutex);
+                            break;
+                        }
+                    }
+                }
+                Some(())
+            });
+        }
+    }
+}
+
+pub mod thread {
+    use super::*;
+
+    pub struct JoinHandle<T> {
+        tid: usize,
+        rx: mpsc::Receiver<T>,
+        os: Option<std::thread::JoinHandle<()>>,
+    }
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let (sched, me) = current();
+        let tid = sched.register_thread();
+        let (tx, rx) = mpsc::channel();
+        let child_sched = StdArc::clone(&sched);
+        let os = std::thread::Builder::new()
+            .name(format!("loom-{tid}"))
+            .spawn(move || {
+                CURRENT.with(|c| *c.borrow_mut() = Some((StdArc::clone(&child_sched), tid)));
+                // park until first scheduled
+                let st = child_sched.lock_state();
+                let result = panic::catch_unwind(AssertUnwindSafe(|| {
+                    let st = child_sched.wait_my_turn(st, tid);
+                    drop(st);
+                    f()
+                }));
+                match result {
+                    Ok(v) => {
+                        // the value is on the channel before Finished is
+                        // visible, so join's try_recv below cannot miss
+                        let _ = tx.send(v);
+                        child_sched.finish(tid, None);
+                    }
+                    Err(e) if e.is::<AbortRun>() => child_sched.finish(tid, None),
+                    Err(e) => child_sched.finish(tid, Some(e)),
+                }
+            })
+            .expect("spawn loom model thread");
+        // the spawn itself is a visible op: the child is runnable from
+        // here on, and may be scheduled before the parent continues
+        sched.visible_op(me, |_| Some(()));
+        JoinHandle { tid, rx, os: Some(os) }
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn join(mut self) -> std::thread::Result<T> {
+            let (sched, me) = current();
+            sched.visible_op(me, |st| {
+                if st.threads[self.tid] == ThreadState::Finished {
+                    Some(())
+                } else {
+                    st.threads[me] = ThreadState::BlockedJoin(self.tid);
+                    None
+                }
+            });
+            // the logical thread is finished: its OS thread makes no
+            // further scheduler calls, so a blocking join is safe
+            if let Some(os) = self.os.take() {
+                let _ = os.join();
+            }
+            self.rx
+                .try_recv()
+                .map_err(|_| Box::new("loom model thread panicked") as Box<dyn std::any::Any + Send>)
+        }
+    }
+}
+
+fn run_once(
+    f: &StdArc<dyn Fn() + Send + Sync>,
+    prefix: &[usize],
+) -> (Vec<(usize, usize)>, Option<Box<dyn std::any::Any + Send>>, Option<String>) {
+    let sched = StdArc::new(Scheduler::new(prefix.to_vec()));
+    let f = StdArc::clone(f);
+    let s = StdArc::clone(&sched);
+    let main = std::thread::Builder::new()
+        .name("loom-0".to_string())
+        .spawn(move || {
+            CURRENT.with(|c| *c.borrow_mut() = Some((StdArc::clone(&s), 0)));
+            let result = panic::catch_unwind(AssertUnwindSafe(|| f()));
+            match result {
+                Ok(()) => s.finish(0, None),
+                Err(e) if e.is::<AbortRun>() => s.finish(0, None),
+                Err(e) => s.finish(0, Some(e)),
+            }
+        })
+        .expect("spawn loom model main thread");
+    let _ = main.join();
+    sched.wait_all_finished();
+    let mut st = sched.lock_state();
+    (st.trace.clone(), st.panic_payload.take(), st.deadlock.take())
+}
+
+/// Exhaustively run `f` under every sequentially-consistent
+/// interleaving of its visible operations.  Panics — replaying the
+/// failing decision vector — if any interleaving panics or deadlocks.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let f: StdArc<dyn Fn() + Send + Sync> = StdArc::new(f);
+    let max_iters: u64 = std::env::var("CROSSROI_LOOM_MAX_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1_000_000);
+    let mut prefix: Vec<usize> = Vec::new();
+    let mut iters: u64 = 0;
+    loop {
+        iters += 1;
+        let (trace, panicked, deadlock) = run_once(&f, &prefix);
+        if let Some(msg) = deadlock {
+            panic!("loom-stub: {msg} (interleaving {iters})");
+        }
+        if let Some(p) = panicked {
+            eprintln!(
+                "loom-stub: interleaving {iters} failed; decision vector {:?}",
+                trace.iter().map(|&(c, _)| c).collect::<Vec<_>>()
+            );
+            panic::resume_unwind(p);
+        }
+        // deepest decision with an unexplored sibling → next branch
+        match trace.iter().rposition(|&(c, n)| c + 1 < n) {
+            None => break,
+            Some(p) => {
+                prefix.clear();
+                prefix.extend(trace[..p].iter().map(|&(c, _)| c));
+                prefix.push(trace[p].0 + 1);
+            }
+        }
+        assert!(
+            iters < max_iters,
+            "loom-stub: model exceeded {max_iters} interleavings; shrink it or raise CROSSROI_LOOM_MAX_ITERS"
+        );
+    }
+    eprintln!("loom-stub: explored {iters} interleavings exhaustively");
+}

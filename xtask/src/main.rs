@@ -1,0 +1,652 @@
+//! `cargo xtask analyze` — the repo's invariant lint driver (DESIGN.md
+//! §11).
+//!
+//! Three repo-specific passes over `rust/src`, each guarding a
+//! determinism or soundness contract the ordinary compiler gates cannot
+//! see:
+//!
+//! 1. **order-determinism** — iterating a `HashMap`/`HashSet` yields an
+//!    arbitrary order, which must never reach serialized or merged
+//!    output.  In the modules that feed such output (`roi/`, `offline/`,
+//!    `query/`, `coordinator/`, `pipeline/`), every hash-collection
+//!    iteration site must either be followed by a sort within the next
+//!    few lines or carry a `// lint: order-insensitive` justification.
+//! 2. **wall-clock hygiene** — `SystemTime` is banned outright, and
+//!    `Instant::now` in the watched modules must be annotated
+//!    `// lint: wall-clock` (site) or `// lint: wall-clock-file` (file
+//!    header) declaring its readings reach only fields zeroed by
+//!    `MethodReport::zero_wall_clock` before byte-comparison.  The pass
+//!    also checks `zero_wall_clock`'s body against the manifest of
+//!    wall-clock field tokens.
+//! 3. **unsafe discipline** — `unsafe` may appear only in the
+//!    allowlisted codec/runtime files, every occurrence needs a
+//!    `// SAFETY:` (or `# Safety` doc section) within the eight lines
+//!    above, and `rust/src/lib.rs` must carry `#[forbid(unsafe_code)]`
+//!    on every module except `codec`/`runtime`, which get
+//!    `#[deny(unsafe_op_in_unsafe_fn)]`.
+//!
+//! The scanners are line-based token matchers (no rustc plumbing, no
+//! dependencies): deliberately conservative, so a false positive is
+//! silenced with an annotation that doubles as reviewer documentation.
+//! Findings go to stdout and `target/xtask-findings.txt` (the CI
+//! artifact); any finding exits nonzero.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Modules whose output is serialized or merged across threads.
+const WATCHED_DIRS: &[&str] = &["roi", "offline", "query", "coordinator", "pipeline"];
+
+/// The only files allowed to contain `unsafe` (SIMD kernels + PJRT FFI).
+const UNSAFE_ALLOWLIST: &[&str] = &[
+    "codec/kernels.rs",
+    "codec/dct.rs",
+    "codec/motion.rs",
+    "codec/entropy.rs",
+    "runtime/client.rs",
+];
+
+/// Hash-collection iteration entry points (pass 1).
+const ITER_METHODS: &[&str] = &[
+    ".iter()",
+    ".into_iter()",
+    ".keys()",
+    ".into_keys()",
+    ".values()",
+    ".into_values()",
+    ".drain(",
+];
+
+/// Tokens `MethodReport::zero_wall_clock` must touch — one per
+/// wall-clock field family (rust/tests/report_shape.rs holds the
+/// compile-time side of this contract).
+const ZERO_WALL_CLOCK_MANIFEST: &[&str] = &[
+    "offline_seconds",
+    "replan_seconds",
+    "replan_done_at",
+    "rec.seconds",
+    "comp.seconds",
+    "comp.queue_wait",
+    "arena_frame_allocs",
+    "arena_pixel_allocs",
+    "arena_pixel_reuses",
+    "arena_grid_allocs",
+    "arena_grid_reuses",
+    "planner_epochs_computed",
+    "planner_components_solved",
+    "planner_max_concurrent",
+    "planner_queue_wait_secs",
+];
+
+/// Lines of sort-following-iteration tolerated by pass 1 (the common
+/// `collect → sort_unstable` idiom).
+const SORT_WINDOW: usize = 6;
+
+/// Lines of `// SAFETY:` lookback tolerated by pass 3.
+const SAFETY_WINDOW: usize = 8;
+
+struct Finding {
+    pass: &'static str,
+    file: String,
+    line: usize,
+    message: String,
+}
+
+/// One scanned source file: raw lines for annotation/comment checks,
+/// comment-stripped lines for token matching, and the index where the
+/// trailing `#[cfg(test)]` section starts (tests are exempt from passes
+/// 1–2 — they do not feed serialized output).
+struct SourceFile {
+    rel: String,
+    raw: Vec<String>,
+    code: Vec<String>,
+    test_start: usize,
+}
+
+impl SourceFile {
+    fn watched(&self) -> bool {
+        WATCHED_DIRS.iter().any(|d| self.rel.starts_with(&format!("{d}/")))
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("analyze") | None => analyze(),
+        Some(other) => {
+            eprintln!("unknown xtask command {other:?} (commands: analyze)");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn analyze() -> ExitCode {
+    // xtask/ lives directly under the repo root
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask sits under the repo root")
+        .to_path_buf();
+    let src = root.join("rust").join("src");
+    let files = load_tree(&src);
+    eprintln!("xtask analyze: scanning {} files under rust/src", files.len());
+
+    let mut findings = Vec::new();
+    let (global_idents, per_file_idents) = hash_idents(&files);
+    findings.extend(pass_order_determinism(&files, &global_idents, &per_file_idents));
+    findings.extend(pass_wall_clock(&files));
+    findings.extend(pass_unsafe_discipline(&files));
+
+    let mut report = String::new();
+    for f in &findings {
+        let _ = writeln!(report, "[{}] rust/src/{}:{}: {}", f.pass, f.file, f.line, f.message);
+    }
+    let _ = fs::create_dir_all(root.join("target"));
+    let _ = fs::write(root.join("target").join("xtask-findings.txt"), &report);
+
+    if findings.is_empty() {
+        eprintln!("xtask analyze: clean (order-determinism, wall-clock, unsafe)");
+        ExitCode::SUCCESS
+    } else {
+        print!("{report}");
+        eprintln!("xtask analyze: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}
+
+// ---------------------------------------------------------------------
+// tree loading + comment stripping
+// ---------------------------------------------------------------------
+
+fn load_tree(src: &Path) -> Vec<SourceFile> {
+    let mut paths = Vec::new();
+    collect_rs(src, &mut paths);
+    paths.sort();
+    paths
+        .into_iter()
+        .map(|p| {
+            let rel = p
+                .strip_prefix(src)
+                .expect("collected under src")
+                .to_string_lossy()
+                .replace('\\', "/");
+            let text = fs::read_to_string(&p)
+                .unwrap_or_else(|e| panic!("read {}: {e}", p.display()));
+            let raw: Vec<String> = text.lines().map(str::to_string).collect();
+            let mut in_block = false;
+            let code: Vec<String> =
+                raw.iter().map(|l| strip_comments(l, &mut in_block)).collect();
+            // the test *module* (`#[cfg(test)] mod …`) ends the scanned
+            // region; a bare `#[cfg(test)]` on a free fn (test hooks
+            // interleaved with real code, e.g. roi/setcover.rs) does not
+            let test_start = raw
+                .iter()
+                .enumerate()
+                .position(|(i, l)| {
+                    l.trim() == "#[cfg(test)]"
+                        && raw.get(i + 1).is_some_and(|n| n.trim_start().starts_with("mod "))
+                })
+                .unwrap_or(raw.len());
+            SourceFile { rel, raw, code, test_start }
+        })
+        .collect()
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = fs::read_dir(dir).unwrap_or_else(|e| panic!("read_dir {}: {e}", dir.display()));
+    for entry in entries {
+        let path = entry.expect("dir entry").path();
+        if path.is_dir() {
+            collect_rs(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Strip `//` line comments and `/* */` block comments, preserving
+/// string literals (a `//` inside a string is not a comment) and char
+/// literals (a lifetime's `'` does not open one).
+fn strip_comments(line: &str, in_block: &mut bool) -> String {
+    let b = line.as_bytes();
+    let mut out = String::with_capacity(line.len());
+    let mut i = 0;
+    let mut in_str = false;
+    while i < b.len() {
+        if *in_block {
+            if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                *in_block = false;
+                i += 2;
+            } else {
+                i += 1;
+            }
+            continue;
+        }
+        let c = b[i];
+        if in_str {
+            out.push(c as char);
+            if c == b'\\' && i + 1 < b.len() {
+                out.push(b[i + 1] as char);
+                i += 2;
+                continue;
+            }
+            if c == b'"' {
+                in_str = false;
+            }
+            i += 1;
+            continue;
+        }
+        match c {
+            b'"' => {
+                in_str = true;
+                out.push('"');
+                i += 1;
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => break,
+            b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                *in_block = true;
+                i += 2;
+            }
+            b'\'' => {
+                // a closing quote 2–3 bytes on means a char literal
+                // ('x' or '\n'); otherwise it is a lifetime tick
+                let close = [i + 2, i + 3].into_iter().find(|&j| j < b.len() && b[j] == b'\'');
+                match close {
+                    Some(j) => {
+                        for &k in b.iter().take(j + 1).skip(i) {
+                            out.push(k as char);
+                        }
+                        i = j + 1;
+                    }
+                    None => {
+                        out.push('\'');
+                        i += 1;
+                    }
+                }
+            }
+            _ => {
+                out.push(c as char);
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// `word` present in `hay` with non-identifier bytes (or edges) on both
+/// sides.
+fn has_word(hay: &str, word: &str) -> bool {
+    let h = hay.as_bytes();
+    let mut start = 0;
+    while let Some(p) = hay[start..].find(word) {
+        let p = start + p;
+        let left_ok = p == 0 || !is_ident_byte(h[p - 1]);
+        let end = p + word.len();
+        let right_ok = end >= h.len() || !is_ident_byte(h[end]);
+        if left_ok && right_ok {
+            return true;
+        }
+        start = p + 1;
+    }
+    false
+}
+
+fn mentions_hash_type(line: &str) -> bool {
+    has_word(line, "HashMap") || has_word(line, "HashSet")
+}
+
+// ---------------------------------------------------------------------
+// pass 1: order-determinism
+// ---------------------------------------------------------------------
+
+/// Collect identifiers declared with a hash-collection type: per file
+/// (every `name: ..Hash..` and `let name = ..Hash..` form) and globally
+/// (public fields only — the names that cross file boundaries, like
+/// `Solution::tiles`).
+fn hash_idents(
+    files: &[SourceFile],
+) -> (BTreeSet<String>, BTreeMap<String, BTreeSet<String>>) {
+    let mut global = BTreeSet::new();
+    let mut per_file: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for f in files {
+        let mine = per_file.entry(f.rel.clone()).or_default();
+        for line in f.code.iter().take(f.test_start) {
+            if !mentions_hash_type(line) {
+                continue;
+            }
+            let trimmed = line.trim_start();
+            if trimmed.starts_with("use ") {
+                continue;
+            }
+            if let Some(ident) = let_binding_ident(trimmed) {
+                mine.insert(ident);
+            }
+            for ty in ["HashMap", "HashSet"] {
+                let mut start = 0;
+                while let Some(p) = line[start..].find(ty) {
+                    let p = start + p;
+                    if let Some(ident) = typed_ident_before(line, p) {
+                        if line.contains("pub ") {
+                            global.insert(ident.clone());
+                        }
+                        mine.insert(ident);
+                    }
+                    start = p + 1;
+                }
+            }
+        }
+    }
+    (global, per_file)
+}
+
+/// `let [mut] name` at the start of a line that mentions a hash type.
+fn let_binding_ident(trimmed: &str) -> Option<String> {
+    let rest = trimmed.strip_prefix("let ")?;
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+    let b = rest.as_bytes();
+    let end = b.iter().position(|&c| !is_ident_byte(c)).unwrap_or(b.len());
+    if end == 0 || b[0].is_ascii_digit() {
+        return None;
+    }
+    Some(rest[..end].to_string())
+}
+
+/// The identifier annotated with the type at byte `p`: walks back over
+/// the type expression to its `:` (skipping `::` path separators), then
+/// takes the identifier before it.  `None` when the text between is not
+/// type-like (e.g. a `-> HashSet<..>` return position).
+fn typed_ident_before(line: &str, p: usize) -> Option<String> {
+    let b = line.as_bytes();
+    let mut search_end = p;
+    let colon = loop {
+        let c = line[..search_end].rfind(':')?;
+        if c > 0 && b[c - 1] == b':' {
+            search_end = c - 1;
+            continue;
+        }
+        break c;
+    };
+    let between = &line[colon + 1..p];
+    if !between
+        .bytes()
+        .all(|c| c.is_ascii_alphanumeric() || b" \t<&'(),[]_:".contains(&c))
+    {
+        return None;
+    }
+    let mut s = colon;
+    while s > 0 && is_ident_byte(b[s - 1]) {
+        s -= 1;
+    }
+    let ident = &line[s..colon];
+    if ident.is_empty() || ident.as_bytes()[0].is_ascii_digit() {
+        return None;
+    }
+    Some(ident.to_string())
+}
+
+/// Receiver expression of a method call ending at byte `dot` (the `.`):
+/// the maximal run of identifier bytes, `.`, `[`, `]` before it.
+fn receiver_before(line: &str, dot: usize) -> &str {
+    let b = line.as_bytes();
+    let mut s = dot;
+    while s > 0 {
+        let c = b[s - 1];
+        if is_ident_byte(c) || c == b'.' || c == b'[' || c == b']' {
+            s -= 1;
+        } else {
+            break;
+        }
+    }
+    &line[s..dot]
+}
+
+fn pass_order_determinism(
+    files: &[SourceFile],
+    global: &BTreeSet<String>,
+    per_file: &BTreeMap<String, BTreeSet<String>>,
+) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for f in files.iter().filter(|f| f.watched()) {
+        let empty = BTreeSet::new();
+        let mine = per_file.get(&f.rel).unwrap_or(&empty);
+        let known = |expr: &str| {
+            mentions_hash_type(expr)
+                || global.iter().chain(mine.iter()).any(|id| has_word(expr, id))
+        };
+        for (i, line) in f.code.iter().enumerate().take(f.test_start) {
+            let mut hit = false;
+            for m in ITER_METHODS {
+                let mut start = 0;
+                while let Some(p) = line[start..].find(m) {
+                    let p = start + p;
+                    if known(receiver_before(line, p)) {
+                        hit = true;
+                    }
+                    start = p + 1;
+                }
+            }
+            let trimmed = line.trim_start();
+            if trimmed.starts_with("for ") {
+                if let Some(pos) = trimmed.find(" in ") {
+                    let expr = trimmed[pos + 4..].trim_end_matches('{').trim();
+                    if known(expr) {
+                        hit = true;
+                    }
+                }
+            }
+            if hit && !order_site_ok(f, i) {
+                findings.push(Finding {
+                    pass: "order-determinism",
+                    file: f.rel.clone(),
+                    line: i + 1,
+                    message: format!(
+                        "hash-collection iteration in a serialized-output module needs a \
+                         following sort or a `// lint: order-insensitive` justification: \
+                         `{}`",
+                        line.trim()
+                    ),
+                });
+            }
+        }
+    }
+    findings
+}
+
+/// A flagged iteration site is fine if annotated (same line or the two
+/// comment lines above) or if a sort lands within [`SORT_WINDOW`] lines.
+fn order_site_ok(f: &SourceFile, i: usize) -> bool {
+    if annotated(f, i, "lint: order-insensitive") {
+        return true;
+    }
+    f.code[i..=(i + SORT_WINDOW).min(f.code.len() - 1)]
+        .iter()
+        .any(|l| l.contains(".sort"))
+}
+
+/// `tag` on the site's own line or in a comment within the two lines
+/// above it.
+fn annotated(f: &SourceFile, i: usize, tag: &str) -> bool {
+    if f.raw[i].contains(tag) {
+        return true;
+    }
+    (i.saturating_sub(2)..i).any(|j| {
+        let t = f.raw[j].trim_start();
+        t.starts_with("//") && t.contains(tag)
+    })
+}
+
+// ---------------------------------------------------------------------
+// pass 2: wall-clock hygiene
+// ---------------------------------------------------------------------
+
+fn pass_wall_clock(files: &[SourceFile]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for f in files {
+        let file_annotated = f.raw.iter().any(|l| l.contains("lint: wall-clock-file"));
+        for (i, line) in f.code.iter().enumerate().take(f.test_start) {
+            if has_word(line, "SystemTime") {
+                findings.push(Finding {
+                    pass: "wall-clock",
+                    file: f.rel.clone(),
+                    line: i + 1,
+                    message: "SystemTime is banned: reports are byte-compared across runs"
+                        .to_string(),
+                });
+            }
+            if line.contains("Instant::now") && f.watched() && !file_annotated
+                && !annotated(f, i, "lint: wall-clock")
+            {
+                findings.push(Finding {
+                    pass: "wall-clock",
+                    file: f.rel.clone(),
+                    line: i + 1,
+                    message: "Instant::now in a serialized-output module needs a \
+                              `// lint: wall-clock` justification (readings must only \
+                              reach fields zeroed by zero_wall_clock)"
+                        .to_string(),
+                });
+            }
+        }
+    }
+    findings.extend(check_zero_wall_clock(files));
+    findings
+}
+
+/// Structural check of `MethodReport::zero_wall_clock`: its body must
+/// mention every token of the wall-clock field manifest.
+fn check_zero_wall_clock(files: &[SourceFile]) -> Vec<Finding> {
+    let Some(f) = files.iter().find(|f| f.rel == "coordinator/metrics.rs") else {
+        return vec![Finding {
+            pass: "wall-clock",
+            file: "coordinator/metrics.rs".to_string(),
+            line: 1,
+            message: "file not found (zero_wall_clock manifest check)".to_string(),
+        }];
+    };
+    let Some(start) = f.code.iter().position(|l| l.contains("fn zero_wall_clock")) else {
+        return vec![Finding {
+            pass: "wall-clock",
+            file: f.rel.clone(),
+            line: 1,
+            message: "fn zero_wall_clock not found".to_string(),
+        }];
+    };
+    // brace-match the function body
+    let mut depth = 0i32;
+    let mut entered = false;
+    let mut body = String::new();
+    for line in &f.code[start..] {
+        for c in line.bytes() {
+            match c {
+                b'{' => {
+                    depth += 1;
+                    entered = true;
+                }
+                b'}' => depth -= 1,
+                _ => {}
+            }
+        }
+        body.push_str(line);
+        body.push('\n');
+        if entered && depth == 0 {
+            break;
+        }
+    }
+    ZERO_WALL_CLOCK_MANIFEST
+        .iter()
+        .filter(|tok| !body.contains(*tok))
+        .map(|tok| Finding {
+            pass: "wall-clock",
+            file: f.rel.clone(),
+            line: start + 1,
+            message: format!(
+                "zero_wall_clock does not touch `{tok}` — a wall-clock field family \
+                 escaped normalization (or the manifest in xtask/src/main.rs is stale)"
+            ),
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// pass 3: unsafe discipline
+// ---------------------------------------------------------------------
+
+fn pass_unsafe_discipline(files: &[SourceFile]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    for f in files {
+        let allowed = UNSAFE_ALLOWLIST.contains(&f.rel.as_str());
+        for (i, line) in f.code.iter().enumerate() {
+            if !has_word(line, "unsafe") {
+                continue;
+            }
+            if !allowed {
+                findings.push(Finding {
+                    pass: "unsafe",
+                    file: f.rel.clone(),
+                    line: i + 1,
+                    message: "unsafe outside the codec/runtime allowlist".to_string(),
+                });
+            } else if !safety_documented(f, i) {
+                findings.push(Finding {
+                    pass: "unsafe",
+                    file: f.rel.clone(),
+                    line: i + 1,
+                    message: format!(
+                        "unsafe without a `// SAFETY:` (or `# Safety` doc) within {SAFETY_WINDOW} \
+                         lines above"
+                    ),
+                });
+            }
+        }
+    }
+    findings.extend(check_lib_attributes(files));
+    findings
+}
+
+fn safety_documented(f: &SourceFile, i: usize) -> bool {
+    (i.saturating_sub(SAFETY_WINDOW)..=i)
+        .any(|j| f.raw[j].contains("SAFETY:") || f.raw[j].contains("# Safety"))
+}
+
+/// `lib.rs` must pin the per-module unsafe posture: `forbid(unsafe_code)`
+/// everywhere, except `deny(unsafe_op_in_unsafe_fn)` on the two modules
+/// of the allowlist.
+fn check_lib_attributes(files: &[SourceFile]) -> Vec<Finding> {
+    let Some(f) = files.iter().find(|f| f.rel == "lib.rs") else {
+        return vec![Finding {
+            pass: "unsafe",
+            file: "lib.rs".to_string(),
+            line: 1,
+            message: "lib.rs not found (module attribute check)".to_string(),
+        }];
+    };
+    let mut findings = Vec::new();
+    for (i, line) in f.code.iter().enumerate() {
+        let trimmed = line.trim();
+        let Some(name) = trimmed.strip_prefix("pub mod ").and_then(|r| r.strip_suffix(';'))
+        else {
+            continue;
+        };
+        let expected = if name == "codec" || name == "runtime" {
+            "#[deny(unsafe_op_in_unsafe_fn)]"
+        } else {
+            "#[forbid(unsafe_code)]"
+        };
+        let found = (i.saturating_sub(2)..i).any(|j| f.code[j].trim() == expected);
+        if !found {
+            findings.push(Finding {
+                pass: "unsafe",
+                file: f.rel.clone(),
+                line: i + 1,
+                message: format!("`pub mod {name}` is missing its `{expected}` attribute"),
+            });
+        }
+    }
+    findings
+}
