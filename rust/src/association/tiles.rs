@@ -7,7 +7,13 @@ use crate::util::geometry::{IRect, Rect};
 /// A tile identified globally across all cameras.
 pub type GlobalTile = u32;
 
-/// Tiling geometry for a fleet of (equal-resolution) cameras.
+/// Tiling geometry for a fleet of cameras.  `frame_w × frame_h` is the
+/// fleet *envelope*: homogeneous fleets use it directly, heterogeneous
+/// fleets ([`Tiling::heterogeneous`]) index every camera on the envelope
+/// grid (so global tile ids stay a flat `cam × per_camera` space) while
+/// [`Tiling::appearance_region`] clamps each camera to its own active
+/// frame — tiles outside a camera's frame can never enter a region, so
+/// the optimizer never assigns them.
 #[derive(Debug, Clone)]
 pub struct Tiling {
     pub n_cameras: usize,
@@ -16,6 +22,9 @@ pub struct Tiling {
     pub tile_px: u32,
     pub tiles_x: u32,
     pub tiles_y: u32,
+    /// Per-camera active frame sizes for heterogeneous fleets (`None` =
+    /// every camera fills the envelope).
+    pub cam_dims: Option<Vec<(u32, u32)>>,
 }
 
 impl Tiling {
@@ -29,6 +38,35 @@ impl Tiling {
             tile_px,
             tiles_x: frame_w / tile_px,
             tiles_y: frame_h / tile_px,
+            cam_dims: None,
+        }
+    }
+
+    /// Tiling for a mixed-resolution fleet: the envelope is the maximum
+    /// width/height over `dims`, and each camera's appearance regions
+    /// are clamped to its own `(w, h)`.  Every dimension must divide
+    /// into `tile_px` tiles exactly, like [`Tiling::new`].
+    pub fn heterogeneous(dims: &[(u32, u32)], tile_px: u32) -> Tiling {
+        assert!(!dims.is_empty(), "a fleet needs at least one camera");
+        for &(w, h) in dims {
+            assert!(w % tile_px == 0 && h % tile_px == 0,
+                    "camera frame {w}x{h} not a multiple of tile {tile_px}");
+        }
+        let frame_w = dims.iter().map(|&(w, _)| w).max().unwrap();
+        let frame_h = dims.iter().map(|&(_, h)| h).max().unwrap();
+        let mut t = Tiling::new(dims.len(), frame_w, frame_h, tile_px);
+        if dims.iter().any(|&d| d != (frame_w, frame_h)) {
+            t.cam_dims = Some(dims.to_vec());
+        }
+        t
+    }
+
+    /// One camera's active frame size (the envelope unless the fleet is
+    /// heterogeneous).
+    pub fn cam_frame(&self, cam: usize) -> (u32, u32) {
+        match &self.cam_dims {
+            Some(dims) => dims[cam],
+            None => (self.frame_w, self.frame_h),
         }
     }
 
@@ -73,22 +111,28 @@ impl Tiling {
         if bbox.is_empty() {
             return Vec::new();
         }
+        // the camera's own active frame, not the fleet envelope: a
+        // heterogeneous fleet's smaller camera must never claim tiles
+        // past its right/bottom edge
+        let (cam_w, cam_h) = self.cam_frame(cam);
         // A bbox entirely outside the frame covers no tile.  Without this
         // check the clamps below cross (tx0 > tx1 / ty0 > ty1), the extent
         // arithmetic underflows u32, and a bbox fully left/above the frame
         // would alias onto tile column/row 0.
         if bbox.right() <= 0.0
             || bbox.bottom() <= 0.0
-            || bbox.left >= self.frame_w as f64
-            || bbox.top >= self.frame_h as f64
+            || bbox.left >= cam_w as f64
+            || bbox.top >= cam_h as f64
         {
             return Vec::new();
         }
         let t = self.tile_px as f64;
-        let tx0 = ((bbox.left / t).floor().max(0.0) as u32).min(self.tiles_x - 1);
-        let ty0 = ((bbox.top / t).floor().max(0.0) as u32).min(self.tiles_y - 1);
-        let tx1 = (((bbox.right() - 1e-9) / t).floor().max(0.0) as u32).min(self.tiles_x - 1);
-        let ty1 = (((bbox.bottom() - 1e-9) / t).floor().max(0.0) as u32).min(self.tiles_y - 1);
+        let max_tx = cam_w / self.tile_px - 1;
+        let max_ty = cam_h / self.tile_px - 1;
+        let tx0 = ((bbox.left / t).floor().max(0.0) as u32).min(max_tx);
+        let ty0 = ((bbox.top / t).floor().max(0.0) as u32).min(max_ty);
+        let tx1 = (((bbox.right() - 1e-9) / t).floor().max(0.0) as u32).min(max_tx);
+        let ty1 = (((bbox.bottom() - 1e-9) / t).floor().max(0.0) as u32).min(max_ty);
         // a box thinner than the boundary epsilon can still cross clamps
         if tx1 < tx0 || ty1 < ty0 {
             return Vec::new();
@@ -187,6 +231,30 @@ mod tests {
         // degenerate: thinner than the boundary epsilon, sitting exactly on
         // a tile edge (tx1 < tx0 after the epsilon shave)
         assert!(t.appearance_region(0, &Rect::new(32.0, 32.0, 1e-12, 1e-12)).is_empty());
+    }
+
+    #[test]
+    fn heterogeneous_fleet_clamps_regions_per_camera() {
+        // cam 0: the 320x192 envelope; cam 1: a quarter-size 160x96 feed
+        let t = Tiling::heterogeneous(&[(320, 192), (160, 96)], 16);
+        assert_eq!((t.frame_w, t.frame_h), (320, 192));
+        assert_eq!(t.cam_frame(0), (320, 192));
+        assert_eq!(t.cam_frame(1), (160, 96));
+        // same global id space as the homogeneous layout
+        assert_eq!(t.per_camera(), 240);
+        // a bbox valid in the envelope but outside cam 1's active frame
+        let r = Rect::new(200.0, 100.0, 40.0, 40.0);
+        assert!(!t.appearance_region(0, &r).is_empty());
+        assert!(t.appearance_region(1, &r).is_empty());
+        // a bbox crossing cam 1's edge clamps to its last tile, never
+        // the envelope's
+        for &id in &t.appearance_region(1, &Rect::new(150.0, 80.0, 40.0, 40.0)) {
+            let (cam, tx, ty) = t.tile_pos(id);
+            assert_eq!(cam, 1);
+            assert!(tx < 160 / 16 && ty < 96 / 16, "tile ({tx},{ty}) outside cam 1's frame");
+        }
+        // a uniform dims list degrades to the homogeneous layout
+        assert!(Tiling::heterogeneous(&[(320, 192), (320, 192)], 16).cam_dims.is_none());
     }
 
     #[test]

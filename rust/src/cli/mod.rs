@@ -11,6 +11,8 @@ use std::collections::HashMap;
 pub struct Args {
     pub subcommand: Option<String>,
     flags: HashMap<String, String>,
+    /// Values of repeatable flags ([`MULTI_FLAGS`]), in argv order.
+    multi: HashMap<String, Vec<String>>,
     switches: Vec<String>,
     pub positional: Vec<String>,
 }
@@ -22,8 +24,12 @@ pub const VALUE_FLAGS: &[&str] = &[
     "bandwidth-mbps", "qp", "offline-threads", "solver", "shards",
     "replan-every", "replan-drift", "drift-at", "drift-strength",
     "replan-scope", "planner-threads", "intersections", "spacing",
-    "drift-intersection",
+    "drift-intersection", "scenario", "fail",
 ];
+
+/// Value flags that may be given more than once; every occurrence is
+/// kept, in order (a plain [`VALUE_FLAGS`] repeat overwrites).
+pub const MULTI_FLAGS: &[&str] = &["fail"];
 
 impl Args {
     /// Parse `std::env::args()`-style input (without argv[0]).
@@ -34,12 +40,21 @@ impl Args {
             if let Some(name) = tok.strip_prefix("--") {
                 let name = name.to_string();
                 if let Some(eq) = name.find('=') {
-                    out.flags.insert(name[..eq].to_string(), name[eq + 1..].to_string());
+                    let (key, v) = (name[..eq].to_string(), name[eq + 1..].to_string());
+                    if MULTI_FLAGS.contains(&key.as_str()) {
+                        out.multi.entry(key).or_default().push(v);
+                    } else {
+                        out.flags.insert(key, v);
+                    }
                 } else if VALUE_FLAGS.contains(&name.as_str()) {
                     let v = it
                         .next()
                         .with_context(|| format!("flag --{name} expects a value"))?;
-                    out.flags.insert(name, v);
+                    if MULTI_FLAGS.contains(&name.as_str()) {
+                        out.multi.entry(name).or_default().push(v);
+                    } else {
+                        out.flags.insert(name, v);
+                    }
                 } else {
                     out.switches.push(name);
                 }
@@ -72,6 +87,12 @@ impl Args {
                 v.parse::<u64>().with_context(|| format!("--{name} {v:?} is not an integer"))?,
             )),
         }
+    }
+
+    /// Every occurrence of a repeatable flag (see [`MULTI_FLAGS`]), in
+    /// the order given; empty when absent.
+    pub fn multi(&self, name: &str) -> &[String] {
+        self.multi.get(name).map(Vec::as_slice).unwrap_or_default()
     }
 
     pub fn switch(&self, name: &str) -> bool {
@@ -123,6 +144,15 @@ mod tests {
         let a = parse("run --seed abc");
         assert!(a.u64_flag("seed").is_err());
         assert!(a.u64_flag("missing").unwrap().is_none());
+    }
+
+    #[test]
+    fn repeated_multi_flag_keeps_all_values() {
+        let a = parse("run --fail 1@2 --fail=0@3..5 --seed 7 --seed 9");
+        assert_eq!(a.multi("fail"), ["1@2", "0@3..5"]);
+        // Plain value flags still overwrite on repeat.
+        assert_eq!(a.flag("seed"), Some("9"));
+        assert!(a.multi("missing").is_empty());
     }
 
     #[test]

@@ -69,6 +69,58 @@ pub struct ScenarioConfig {
     /// leaving the others stationary — the single-intersection-drift
     /// scenario component-incremental re-planning re-solves selectively.
     pub drift_intersection: i64,
+    /// Camera fault schedule (CLI `--fail cam@t[..t2]`, repeatable):
+    /// each event silences one camera from `start_secs` of the **eval
+    /// window** until `end_secs` (or the end of the run).  Empty (the
+    /// default) disables fault injection entirely.
+    pub faults: Vec<FaultEvent>,
+    /// Rush-hour arrival waves (`--scenario rush-hour`): when positive,
+    /// every arm's arrival rate oscillates with this period — the first
+    /// half of each period runs hot, the second half cold.  `0` (the
+    /// default) keeps arrivals stationary, bit-identical to pre-wave
+    /// builds.
+    pub rush_period_secs: f64,
+    /// Membership-change scenario (`--scenario membership-change`): the
+    /// EW arms of every intersection stay silent until this absolute
+    /// scenario time, then activate — a corridor coming alive mid-run,
+    /// fusing the bridge camera into the intersections' co-occurrence
+    /// components.  `0` (the default) disables the gate.
+    pub corridor_at_secs: f64,
+}
+
+/// One camera outage: the camera stops producing segments at
+/// `start_secs` (eval-window clock) and, if `end_secs` is set, rejoins
+/// there; `None` means it never comes back.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub cam: usize,
+    pub start_secs: f64,
+    pub end_secs: Option<f64>,
+}
+
+impl FaultEvent {
+    /// Parse the CLI form `cam@t` (dropout) or `cam@t..t2` (dropout +
+    /// rejoin), times in seconds into the eval window.
+    pub fn parse(spec: &str) -> Result<FaultEvent> {
+        let (cam, times) = spec
+            .split_once('@')
+            .with_context(|| format!("fault {spec:?}: expected cam@t or cam@t..t2"))?;
+        let cam: usize =
+            cam.parse().with_context(|| format!("fault {spec:?}: bad camera index"))?;
+        let (start, end) = match times.split_once("..") {
+            None => (times, None),
+            Some((a, b)) => (a, Some(b)),
+        };
+        let start_secs: f64 =
+            start.parse().with_context(|| format!("fault {spec:?}: bad start time"))?;
+        let end_secs: Option<f64> = match end {
+            None => None,
+            Some(b) => {
+                Some(b.parse().with_context(|| format!("fault {spec:?}: bad end time"))?)
+            }
+        };
+        Ok(FaultEvent { cam, start_secs, end_secs })
+    }
 }
 
 impl Default for ScenarioConfig {
@@ -91,6 +143,9 @@ impl Default for ScenarioConfig {
             intersection_spacing: 170.0,
             bridge_cameras: false,
             drift_intersection: -1,
+            faults: Vec::new(),
+            rush_period_secs: 0.0,
+            corridor_at_secs: 0.0,
         }
     }
 }
@@ -165,6 +220,29 @@ impl ScenarioConfig {
                 self.n_intersections
             );
         }
+        for f in &self.faults {
+            if f.cam >= self.total_cameras() {
+                bail!(
+                    "fault camera {} out of range (fleet has {} cameras)",
+                    f.cam,
+                    self.total_cameras()
+                );
+            }
+            if !f.start_secs.is_finite() || f.start_secs < 0.0 {
+                bail!("fault start time {} must be finite and non-negative", f.start_secs);
+            }
+            if let Some(end) = f.end_secs {
+                if !end.is_finite() || end <= f.start_secs {
+                    bail!("fault end time {end} must be finite and after start {}", f.start_secs);
+                }
+            }
+        }
+        if !self.rush_period_secs.is_finite() || self.rush_period_secs < 0.0 {
+            bail!("rush_period_secs must be finite and non-negative (0 disables waves)");
+        }
+        if !self.corridor_at_secs.is_finite() || self.corridor_at_secs < 0.0 {
+            bail!("corridor_at_secs must be finite and non-negative (0 disables the gate)");
+        }
         Ok(())
     }
 
@@ -210,6 +288,12 @@ impl ScenarioConfig {
                     bail!("drift_intersection must be an integer, got {v}");
                 }
                 self.drift_intersection = v as i64;
+            }
+            "rush_period_secs" => {
+                self.rush_period_secs = value.as_f64().context("rush_period_secs")?
+            }
+            "corridor_at_secs" => {
+                self.corridor_at_secs = value.as_f64().context("corridor_at_secs")?
             }
             other => bail!("unknown scenario key {other:?}"),
         }
@@ -391,5 +475,42 @@ mod tests {
         assert!(Config::from_toml("[nope]\nx = 1").is_err());
         assert!(Config::from_toml("[scenario]\nn_cameras = 0").is_err());
         assert!(Config::from_toml("[system]\nqp = 99").is_err());
+    }
+
+    #[test]
+    fn fault_event_parsing() {
+        assert_eq!(
+            FaultEvent::parse("2@4.5").unwrap(),
+            FaultEvent { cam: 2, start_secs: 4.5, end_secs: None }
+        );
+        assert_eq!(
+            FaultEvent::parse("0@1..6").unwrap(),
+            FaultEvent { cam: 0, start_secs: 1.0, end_secs: Some(6.0) }
+        );
+        assert!(FaultEvent::parse("nope").is_err());
+        assert!(FaultEvent::parse("x@1").is_err());
+        assert!(FaultEvent::parse("1@x").is_err());
+        assert!(FaultEvent::parse("1@2..y").is_err());
+    }
+
+    #[test]
+    fn fault_schedule_validation() {
+        let mut c = ScenarioConfig::default();
+        c.faults = vec![FaultEvent { cam: 1, start_secs: 3.0, end_secs: Some(9.0) }];
+        c.validate().unwrap();
+        c.faults[0].cam = 99;
+        assert!(c.validate().is_err());
+        c.faults[0] = FaultEvent { cam: 0, start_secs: -1.0, end_secs: None };
+        assert!(c.validate().is_err());
+        c.faults[0] = FaultEvent { cam: 0, start_secs: 5.0, end_secs: Some(4.0) };
+        assert!(c.validate().is_err());
+        c.faults.clear();
+        c.rush_period_secs = -2.0;
+        assert!(c.validate().is_err());
+        c.rush_period_secs = 20.0;
+        c.corridor_at_secs = f64::NAN;
+        assert!(c.validate().is_err());
+        c.corridor_at_secs = 30.0;
+        c.validate().unwrap();
     }
 }

@@ -1,6 +1,6 @@
 //! Metrics reported per method — one row of Fig. 8 / Table 4.
 
-use crate::offline::replan::ReplanRecord;
+use crate::offline::replan::{RepairRecord, ReplanRecord};
 use crate::util::json::Json;
 
 /// End-to-end latency decomposition (Fig. 8f's stacked bars).
@@ -93,6 +93,14 @@ pub struct MethodReport {
     /// into the JSON dump after [`MethodReport::zero_wall_clock`] zeroes
     /// each record's wall-clock `seconds`.
     pub replan_records: Vec<ReplanRecord>,
+    /// One record per fault obligation (dropout repair or rejoin) the
+    /// planner executed: detection latency on the segment-deadline
+    /// liveness clock, repair latency in epochs, and the orphaned /
+    /// re-covered / uncovered tile accounting (DESIGN.md §12).  Each
+    /// record's wall-clock `seconds` is zeroed by
+    /// [`MethodReport::zero_wall_clock`]; everything else is a pure
+    /// function of the fault schedule and the segment grid.
+    pub repair_records: Vec<RepairRecord>,
     // --- buffer-arena diagnostics (DESIGN.md §9; counters depend on
     // thread interleaving, so they are NOT serialized in `to_json` —
     // the byte-compared determinism contract excludes them) ---
@@ -182,6 +190,10 @@ impl MethodReport {
                 "replan_records",
                 Json::Arr(self.replan_records.iter().map(ReplanRecord::to_json).collect()),
             ),
+            (
+                "repair_records",
+                Json::Arr(self.repair_records.iter().map(RepairRecord::to_json).collect()),
+            ),
         ])
     }
 
@@ -199,6 +211,9 @@ impl MethodReport {
                 comp.seconds = 0.0;
                 comp.queue_wait = 0.0;
             }
+        }
+        for rep in &mut self.repair_records {
+            rep.seconds = 0.0;
         }
         self.arena_frame_allocs = 0;
         self.arena_pixel_allocs = 0;
@@ -293,6 +308,41 @@ mod tests {
         }
     }
 
+    fn sample_repair() -> RepairRecord {
+        RepairRecord {
+            cam: 1,
+            kind: "dropout",
+            fail_secs: 4.5,
+            detect_secs: 6.0,
+            detect_latency: 1.5,
+            epoch: 2,
+            repair_latency_epochs: 1,
+            orphaned_tiles: 12,
+            recovered_tiles: 9,
+            uncovered_constraints: 2,
+            seconds: 0.02,
+        }
+    }
+
+    #[test]
+    fn repair_records_round_trip_through_json() {
+        let mut r = MethodReport::default();
+        r.method = "CrossRoI".to_string();
+        r.repair_records = vec![sample_repair()];
+        let text = r.to_json().to_string_pretty(2);
+        let parsed = crate::util::json::parse(&text).unwrap();
+        let records = parsed.get("repair_records").unwrap().as_arr().unwrap();
+        assert_eq!(records.len(), 1);
+        let rec = &records[0];
+        assert_eq!(rec.get("cam").unwrap().as_f64(), Some(1.0));
+        assert_eq!(rec.get("kind").unwrap().as_str(), Some("dropout"));
+        assert_eq!(rec.get("detect_latency").unwrap().as_f64(), Some(1.5));
+        assert_eq!(rec.get("repair_latency_epochs").unwrap().as_f64(), Some(1.0));
+        assert_eq!(rec.get("orphaned_tiles").unwrap().as_f64(), Some(12.0));
+        assert_eq!(rec.get("recovered_tiles").unwrap().as_f64(), Some(9.0));
+        assert_eq!(rec.get("uncovered_constraints").unwrap().as_f64(), Some(2.0));
+    }
+
     #[test]
     fn replan_records_round_trip_through_json() {
         let mut r = MethodReport::default();
@@ -324,6 +374,7 @@ mod tests {
         r.replan_seconds = 1.25;
         r.replan_done_at = vec![10.0, 12.0];
         r.replan_records = vec![sample_record()];
+        r.repair_records = vec![sample_repair()];
         r.arena_frame_allocs = 7;
         r.arena_pixel_allocs = 9;
         r.arena_pixel_reuses = 40;
@@ -346,6 +397,9 @@ mod tests {
         // virtual-clock and outcome fields survive
         assert_eq!(r.replan_records[0].trigger_time, 12.5);
         assert!(r.replan_records[0].replanned);
+        assert_eq!(r.repair_records[0].seconds, 0.0);
+        assert_eq!(r.repair_records[0].detect_latency, 1.5, "detection latency is DES-clock");
+        assert_eq!(r.repair_records[0].repair_latency_epochs, 1);
         assert_eq!(r.arena_pixel_reuses, 0);
         assert_eq!(r.arena_grid_reuses, 0);
         assert_eq!(r.planner_components_solved, 0);

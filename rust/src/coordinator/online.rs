@@ -18,20 +18,22 @@
 //! DES replay timestamps each executed re-plan into the report.
 
 use std::collections::HashSet;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::config::SystemConfig;
 use crate::coordinator::method::Method;
 use crate::coordinator::metrics::{LatencyBreakdown, MethodReport};
-use crate::offline::replan::{Replanner, ReplanRecord};
+use crate::offline::replan::{RepairRecord, Replanner, ReplanRecord};
 use crate::offline::{build_plan_with, OfflinePlan};
 use crate::pipeline::{
     run_pipeline_in, use_roi_path, Arena, BatchedInfer, CameraStages, CarryOverQuery,
-    CodecEncodeStage, DesTransport, FilterStage, Infer, PassThroughFilter, PipelineOptions,
-    PlanEpoch, PlanSchedule, QueryStage, ReductoFilterStage, ReplanContext, SegmentLayout,
-    SimCapture,
+    CodecEncodeStage, DesTransport, FaultContext, FaultTimeline, FilterStage, Infer,
+    LivenessMonitor, PassThroughFilter, PipelineOptions, PlanEpoch, PlanSchedule, QueryStage,
+    ReductoFilterStage, ReplanContext, ReplanPolicy, SegmentLayout, SimCapture,
 };
+use crate::util::geometry::IRect;
 use crate::query;
 use crate::reducto::ReductoFilter;
 use crate::sim::Scenario;
@@ -97,8 +99,38 @@ pub fn run_method_with(
     // offline-profiled Reducto thresholds; later epochs re-derive each
     // camera's threshold from the sliding window whenever a re-plan
     // changes its regions (DESIGN.md §8).
+    // fault schedule resolved onto the segment grid.  Faults suppress
+    // camera output for every method; plan *repair* additionally needs
+    // masks and an epoch cadence, so with `--replan never` a masked
+    // method synthesizes the default cadence in repair-only mode — the
+    // planner wakes only at repair/rejoin epochs and carries every
+    // other boundary by pointer.
+    let has_faults = !cfg.faults.is_empty();
+    let check_every = opts.replan.check_every().or_else(|| {
+        (has_faults && method.uses_roi_masks()).then_some(ReplanPolicy::DEFAULT_CHECK_EVERY)
+    });
+    let faults: Option<Arc<FaultTimeline>> = has_faults.then(|| {
+        // a dead camera's peers are its offline shard members (the
+        // cameras whose constraints its coverage was traded against);
+        // unsharded plans fall back to one fleet-wide component
+        let components: Vec<Vec<usize>> = if plan.report.shards.is_empty() {
+            vec![(0..n_cams).collect()]
+        } else {
+            plan.report.shards.iter().map(|s| s.cameras.clone()).collect()
+        };
+        Arc::new(FaultTimeline::new(
+            &cfg.faults,
+            n_cams,
+            layout.n_segments(),
+            frames_per_segment,
+            fps,
+            check_every.unwrap_or(ReplanPolicy::DEFAULT_CHECK_EVERY),
+            eval.start,
+            &components,
+        ))
+    });
     let replan_setup: Option<(PlanSchedule, Replanner<'_>)> =
-        match (opts.replan.check_every(), method.uses_roi_masks()) {
+        match (check_every, method.uses_roi_masks()) {
             (Some(check_every), true) => {
                 let epoch0 = PlanEpoch::initial(
                     plan.groups.clone(),
@@ -108,7 +140,7 @@ pub fn run_method_with(
                     plan.masks.total_size(),
                 );
                 let schedule = PlanSchedule::new(layout.n_segments(), check_every, epoch0);
-                let replanner = Replanner::new(
+                let mut replanner = Replanner::new(
                     scenario,
                     sys,
                     method,
@@ -120,6 +152,9 @@ pub fn run_method_with(
                     infer.n_blocks(),
                 )
                 .with_planner_threads(opts.planner_threads);
+                if let Some(t) = &faults {
+                    replanner = replanner.with_faults(Arc::clone(t));
+                }
                 Some((schedule, replanner))
             }
             _ => None,
@@ -152,7 +187,12 @@ pub fn run_method_with(
         objectness_threshold: sys.objectness_threshold,
         eval_start: eval.start,
         arena: Some(&arena),
+        fault: faults.as_deref(),
     };
+    let fault_ctx = faults.as_ref().map(|t| FaultContext {
+        timeline: Arc::clone(t),
+        full_frame: IRect::new(0, 0, plan.masks.tiling.frame_w, plan.masks.tiling.frame_h),
+    });
     let out = run_pipeline_in(
         cams,
         &server,
@@ -161,11 +201,34 @@ pub fn run_method_with(
         replan_setup
             .as_ref()
             .map(|(schedule, planner)| ReplanContext { schedule, planner }),
+        fault_ctx.as_ref(),
         &arena,
     )?;
     let replan_records: Vec<ReplanRecord> =
         replan_setup.as_ref().map(|(_, r)| r.records()).unwrap_or_default();
+    let repair_records: Vec<RepairRecord> =
+        replan_setup.as_ref().map(|(_, r)| r.repair_records()).unwrap_or_default();
     let pool = replan_setup.as_ref().map(|(_, r)| r.pool_stats()).unwrap_or_default();
+
+    // cross-check the segment-deadline liveness monitor against the
+    // timeline that actually drove repair: every silence the DES replay
+    // detects must be a segment the fault schedule explains
+    if let Some(t) = &faults {
+        let mut monitor = LivenessMonitor::new(n_cams, layout.n_segments(), sys.segment_secs);
+        for s in &out.segments {
+            monitor.observe(s.cam, s.seg, s.capture_end);
+        }
+        for sil in monitor.silences() {
+            debug_assert!(
+                t.down_seg(sil.cam, sil.seg),
+                "liveness monitor flagged cam {} seg {} (deadline {:.2}s) but the fault \
+                 timeline does not explain it",
+                sil.cam,
+                sil.seg,
+                sil.deadline,
+            );
+        }
+    }
 
     // ---- query scoring (carry-over for filtered frames) ----
     let reported = CarryOverQuery.fuse(&out.frame_sets, n_frames);
@@ -256,6 +319,7 @@ pub fn run_method_with(
         replan_seconds: replan_records.iter().map(|r| r.seconds).sum(),
         replan_done_at,
         replan_records,
+        repair_records,
         arena_frame_allocs: out.arena.frame_allocs,
         arena_pixel_allocs: out.arena.pixel_allocs,
         arena_pixel_reuses: out.arena.pixel_reuses,

@@ -53,6 +53,12 @@ flags:
   --planner-threads <n>    worker threads for one re-plan epoch's compute
                            phase (drift profile + fired-component solves;
                            0 = inherit --offline-threads, the default)
+  --fail <cam@t[..t2]>     sim: camera `cam` (0-based) goes silent at eval
+                           time t; with `..t2` it rejoins at t2. Repeatable,
+                           one camera per occurrence
+  --scenario <name>        fault/scenario preset: dropout|rejoin|rush-hour|
+                           membership-change (applied before other flags'
+                           validation; --fail composes with it)
   --drift-at <s>           sim: shift the traffic flow between the two
                            roads at scenario time s (0 = stationary)
   --drift-strength <s>     sim: drift magnitude in [0,1] (default 0.75)
@@ -132,9 +138,43 @@ fn build_config(args: &Args) -> Result<Config> {
             .parse::<i64>()
             .map_err(|_| anyhow::anyhow!("--drift-intersection {v:?} is not an integer"))?;
     }
+    if let Some(name) = args.flag("scenario") {
+        apply_scenario_preset(&mut cfg, name)?;
+    }
+    for spec in args.multi("fail") {
+        cfg.scenario.faults.push(crossroi::config::FaultEvent::parse(spec)?);
+    }
     cfg.scenario.validate()?;
     cfg.system.validate()?;
     Ok(cfg)
+}
+
+/// Named fault/scenario presets; they compose with explicit `--fail`
+/// flags and are derived from the (already flag-adjusted) window lengths.
+fn apply_scenario_preset(cfg: &mut Config, name: &str) -> Result<()> {
+    use crossroi::config::FaultEvent;
+    let eval = cfg.scenario.eval_secs;
+    match name {
+        "dropout" => cfg.scenario.faults.push(FaultEvent {
+            cam: 1,
+            start_secs: 0.3 * eval,
+            end_secs: None,
+        }),
+        "rejoin" => cfg.scenario.faults.push(FaultEvent {
+            cam: 1,
+            start_secs: 0.25 * eval,
+            end_secs: Some(0.6 * eval),
+        }),
+        "rush-hour" => cfg.scenario.rush_period_secs = eval / 2.0,
+        "membership-change" => {
+            cfg.scenario.n_intersections = cfg.scenario.n_intersections.max(2);
+            cfg.scenario.n_cameras = cfg.scenario.n_cameras.min(4);
+            cfg.scenario.bridge_cameras = true;
+            cfg.scenario.corridor_at_secs = cfg.scenario.profile_secs + 0.3 * eval;
+        }
+        other => bail!("unknown --scenario {other:?} (dropout|rejoin|rush-hour|membership-change)"),
+    }
+    Ok(())
 }
 
 fn parse_method(args: &Args) -> Result<Method> {
@@ -287,6 +327,26 @@ fn run() -> Result<()> {
                         report.planner_queue_wait_secs
                     );
                 }
+            }
+            if !report.repair_records.is_empty() {
+                let drops =
+                    report.repair_records.iter().filter(|r| r.kind == "dropout").count();
+                let orphaned: usize =
+                    report.repair_records.iter().map(|r| r.orphaned_tiles).sum();
+                let recovered: usize =
+                    report.repair_records.iter().map(|r| r.recovered_tiles).sum();
+                let uncovered: usize =
+                    report.repair_records.iter().map(|r| r.uncovered_constraints).sum();
+                println!(
+                    "  plan repair: {} record(s) ({} dropout, {} rejoin), \
+                     {} orphaned tiles, {} re-covered, {} uncovered",
+                    report.repair_records.len(),
+                    drops,
+                    report.repair_records.len() - drops,
+                    orphaned,
+                    recovered,
+                    uncovered
+                );
             }
             Ok(())
         }

@@ -89,6 +89,13 @@ impl<E> Des<E> {
         self.at(self.now + delay.max(0.0), event);
     }
 
+    /// The next event's time and payload without popping it; the clock
+    /// does not advance (liveness monitors use this to check whether a
+    /// deadline is due before draining).
+    pub fn peek(&self) -> Option<(f64, &E)> {
+        self.queue.peek().map(|s| (s.time, &s.event))
+    }
+
     /// Pop the next event, advancing the clock.
     pub fn pop(&mut self) -> Option<(f64, E)> {
         let s = self.queue.pop()?;
@@ -193,6 +200,20 @@ mod tests {
         des.at(0.0, 4);
         let order: Vec<u32> = std::iter::from_fn(|| des.pop().map(|(_, e)| e)).collect();
         assert_eq!(order, vec![4, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn peek_does_not_advance_the_clock() {
+        let mut des: Des<u32> = Des::new();
+        des.at(2.0, 7);
+        des.at(1.0, 3);
+        assert_eq!(des.peek(), Some((1.0, &3)));
+        assert_eq!(des.now(), 0.0);
+        assert_eq!(des.processed(), 0);
+        assert_eq!(des.pop(), Some((1.0, 3)));
+        assert_eq!(des.peek(), Some((2.0, &7)));
+        des.pop();
+        assert_eq!(des.peek(), None);
     }
 
     #[test]

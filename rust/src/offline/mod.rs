@@ -35,7 +35,7 @@ pub mod replan;
 pub mod shard;
 pub mod solve;
 
-pub use replan::{ComponentRecord, PlannerPoolStats, ReplanRecord, Replanner};
+pub use replan::{ComponentRecord, PlannerPoolStats, RepairRecord, ReplanRecord, Replanner};
 pub use shard::{spill, ShardMode, SpillGroup, SpillPartition};
 pub use solve::SolverKind;
 

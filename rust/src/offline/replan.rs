@@ -41,7 +41,7 @@
 //! them the whole run, stay byte-identical across thread counts
 //! (`rust/tests/replan.rs`, `rust/tests/component_replan.rs`).
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
@@ -56,7 +56,7 @@ use crate::coordinator::method::Method;
 use crate::offline::solve::SolverKind;
 use crate::offline::{associate, filter, group, shard, solve, OfflineOptions, OfflinePlan};
 use crate::pipeline::infer::use_roi_path;
-use crate::pipeline::replan::{EpochPlanner, PlanEpoch, ReplanPolicy, ReplanScope};
+use crate::pipeline::replan::{EpochPlanner, FaultTimeline, PlanEpoch, ReplanPolicy, ReplanScope};
 use crate::reid::error_model::{ErrorModelParams, RawReid};
 use crate::roi::masks::RoiMasks;
 use crate::roi::setcover::Solution;
@@ -224,6 +224,64 @@ impl ComponentRecord {
     }
 }
 
+/// One fault obligation's outcome: what the repair (or rejoin) epoch's
+/// re-solve did about a dead camera's orphaned coverage.  Serialized
+/// under `repair_records` in the `MethodReport` dump; `seconds` is
+/// wall-clock and zeroed by `MethodReport::zero_wall_clock`.
+#[derive(Debug, Clone)]
+pub struct RepairRecord {
+    /// The failed (or rejoining) camera.
+    pub cam: usize,
+    /// "dropout" (coverage repair after a silence) or "rejoin"
+    /// (re-admission with a re-derived frame-filter threshold).
+    pub kind: &'static str,
+    /// Fault onset (eval-window seconds, from the config).
+    pub fail_secs: f64,
+    /// When the segment-deadline liveness monitor could first know: the
+    /// first missed segment's deadline.
+    pub detect_secs: f64,
+    /// `detect_secs - fail_secs`.
+    pub detect_latency: f64,
+    /// Planning epoch this record's re-solve ran at.
+    pub epoch: usize,
+    /// Epochs between the boundary current at detection (re-admission
+    /// for rejoins) and this re-solve — 1 for every repair that lands.
+    pub repair_latency_epochs: usize,
+    /// Tiles the dead camera owned in the previous solution (what the
+    /// failure orphaned).  0 for rejoins.
+    pub orphaned_tiles: usize,
+    /// Dropout: tiles the re-solve newly placed on surviving cameras.
+    /// Rejoin: tiles the re-admitted camera owns again.
+    pub recovered_tiles: usize,
+    /// Appearance groups in the (unfiltered) window visible *only* to
+    /// currently-dead cameras — coverage no live camera can take over,
+    /// recorded rather than silently lost.
+    pub uncovered_constraints: usize,
+    /// Wall seconds of the epoch that executed this repair (zeroed by
+    /// `zero_wall_clock`).
+    pub seconds: f64,
+}
+
+impl RepairRecord {
+    /// Full record as JSON — nested under `repair_records` in the
+    /// `MethodReport` dump.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cam", Json::Num(self.cam as f64)),
+            ("kind", Json::Str(self.kind.to_string())),
+            ("fail_secs", Json::Num(self.fail_secs)),
+            ("detect_secs", Json::Num(self.detect_secs)),
+            ("detect_latency", Json::Num(self.detect_latency)),
+            ("epoch", Json::Num(self.epoch as f64)),
+            ("repair_latency_epochs", Json::Num(self.repair_latency_epochs as f64)),
+            ("orphaned_tiles", Json::Num(self.orphaned_tiles as f64)),
+            ("recovered_tiles", Json::Num(self.recovered_tiles as f64)),
+            ("uncovered_constraints", Json::Num(self.uncovered_constraints as f64)),
+            ("seconds", Json::Num(self.seconds)),
+        ])
+    }
+}
+
 /// Chained re-plan state: everything epoch `k` inherits from `k - 1`.
 struct ReplanState {
     prev_solution: Solution,
@@ -246,6 +304,7 @@ struct ReplanState {
     /// baseline, replaced whenever an epoch fires.
     prev_components: Vec<Vec<usize>>,
     records: Vec<ReplanRecord>,
+    repair_records: Vec<RepairRecord>,
 }
 
 /// The coordinator's [`EpochPlanner`]: sliding-window, warm-started,
@@ -285,6 +344,11 @@ pub struct Replanner<'a> {
     /// Concurrency gauge over the fired-component fan-out — feeds the
     /// planner-pool counters beside (never inside) byte-compared output.
     pool: PoolGauge,
+    /// Fault schedule resolved onto the segment grid (`None` = no
+    /// faults).  Repair and rejoin epochs force the affected component
+    /// to fire; a currently-dead camera's window records are filtered
+    /// out of the re-solve so surviving cameras re-cover its tiles.
+    faults: Option<Arc<FaultTimeline>>,
     /// Epoch boundaries whose compute phase ran (carried or fired).
     epochs_computed: AtomicUsize,
     /// Chained state behind the snapshot → compute → commit protocol
@@ -342,12 +406,14 @@ impl<'a> Replanner<'a> {
             renderer: OnceCell::new(),
             planner_threads: 0,
             pool: PoolGauge::new(),
+            faults: None,
             epochs_computed: AtomicUsize::new(0),
             state: StateCell::new(ReplanState {
                 prev_solution: solution_of(&initial.masks),
                 prev_constraints: None,
                 prev_components: Vec::new(),
                 records: Vec::new(),
+                repair_records: Vec::new(),
             }),
             tiling: initial.masks.tiling.clone(),
         }
@@ -357,6 +423,15 @@ impl<'a> Replanner<'a> {
     /// the offline planner's `effective_threads`; the default).
     pub fn with_planner_threads(mut self, threads: usize) -> Replanner<'a> {
         self.planner_threads = threads;
+        self
+    }
+
+    /// Attach a resolved fault schedule: repair and rejoin epochs fire
+    /// the affected component out of band (even under
+    /// [`ReplanPolicy::Never`]) and dead cameras' records and tiles are
+    /// excluded from the re-solve until they rejoin.
+    pub fn with_faults(mut self, timeline: Arc<FaultTimeline>) -> Replanner<'a> {
+        self.faults = if timeline.is_empty() { None } else { Some(timeline) };
         self
     }
 
@@ -383,6 +458,11 @@ impl<'a> Replanner<'a> {
     /// Every boundary's outcome so far, in epoch order.
     pub fn records(&self) -> Vec<ReplanRecord> {
         self.state.snapshot(|st| st.records.clone())
+    }
+
+    /// Every fault obligation's repair outcome so far, in epoch order.
+    pub fn repair_records(&self) -> Vec<RepairRecord> {
+        self.state.snapshot(|st| st.repair_records.clone())
     }
 
     /// The window's camera partition under this re-planner's scope.
@@ -441,10 +521,24 @@ impl EpochPlanner for Replanner<'_> {
         prev: &Arc<PlanEpoch>,
     ) -> Result<Arc<PlanEpoch>> {
         let t0 = Instant::now();
+        // fault obligations landing at this boundary (a repair or rejoin
+        // epoch forces its component to fire below, regardless of drift)
+        let event = self.faults.as_deref().is_some_and(|t| t.has_event_at(k));
+        if matches!(self.policy, ReplanPolicy::Never) && !event {
+            // repair-only mode: boundaries with no fault obligation carry
+            // by pointer without paying a window profile (and without
+            // counting as a computed epoch or a boundary record)
+            return Ok(prev.clone());
+        }
         self.epochs_computed.fetch_add(1, Ordering::Relaxed);
         let threads = self.effective_planner_threads();
         let trigger_time = (start_seg * self.frames_per_segment) as f64 / self.fps;
         let n_cams = self.tiling.n_cameras;
+        // cameras currently down: their window records must not anchor
+        // the re-solve, and their tiles are orphaned rather than carried
+        let dead_now: Vec<bool> = (0..n_cams)
+            .map(|c| self.faults.as_deref().is_some_and(|t| t.down_seg(c, start_seg)))
+            .collect();
 
         // ---- compute phase (no state lock held anywhere below until the
         // commit): snapshot → decide → solve in parallel → merge ----
@@ -463,6 +557,20 @@ impl EpochPlanner for Replanner<'_> {
             &ErrorModelParams::default(),
             threads,
         );
+        // coverage no live camera can take over — counted on the raw
+        // window before dead cameras' records are filtered out, so the
+        // loss is recorded instead of silently vanishing with the filter
+        let uncovered_now = if event { uncovered_groups(&stream, &dead_now) } else { 0 };
+        // the sliding window reaches back across the fault onset: a dead
+        // camera's pre-fault records (and a rejoined camera's records
+        // from inside its own outage) would hand the solver coverage
+        // that no longer exists, so both are filtered out before the
+        // partition and the solves
+        let stream = match self.faults.as_deref() {
+            Some(t) => stream
+                .filtered(|d| !dead_now[d.cam] && !t.down_frame(d.cam, window.start + d.frame)),
+            None => stream,
+        };
 
         // drift signal on the *raw* (unfiltered) association table — one
         // linear pass, comparable with the raw baseline, and it keeps
@@ -549,6 +657,16 @@ impl EpochPlanner for Replanner<'_> {
         for &t in &prev_solution.tiles {
             comp_has_tiles[comp_of_cam[self.tiling.camera_of(t)]] = true;
         }
+        // repair / rejoin obligations: the affected camera's component
+        // must fire at this boundary regardless of drift
+        let mut force_cam = vec![false; n_cams];
+        if let Some(t) = self.faults.as_deref() {
+            for &c in t.force_fire_cams(k) {
+                if c < n_cams {
+                    force_cam[c] = true;
+                }
+            }
+        }
         let fired: Vec<bool> = (0..comps.len())
             .map(|i| {
                 fire_decision(
@@ -557,11 +675,11 @@ impl EpochPlanner for Replanner<'_> {
                     comp_drift[i],
                     !comp_constraints[i].is_empty(),
                     comp_has_tiles[i],
-                )
+                ) || comps[i].iter().any(|&c| force_cam[c])
             })
             .collect();
 
-        if !fired.iter().any(|&f| f) {
+        if !fired.iter().any(|&f| f) && !event {
             // fully carried: the drift baseline intentionally stays the
             // window(s) the *current masks* were solved on, so slow
             // cumulative drift accumulates until it crosses the threshold
@@ -617,7 +735,10 @@ impl EpochPlanner for Replanner<'_> {
             .tiles
             .iter()
             .copied()
-            .filter(|&t| !fired_cam[self.tiling.camera_of(t)])
+            .filter(|&t| {
+                let cam = self.tiling.camera_of(t);
+                !fired_cam[cam] && !dead_now[cam]
+            })
             .collect();
         let frame = (self.tiling.frame_w as f64, self.tiling.frame_h as f64);
 
@@ -656,12 +777,25 @@ impl EpochPlanner for Replanner<'_> {
                 let (solution, solver, degraded) =
                     match solve::solve_spilled(&assoc.table, self.opts.solver, seed, &sp) {
                         Ok(s) => (s, self.opts.solver.name(), false),
-                        Err(_) => (
-                            solve::solve_spilled(&assoc.table, SolverKind::Greedy, seed, &sp)
-                                .expect("the greedy solver never fails"),
-                            SolverKind::Greedy.name(),
-                            true,
-                        ),
+                        Err(_) => match solve::solve_spilled(
+                            &assoc.table,
+                            SolverKind::Greedy,
+                            seed,
+                            &sp,
+                        ) {
+                            Ok(s) => (s, SolverKind::Greedy.name(), true),
+                            // no solver could take the window (however it
+                            // got malformed): carry the component's
+                            // previous tiles forward and record it — a
+                            // planner-thread panic here would kill every
+                            // subsequent epoch of the run
+                            Err(_) => {
+                                let mut s =
+                                    component_carry(&prev_solution, comp, &self.tiling);
+                                s.tiles.retain(|&t| !dead_now[self.tiling.camera_of(t)]);
+                                (s, "degraded-carry", true)
+                            }
+                        },
                     };
                 ComponentSolve {
                     tiles: solution.tiles,
@@ -679,6 +813,10 @@ impl EpochPlanner for Replanner<'_> {
         // interleave with fired ones exactly as the sequential loop did)
         let mut solves = solves.into_iter();
         let mut components: Vec<ComponentRecord> = Vec::with_capacity(comps.len());
+        // a fault event with nothing to fire (e.g. a dead camera whose
+        // whole component vanished from the window) still rebuilds masks
+        // — the dead tiles must clear — but records itself as carried
+        let any_fired = !fired_idx.is_empty();
         let mut all_warm = true;
         let mut degraded = false;
         for (i, comp) in comps.iter().enumerate() {
@@ -741,6 +879,60 @@ impl EpochPlanner for Replanner<'_> {
             mask_tiles,
         });
 
+        // repair bookkeeping: each fault obligation landing at this
+        // boundary gets a record of what the re-solve did about it —
+        // pure functions of the solutions on either side of the solve,
+        // so the records are byte-identical across thread counts
+        let mut repairs: Vec<RepairRecord> = Vec::new();
+        if let Some(t) = self.faults.as_deref() {
+            let ce = t.check_every().max(1);
+            for s in t.repairs_at(k) {
+                let orphaned = prev_solution
+                    .tiles
+                    .iter()
+                    .filter(|&&g| self.tiling.camera_of(g) == s.cam)
+                    .count();
+                // tiles the re-solve newly placed on surviving cameras —
+                // the orphaned coverage live peers took over
+                let recovered = tiles
+                    .iter()
+                    .filter(|&&g| {
+                        self.tiling.camera_of(g) != s.cam && !prev_solution.tiles.contains(&g)
+                    })
+                    .count();
+                repairs.push(RepairRecord {
+                    cam: s.cam,
+                    kind: "dropout",
+                    fail_secs: s.fail_secs,
+                    detect_secs: s.detect_secs,
+                    detect_latency: s.detect_latency,
+                    epoch: k,
+                    repair_latency_epochs: s.repair_latency_epochs(ce),
+                    orphaned_tiles: orphaned,
+                    recovered_tiles: recovered,
+                    uncovered_constraints: uncovered_now,
+                    seconds: t0.elapsed().as_secs_f64(),
+                });
+            }
+            for s in t.rejoins_at(k) {
+                let readmitted =
+                    tiles.iter().filter(|&&g| self.tiling.camera_of(g) == s.cam).count();
+                repairs.push(RepairRecord {
+                    cam: s.cam,
+                    kind: "rejoin",
+                    fail_secs: s.fail_secs,
+                    detect_secs: s.detect_secs,
+                    detect_latency: s.detect_latency,
+                    epoch: k,
+                    repair_latency_epochs: s.up_from.map_or(0, |u| k.saturating_sub(u / ce)),
+                    orphaned_tiles: 0,
+                    recovered_tiles: readmitted,
+                    uncovered_constraints: uncovered_now,
+                    seconds: t0.elapsed().as_secs_f64(),
+                });
+            }
+        }
+
         // ---- commit phase, one atomic `StateCell::commit`: baseline
         // update (fired components adopt their window constraints and
         // the new partition becomes the component-diff reference;
@@ -763,16 +955,23 @@ impl EpochPlanner for Replanner<'_> {
             }
             st.prev_components = comps;
             st.prev_solution = Solution { tiles, unsatisfiable: 0 };
+            st.repair_records.extend(repairs);
             st.records.push(ReplanRecord {
                 epoch: k,
                 start_seg,
                 trigger_time,
                 seconds: t0.elapsed().as_secs_f64(),
-                replanned: true,
-                warm: all_warm,
+                replanned: any_fired,
+                warm: any_fired && all_warm,
                 constraint_drift: drift,
                 mask_churn: churn,
-                solver: if degraded { SolverKind::Greedy.name() } else { self.opts.solver.name() },
+                solver: if !any_fired {
+                    "carried"
+                } else if degraded {
+                    SolverKind::Greedy.name()
+                } else {
+                    self.opts.solver.name()
+                },
                 n_constraints: raw_table.n_constraints(),
                 mask_tiles,
                 scope: self.scope.name(),
@@ -804,6 +1003,39 @@ struct ComponentSolve {
 /// baseline without bound.
 fn baseline_keeps(c: &Constraint, tiling: &Tiling, fired_cam: &[bool]) -> bool {
     first_camera(c, tiling).is_some_and(|cam| !fired_cam[cam])
+}
+
+/// Last-resort fallback when every solver rejected a fired component's
+/// window: the previous solution restricted to the component's cameras.
+/// Exact for the same reason the quiescent carry is — tiles are
+/// camera-owned and components are camera-disjoint — so the component
+/// keeps streaming its stale (but valid) RoIs instead of killing the
+/// planner thread.
+fn component_carry(prev: &Solution, comp: &[usize], tiling: &Tiling) -> Solution {
+    let tiles = prev
+        .tiles
+        .iter()
+        .copied()
+        .filter(|&t| comp.contains(&tiling.camera_of(t)))
+        .collect();
+    Solution { tiles, unsatisfiable: 0 }
+}
+
+/// Distinct appearance groups (same frame, same raw identity) in the raw
+/// window whose every record sits on a currently-dead camera — query
+/// opportunities no live camera can re-cover.  Recorded on the repair
+/// record (graceful degradation) instead of aborting the solve.
+fn uncovered_groups(stream: &crate::reid::records::ReidStream, dead: &[bool]) -> usize {
+    if !dead.iter().any(|&d| d) {
+        return 0;
+    }
+    let mut groups: HashMap<(usize, u32), bool> = HashMap::new();
+    for d in stream.all() {
+        let all_dead = groups.entry((d.frame, d.raw_id)).or_insert(true);
+        *all_dead &= dead[d.cam];
+    }
+    // lint: order-insensitive — counts a predicate over the map
+    groups.values().filter(|&&all_dead| all_dead).count()
 }
 
 /// The global tile set of per-camera masks, as a warm-start seed.
@@ -909,6 +1141,7 @@ mod tests {
     use super::*;
     use crate::config::Config;
     use crate::offline::build_plan;
+    use crate::reid::records::{RawDetection, ReidStream};
 
     fn table_from(regions: Vec<Vec<Vec<GlobalTile>>>) -> AssociationTable {
         let n = regions.len();
@@ -928,6 +1161,43 @@ mod tests {
             None,
             plan.masks.total_size(),
         ))
+    }
+
+    #[test]
+    fn component_carry_restricts_to_the_component() {
+        // tiling: 2 cameras × (20×12) tiles each
+        let tiling = Tiling::new(2, 320, 192, 16);
+        let per_cam = tiling.per_camera();
+        let prev = Solution {
+            tiles: [0, 1, per_cam, per_cam + 3].into_iter().collect(),
+            unsatisfiable: 2,
+        };
+        let carry = component_carry(&prev, &[1], &tiling);
+        assert_eq!(carry.tiles, [per_cam, per_cam + 3].into_iter().collect::<HashSet<_>>());
+        assert_eq!(carry.unsatisfiable, 0, "the carry asserts nothing about coverage");
+        assert!(component_carry(&prev, &[], &tiling).tiles.is_empty());
+    }
+
+    #[test]
+    fn uncovered_groups_counts_dead_only_appearances() {
+        let det = |cam: usize, frame: usize, raw_id: u32| RawDetection {
+            cam,
+            frame,
+            bbox: crate::util::geometry::Rect::new(0.0, 0.0, 16.0, 16.0),
+            raw_id,
+            true_id: raw_id,
+        };
+        // id 1 @ frame 0 seen by cams 1+2 (one dead, one live: covered);
+        // id 2 @ frame 1 seen only by dead cam 1 (uncovered);
+        // id 2 @ frame 2 seen only by live cam 0 (covered)
+        let s = ReidStream::new(
+            3,
+            3,
+            vec![det(1, 0, 1), det(2, 0, 1), det(1, 1, 2), det(0, 2, 2)],
+        );
+        assert_eq!(uncovered_groups(&s, &[false, true, false]), 1);
+        assert_eq!(uncovered_groups(&s, &[false, false, false]), 0);
+        assert_eq!(uncovered_groups(&s, &[true, true, true]), 3);
     }
 
     #[test]

@@ -200,6 +200,10 @@ pub struct BatchedInfer<'a> {
     pub use_roi: &'a [bool],
     /// Re-profiling epoch schedule (`None` = static plan).
     pub schedule: Option<&'a crate::pipeline::replan::PlanSchedule>,
+    /// Fault timeline (`None` = no faults): a degraded segment streamed
+    /// full-frame is inferred on the dense path regardless of its epoch's
+    /// RoI policy — its pixels cover the whole frame, not the mask.
+    pub fault: Option<&'a crate::pipeline::replan::FaultTimeline>,
     pub objectness_threshold: f64,
     /// Absolute frame index of the evaluation window's first frame.
     pub eval_start: usize,
@@ -227,10 +231,13 @@ impl InferStage for BatchedInfer<'_> {
                 .collect();
         let mut requests = Vec::new();
         for (s, epoch) in segments.iter().zip(&epoch_plans) {
-            let (blocks, use_roi): (&[i32], bool) = match epoch {
+            let (blocks, mut use_roi): (&[i32], bool) = match epoch {
                 Some(p) => (p.blocks[s.cam].as_slice(), p.use_roi[s.cam]),
                 None => (self.blocks[s.cam].as_slice(), self.use_roi[s.cam]),
             };
+            if self.fault.is_some_and(|t| t.degraded_seg(s.cam, s.seg)) {
+                use_roi = false;
+            }
             for job in &s.jobs {
                 requests.push(InferRequest {
                     frame: &job.pixels,
@@ -346,6 +353,7 @@ mod tests {
             blocks: &blocks,
             use_roi: &use_roi,
             schedule: None,
+            fault: None,
             objectness_threshold: 0.25,
             eval_start: sc.eval_range().start,
             arena: Some(&arena),

@@ -61,10 +61,13 @@ pub use infer::{
     DENSE_FALLBACK_FRACTION,
 };
 pub use query::{CarryOverQuery, QueryStage};
-pub use replan::{EpochPlanner, PlanEpoch, PlanSchedule, ReplanPolicy, ReplanScope};
+pub use replan::{
+    EpochPlanner, FaultContext, FaultSchedule, FaultTimeline, LivenessMonitor, PlanEpoch,
+    PlanSchedule, ReplanPolicy, ReplanScope, Silence,
+};
 pub use runner::{
-    run_pipeline, run_pipeline_in, run_pipeline_with_replan, CameraStages, Parallelism,
-    PipelineOptions, PipelineOutput, ReplanContext,
+    run_pipeline, run_pipeline_faulted, run_pipeline_in, run_pipeline_with_replan, CameraStages,
+    Parallelism, PipelineOptions, PipelineOutput, ReplanContext,
 };
 pub use stage::{
     CameraSegment, CaptureStage, EncodeStage, FilterStage, InferJob, SegmentLayout,

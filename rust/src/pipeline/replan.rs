@@ -24,10 +24,13 @@
 //! [`PlanSchedule::wait`] in the degenerate case where it reaches a
 //! boundary before the planner has published that epoch.
 
+use std::collections::BTreeSet;
 use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::config::FaultEvent;
+use crate::net::Des;
 use crate::util::geometry::IRect;
 use crate::util::sync::EpochTable;
 
@@ -221,6 +224,325 @@ impl PlanSchedule {
     }
 }
 
+// ---- fault injection & liveness ----------------------------------------
+//
+// A `--fail cam@t[..t2]` schedule is resolved once, up front, onto the
+// run's segment grid: which segments each camera fails to deliver, when
+// the coordinator can first *know* (the first missed segment deadline),
+// which planning epoch repairs the coverage hole, and which epoch
+// re-admits a rejoining camera.  Everything below is a pure function of
+// the config and the grid — never of worker timing — which is what keeps
+// fault handling inside the byte-identity contract: the planner, the
+// camera workers and the server-side inference all consult the same
+// timeline instead of reacting to live arrivals.  The DES-driven
+// `LivenessMonitor` closes the loop after the run by replaying the
+// recorded arrivals against the same deadlines and confirming the
+// timeline's predicted silences are exactly the ones the transport saw.
+
+/// One fault's resolved schedule on the segment grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSchedule {
+    /// Camera index.
+    pub cam: usize,
+    /// Fault onset (eval-window seconds, straight from the config).
+    pub fail_secs: f64,
+    /// First segment the camera fails to deliver.
+    pub down_from: usize,
+    /// First segment delivered again (`None`: down for the rest of the
+    /// run, or the configured rejoin lands past the last segment).
+    pub up_from: Option<usize>,
+    /// When the liveness monitor detects the silence: the deadline of
+    /// the first missed segment, `(down_from + 1) * segment_secs`.
+    pub detect_secs: f64,
+    /// `detect_secs - fail_secs`.
+    pub detect_latency: f64,
+    /// Epoch whose plan re-covers the orphaned tiles (`None`: the run
+    /// ends before another epoch boundary; surviving peers degrade to
+    /// full-frame for the remainder instead).
+    pub repair_epoch: Option<usize>,
+    /// Epoch that re-admits the camera after `up_from` (`None`: no
+    /// rejoin, or no boundary left).
+    pub rejoin_epoch: Option<usize>,
+}
+
+impl FaultSchedule {
+    /// Repair latency in epochs from the epoch that was current at
+    /// detection (always 1 when a repair epoch exists: the next
+    /// boundary).
+    pub fn repair_latency_epochs(&self, check_every: usize) -> usize {
+        match self.repair_epoch {
+            Some(k) => k.saturating_sub(self.down_from / check_every.max(1)),
+            None => 0,
+        }
+    }
+}
+
+/// The full fault schedule resolved onto one run's segment grid: per
+///-(camera, segment) down/degraded flags plus the per-epoch repair and
+/// rejoin obligations the planner must honour.
+#[derive(Debug, Clone, Default)]
+pub struct FaultTimeline {
+    n_segments: usize,
+    frames_per_segment: usize,
+    eval_start: usize,
+    segment_secs: f64,
+    check_every: usize,
+    /// `down[cam][seg]`: the camera delivers nothing for this segment.
+    down: Vec<Vec<bool>>,
+    /// `degraded[cam][seg]`: the camera streams full-frame (capture mask
+    /// and frame filter off) while waiting for a repair plan.
+    degraded: Vec<Vec<bool>>,
+    schedules: Vec<FaultSchedule>,
+    /// Cameras whose component must fire at each epoch (sorted, deduped).
+    force_fire: Vec<Vec<usize>>,
+}
+
+impl FaultTimeline {
+    /// Resolve `faults` onto a grid of `n_segments` segments of
+    /// `frames_per_segment` frames at `fps`, with planning epochs of
+    /// `check_every` segments.  `eval_start` is the absolute frame the
+    /// eval window (and fault clock) starts at; `components` is the
+    /// initial co-occurrence partition (a dead camera's peers — the
+    /// cameras that can re-cover its tiles — are its component members).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        faults: &[FaultEvent],
+        n_cams: usize,
+        n_segments: usize,
+        frames_per_segment: usize,
+        fps: f64,
+        check_every: usize,
+        eval_start: usize,
+        components: &[Vec<usize>],
+    ) -> FaultTimeline {
+        let check_every = check_every.max(1);
+        let n_epochs = n_segments.div_ceil(check_every).max(1);
+        let segment_secs = frames_per_segment as f64 / fps;
+        let mut down = vec![vec![false; n_segments]; n_cams];
+        let mut degraded = vec![vec![false; n_segments]; n_cams];
+        let mut schedules = Vec::new();
+        let mut force: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); n_epochs];
+        for f in faults {
+            // a segment is lost iff the outage covers its start
+            let down_from = (f.start_secs / segment_secs).ceil() as usize;
+            let up_raw = f.end_secs.map(|e| (e / segment_secs).ceil() as usize);
+            let down_until = up_raw.unwrap_or(n_segments).min(n_segments);
+            if down_from >= down_until {
+                continue; // the outage falls between segment boundaries
+            }
+            for s in down_from..down_until {
+                down[f.cam][s] = true;
+            }
+            let epoch_at_detection = (down_from / check_every).min(n_epochs - 1);
+            let repair_epoch = (epoch_at_detection + 1 < n_epochs).then_some(epoch_at_detection + 1);
+            let up_from = up_raw.filter(|&u| u < n_segments);
+            let rejoin_epoch = up_from.and_then(|u| {
+                let k = u.div_ceil(check_every).max(1);
+                (k < n_epochs).then_some(k)
+            });
+            // Surviving peers stream full-frame from the segment after
+            // detection until the repair plan lands (or the run ends).
+            let component = components.iter().find(|c| c.contains(&f.cam));
+            let repair_start =
+                repair_epoch.map_or(n_segments, |k| (k * check_every).min(n_segments));
+            if let Some(comp) = component {
+                for &p in comp.iter().filter(|&&p| p != f.cam) {
+                    for s in (down_from + 1).min(n_segments)..repair_start {
+                        degraded[p][s] = true;
+                    }
+                }
+            }
+            // A re-admitted camera streams full-frame until its
+            // re-derived plan (and Reducto threshold) lands.
+            if let Some(u) = up_from {
+                let rejoin_start =
+                    rejoin_epoch.map_or(n_segments, |k| (k * check_every).min(n_segments));
+                for s in u..rejoin_start {
+                    degraded[f.cam][s] = true;
+                }
+            }
+            let members: Vec<usize> = component.cloned().unwrap_or_else(|| vec![f.cam]);
+            if let Some(k) = repair_epoch {
+                force[k].extend(members.iter().copied());
+            }
+            if let Some(k) = rejoin_epoch {
+                force[k].extend(members.iter().copied());
+            }
+            schedules.push(FaultSchedule {
+                cam: f.cam,
+                fail_secs: f.start_secs,
+                down_from,
+                up_from,
+                detect_secs: (down_from + 1) as f64 * segment_secs,
+                detect_latency: (down_from + 1) as f64 * segment_secs - f.start_secs,
+                repair_epoch,
+                rejoin_epoch,
+            });
+        }
+        FaultTimeline {
+            n_segments,
+            frames_per_segment,
+            eval_start,
+            segment_secs,
+            check_every,
+            down,
+            degraded,
+            schedules,
+            force_fire: force.into_iter().map(|s| s.into_iter().collect()).collect(),
+        }
+    }
+
+    /// No fault ever materialises on this grid.
+    pub fn is_empty(&self) -> bool {
+        self.schedules.is_empty()
+    }
+
+    /// The camera delivers nothing for this segment.
+    pub fn down_seg(&self, cam: usize, seg: usize) -> bool {
+        self.down.get(cam).and_then(|v| v.get(seg)).copied().unwrap_or(false)
+    }
+
+    /// The camera streams full-frame (capture mask and frame filter off)
+    /// for this segment, waiting for a repair or re-admission plan.
+    pub fn degraded_seg(&self, cam: usize, seg: usize) -> bool {
+        self.degraded.get(cam).and_then(|v| v.get(seg)).copied().unwrap_or(false)
+    }
+
+    /// Whether an absolute scenario frame falls in one of the camera's
+    /// down segments, for profile-window filtering: a dead camera's
+    /// frames contribute no constraints.  Frames before the eval window
+    /// (the fault clock's origin) are never down.
+    pub fn down_frame(&self, cam: usize, abs_frame: usize) -> bool {
+        if abs_frame < self.eval_start || self.frames_per_segment == 0 {
+            return false;
+        }
+        self.down_seg(cam, (abs_frame - self.eval_start) / self.frames_per_segment)
+    }
+
+    /// Cameras whose current component must fire at epoch `k` (sorted,
+    /// deduped): the members of every component owing a repair or a
+    /// rejoin at this boundary.
+    pub fn force_fire_cams(&self, k: usize) -> &[usize] {
+        self.force_fire.get(k).map(Vec::as_slice).unwrap_or_default()
+    }
+
+    /// Does any repair or rejoin land at epoch `k`?
+    pub fn has_event_at(&self, k: usize) -> bool {
+        self.force_fire.get(k).is_some_and(|v| !v.is_empty())
+    }
+
+    /// Dropout repairs landing at epoch `k`.
+    pub fn repairs_at(&self, k: usize) -> impl Iterator<Item = &FaultSchedule> {
+        self.schedules.iter().filter(move |s| s.repair_epoch == Some(k))
+    }
+
+    /// Rejoin re-admissions landing at epoch `k`.
+    pub fn rejoins_at(&self, k: usize) -> impl Iterator<Item = &FaultSchedule> {
+        self.schedules.iter().filter(move |s| s.rejoin_epoch == Some(k))
+    }
+
+    /// Every materialised fault, in config order.
+    pub fn schedules(&self) -> &[FaultSchedule] {
+        &self.schedules
+    }
+
+    pub fn segment_secs(&self) -> f64 {
+        self.segment_secs
+    }
+
+    pub fn check_every(&self) -> usize {
+        self.check_every
+    }
+
+    pub fn n_segments(&self) -> usize {
+        self.n_segments
+    }
+}
+
+/// What the camera workers need to act the faults out: the resolved
+/// timeline plus the full-frame rect degraded cameras fall back to.
+#[derive(Debug, Clone)]
+pub struct FaultContext {
+    pub timeline: Arc<FaultTimeline>,
+    /// The whole frame, as a codec region (degraded cameras encode it).
+    pub full_frame: IRect,
+}
+
+/// One detected silence: camera `cam` missed segment `seg`'s deadline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Silence {
+    pub cam: usize,
+    pub seg: usize,
+    /// Virtual time the deadline fired.
+    pub deadline: f64,
+}
+
+/// Segment-deadline liveness monitor, DES-driven: every camera owes one
+/// segment per `segment_secs` window, and a deadline that fires before
+/// that segment was seen is a silence.  The coordinator replays the
+/// recorded arrivals through this after the run, as an end-to-end check
+/// that the config-derived [`FaultTimeline`] matches what the DES replay
+/// actually delivered (and unit tests drive it directly).
+pub struct LivenessMonitor {
+    des: Des<LivenessEvent>,
+    n_cams: usize,
+    n_segments: usize,
+    segment_secs: f64,
+    delivered: Vec<Vec<bool>>,
+}
+
+#[derive(Debug)]
+enum LivenessEvent {
+    Seen { cam: usize, seg: usize },
+    Deadline { cam: usize, seg: usize },
+}
+
+impl LivenessMonitor {
+    pub fn new(n_cams: usize, n_segments: usize, segment_secs: f64) -> LivenessMonitor {
+        LivenessMonitor {
+            des: Des::new(),
+            n_cams,
+            n_segments,
+            segment_secs,
+            delivered: vec![vec![false; n_segments]; n_cams],
+        }
+    }
+
+    /// Record a delivered segment at its `capture_end` timestamp.
+    pub fn observe(&mut self, cam: usize, seg: usize, capture_end: f64) {
+        if cam < self.n_cams && seg < self.n_segments {
+            self.des.at(capture_end, LivenessEvent::Seen { cam, seg });
+        }
+    }
+
+    /// Run the deadlines and return every silence in event-time order
+    /// (per-camera runs of consecutive silent segments; the first entry
+    /// of a run is the detection).  Deadlines are scheduled *after* the
+    /// observations so a segment whose `capture_end` lands exactly on
+    /// its deadline counts as delivered — the DES breaks time ties by
+    /// insertion sequence.
+    pub fn silences(mut self) -> Vec<Silence> {
+        for cam in 0..self.n_cams {
+            for seg in 0..self.n_segments {
+                self.des
+                    .at((seg + 1) as f64 * self.segment_secs, LivenessEvent::Deadline { cam, seg });
+            }
+        }
+        let mut out = Vec::new();
+        while let Some((t, ev)) = self.des.pop() {
+            match ev {
+                LivenessEvent::Seen { cam, seg } => self.delivered[cam][seg] = true,
+                LivenessEvent::Deadline { cam, seg } => {
+                    if !self.delivered[cam][seg] {
+                        out.push(Silence { cam, seg, deadline: t });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -302,5 +624,137 @@ mod tests {
         let s = PlanSchedule::new(1, 8, epoch(1));
         assert_eq!(s.n_epochs(), 1);
         assert_eq!(s.epoch_of(0), 0);
+    }
+
+    fn fault(cam: usize, start: f64, end: Option<f64>) -> FaultEvent {
+        FaultEvent { cam, start_secs: start, end_secs: end }
+    }
+
+    // 3 cams in one component, 12 one-second segments, epochs of 4,
+    // eval window starting at absolute frame 900 (30 fps).
+    fn timeline(faults: &[FaultEvent]) -> FaultTimeline {
+        FaultTimeline::new(faults, 3, 12, 30, 30.0, 4, 900, &[vec![0, 1, 2]])
+    }
+
+    #[test]
+    fn dropout_schedule_on_the_segment_grid() {
+        let t = timeline(&[fault(1, 4.5, None)]);
+        let s = &t.schedules()[0];
+        // first lost segment is the first starting at/after the onset
+        assert_eq!(s.down_from, 5);
+        assert_eq!(s.up_from, None);
+        // detection = the lost segment's deadline
+        assert_eq!(s.detect_secs, 6.0);
+        assert!((s.detect_latency - 1.5).abs() < 1e-12);
+        // repair = next epoch boundary after detection
+        assert_eq!(s.repair_epoch, Some(2));
+        assert_eq!(s.repair_latency_epochs(4), 1);
+        assert_eq!(s.rejoin_epoch, None);
+        assert!(!t.down_seg(1, 4) && t.down_seg(1, 5) && t.down_seg(1, 11));
+        assert!(!t.down_seg(0, 5));
+        // peers degrade from the segment after detection to the repair
+        assert!(!t.degraded_seg(0, 5));
+        assert!(t.degraded_seg(0, 6) && t.degraded_seg(2, 7));
+        assert!(!t.degraded_seg(0, 8));
+        // the dead camera itself is down, not degraded
+        assert!(!t.degraded_seg(1, 6));
+        assert_eq!(t.force_fire_cams(2), &[0, 1, 2]);
+        assert!(t.has_event_at(2) && !t.has_event_at(1));
+        assert_eq!(t.repairs_at(2).count(), 1);
+        assert_eq!(t.rejoins_at(2).count(), 0);
+    }
+
+    #[test]
+    fn rejoin_is_symmetric() {
+        let t = timeline(&[fault(1, 1.2, Some(5.5))]);
+        let s = &t.schedules()[0];
+        assert_eq!(s.down_from, 2);
+        assert_eq!(s.up_from, Some(6));
+        assert_eq!(s.repair_epoch, Some(1));
+        assert_eq!(s.rejoin_epoch, Some(2));
+        assert!(t.down_seg(1, 2) && t.down_seg(1, 5) && !t.down_seg(1, 6));
+        // still down when the repair epoch starts (seg 4)
+        assert!(t.down_seg(1, 4));
+        // the rejoined camera streams full-frame until its plan lands
+        assert!(t.degraded_seg(1, 6) && t.degraded_seg(1, 7) && !t.degraded_seg(1, 8));
+        // peers degrade between detection and repair
+        assert!(t.degraded_seg(0, 3) && !t.degraded_seg(0, 4));
+        assert!(t.has_event_at(1) && t.has_event_at(2));
+        assert_eq!(t.rejoins_at(2).count(), 1);
+    }
+
+    #[test]
+    fn fault_frame_lookup_is_eval_anchored() {
+        let t = timeline(&[fault(1, 1.2, Some(5.5))]);
+        assert!(!t.down_frame(1, 899)); // profile frames are never down
+        assert!(!t.down_frame(1, 900 + 59)); // seg 1 delivered
+        assert!(t.down_frame(1, 900 + 2 * 30)); // seg 2 lost
+        assert!(t.down_frame(1, 900 + 5 * 30 + 29)); // seg 5 lost
+        assert!(!t.down_frame(1, 900 + 6 * 30)); // rejoined
+        assert!(!t.down_frame(0, 900 + 2 * 30)); // other cameras live
+    }
+
+    #[test]
+    fn sub_segment_outage_never_materialises() {
+        // entirely between two segment starts: no segment is lost
+        let t = timeline(&[fault(0, 1.2, Some(1.8))]);
+        assert!(t.is_empty());
+        // and one starting after the run ends
+        let t = timeline(&[fault(0, 99.0, None)]);
+        assert!(t.is_empty());
+        assert!(!t.down_seg(0, 11));
+    }
+
+    #[test]
+    fn late_dropout_has_no_repair_epoch() {
+        // lost segments begin inside the last epoch: peers degrade to
+        // the end of the run instead of repairing
+        let t = timeline(&[fault(2, 8.5, None)]);
+        let s = &t.schedules()[0];
+        assert_eq!(s.down_from, 9);
+        assert_eq!(s.repair_epoch, None);
+        assert_eq!(s.repair_latency_epochs(4), 0);
+        assert!(t.degraded_seg(0, 10) && t.degraded_seg(1, 11));
+    }
+
+    #[test]
+    fn liveness_monitor_detects_silence_runs() {
+        let mut m = LivenessMonitor::new(2, 4, 1.0);
+        // cam 0 delivers everything, exactly at each deadline (the tie
+        // must resolve Seen-before-Deadline)
+        for seg in 0..4 {
+            m.observe(0, seg, (seg + 1) as f64);
+        }
+        // cam 1 misses segments 1 and 2
+        m.observe(1, 0, 1.0);
+        m.observe(1, 3, 4.0);
+        let silences = m.silences();
+        assert_eq!(
+            silences,
+            vec![
+                Silence { cam: 1, seg: 1, deadline: 2.0 },
+                Silence { cam: 1, seg: 2, deadline: 3.0 },
+            ]
+        );
+    }
+
+    #[test]
+    fn liveness_monitor_agrees_with_the_timeline() {
+        let t = timeline(&[fault(1, 1.2, Some(5.5))]);
+        let mut m = LivenessMonitor::new(3, 12, t.segment_secs());
+        for cam in 0..3 {
+            for seg in 0..12 {
+                if !t.down_seg(cam, seg) {
+                    m.observe(cam, seg, (seg + 1) as f64 * t.segment_secs());
+                }
+            }
+        }
+        let silences = m.silences();
+        let first = silences.iter().find(|s| s.cam == 1).unwrap();
+        let sched = &t.schedules()[0];
+        assert_eq!(first.seg, sched.down_from);
+        assert!((first.deadline - sched.detect_secs).abs() < 1e-9);
+        assert!(silences.iter().all(|s| s.cam == 1));
+        assert_eq!(silences.len(), 4); // segments 2..6
     }
 }

@@ -17,7 +17,9 @@ use anyhow::Result;
 
 use crate::pipeline::arena::{Arena, ArenaStats};
 use crate::pipeline::infer::{InferOutcome, InferStage};
-use crate::pipeline::replan::{EpochPlanner, PlanEpoch, PlanSchedule, ReplanPolicy, ReplanScope};
+use crate::pipeline::replan::{
+    EpochPlanner, FaultContext, PlanEpoch, PlanSchedule, ReplanPolicy, ReplanScope,
+};
 use crate::pipeline::stage::{
     CameraSegment, CaptureStage, EncodeStage, FilterStage, InferJob, SegmentLayout,
     SegmentRecord,
@@ -135,11 +137,21 @@ pub struct PipelineOutput {
 /// mask before touching the segment's first frame.  A component-scoped
 /// re-plan that left this camera's component untouched therefore keeps
 /// its encoder state; a plan is never mixed within one segment.
+///
+/// With a fault context, a segment the timeline marks **down** produces
+/// nothing at all — no capture, no emit; the server only learns from the
+/// missed deadline.  A **degraded** segment (a surviving peer between
+/// detection and repair, or a just-rejoined camera waiting for its plan)
+/// streams the full frame with the frame filter bypassed, so coverage
+/// never silently shrinks below the dense baseline while a repair is in
+/// flight.  Both flags are pure functions of `(cam, seg)` from the
+/// config-resolved timeline, so the byte-identity contract holds.
 fn run_camera(
     cam: usize,
     stages: &mut CameraStages<'_>,
     layout: &SegmentLayout,
     schedule: Option<&PlanSchedule>,
+    faults: Option<&FaultContext>,
     arena: &Arena,
     emit: &mut dyn FnMut(CameraSegment) -> bool,
 ) {
@@ -151,34 +163,68 @@ fn run_camera(
     let mut cur_epoch = 0usize;
     // epoch 0's plan is what the stages were constructed with
     let mut applied_cam_epoch = 0usize;
+    // whether the encoder currently holds the full-frame fallback region
+    let mut full_applied = false;
     let mut cur_plan: Option<Arc<PlanEpoch>> = schedule.map(|s| s.wait(0));
     while local < layout.n_frames {
+        let down = faults.is_some_and(|f| f.timeline.down_seg(cam, seg));
+        let degraded = faults.is_some_and(|f| f.timeline.degraded_seg(cam, seg));
         if let Some(sched) = schedule {
             let epoch = sched.epoch_of(seg);
             if epoch != cur_epoch {
-                let plan = sched.wait(epoch);
-                if plan.cam_epoch[cam] != applied_cam_epoch {
-                    stages.encode.set_regions(&plan.groups[cam]);
-                    if let Some(th) = &plan.thresholds {
-                        stages.filter.replan(&plan.groups[cam], th[cam]);
-                    }
-                    applied_cam_epoch = plan.cam_epoch[cam];
-                }
-                cur_plan = Some(plan);
+                cur_plan = Some(sched.wait(epoch));
                 cur_epoch = epoch;
             }
         }
-        let mask: &[IRect] = match &cur_plan {
-            Some(plan) => &plan.groups[cam],
-            None => stages.mask,
-        };
         let end = (local + layout.frames_per_segment).min(layout.n_frames);
+        if down {
+            // dead camera: the segment is simply never produced
+            local = end;
+            seg += 1;
+            continue;
+        }
+        if degraded {
+            if !full_applied {
+                stages
+                    .encode
+                    .set_regions(std::slice::from_ref(&faults.expect("degraded").full_frame));
+                full_applied = true;
+            }
+        } else {
+            // apply the epoch plan when this camera's stamp moved — or
+            // when leaving the full-frame fallback (the codec's motion
+            // reference resets either way)
+            let stamp = cur_plan.as_ref().map_or(applied_cam_epoch, |p| p.cam_epoch[cam]);
+            if full_applied || stamp != applied_cam_epoch {
+                match &cur_plan {
+                    Some(plan) => {
+                        stages.encode.set_regions(&plan.groups[cam]);
+                        if let Some(th) = &plan.thresholds {
+                            stages.filter.replan(&plan.groups[cam], th[cam]);
+                        }
+                    }
+                    None => stages.encode.set_regions(stages.mask),
+                }
+                applied_cam_epoch = stamp;
+                full_applied = false;
+            }
+        }
+        let mask: &[IRect] = if degraded {
+            std::slice::from_ref(&faults.expect("degraded").full_frame)
+        } else {
+            match &cur_plan {
+                Some(plan) => &plan.groups[cam],
+                None => stages.mask,
+            }
+        };
         let mut kept: Vec<(usize, Frame)> = Vec::new();
         let mut dropped = 0usize;
         for (k, lf) in (local..end).enumerate() {
             let mut buf = pool.take();
             stages.capture.capture(lf, &mut buf);
-            if stages.filter.keep(&buf, k == 0) {
+            // degraded segments bypass the frame filter: full coverage
+            // until the repair plan lands
+            if degraded || stages.filter.keep(&buf, k == 0) {
                 kept.push((lf, buf));
             } else {
                 dropped += 1;
@@ -263,6 +309,19 @@ pub fn run_pipeline(
     run_pipeline_with_replan(cams, infer, layout, parallelism, None)
 }
 
+/// [`run_pipeline`] with a fault schedule: down segments are never
+/// produced, degraded cameras stream full-frame (see [`run_camera`]).
+pub fn run_pipeline_faulted(
+    cams: Vec<CameraStages<'_>>,
+    infer: &dyn InferStage,
+    layout: &SegmentLayout,
+    parallelism: Parallelism,
+    faults: Option<&FaultContext>,
+) -> Result<PipelineOutput> {
+    let arena = Arena::new();
+    run_pipeline_in(cams, infer, layout, parallelism, None, faults, &arena)
+}
+
 /// [`run_pipeline`] with optional continuous re-profiling: the planner
 /// fills the epoch schedule while the stage workers stream (a dedicated
 /// scoped thread under parallel schedules; pre-computed inline under
@@ -282,18 +341,20 @@ pub fn run_pipeline_with_replan(
     replan: Option<ReplanContext<'_>>,
 ) -> Result<PipelineOutput> {
     let arena = Arena::new();
-    run_pipeline_in(cams, infer, layout, parallelism, replan, &arena)
+    run_pipeline_in(cams, infer, layout, parallelism, replan, None, &arena)
 }
 
 /// [`run_pipeline_with_replan`] against a caller-owned [`Arena`], so the
 /// server-side inference stage (which the caller builds around the same
-/// arena) can recycle its grid buffers through the run's free lists too.
+/// arena) can recycle its grid buffers through the run's free lists too,
+/// and an optional fault schedule for the camera workers to act out.
 pub fn run_pipeline_in(
     cams: Vec<CameraStages<'_>>,
     infer: &dyn InferStage,
     layout: &SegmentLayout,
     parallelism: Parallelism,
     replan: Option<ReplanContext<'_>>,
+    faults: Option<&FaultContext>,
     arena: &Arena,
 ) -> Result<PipelineOutput> {
     let n_cams = cams.len();
@@ -321,7 +382,7 @@ pub fn run_pipeline_in(
             let mut cams = cams;
             let mut first_err: Option<anyhow::Error> = None;
             for (ci, stages) in cams.iter_mut().enumerate() {
-                run_camera(ci, stages, layout, schedule, arena, &mut |cs| {
+                run_camera(ci, stages, layout, schedule, faults, arena, &mut |cs| {
                     match infer.infer_merged(std::slice::from_ref(&cs)) {
                         Ok(mut outcomes) => {
                             let outcome = outcomes.pop().expect("one segment in, one out");
@@ -411,9 +472,15 @@ pub fn run_pipeline_in(
                         for (ci, mut stages) in bucket {
                             // a dead receiver means the inference stage
                             // failed: stop burning compute on this camera
-                            run_camera(ci, &mut stages, &layout, schedule, arena_ref, &mut |cs| {
-                                tx.send(cs).is_ok()
-                            });
+                            run_camera(
+                                ci,
+                                &mut stages,
+                                &layout,
+                                schedule,
+                                faults,
+                                arena_ref,
+                                &mut |cs| tx.send(cs).is_ok(),
+                            );
                         }
                     });
                 }

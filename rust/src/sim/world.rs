@@ -102,6 +102,48 @@ fn arm_weight(cfg: &ScenarioConfig, drifts: bool, arm_idx: usize, t: f64) -> f64
     }
 }
 
+/// Rush-hour wave amplitudes: the first half of each
+/// `rush_period_secs` period runs hot, the second half cold.
+const RUSH_HOT: f64 = 1.75;
+const RUSH_COLD: f64 = 0.25;
+
+/// Arrival-rate gate for the fault/churn scenarios (rush-hour waves and
+/// the membership-change corridor): exactly 1 when both knobs are off,
+/// so stationary worlds stay bit-identical.
+fn rate_gate(cfg: &ScenarioConfig, arm_idx: usize, t: f64) -> f64 {
+    let mut gate = 1.0;
+    // corridor gate: the EW arms (indices 2, 3) are silent until the
+    // corridor activates
+    if cfg.corridor_at_secs > 0.0 && arm_idx >= 2 && t < cfg.corridor_at_secs {
+        return 0.0;
+    }
+    if cfg.rush_period_secs > 0.0 {
+        let phase = t.rem_euclid(cfg.rush_period_secs);
+        gate *= if phase < cfg.rush_period_secs / 2.0 { RUSH_HOT } else { RUSH_COLD };
+    }
+    gate
+}
+
+/// The next time strictly after `t` at which any arm's arrival rate can
+/// change (drift flip, corridor activation, rush half-period boundary);
+/// `+∞` when the rate is constant from `t` on.  The generation loop
+/// restarts any headway gap that would cross such a boundary — see the
+/// piecewise-Poisson comment in [`World::generate`].
+fn next_rate_boundary(cfg: &ScenarioConfig, drifts: bool, t: f64) -> f64 {
+    let mut b = f64::INFINITY;
+    if drifts && t < cfg.drift_at_secs {
+        b = b.min(cfg.drift_at_secs);
+    }
+    if cfg.corridor_at_secs > 0.0 && t < cfg.corridor_at_secs {
+        b = b.min(cfg.corridor_at_secs);
+    }
+    if cfg.rush_period_secs > 0.0 {
+        let half = cfg.rush_period_secs / 2.0;
+        b = b.min(((t / half).floor() + 1.0) * half);
+    }
+    b
+}
+
 impl World {
     /// Generate all vehicles for `cfg.total_secs()` seconds (plus a lead-in
     /// so the scene is already populated at t = 0).
@@ -137,15 +179,27 @@ impl World {
                 loop {
                     // piecewise-Poisson arrivals: headways are drawn at the
                     // rate in force when the gap opens; a gap that would
-                    // cross the drift boundary is restarted there at the
-                    // new rate — statistically exact (exponentials are
-                    // memoryless) and it keeps a fully-starved arm
-                    // (strength 1.0) from sleeping through its own
-                    // post-drift revival on one infinite gap
-                    let rate = cfg.arrival_rate * arm_weight(cfg, drifts, arm_idx, t);
+                    // cross a rate boundary (drift flip, corridor
+                    // activation, rush half-period) is restarted there at
+                    // the new rate — statistically exact (exponentials are
+                    // memoryless) and it keeps a fully-starved arm from
+                    // sleeping through its own revival on one infinite gap
+                    let rate = cfg.arrival_rate
+                        * arm_weight(cfg, drifts, arm_idx, t)
+                        * rate_gate(cfg, arm_idx, t);
+                    let boundary = next_rate_boundary(cfg, drifts, t);
+                    if rate <= 0.0 {
+                        // silent arm: no hazard to draw; jump straight to
+                        // the next rate change (if any) or stop
+                        if boundary > duration {
+                            break;
+                        }
+                        t = boundary;
+                        continue;
+                    }
                     let gap = arm_rng.exponential(rate).max(MIN_HEADWAY);
-                    if drifts && t < cfg.drift_at_secs && t + gap >= cfg.drift_at_secs {
-                        t = cfg.drift_at_secs;
+                    if t + gap >= boundary {
+                        t = boundary;
                         continue;
                     }
                     t += gap;
@@ -341,6 +395,66 @@ mod tests {
             assert_eq!(x.spawn_time, y.spawn_time);
             assert_eq!(x.id, y.id);
         }
+    }
+
+    #[test]
+    fn disabled_waves_and_corridor_reproduce_the_stationary_world() {
+        let cfg = ScenarioConfig::default();
+        let mut gated = cfg.clone();
+        gated.rush_period_secs = 0.0;
+        gated.corridor_at_secs = 0.0;
+        let a = World::generate(&cfg);
+        let b = World::generate(&gated);
+        assert_eq!(a.vehicles.len(), b.vehicles.len());
+        for (x, y) in a.vehicles.iter().zip(&b.vehicles) {
+            assert_eq!(x.spawn_time, y.spawn_time);
+            assert_eq!(x.id, y.id);
+        }
+    }
+
+    #[test]
+    fn rush_waves_modulate_arrivals() {
+        let mut cfg = ScenarioConfig::default();
+        cfg.rush_period_secs = cfg.total_secs(); // one hot half, one cold half
+        let w = World::generate(&cfg);
+        let half = cfg.rush_period_secs / 2.0;
+        let hot = w.vehicles.iter().filter(|v| (0.0..half).contains(&v.spawn_time)).count();
+        let cold = w.vehicles.iter().filter(|v| v.spawn_time >= half).count();
+        assert!(
+            hot > cold,
+            "rush wave had no effect: {hot} hot-half vs {cold} cold-half spawns"
+        );
+    }
+
+    #[test]
+    fn corridor_gate_silences_ew_arms_until_activation() {
+        let mut cfg = ScenarioConfig::default();
+        cfg.corridor_at_secs = cfg.total_secs() / 2.0;
+        let w = World::generate(&cfg);
+        let is_ew = |v: &Vehicle| v.path.point_at(0.0).y.abs() < 2.0 * ROAD_HALF_WIDTH;
+        let ew_pre = w
+            .vehicles
+            .iter()
+            .filter(|v| is_ew(v) && v.spawn_time < cfg.corridor_at_secs)
+            .count();
+        let ew_post = w
+            .vehicles
+            .iter()
+            .filter(|v| is_ew(v) && v.spawn_time >= cfg.corridor_at_secs)
+            .count();
+        assert_eq!(ew_pre, 0, "EW arms spawned before the corridor activated");
+        assert!(ew_post > 0, "EW arms never activated");
+        // the NS arms draw from independent RNG forks, so gating the EW
+        // arms leaves their traffic bit-identical to the ungated world
+        let ungated = World::generate(&ScenarioConfig::default());
+        let ns = |w: &World| -> Vec<(f64, f64)> {
+            w.vehicles
+                .iter()
+                .filter(|v| !is_ew(v))
+                .map(|v| (v.spawn_time, v.speed))
+                .collect()
+        };
+        assert_eq!(ns(&w), ns(&ungated));
     }
 
     #[test]

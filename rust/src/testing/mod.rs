@@ -172,6 +172,38 @@ pub mod fleet {
         );
         (stream, tiling, bridge)
     }
+
+    /// A mixed-resolution fleet: [`disjoint_intersections`] (1
+    /// intersection, 4 cameras) with the odd cameras downscaled to a
+    /// quarter-size active frame — every record's bbox is scaled into
+    /// the smaller frame, so the stream geometrically matches the
+    /// heterogeneous [`Tiling`] this returns alongside it.
+    pub fn heterogeneous_fleet(base: &Config, base_seed: u64) -> (ReidStream, Tiling) {
+        let (stream, _) = disjoint_intersections(base, 1, base_seed);
+        let full = (crate::sim::FRAME_W, crate::sim::FRAME_H);
+        let small = (crate::sim::FRAME_W / 2, crate::sim::FRAME_H / 2);
+        let dims: Vec<(u32, u32)> =
+            (0..stream.n_cameras).map(|c| if c % 2 == 0 { full } else { small }).collect();
+        let records: Vec<RawDetection> = stream
+            .all()
+            .iter()
+            .map(|rec| {
+                if rec.cam % 2 == 0 {
+                    return *rec;
+                }
+                let mut r = *rec;
+                r.bbox = Rect::new(
+                    rec.bbox.left / 2.0,
+                    rec.bbox.top / 2.0,
+                    (rec.bbox.width / 2.0).max(2.0),
+                    (rec.bbox.height / 2.0).max(2.0),
+                );
+                r
+            })
+            .collect();
+        let tiling = Tiling::heterogeneous(&dims, base.scenario.tile_px);
+        (ReidStream::new(stream.n_cameras, stream.n_frames, records), tiling)
+    }
 }
 
 #[cfg(test)]

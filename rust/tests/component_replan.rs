@@ -277,6 +277,70 @@ fn component_scope_is_byte_identical_on_a_disjoint_fleet() {
     }
 }
 
+/// The ROADMAP residual: a migration decision fired by a *full* pipeline
+/// run.  The corridor gate keeps the bridge trio blind during profiling
+/// (every EW arm is silent until `corridor_at_secs`), so the offline
+/// plan partitions the fleet into its two intersections; when the
+/// corridor comes alive mid-eval, the sliding window fuses the fleet
+/// through the trio and the re-planner must record a real component
+/// migration — byte-identically across planner pool sizes.
+#[test]
+fn corridor_activation_fires_a_real_migration_through_the_pipeline() {
+    let mut cfg = fleet_config(None);
+    cfg.scenario.bridge_cameras = true;
+    cfg.scenario.eval_secs = 12.0;
+    cfg.scenario.corridor_at_secs = 9.0; // 1 s into the eval window
+    cfg.scenario.validate().unwrap();
+    let scenario = Scenario::build(&cfg.scenario);
+    assert_eq!(scenario.cameras.len(), 11, "2 rigs of 4 + the corridor trio");
+    // with the corridor gated, profiling must NOT see the fused fleet:
+    // the trio (cameras 8–10) has nothing to co-occur through
+    let comps = profile_partition(&scenario);
+    assert!(
+        comps.iter().all(|c| c.iter().all(|&cam| cam < 8)),
+        "corridor must stay silent during profiling: {comps:?}"
+    );
+
+    let json_of = |threads: usize| -> String {
+        let pipe = PipelineOptions {
+            planner_threads: threads,
+            ..opts(Parallelism::PerCamera, ReplanScope::Component)
+        };
+        let (mut r, _) = run_method_with(
+            &scenario,
+            &cfg.system,
+            &FixedCostInfer,
+            &Method::CrossRoi,
+            None,
+            &pipe,
+        )
+        .unwrap();
+        assert!(
+            r.replan_migrations > 0,
+            "the corridor activation must fire a membership change"
+        );
+        // the migrated membership must actually involve the corridor trio
+        assert!(
+            r.replan_records.iter().any(|rec| rec
+                .components
+                .iter()
+                .any(|c| c.migrated && c.cameras.iter().any(|&cam| cam >= 8))),
+            "no migrated component includes a corridor camera: {:?}",
+            r.replan_records
+        );
+        r.zero_wall_clock();
+        r.to_json().to_string_pretty(2)
+    };
+    let reference = json_of(1);
+    for threads in [2, 8] {
+        assert_eq!(
+            reference,
+            json_of(threads),
+            "--planner-threads {threads} diverged on the membership-change scenario"
+        );
+    }
+}
+
 /// Each epoch's compute phase fans fired components out over the shared
 /// planner pool; the report must stay byte-identical across pool sizes
 /// on both the drifted-intersection fleet and the bridge-fused fleet

@@ -1,0 +1,399 @@
+//! Fault injection end-to-end (DESIGN.md §12): a failed camera's worker
+//! stops producing segments, the segment-deadline liveness monitor pins
+//! when the coordinator can first know, and the next epoch boundary runs
+//! a repair re-solve without the dead camera's constraints so surviving
+//! peers re-cover the orphaned tiles — within one epoch of detection,
+//! byte-identical across planner thread counts, and degrading to a
+//! recorded carry-forward (never a planner panic) when a whole component
+//! dies.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use crossroi::config::{Config, FaultEvent};
+use crossroi::coordinator::{build_plan, run_method_with, Infer, Method, NativeInfer};
+use crossroi::offline::{OfflineOptions, Replanner};
+use crossroi::pipeline::{
+    EncodeCost, EpochPlanner as _, FaultTimeline, Parallelism, PipelineOptions, PlanEpoch,
+    ReplanPolicy, ReplanScope,
+};
+use crossroi::sim::Scenario;
+use crossroi::testing::{check, PropConfig};
+
+/// Native reference detector with fixed, deterministic service times.
+struct FixedCostInfer;
+
+impl Infer for FixedCostInfer {
+    fn infer(&self, frame: &[f32], blocks: Option<&[i32]>) -> Result<(Vec<f32>, f64)> {
+        let (grid, _) = NativeInfer.infer(frame, blocks)?;
+        let secs = match blocks {
+            None => 0.004,
+            Some(b) => 0.001 + 0.00004 * b.len() as f64,
+        };
+        Ok((grid, secs))
+    }
+}
+
+fn faulted(faults: Vec<FaultEvent>) -> Config {
+    let mut cfg = Config::test_small();
+    cfg.scenario.faults = faults;
+    cfg.scenario.validate().unwrap();
+    cfg
+}
+
+fn pipe(replan: ReplanPolicy) -> PipelineOptions {
+    PipelineOptions {
+        parallelism: Parallelism::PerCamera,
+        encode_cost: EncodeCost::PerFrame(0.02),
+        replan,
+        replan_scope: ReplanScope::Component,
+        ..PipelineOptions::default()
+    }
+}
+
+/// The camera owning the most mask tiles in the method's offline plan —
+/// the victim whose failure orphans the most coverage — and that count.
+fn widest_camera(cfg: &Config, method: &Method) -> (usize, usize) {
+    let scenario = Scenario::build(&cfg.scenario);
+    let plan = build_plan(&scenario, &cfg.scenario, &cfg.system, method).unwrap();
+    (0..scenario.cameras.len())
+        .map(|c| (plan.masks.camera_size(c), c))
+        .max()
+        .map(|(n, c)| (c, n))
+        .unwrap()
+}
+
+/// Repair-only mode: `--replan never` plus a fault schedule synthesizes
+/// the default epoch cadence, so the planner wakes *only* for the repair.
+/// `test_small` evaluates 8 one-second segments; with the synthesized
+/// cadence of 4 the failure at 1.5 s loses segment 2, detection is that
+/// segment's 3.0 s deadline, and the repair lands at the next boundary
+/// (epoch 1, segment 4) — one epoch after the boundary current at
+/// detection.  The orphaned-tile count is exactly the victim's share of
+/// the initial offline plan, because no other epoch ever fired.
+#[test]
+fn dropout_repair_fires_within_one_epoch_in_repair_only_mode() {
+    let base = Config::test_small();
+    let (victim, victim_tiles) = widest_camera(&base, &Method::CrossRoi);
+    assert!(victim_tiles > 0, "seed plan left every camera without tiles");
+    let cfg = faulted(vec![FaultEvent { cam: victim, start_secs: 1.5, end_secs: None }]);
+    let scenario = Scenario::build(&cfg.scenario);
+    let (r, _) = run_method_with(
+        &scenario,
+        &cfg.system,
+        &FixedCostInfer,
+        &Method::CrossRoi,
+        None,
+        &pipe(ReplanPolicy::Never),
+    )
+    .unwrap();
+
+    assert_eq!(r.repair_records.len(), 1, "records: {:?}", r.repair_records);
+    let rec = &r.repair_records[0];
+    assert_eq!(rec.kind, "dropout");
+    assert_eq!(rec.cam, victim);
+    assert_eq!(rec.epoch, 1, "repair must land at the first boundary after detection");
+    assert_eq!(rec.repair_latency_epochs, 1, "repair later than one epoch: {rec:?}");
+    assert!((rec.detect_secs - 3.0).abs() < 1e-9, "detect_secs {}", rec.detect_secs);
+    assert!((rec.detect_latency - 1.5).abs() < 1e-9, "detect_latency {}", rec.detect_latency);
+    assert_eq!(
+        rec.orphaned_tiles, victim_tiles,
+        "the failure must orphan exactly the victim's initial coverage"
+    );
+
+    // repair-only mode computes exactly the event epochs, nothing else
+    assert_eq!(r.planner_epochs_computed, 1);
+    assert_eq!(r.replan_records.len(), 1);
+    assert!(r.replan_records[0].replanned, "the repair epoch must fire");
+    assert_eq!(r.replan_records[0].epoch, 1);
+}
+
+/// The repair path is a pure function of config + segment grid, so the
+/// full serialized report must stay byte-identical across planner pool
+/// sizes (`--planner-threads 1|2|8`) under a fault schedule.
+#[test]
+fn dropout_repair_is_byte_identical_across_planner_threads() {
+    let base = Config::test_small();
+    let (victim, _) = widest_camera(&base, &Method::CrossRoi);
+    let cfg = faulted(vec![FaultEvent { cam: victim, start_secs: 1.5, end_secs: None }]);
+    let scenario = Scenario::build(&cfg.scenario);
+    let json_of = |threads: usize| -> String {
+        let opts = PipelineOptions { planner_threads: threads, ..pipe(ReplanPolicy::Every(2)) };
+        let (mut r, _) = run_method_with(
+            &scenario,
+            &cfg.system,
+            &FixedCostInfer,
+            &Method::CrossRoi,
+            None,
+            &opts,
+        )
+        .unwrap();
+        // Every(2) over 8 segments: failure at 1.5 s → segment 2 lost →
+        // detection during epoch 1 → repair at epoch 2
+        assert_eq!(r.repair_records.len(), 1, "records: {:?}", r.repair_records);
+        let rec = &r.repair_records[0];
+        assert_eq!((rec.kind, rec.cam, rec.epoch), ("dropout", victim, 2));
+        assert_eq!(rec.repair_latency_epochs, 1, "repair later than one epoch: {rec:?}");
+        r.zero_wall_clock();
+        r.to_json().to_string_pretty(2)
+    };
+    let reference = json_of(1);
+    for threads in [2, 8] {
+        assert_eq!(
+            reference,
+            json_of(threads),
+            "--planner-threads {threads} diverged from the single-threaded repair"
+        );
+    }
+}
+
+/// Rejoin is the symmetric path: a camera down for segments 1–3 is
+/// re-admitted at the first boundary at/after its return, owns tiles
+/// again, and (running Reducto) gets its frame-filter threshold
+/// re-derived at the rejoin epoch.
+#[test]
+fn rejoin_readmits_the_camera_with_a_rederived_threshold() {
+    let base = Config::test_small();
+    let method = Method::CrossRoiReducto(0.9);
+    let (victim, victim_tiles) = widest_camera(&base, &method);
+    assert!(victim_tiles > 0, "seed plan left every camera without tiles");
+    let cfg = faulted(vec![FaultEvent { cam: victim, start_secs: 1.0, end_secs: Some(4.0) }]);
+    let scenario = Scenario::build(&cfg.scenario);
+    let (r, _) = run_method_with(
+        &scenario,
+        &cfg.system,
+        &FixedCostInfer,
+        &method,
+        None,
+        &pipe(ReplanPolicy::Every(2)),
+    )
+    .unwrap();
+
+    let kinds: Vec<&str> = r.repair_records.iter().map(|x| x.kind).collect();
+    assert_eq!(kinds, vec!["dropout", "rejoin"], "records: {:?}", r.repair_records);
+    let dropout = &r.repair_records[0];
+    assert_eq!((dropout.cam, dropout.epoch), (victim, 1));
+    assert_eq!(dropout.orphaned_tiles, victim_tiles);
+    assert_eq!(dropout.repair_latency_epochs, 1);
+    let rejoin = &r.repair_records[1];
+    assert_eq!((rejoin.cam, rejoin.epoch), (victim, 2));
+    assert_eq!(rejoin.orphaned_tiles, 0, "rejoins orphan nothing");
+    assert_eq!(
+        rejoin.repair_latency_epochs, 0,
+        "re-admission boundary is the rejoin epoch itself"
+    );
+    assert!(
+        rejoin.recovered_tiles > 0,
+        "the re-admitted camera must own tiles again: {rejoin:?}"
+    );
+    // the re-plans around the outage re-derive the victim's Reducto
+    // threshold (its regions change at both the repair and rejoin epoch)
+    assert!(r.replan_reducto_rederived > 0, "no threshold was re-derived");
+}
+
+/// Randomized fault schedules: every materialised dropout/rejoin
+/// obligation gets exactly one repair record at the epoch an
+/// independently-resolved timeline predicts, every repair lands within
+/// one epoch of detection, the planner thread never panics, and the
+/// run's detections stay at the level of the fault-free run against the
+/// (equally faulted) dense baseline.
+#[test]
+fn prop_random_fault_schedules_repair_within_one_epoch() {
+    let base = Config::test_small();
+    let scenario0 = Scenario::build(&base.scenario);
+    let plan = build_plan(&scenario0, &base.scenario, &base.system, &Method::CrossRoi).unwrap();
+    // mirror the coordinator's peer resolution: offline shard members,
+    // falling back to one fleet-wide component for unsharded plans
+    let components: Vec<Vec<usize>> = if plan.report.shards.is_empty() {
+        vec![(0..scenario0.cameras.len()).collect()]
+    } else {
+        plan.report.shards.iter().map(|s| s.cameras.clone()).collect()
+    };
+    let eval_start = scenario0.eval_range().start;
+    let n_cams = scenario0.cameras.len();
+
+    // fault-free reference accuracy against the dense baseline
+    let opts = pipe(ReplanPolicy::Every(2));
+    let (_, truth0) = run_method_with(
+        &scenario0,
+        &base.system,
+        &FixedCostInfer,
+        &Method::Baseline,
+        None,
+        &opts,
+    )
+    .unwrap();
+    let (clean, _) = run_method_with(
+        &scenario0,
+        &base.system,
+        &FixedCostInfer,
+        &Method::CrossRoi,
+        Some(truth0.as_slice()),
+        &opts,
+    )
+    .unwrap();
+
+    check(&PropConfig { cases: 4, seed: 0xFA17 }, "fault-repair", |rng| {
+        // 1–2 events on quarter-second marks: times divide the 1 s
+        // segment grid exactly, so the mirror below is float-exact
+        let n_faults = 1 + rng.below(2);
+        let mut faults = Vec::new();
+        for _ in 0..n_faults {
+            let start_secs = 0.5 + 0.25 * rng.below(23) as f64; // 0.5 .. 6.0
+            let end_secs =
+                rng.chance(0.5).then(|| start_secs + 1.0 + 0.5 * rng.below(6) as f64);
+            faults.push(FaultEvent { cam: rng.below(n_cams), start_secs, end_secs });
+        }
+        let mut cfg = base.clone();
+        cfg.scenario.faults = faults.clone();
+        cfg.scenario.validate().map_err(|e| e.to_string())?;
+        let scenario = Scenario::build(&cfg.scenario);
+        let (_, truth) = run_method_with(
+            &scenario,
+            &cfg.system,
+            &FixedCostInfer,
+            &Method::Baseline,
+            None,
+            &opts,
+        )
+        .map_err(|e| format!("baseline failed under {faults:?}: {e}"))?;
+        let (r, _) = run_method_with(
+            &scenario,
+            &cfg.system,
+            &FixedCostInfer,
+            &Method::CrossRoi,
+            Some(truth.as_slice()),
+            &opts,
+        )
+        .map_err(|e| format!("pipeline failed under {faults:?}: {e}"))?;
+
+        // one record per obligation, at the predicted epoch
+        let timeline =
+            FaultTimeline::new(&faults, n_cams, 8, 5, 5.0, 2, eval_start, &components);
+        let mut expected: Vec<(usize, &str, usize)> = Vec::new();
+        for s in timeline.schedules() {
+            if let Some(k) = s.repair_epoch {
+                expected.push((s.cam, "dropout", k));
+            }
+            if let Some(k) = s.rejoin_epoch {
+                expected.push((s.cam, "rejoin", k));
+            }
+        }
+        expected.sort_unstable();
+        let mut got: Vec<(usize, &str, usize)> =
+            r.repair_records.iter().map(|x| (x.cam, x.kind, x.epoch)).collect();
+        got.sort_unstable();
+        if got != expected {
+            return Err(format!("repair records {got:?} != expected {expected:?} for {faults:?}"));
+        }
+        for rec in &r.repair_records {
+            if rec.kind == "dropout" && rec.repair_latency_epochs > 1 {
+                return Err(format!("repair later than one epoch after detection: {rec:?}"));
+            }
+        }
+        // faults degrade the affected cameras to full-frame until repair,
+        // so detections on covered tiles never drop below the (equally
+        // faulted) dense baseline's — accuracy stays at the fault-free
+        // level
+        if r.accuracy < clean.accuracy - 0.05 {
+            return Err(format!(
+                "accuracy {} fell below the fault-free reference {} under {faults:?}",
+                r.accuracy, clean.accuracy
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Regression for the planner-thread panic path: when *every* camera of
+/// a component dies, the repair window holds zero constraints for the
+/// fired component.  The epoch must degrade to a recorded carry-forward
+/// — dead tiles cleared, survivors untouched, the orphaned coverage
+/// recorded as uncovered — instead of panicking the planner thread.
+#[test]
+fn whole_component_outage_degrades_to_recorded_carry_without_panicking() {
+    let mut cfg = Config::test_small();
+    cfg.scenario.n_cameras = 4;
+    cfg.scenario.n_intersections = 2;
+    cfg.scenario.profile_secs = 8.0;
+    cfg.scenario.eval_secs = 8.0;
+    cfg.scenario.faults =
+        (4..8).map(|cam| FaultEvent { cam, start_secs: 0.0, end_secs: None }).collect();
+    cfg.scenario.validate().unwrap();
+    let scenario = Scenario::build(&cfg.scenario);
+    let method = Method::CrossRoi;
+    let plan = build_plan(&scenario, &cfg.scenario, &cfg.system, &method).unwrap();
+    let components: Vec<Vec<usize>> =
+        plan.report.shards.iter().map(|s| s.cameras.clone()).collect();
+    assert_eq!(
+        components,
+        vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]],
+        "the fleet must shard into its intersections"
+    );
+    let timeline = Arc::new(FaultTimeline::new(
+        &cfg.scenario.faults,
+        8,
+        8,
+        5,
+        5.0,
+        2,
+        scenario.eval_range().start,
+        &components,
+    ));
+    let rp = Replanner::new(
+        &scenario,
+        &cfg.system,
+        &method,
+        OfflineOptions::default(),
+        ReplanPolicy::Never,
+        ReplanScope::Component,
+        5,
+        &plan,
+        60,
+    )
+    .with_faults(Arc::clone(&timeline));
+    let epoch0 = Arc::new(PlanEpoch::initial(
+        plan.groups.clone(),
+        plan.blocks.clone(),
+        vec![true; 8],
+        None,
+        plan.masks.total_size(),
+    ));
+
+    // intersection 1 dies at t = 0: segment 0 is lost, detection at its
+    // deadline, repair at epoch 1 — whose window holds no constraint the
+    // dead component could re-solve against
+    let next = rp.plan_epoch(1, 2, &epoch0).expect("repair epoch must not error out");
+    for cam in 4..8 {
+        assert!(next.groups[cam].is_empty(), "dead cam {cam} kept regions");
+    }
+    for cam in 0..4 {
+        assert_eq!(next.groups[cam], epoch0.groups[cam], "survivor cam {cam} plan changed");
+        assert_eq!(next.cam_epoch[cam], 0, "survivor cam {cam} must keep its epoch stamp");
+    }
+    assert_eq!(
+        next.mask_tiles,
+        (0..4).map(|c| plan.masks.camera_size(c)).sum::<usize>(),
+        "the new plan must be exactly the survivors' carried tiles"
+    );
+
+    let repairs = rp.repair_records();
+    assert_eq!(repairs.len(), 4, "one dropout record per dead camera: {repairs:?}");
+    for (rec, cam) in repairs.iter().zip(4..8) {
+        assert_eq!((rec.kind, rec.cam, rec.epoch), ("dropout", cam, 1));
+        assert_eq!(rec.repair_latency_epochs, 1);
+        assert_eq!(rec.orphaned_tiles, plan.masks.camera_size(cam));
+        assert_eq!(rec.recovered_tiles, 0, "no live camera can see the dead intersection");
+        assert!(
+            rec.uncovered_constraints > 0,
+            "the dead intersection's coverage must be recorded as uncovered: {rec:?}"
+        );
+    }
+
+    // the next boundary owes nothing: repair-only mode carries it by
+    // pointer without waking the pool again
+    let same = rp.plan_epoch(2, 4, &next).unwrap();
+    assert!(Arc::ptr_eq(&same, &next), "quiet boundary must carry by pointer");
+    assert_eq!(rp.pool_stats().epochs_computed, 1);
+    assert_eq!(rp.records().len(), 1);
+}

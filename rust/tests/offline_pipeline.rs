@@ -175,6 +175,89 @@ fn dead_camera_during_profile() {
     assert!(masks.total_size() > 0);
 }
 
+/// Mixed per-camera resolutions (`testing::fleet`): a fleet whose odd
+/// cameras run a quarter-size active frame plans through
+/// `build_plan_from_stream` on a heterogeneous `Tiling`, keeps every
+/// mask tile and codec region inside its camera's own frame, still
+/// satisfies Eq. 2 on the mixed stream, and replays online — the block
+/// codec encodes each camera at its native resolution through the
+/// plan's regions.
+#[test]
+fn heterogeneous_fleet_plans_and_replays_at_native_resolutions() {
+    let cfg = Config::test_small();
+    let (stream, tiling) = crossroi::testing::fleet::heterogeneous_fleet(&cfg, 7);
+    assert_eq!(stream.n_cameras, 4);
+    assert_ne!(tiling.cam_frame(0), tiling.cam_frame(1), "fleet must actually be mixed");
+    let plan = crossroi::offline::build_plan_from_stream(
+        &stream,
+        &tiling,
+        &cfg.system,
+        &Method::CrossRoi,
+        &crossroi::offline::OfflineOptions::default(),
+    )
+    .unwrap();
+    assert!(plan.masks.total_size() > 0);
+
+    // every mask tile and codec region stays inside its camera's frame —
+    // the downscaled cameras must never be planned against the envelope
+    for cam in 0..stream.n_cameras {
+        let (w, h) = tiling.cam_frame(cam);
+        for &(tx, ty) in &plan.masks.tiles[cam] {
+            assert!(
+                tx * tiling.tile_px < w && ty * tiling.tile_px < h,
+                "cam {cam} tile ({tx},{ty}) outside its {w}x{h} frame"
+            );
+        }
+        for r in &plan.groups[cam] {
+            assert!(
+                r.x + r.w <= w && r.y + r.h <= h,
+                "cam {cam} region {r:?} outside its {w}x{h} frame"
+            );
+        }
+    }
+
+    // Eq. 2 still holds on the mixed-resolution stream (rebuilt exactly
+    // as build_plan_from_stream filters it)
+    let filters = crossroi::filters::TandemFilters::default();
+    let (filtered, _) = filters.apply(&stream);
+    let table = AssociationTable::build(&filtered, &tiling);
+    assert!(table.n_constraints() > 0);
+    for c in &table.constraints {
+        if c.regions.is_empty() {
+            continue;
+        }
+        let satisfied = c.regions.iter().any(|r| {
+            r.iter().all(|&t| {
+                let (cam, tx, ty) = tiling.tile_pos(t);
+                plan.masks.tiles[cam].contains(&(tx, ty))
+            })
+        });
+        assert!(satisfied, "constraint unsatisfied by the heterogeneous plan: {c:?}");
+    }
+
+    // online replay: a short synthetic segment per camera at its native
+    // resolution, encoded through the plan's codec regions (plus the
+    // full-frame fallback region every degraded camera streams)
+    for cam in 0..stream.n_cameras {
+        let (w, h) = tiling.cam_frame(cam);
+        let frames: Vec<crossroi::sim::Frame> = (0..3u32)
+            .map(|f| {
+                let mut frame = crossroi::sim::Frame::new(w, h);
+                for (i, px) in frame.data.iter_mut().enumerate() {
+                    *px = ((i as u32).wrapping_mul(31).wrapping_add(f * 97)) as u8;
+                }
+                frame
+            })
+            .collect();
+        let full = crossroi::util::geometry::IRect::new(0, 0, w, h);
+        for region in plan.groups[cam].iter().chain(std::iter::once(&full)) {
+            let mut rs = crossroi::codec::RegionStream::new(*region, 28.0);
+            let bits: u64 = frames.iter().map(|fr| rs.encode_frame(fr).bits).sum();
+            assert!(bits > 0, "cam {cam} region {region:?} encoded to nothing");
+        }
+    }
+}
+
 #[test]
 fn rebuilding_plan_is_deterministic() {
     let cfg = Config::test_small();

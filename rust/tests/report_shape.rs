@@ -18,7 +18,7 @@ use std::collections::HashSet;
 
 use crossroi::association::Tiling;
 use crossroi::coordinator::{LatencyBreakdown, MethodReport};
-use crossroi::offline::{ComponentRecord, ReplanRecord};
+use crossroi::offline::{ComponentRecord, RepairRecord, ReplanRecord};
 use crossroi::query;
 use crossroi::roi::RoiMasks;
 
@@ -56,6 +56,22 @@ fn sample_record() -> ReplanRecord {
     }
 }
 
+fn sample_repair() -> RepairRecord {
+    RepairRecord {
+        cam: 1,
+        kind: "dropout",
+        fail_secs: 4.5,
+        detect_secs: 6.0,
+        detect_latency: 1.5,
+        epoch: 2,
+        repair_latency_epochs: 1,
+        orphaned_tiles: 12,
+        recovered_tiles: 9,
+        uncovered_constraints: 2,
+        seconds: 0.02,
+    }
+}
+
 /// Every `MethodReport` field is either zeroed by `zero_wall_clock` or
 /// must survive it untouched — the no-`..` destructure makes a new field
 /// a compile error here until it is classified.
@@ -88,6 +104,7 @@ fn method_report_inventory_is_classified() {
     r.replan_seconds = 2.0;
     r.replan_done_at = vec![14.5];
     r.replan_records = vec![sample_record()];
+    r.repair_records = vec![sample_repair()];
     r.arena_frame_allocs = 8;
     r.arena_pixel_allocs = 8;
     r.arena_pixel_reuses = 32;
@@ -126,6 +143,7 @@ fn method_report_inventory_is_classified() {
         replan_seconds,
         replan_done_at,
         replan_records,
+        repair_records,
         arena_frame_allocs,
         arena_pixel_allocs,
         arena_pixel_reuses,
@@ -175,6 +193,44 @@ fn method_report_inventory_is_classified() {
     assert_eq!(replan_reducto_rederived, 1);
     assert_eq!(replan_mask_churn, 0.1);
     assert_eq!(replan_records.len(), 1);
+    assert_eq!(repair_records.len(), 1, "repair outcomes are deterministic payload");
+}
+
+/// The per-fault repair record: wall-clock is `seconds`; everything else
+/// is resolved from the config + segment grid (detection times are DES
+/// deadlines) and must survive zeroing.
+#[test]
+fn repair_record_inventory_is_classified() {
+    let mut report = MethodReport::default();
+    report.repair_records = vec![sample_repair()];
+    report.zero_wall_clock();
+    let rec = report.repair_records.into_iter().next().unwrap();
+
+    let RepairRecord {
+        cam,
+        kind,
+        fail_secs,
+        detect_secs,
+        detect_latency,
+        epoch,
+        repair_latency_epochs,
+        orphaned_tiles,
+        recovered_tiles,
+        uncovered_constraints,
+        seconds,
+    } = rec;
+
+    assert_eq!(seconds, 0.0, "wall-clock");
+    assert_eq!(cam, 1);
+    assert_eq!(kind, "dropout");
+    assert_eq!(fail_secs, 4.5);
+    assert_eq!(detect_secs, 6.0, "DES deadline, not wall clock");
+    assert_eq!(detect_latency, 1.5);
+    assert_eq!(epoch, 2);
+    assert_eq!(repair_latency_epochs, 1);
+    assert_eq!(orphaned_tiles, 12);
+    assert_eq!(recovered_tiles, 9);
+    assert_eq!(uncovered_constraints, 2);
 }
 
 /// The per-epoch record: wall-clock is `seconds` (and, per component,

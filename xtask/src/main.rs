@@ -70,6 +70,7 @@ const ZERO_WALL_CLOCK_MANIFEST: &[&str] = &[
     "rec.seconds",
     "comp.seconds",
     "comp.queue_wait",
+    "rep.seconds",
     "arena_frame_allocs",
     "arena_pixel_allocs",
     "arena_pixel_reuses",
