@@ -1,48 +1,239 @@
-//! §4.4 claims — SBNet speedup vs RoI area and the dense crossover:
-//! sweep the number of active blocks through every compiled RoI capacity
-//! and compare against the dense detector.
+//! §4.4 claims extended to consolidation — the three-way crossover
+//! between the dense detector, the SBNet-style per-camera RoI variant
+//! and the cross-camera canvas route (DESIGN.md §13): sweep aggregate
+//! RoI coverage on 16→64-camera fleets and record which route wins.
 //!
-//! Expected shape (paper): 1.5–2.5× speedup at 10–20 % RoI coverage;
-//! gather/scatter overhead makes RoI *slower* than dense near full-frame
-//! coverage (why CrossRoI loads both models and routes by RoI area).
+//! Expected shape: canvas beats per-camera RoI below ~25 % aggregate
+//! coverage (many mostly-empty inferences fold into a few dense ones);
+//! near full-frame coverage every camera needs its own canvas, so the
+//! gather overhead makes consolidation the *losing* route — which is why
+//! the auto heuristic routes by coverage.
+//!
+//! The native sweep runs everywhere; with `--features pjrt` the original
+//! measured SBNet-vs-dense table on the compiled executables follows.
+//!
+//! Besides the printed tables the bench writes `BENCH_canvas.json`
+//! (machine-readable rows: fleet size, coverage, per-camera seconds per
+//! route, canvas count, fill) so CI can archive the crossover per commit.
+//!
+//! Run: `cargo bench --bench sbnet_crossover`
+//! Quick smoke (CI): `CROSSROI_BENCH_QUICK=1 cargo bench --bench sbnet_crossover`
 
 mod common;
 
-use crossroi::bench::{fmt, time_it, Table};
+use crossroi::bench::{fmt, time_it, Table, Timing};
+use crossroi::pipeline::canvas::{gather_into, inflate_clip, GATHER_INFLATE_CELLS, GUTTER_PX};
+use crossroi::runtime::native::{detect_full_into, detect_roi_into, DetectScratch};
 use crossroi::sim::Scenario;
+use crossroi::tilegroup::pack::{PackItem, Packer, Placement};
+use crossroi::util::geometry::IRect;
+use crossroi::util::json::Json;
+
+const FRAME_W: usize = 320;
+const FRAME_H: usize = 192;
+const FRAME_PX: u64 = (FRAME_W * FRAME_H) as u64;
+
+/// One fleet/coverage point of the native three-way sweep.
+struct FleetRow {
+    cameras: usize,
+    coverage_pct: f64,
+    dense: Timing,
+    sbnet: Timing,
+    canvas: Timing,
+    canvases: usize,
+    mean_fill: f64,
+}
+
+/// A deterministic 16-aligned kept-group rect covering roughly
+/// `coverage_pct` of the frame, shifted per camera so fleets don't pack
+/// into degenerate identical layouts.
+fn group_rect(cam: usize, coverage_pct: f64) -> IRect {
+    let cells = ((coverage_pct / 100.0) * 240.0).round().max(1.0) as u32;
+    let w_cells = cells.min(20);
+    let h_cells = cells.div_ceil(w_cells).min(12);
+    let x0 = (cam as u32 * 3) % (20 - w_cells + 1);
+    let y0 = (cam as u32 * 5) % (12 - h_cells + 1);
+    IRect::new(x0 * 16, y0 * 16, w_cells * 16, h_cells * 16)
+}
+
+/// The 32-px SBNet block ids covered by a rect (10-wide block grid).
+fn rect_blocks(r: IRect) -> Vec<i32> {
+    let mut out = Vec::new();
+    for by in (r.y / 32)..(r.y + r.h).div_ceil(32) {
+        for bx in (r.x / 32)..(r.x + r.w).div_ceil(32) {
+            out.push((by * 10 + bx) as i32);
+        }
+    }
+    out
+}
 
 fn main() {
+    let quick = std::env::var("CROSSROI_BENCH_QUICK").ok().as_deref() == Some("1");
+    let (warmup, iters, secs) = if quick { (1, 2, 0.5) } else { (2, 8, 3.0) };
+    let fleets: &[usize] = if quick { &[8] } else { &[16, 32, 64] };
+    let coverages: &[f64] = if quick { &[10.0, 50.0] } else { &[5.0, 10.0, 25.0, 50.0, 75.0] };
+
     let cfg = common::sweep_config();
     let scenario = Scenario::build(&cfg.scenario);
     let renderer = scenario.renderer();
-    let rt = common::load_runtime(&cfg);
-    let frame = renderer.render(0, 5).to_f32();
+    // one rendered frame per fleet slot (distinct timestamps stand in
+    // for distinct cameras — identical detector cost either way)
+    let max_cams = *fleets.iter().max().unwrap();
+    let frames: Vec<Vec<f32>> = (0..max_cams).map(|i| renderer.render(0, i).to_f32()).collect();
 
-    let dense = time_it(3, 40, 8.0, || {
-        std::hint::black_box(rt.infer_full(&frame).unwrap());
-    });
-    println!(
-        "dense detector: {} ({:.1} Hz)",
-        dense.per_iter_display(),
-        1.0 / dense.mean_secs
-    );
+    let mut rows: Vec<FleetRow> = Vec::new();
+    for &n in fleets {
+        for &cov in coverages {
+            let rects: Vec<IRect> = (0..n).map(|c| group_rect(c, cov)).collect();
+            let gathers: Vec<IRect> = rects
+                .iter()
+                .map(|&r| inflate_clip(r, GATHER_INFLATE_CELLS, FRAME_W as u32, FRAME_H as u32))
+                .collect();
+            let blocks: Vec<Vec<i32>> = rects.iter().map(|&r| rect_blocks(r)).collect();
+
+            // epoch-time packing (not in the timed region — the pipeline
+            // packs once per plan, not once per frame)
+            let items: Vec<PackItem> = gathers
+                .iter()
+                .enumerate()
+                .map(|(id, g)| PackItem { id, w: g.w, h: g.h })
+                .collect();
+            let mut packer = Packer::new(FRAME_W as u32, FRAME_H as u32, GUTTER_PX);
+            let mut placements: Vec<Placement> = Vec::new();
+            let n_canvases = packer.pack(&items, &mut placements);
+            let placed_px: u64 = gathers.iter().map(|g| g.area()).sum();
+            let mean_fill = placed_px as f64 / (n_canvases as u64 * FRAME_PX) as f64;
+
+            // all buffers hoisted out of the timed closures
+            let mut scratch = DetectScratch::new();
+            let mut grid: Vec<f32> = Vec::new();
+            let mut canvases: Vec<Vec<f32>> =
+                vec![vec![0.0; FRAME_W * FRAME_H * 3]; n_canvases];
+
+            let dense = time_it(warmup, iters, secs, || {
+                for f in &frames[..n] {
+                    detect_full_into(f, FRAME_H, FRAME_W, &mut scratch, &mut grid);
+                    std::hint::black_box(&grid);
+                }
+            });
+            let sbnet = time_it(warmup, iters, secs, || {
+                for (f, b) in frames[..n].iter().zip(&blocks) {
+                    detect_roi_into(f, FRAME_H, FRAME_W, b, 32, 10, &mut scratch, &mut grid);
+                    std::hint::black_box(&grid);
+                }
+            });
+            // gathers rewrite the same placements every iteration, so the
+            // zero-initialised gutters stay zero across iterations
+            let canvas = time_it(warmup, iters, secs, || {
+                for p in &placements {
+                    gather_into(
+                        &mut canvases[p.canvas],
+                        FRAME_W,
+                        &frames[p.id],
+                        FRAME_W,
+                        gathers[p.id],
+                        p.x,
+                        p.y,
+                    );
+                }
+                for c in &canvases {
+                    detect_full_into(c, FRAME_H, FRAME_W, &mut scratch, &mut grid);
+                    std::hint::black_box(&grid);
+                }
+            });
+            rows.push(FleetRow {
+                cameras: n,
+                coverage_pct: cov,
+                dense,
+                sbnet,
+                canvas,
+                canvases: n_canvases,
+                mean_fill,
+            });
+        }
+    }
 
     let mut table = Table::new(&[
-        "active blocks", "coverage %", "per-frame", "Hz", "speedup vs dense",
+        "cameras", "coverage %", "dense/cam", "sbnet/cam", "canvas/cam",
+        "canvases", "fill", "canvas vs sbnet",
     ]);
-    for &n in &[4usize, 8, 12, 16, 24, 32, 48, 60] {
-        let blocks: Vec<i32> = (0..n as i32).collect();
-        let t = time_it(3, 40, 8.0, || {
-            std::hint::black_box(rt.infer_roi(&frame, &blocks).unwrap());
-        });
+    for r in &rows {
+        let per_cam = |t: &Timing| t.mean_secs / r.cameras as f64;
         table.row(vec![
-            format!("{n} (K={})", rt.capacity_for(n).unwrap_or(60)),
-            fmt(100.0 * n as f64 / 60.0, 0),
-            t.per_iter_display(),
-            fmt(1.0 / t.mean_secs, 1),
-            fmt(dense.mean_secs / t.mean_secs, 2),
+            r.cameras.to_string(),
+            fmt(r.coverage_pct, 0),
+            format!("{:.1}us", per_cam(&r.dense) * 1e6),
+            format!("{:.1}us", per_cam(&r.sbnet) * 1e6),
+            format!("{:.1}us", per_cam(&r.canvas) * 1e6),
+            r.canvases.to_string(),
+            fmt(r.mean_fill, 2),
+            format!("{:.2}x", r.sbnet.mean_secs / r.canvas.mean_secs),
         ]);
     }
-    table.print("SBNet RoI variant vs dense (measured on the PJRT executables)");
-    println!("\nexpected shape: speedup > 1.5x below ~20% coverage, < 1x near 100% (crossover)");
+    table.print("dense vs per-camera RoI vs consolidated canvases (native detector)");
+    println!(
+        "\nexpected shape: canvas > 1x vs sbnet at <=25% aggregate coverage, \
+         < 1x near full coverage (three-way crossover)"
+    );
+
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("cameras", Json::Num(r.cameras as f64)),
+                ("coverage_pct", Json::Num(r.coverage_pct)),
+                ("dense_secs_per_cam", Json::Num(r.dense.mean_secs / r.cameras as f64)),
+                ("sbnet_secs_per_cam", Json::Num(r.sbnet.mean_secs / r.cameras as f64)),
+                ("canvas_secs_per_cam", Json::Num(r.canvas.mean_secs / r.cameras as f64)),
+                ("canvases", Json::Num(r.canvases as f64)),
+                ("mean_fill", Json::Num(r.mean_fill)),
+                (
+                    "canvas_speedup_vs_sbnet",
+                    Json::Num(r.sbnet.mean_secs / r.canvas.mean_secs),
+                ),
+                ("iters", Json::Num(r.dense.iters as f64)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("sbnet_crossover".into())),
+        ("detector", Json::Str("native".into())),
+        ("quick", Json::Bool(quick)),
+        ("rows", Json::Arr(json_rows)),
+    ]);
+    let path = "BENCH_canvas.json";
+    std::fs::write(path, doc.to_string_pretty(2) + "\n").expect("write crossover scoreboard");
+    println!("crossover scoreboard written to {path}");
+
+    // ---- measured SBNet-vs-dense sweep on the PJRT executables ----
+    #[cfg(feature = "pjrt")]
+    {
+        let rt = common::load_runtime(&cfg);
+        let frame = renderer.render(0, 5).to_f32();
+        let dense = time_it(3, 40, 8.0, || {
+            std::hint::black_box(rt.infer_full(&frame).unwrap());
+        });
+        println!(
+            "\ndense detector: {} ({:.1} Hz)",
+            dense.per_iter_display(),
+            1.0 / dense.mean_secs
+        );
+        let mut table = Table::new(&[
+            "active blocks", "coverage %", "per-frame", "Hz", "speedup vs dense",
+        ]);
+        for &k in &[4usize, 8, 12, 16, 24, 32, 48, 60] {
+            let blocks: Vec<i32> = (0..k as i32).collect();
+            let t = time_it(3, 40, 8.0, || {
+                std::hint::black_box(rt.infer_roi(&frame, &blocks).unwrap());
+            });
+            table.row(vec![
+                format!("{k} (K={})", rt.capacity_for(k).unwrap_or(60)),
+                fmt(100.0 * k as f64 / 60.0, 0),
+                t.per_iter_display(),
+                fmt(1.0 / t.mean_secs, 1),
+                fmt(dense.mean_secs / t.mean_secs, 2),
+            ]);
+        }
+        table.print("SBNet RoI variant vs dense (measured on the PJRT executables)");
+    }
 }

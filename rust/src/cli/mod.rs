@@ -24,7 +24,7 @@ pub const VALUE_FLAGS: &[&str] = &[
     "bandwidth-mbps", "qp", "offline-threads", "solver", "shards",
     "replan-every", "replan-drift", "drift-at", "drift-strength",
     "replan-scope", "planner-threads", "intersections", "spacing",
-    "drift-intersection", "scenario", "fail",
+    "drift-intersection", "scenario", "fail", "consolidate",
 ];
 
 /// Value flags that may be given more than once; every occurrence is

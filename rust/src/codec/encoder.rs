@@ -7,7 +7,7 @@
 //! segment stands alone, which is what makes segment length the
 //! latency/size tradeoff of Fig. 11).
 
-use super::{dct, entropy, motion, BLOCK, MB, REGION_HEADER_BYTES, SEGMENT_HEADER_BYTES};
+use super::{dct, entropy, kernels, motion, BLOCK, MB, REGION_HEADER_BYTES, SEGMENT_HEADER_BYTES};
 use crate::sim::render::Frame;
 use crate::util::geometry::IRect;
 
@@ -340,24 +340,17 @@ impl RegionStream {
     }
 }
 
+/// 16×16 intra-activity mean, dispatched through the scalar/AVX2
+/// kernels (byte-identical either way; see [`super::kernels`]).
 fn mb_mean(plane: &[f32], w: usize, bx: usize, by: usize) -> f32 {
-    let mut acc = 0.0;
-    for y in 0..MB {
-        for x in 0..MB {
-            acc += plane[(by + y) * w + bx + x];
-        }
-    }
-    acc / (MB * MB) as f32
+    const _: () = assert!(MB == 16, "intra kernels assume 16x16 macroblocks");
+    kernels::intra_mean_16x16(plane, w, bx, by)
 }
 
+/// 16×16 sum of absolute deviations from `target`, dispatched through
+/// the scalar/AVX2 kernels (byte-identical either way).
 fn mb_sad_to(plane: &[f32], w: usize, bx: usize, by: usize, target: f32) -> f32 {
-    let mut acc = 0.0;
-    for y in 0..MB {
-        for x in 0..MB {
-            acc += (plane[(by + y) * w + bx + x] - target).abs();
-        }
-    }
-    acc
+    kernels::intra_sad_16x16(plane, w, bx, by, target)
 }
 
 /// Encoded output of one camera segment.

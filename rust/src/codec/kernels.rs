@@ -135,6 +135,86 @@ pub fn convert_u8_to_f32_scalar(src: &[u8], dst: &mut [f32]) {
     }
 }
 
+/// Mean of one 16×16 macroblock — the encoder's intra-activity scan
+/// ([`crate::codec::encoder`] mode decision).
+#[inline]
+pub fn intra_mean_16x16(plane: &[f32], w: usize, bx: usize, by: usize) -> f32 {
+    assert!(bx + 16 <= w && (by + 16) * w <= plane.len(), "macroblock out of bounds");
+    #[cfg(target_arch = "x86_64")]
+    if backend() == KernelBackend::Avx2 {
+        // SAFETY: AVX2 presence is guaranteed by `backend()`; the 16×16
+        // window at (bx, by) is inside `plane` (asserted above).
+        return unsafe { avx2::intra_mean_16x16(plane.as_ptr().add(by * w + bx), w) };
+    }
+    intra_mean_16x16_scalar(plane, w, bx, by)
+}
+
+/// Scalar reference for [`intra_mean_16x16`]: eight lane accumulators
+/// (lane `j` sums columns `j` and `j + 8`) reduced by the fixed
+/// [`hsum8`] tree, divided by 256 — the same structure as the motion
+/// SAD kernels, so the AVX2 path matches bit-for-bit.
+#[inline]
+pub fn intra_mean_16x16_scalar(plane: &[f32], w: usize, bx: usize, by: usize) -> f32 {
+    assert!(bx + 16 <= w && (by + 16) * w <= plane.len(), "macroblock out of bounds");
+    let mut lanes = [0.0f32; 8];
+    for y in 0..16 {
+        let row = (by + y) * w + bx;
+        for (j, lane) in lanes.iter_mut().enumerate() {
+            *lane += plane[row + j] + plane[row + j + 8];
+        }
+    }
+    hsum8(&lanes) / 256.0
+}
+
+/// Sum of absolute deviations of one 16×16 macroblock from `target`
+/// (the MB mean) — the second half of the encoder's intra-activity
+/// scan.  No early exit: the full sum always feeds the mode decision.
+#[inline]
+pub fn intra_sad_16x16(plane: &[f32], w: usize, bx: usize, by: usize, target: f32) -> f32 {
+    assert!(bx + 16 <= w && (by + 16) * w <= plane.len(), "macroblock out of bounds");
+    #[cfg(target_arch = "x86_64")]
+    if backend() == KernelBackend::Avx2 {
+        // SAFETY: AVX2 presence is guaranteed by `backend()`; the 16×16
+        // window at (bx, by) is inside `plane` (asserted above).
+        return unsafe {
+            avx2::intra_sad_16x16(plane.as_ptr().add(by * w + bx), w, target)
+        };
+    }
+    intra_sad_16x16_scalar(plane, w, bx, by, target)
+}
+
+/// Scalar reference for [`intra_sad_16x16`]: lane `j` accumulates
+/// `|p[j] − target| + |p[j + 8] − target|` per row, reduced by
+/// [`hsum8`] — same lane/reduction structure as the AVX2 twin.
+#[inline]
+pub fn intra_sad_16x16_scalar(
+    plane: &[f32],
+    w: usize,
+    bx: usize,
+    by: usize,
+    target: f32,
+) -> f32 {
+    assert!(bx + 16 <= w && (by + 16) * w <= plane.len(), "macroblock out of bounds");
+    let mut lanes = [0.0f32; 8];
+    for y in 0..16 {
+        let row = (by + y) * w + bx;
+        for (j, lane) in lanes.iter_mut().enumerate() {
+            *lane += (plane[row + j] - target).abs() + (plane[row + j + 8] - target).abs();
+        }
+    }
+    hsum8(&lanes)
+}
+
+/// Fixed reduction tree `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))` matching
+/// the AVX2 `hsum256` exactly, so lane-structured scalar references
+/// reduce in the same order as their vector twins.
+#[inline]
+fn hsum8(l: &[f32; 8]) -> f32 {
+    let s = [l[0] + l[4], l[1] + l[5], l[2] + l[6], l[3] + l[7]];
+    let t = [s[0] + s[2], s[1] + s[3]];
+    t[0] + t[1]
+}
+
 /// AVX2 implementations.  Every function here mirrors its scalar
 /// reference operation-for-operation (see the module doc's byte-identity
 /// contract); callers must only dispatch here after feature detection.
@@ -347,6 +427,58 @@ pub mod avx2 {
         }
     }
 
+    /// Mean of one 16×16 macroblock (intra-activity scan): two `__m256`
+    /// loads per row accumulated into eight lane sums, reduced with
+    /// [`hsum256`] and divided by 256 — exactly the lane structure of
+    /// [`super::intra_mean_16x16_scalar`].
+    ///
+    /// # Safety
+    /// Caller must guarantee AVX2 and that `mb` points at 16 rows of 16
+    /// valid f32s under `stride`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn intra_mean_16x16(mb: *const f32, stride: usize) -> f32 {
+        // SAFETY: the caller guarantees 16 rows of 16 valid f32s behind
+        // `mb` under `stride`, so every offset below is in bounds; AVX2
+        // is the caller's contract.
+        unsafe {
+            let mut acc = _mm256_setzero_ps();
+            for y in 0..16 {
+                let a0 = _mm256_loadu_ps(mb.add(y * stride));
+                let a1 = _mm256_loadu_ps(mb.add(y * stride + 8));
+                acc = _mm256_add_ps(acc, _mm256_add_ps(a0, a1));
+            }
+            hsum256(acc) / 256.0
+        }
+    }
+
+    /// Sum of absolute deviations of one 16×16 macroblock from `target`,
+    /// abs via sign-bit clear (bit-identical to `f32::abs`), no early
+    /// exit — exactly the lane structure of
+    /// [`super::intra_sad_16x16_scalar`].
+    ///
+    /// # Safety
+    /// Caller must guarantee AVX2 and that `mb` points at 16 rows of 16
+    /// valid f32s under `stride`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn intra_sad_16x16(mb: *const f32, stride: usize, target: f32) -> f32 {
+        // SAFETY: the caller guarantees 16 rows of 16 valid f32s behind
+        // `mb` under `stride`, so every offset below is in bounds; AVX2
+        // is the caller's contract.
+        unsafe {
+            let sign = _mm256_set1_ps(-0.0);
+            let t = _mm256_set1_ps(target);
+            let mut acc = _mm256_setzero_ps();
+            for y in 0..16 {
+                let a0 = _mm256_loadu_ps(mb.add(y * stride));
+                let a1 = _mm256_loadu_ps(mb.add(y * stride + 8));
+                let d0 = _mm256_andnot_ps(sign, _mm256_sub_ps(a0, t));
+                let d1 = _mm256_andnot_ps(sign, _mm256_sub_ps(a1, t));
+                acc = _mm256_add_ps(acc, _mm256_add_ps(d0, d1));
+            }
+            hsum256(acc)
+        }
+    }
+
     /// Zig-zag gather + nonzero scan of one quantized block, then the
     /// run-length bit costing on the 64-bit nonzero mask.  Integer ops
     /// only, so identical to the scalar scan by construction.
@@ -467,6 +599,45 @@ mod tests {
                 a.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
                 b.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
             );
+        }
+    }
+
+    #[test]
+    fn intra_dispatch_matches_scalar_bitwise() {
+        let mut rng = Rng::new(23);
+        let w = 48;
+        let plane: Vec<f32> =
+            (0..w * 40).map(|_| (rng.next_u64() % 256) as f32).collect();
+        for (bx, by) in [(0, 0), (16, 8), (32, 24), (5, 17)] {
+            let mean = intra_mean_16x16(&plane, w, bx, by);
+            let mean_ref = intra_mean_16x16_scalar(&plane, w, bx, by);
+            assert_eq!(mean.to_bits(), mean_ref.to_bits(), "mean at ({bx}, {by})");
+            let sad = intra_sad_16x16(&plane, w, bx, by, mean);
+            let sad_ref = intra_sad_16x16_scalar(&plane, w, bx, by, mean);
+            assert_eq!(sad.to_bits(), sad_ref.to_bits(), "sad at ({bx}, {by})");
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[cfg_attr(miri, ignore)] // Miri has no AVX2 intrinsics; the scalar path is covered above
+    #[test]
+    fn avx2_intra_is_bit_identical() {
+        if !avx2_supported() {
+            return;
+        }
+        let mut rng = Rng::new(29);
+        for stride in [16usize, 17, 48, 320] {
+            let plane: Vec<f32> =
+                (0..stride * 16).map(|_| (rng.next_u64() % 1000) as f32 / 4.0).collect();
+            // SAFETY: AVX2 presence checked at the top of the test; the
+            // plane holds 16 full rows of `stride` ≥ 16 f32s.
+            let mean = unsafe { avx2::intra_mean_16x16(plane.as_ptr(), stride) };
+            let mean_ref = intra_mean_16x16_scalar(&plane, stride, 0, 0);
+            assert_eq!(mean.to_bits(), mean_ref.to_bits(), "mean, stride {stride}");
+            // SAFETY: same bounds as above.
+            let sad = unsafe { avx2::intra_sad_16x16(plane.as_ptr(), stride, mean) };
+            let sad_ref = intra_sad_16x16_scalar(&plane, stride, 0, 0, mean);
+            assert_eq!(sad.to_bits(), sad_ref.to_bits(), "sad, stride {stride}");
         }
     }
 }

@@ -55,6 +55,12 @@ pub struct MethodReport {
     pub mask_coverage: f64,
     /// Regions per camera after grouping (diagnostic for §4.3).
     pub regions_per_cam: Vec<usize>,
+    /// Cross-camera consolidation policy in effect (`--consolidate`):
+    /// "auto", "on" or "off" (DESIGN.md §13).
+    pub consolidate_mode: String,
+    /// Cameras routed through packed canvases under the initial plan — a
+    /// pure function of plan and policy, so it is serialized.
+    pub canvas_cams: usize,
     /// Wall-clock cost of running the method's offline phase (seconds).
     pub offline_seconds: f64,
     // --- continuous re-profiling (DESIGN.md §7–§8; zero/empty when the
@@ -114,6 +120,10 @@ pub struct MethodReport {
     pub arena_grid_allocs: usize,
     /// Inference-grid buffers recycled through the arena.
     pub arena_grid_reuses: usize,
+    /// Fresh consolidation-canvas buffers allocated on the server side.
+    pub arena_canvas_allocs: usize,
+    /// Consolidation-canvas buffers recycled through the arena.
+    pub arena_canvas_reuses: usize,
     // --- planner-pool diagnostics (DESIGN.md §10; same contract as the
     // arena counters: schedule-dependent, NOT serialized in `to_json`) ---
     /// Epoch boundaries whose compute phase ran (carried or fired).
@@ -124,6 +134,15 @@ pub struct MethodReport {
     pub planner_max_concurrent: usize,
     /// Total seconds component solves waited for a pool worker.
     pub planner_queue_wait_secs: f64,
+    // --- canvas-consolidation diagnostics (DESIGN.md §13; packing runs
+    // per merged batch, so these depend on batch composition — same
+    // contract as the arena counters: NOT serialized in `to_json`) ---
+    /// Dense canvases packed and inferred over the run.
+    pub canvas_count: usize,
+    /// Mean fraction of canvas pixels carrying gathered tile groups.
+    pub canvas_fill_ratio: f64,
+    /// Mean camera-jobs folded into each canvas (batch occupancy).
+    pub canvas_occupancy: f64,
 }
 
 impl MethodReport {
@@ -171,6 +190,8 @@ impl MethodReport {
                 "regions_per_cam",
                 Json::Arr(self.regions_per_cam.iter().map(|&r| Json::Num(r as f64)).collect()),
             ),
+            ("consolidate_mode", Json::Str(self.consolidate_mode.clone())),
+            ("canvas_cams", Json::Num(self.canvas_cams as f64)),
             ("offline_seconds", Json::Num(self.offline_seconds)),
             ("replan_count", Json::Num(self.replan_count as f64)),
             ("replan_warm_count", Json::Num(self.replan_warm_count as f64)),
@@ -220,10 +241,15 @@ impl MethodReport {
         self.arena_pixel_reuses = 0;
         self.arena_grid_allocs = 0;
         self.arena_grid_reuses = 0;
+        self.arena_canvas_allocs = 0;
+        self.arena_canvas_reuses = 0;
         self.planner_epochs_computed = 0;
         self.planner_components_solved = 0;
         self.planner_max_concurrent = 0;
         self.planner_queue_wait_secs = 0.0;
+        self.canvas_count = 0;
+        self.canvas_fill_ratio = 0.0;
+        self.canvas_occupancy = 0.0;
     }
 }
 
@@ -380,10 +406,17 @@ mod tests {
         r.arena_pixel_reuses = 40;
         r.arena_grid_allocs = 3;
         r.arena_grid_reuses = 21;
+        r.arena_canvas_allocs = 2;
+        r.arena_canvas_reuses = 11;
         r.planner_epochs_computed = 4;
         r.planner_components_solved = 6;
         r.planner_max_concurrent = 3;
         r.planner_queue_wait_secs = 0.5;
+        r.canvas_count = 8;
+        r.canvas_fill_ratio = 0.6;
+        r.canvas_occupancy = 2.5;
+        r.consolidate_mode = "auto".to_string();
+        r.canvas_cams = 4;
         r.zero_wall_clock();
         assert_eq!(r.offline_seconds, 0.0);
         assert_eq!(r.replan_seconds, 0.0);
@@ -402,7 +435,15 @@ mod tests {
         assert_eq!(r.repair_records[0].repair_latency_epochs, 1);
         assert_eq!(r.arena_pixel_reuses, 0);
         assert_eq!(r.arena_grid_reuses, 0);
+        assert_eq!(r.arena_canvas_allocs, 0);
+        assert_eq!(r.arena_canvas_reuses, 0);
         assert_eq!(r.planner_components_solved, 0);
         assert_eq!(r.planner_queue_wait_secs, 0.0);
+        assert_eq!(r.canvas_count, 0);
+        assert_eq!(r.canvas_fill_ratio, 0.0);
+        assert_eq!(r.canvas_occupancy, 0.0);
+        // routing policy is plan-derived, not wall-clock: it survives
+        assert_eq!(r.consolidate_mode, "auto");
+        assert_eq!(r.canvas_cams, 4);
     }
 }

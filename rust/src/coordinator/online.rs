@@ -28,10 +28,11 @@ use crate::coordinator::metrics::{LatencyBreakdown, MethodReport};
 use crate::offline::replan::{RepairRecord, Replanner, ReplanRecord};
 use crate::offline::{build_plan_with, OfflinePlan};
 use crate::pipeline::{
-    run_pipeline_in, use_roi_path, Arena, BatchedInfer, CameraStages, CarryOverQuery,
-    CodecEncodeStage, DesTransport, FaultContext, FaultTimeline, FilterStage, Infer,
-    LivenessMonitor, PassThroughFilter, PipelineOptions, PlanEpoch, PlanSchedule, QueryStage,
-    ReductoFilterStage, ReplanContext, ReplanPolicy, SegmentLayout, SimCapture,
+    consolidation_active, run_pipeline_in, use_roi_path, Arena, BatchedInfer, CameraStages,
+    CanvasTally, CarryOverQuery, CodecEncodeStage, DesTransport, FaultContext, FaultTimeline,
+    FilterStage, Infer, LivenessMonitor, PassThroughFilter, PipelineOptions, PlanEpoch,
+    PlanSchedule, QueryStage, ReductoFilterStage, ReplanContext, ReplanPolicy, SegmentLayout,
+    SimCapture,
 };
 use crate::util::geometry::IRect;
 use crate::query;
@@ -178,11 +179,19 @@ pub fn run_method_with(
     // one buffer arena spans the whole run: camera-side frame/pixel
     // buffers and the server's inference-grid buffers all recycle here
     let arena = Arena::new();
+    // cross-camera canvas consolidation (DESIGN.md §13): the route is a
+    // pure function of plan + policy; the tally collects the per-batch
+    // packing diagnostics
+    let frame_px = plan.masks.tiling.frame_w as u64 * plan.masks.tiling.frame_h as u64;
+    let canvas_tally = CanvasTally::default();
     let server = BatchedInfer {
         infer,
         scenario,
         blocks: &plan.blocks,
         use_roi: &use_roi,
+        groups: &plan.groups,
+        consolidate: opts.consolidate,
+        canvas_tally: Some(&canvas_tally),
         schedule: replan_setup.as_ref().map(|(s, _)| s),
         objectness_threshold: sys.objectness_threshold,
         eval_start: eval.start,
@@ -300,6 +309,12 @@ pub fn run_method_with(
             &(0..n_cams).map(|c| plan.masks.coverage(c)).collect::<Vec<_>>(),
         ),
         regions_per_cam: plan.groups.iter().map(|g| g.len()).collect(),
+        consolidate_mode: opts.consolidate.name().to_string(),
+        canvas_cams: if consolidation_active(opts.consolidate, &use_roi, &plan.groups, frame_px) {
+            use_roi.iter().filter(|&&r| r).count()
+        } else {
+            0
+        },
         offline_seconds: plan.seconds(),
         replan_count: replan_records.iter().map(|r| r.fired_components()).sum(),
         replan_warm_count: replan_records
@@ -325,10 +340,15 @@ pub fn run_method_with(
         arena_pixel_reuses: out.arena.pixel_reuses,
         arena_grid_allocs: out.arena.grid_allocs,
         arena_grid_reuses: out.arena.grid_reuses,
+        arena_canvas_allocs: out.arena.canvas_allocs,
+        arena_canvas_reuses: out.arena.canvas_reuses,
         planner_epochs_computed: pool.epochs_computed,
         planner_components_solved: pool.components_solved,
         planner_max_concurrent: pool.max_concurrent,
         planner_queue_wait_secs: pool.queue_wait_secs,
+        canvas_count: canvas_tally.canvases(),
+        canvas_fill_ratio: canvas_tally.mean_fill(frame_px),
+        canvas_occupancy: canvas_tally.occupancy(),
     };
     Ok((report, reported))
 }

@@ -53,6 +53,11 @@ flags:
   --planner-threads <n>    worker threads for one re-plan epoch's compute
                            phase (drift profile + fired-component solves;
                            0 = inherit --offline-threads, the default)
+  --consolidate <mode>     auto|on|off cross-camera RoI consolidation: pack
+                           sparse cameras' kept tile groups into shared
+                           dense canvases on the server (auto, the default,
+                           consolidates when >= 2 RoI cameras keep <= 25%
+                           of their pixels)
   --fail <cam@t[..t2]>     sim: camera `cam` (0-based) goes silent at eval
                            time t; with `..t2` it rejoins at t2. Repeatable,
                            one camera per occurrence
@@ -300,6 +305,17 @@ fn run() -> Result<()> {
                 report.arena_grid_allocs,
                 report.arena_grid_reuses
             );
+            println!(
+                "  consolidation: {} mode, {} canvas cams; {} canvases, \
+                 {:.2} mean fill, {:.2} jobs/canvas, {} canvas allocs, {} canvas reuses",
+                report.consolidate_mode,
+                report.canvas_cams,
+                report.canvas_count,
+                report.canvas_fill_ratio,
+                report.canvas_occupancy,
+                report.arena_canvas_allocs,
+                report.arena_canvas_reuses
+            );
             if report.replan_count > 0 || report.replan_carried_components > 0 {
                 println!(
                     "  re-profiling: {} component re-solves ({} warm-started), {} carried, \
@@ -420,6 +436,10 @@ fn pipeline_options(args: &Args) -> Result<crossroi::pipeline::PipelineOptions> 
     }
     if let Some(n) = args.u64_flag("planner-threads")? {
         opts.planner_threads = n as usize;
+    }
+    if let Some(name) = args.flag("consolidate") {
+        opts.consolidate = crossroi::pipeline::ConsolidateMode::parse(name)
+            .ok_or_else(|| anyhow::anyhow!("--consolidate must be auto|on|off, got {name:?}"))?;
     }
     Ok(opts)
 }

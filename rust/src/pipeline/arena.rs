@@ -30,11 +30,17 @@ pub struct Arena {
     /// Server-side objectness-grid buffers ([`crate::pipeline::infer::Infer::infer_batch_into`]
     /// outputs) — taken per merged batch, returned after decode.
     grids: Mutex<Vec<Vec<f32>>>,
+    /// Consolidation canvas buffers ([`crate::pipeline::canvas`]) —
+    /// taken per merged batch on the canvas route, returned after
+    /// inference.  Zero-filled by the taker before gathering.
+    canvases: Mutex<Vec<Vec<f32>>>,
     frame_allocs: AtomicUsize,
     pixel_allocs: AtomicUsize,
     pixel_reuses: AtomicUsize,
     grid_allocs: AtomicUsize,
     grid_reuses: AtomicUsize,
+    canvas_allocs: AtomicUsize,
+    canvas_reuses: AtomicUsize,
 }
 
 /// Snapshot of the arena's allocation counters.
@@ -50,6 +56,10 @@ pub struct ArenaStats {
     pub grid_allocs: usize,
     /// Inference-grid vectors recycled from the free list.
     pub grid_reuses: usize,
+    /// Fresh consolidation-canvas buffers created on the server side.
+    pub canvas_allocs: usize,
+    /// Consolidation-canvas buffers recycled from the free list.
+    pub canvas_reuses: usize,
 }
 
 impl Arena {
@@ -99,6 +109,27 @@ impl Arena {
         self.grids.lock().expect("arena lock poisoned").push(buf);
     }
 
+    /// Take a consolidation-canvas buffer from the free list (or a fresh
+    /// empty one).  The caller zero-fills it before gathering.
+    pub fn take_canvas(&self) -> Vec<f32> {
+        let recycled = self.canvases.lock().expect("arena lock poisoned").pop();
+        match recycled {
+            Some(buf) => {
+                self.canvas_reuses.fetch_add(1, Ordering::Relaxed);
+                buf
+            }
+            None => {
+                self.canvas_allocs.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            }
+        }
+    }
+
+    /// Return an inferred canvas buffer to the free list.
+    pub fn put_canvas(&self, buf: Vec<f32>) {
+        self.canvases.lock().expect("arena lock poisoned").push(buf);
+    }
+
     /// A worker-local frame recycler that counts its fresh allocations
     /// against this arena.
     pub fn frame_pool(&self) -> FramePool<'_> {
@@ -112,6 +143,8 @@ impl Arena {
             pixel_reuses: self.pixel_reuses.load(Ordering::Relaxed),
             grid_allocs: self.grid_allocs.load(Ordering::Relaxed),
             grid_reuses: self.grid_reuses.load(Ordering::Relaxed),
+            canvas_allocs: self.canvas_allocs.load(Ordering::Relaxed),
+            canvas_reuses: self.canvas_reuses.load(Ordering::Relaxed),
         }
     }
 }
@@ -168,6 +201,20 @@ mod tests {
         assert_eq!(s.grid_allocs, 2);
         assert_eq!(s.grid_reuses, 1);
         // grid and pixel free lists are independent
+        assert_eq!(s.pixel_allocs, 0);
+    }
+
+    #[test]
+    fn canvas_buffers_recycle_independently() {
+        let arena = Arena::new();
+        let a = arena.take_canvas();
+        assert_eq!(arena.stats().canvas_allocs, 1);
+        arena.put_canvas(a);
+        let _b = arena.take_canvas();
+        let s = arena.stats();
+        assert_eq!(s.canvas_allocs, 1);
+        assert_eq!(s.canvas_reuses, 1);
+        assert_eq!(s.grid_allocs, 0);
         assert_eq!(s.pixel_allocs, 0);
     }
 

@@ -1,0 +1,442 @@
+//! Cross-camera RoI consolidation: gather every camera's kept tile
+//! groups into a few dense canvases, infer those, scatter the grids back
+//! (object-level consolidation, arXiv 2111.15451, on CrossRoI's groups).
+//!
+//! ## Byte-identity construction (DESIGN.md §13)
+//!
+//! The native detector's objectness cell (cy, cx) depends only on the
+//! frame pixels of its 16×16 cell rect inflated by 1 px (conv radius).
+//! The canvas path exploits that locality:
+//!
+//! * **gather**: each group rect is inflated by [`GATHER_INFLATE_CELLS`]
+//!   cells (clipped to the frame) and copied from the job's masked
+//!   pixels into a zero-filled canvas — zeros elsewhere match both the
+//!   detector's pad zeros and the masked-out background;
+//! * **scatter**: the group rect inflated by [`SCATTER_INFLATE_CELLS`]
+//!   cells, intersected with the plan's active-block cells, is copied
+//!   from the canvas grid into a zeroed per-camera grid.  Every active
+//!   cell is within one cell of some mask tile (blocks are 2×2 cells,
+//!   active iff a tile is masked), so the scatter regions of a camera's
+//!   groups cover all its active cells; inactive cells stay zero,
+//!   exactly like `detect_roi_into`'s restriction;
+//! * **gutter**: placements sit ≥ [`GUTTER_PX`] apart, so one
+//!   placement's 1-px receptive ring never reads another's pixels, and
+//!   connected-component decoding (the NMS analogue) cannot bleed
+//!   across groups.
+//!
+//! Scatter cells sit inside gather rects (1 cell + 1 px ≤ 2 cells), the
+//! 16-px alignment of groups, gutter and canvas keeps the pooling grid
+//! phase-aligned, and the detector is translation-invariant — so every
+//! reconstructed cell is bit-identical to the per-camera RoI path
+//! (`round_trip_matches_roi_path` below proves it on real masks).
+//!
+//! ## Routing determinism
+//!
+//! Whether a camera takes the canvas route is a pure function of the
+//! epoch plan ([`consolidation_active`]) — never of batch composition —
+//! so reports stay byte-identical across worker counts.  Packing still
+//! happens per merged batch (that is the cross-camera pooling), but it
+//! only affects the wall-clock-free diagnostics in [`CanvasTally`].
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::util::geometry::IRect;
+
+/// Detector cell edge in pixels (objectness grid granularity).
+pub const CELL_PX: u32 = 16;
+/// Gather inflation: the copied rect is the group rect grown by this
+/// many cells per side (2 cells ⊇ scatter ring + conv radius).
+pub const GATHER_INFLATE_CELLS: u32 = 2;
+/// Scatter inflation: cells owed to a group (covers the 1-cell ring a
+/// mask tile can activate in its 2×2 block).
+pub const SCATTER_INFLATE_CELLS: u32 = 1;
+/// Minimum pixel separation between canvas placements (≥ 1 px required
+/// by the conv radius; one full cell keeps placements grid-aligned).
+pub const GUTTER_PX: u32 = 16;
+/// Auto mode consolidates only when the fleet's RoI cameras keep at
+/// most this fraction of their pixels — above it, canvases stop winning
+/// over per-camera sparse inference (see `BENCH_canvas.json`).
+pub const CONSOLIDATE_COVERAGE_FRACTION: f64 = 0.25;
+
+/// The `--consolidate` policy (CLI → `PipelineOptions`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ConsolidateMode {
+    /// Consolidate when ≥ 2 RoI cameras keep ≤ 25 % of their pixels.
+    #[default]
+    Auto,
+    /// Always consolidate RoI cameras.
+    On,
+    /// Never consolidate (per-camera dense/sbnet routing only).
+    Off,
+}
+
+impl ConsolidateMode {
+    pub fn parse(s: &str) -> Option<ConsolidateMode> {
+        match s {
+            "auto" => Some(ConsolidateMode::Auto),
+            "on" => Some(ConsolidateMode::On),
+            "off" => Some(ConsolidateMode::Off),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ConsolidateMode::Auto => "auto",
+            ConsolidateMode::On => "on",
+            ConsolidateMode::Off => "off",
+        }
+    }
+}
+
+/// Does this plan route its RoI cameras through canvases?  A pure
+/// function of the plan (groups + RoI policy), deliberately independent
+/// of queue state so the route — and with it every report byte — cannot
+/// depend on worker scheduling.  `frame_px` is one camera's pixel count.
+pub fn consolidation_active(
+    mode: ConsolidateMode,
+    use_roi: &[bool],
+    groups: &[Vec<IRect>],
+    frame_px: u64,
+) -> bool {
+    let eligible: Vec<usize> =
+        (0..use_roi.len()).filter(|&c| use_roi[c]).collect();
+    match mode {
+        ConsolidateMode::Off => false,
+        ConsolidateMode::On => !eligible.is_empty(),
+        ConsolidateMode::Auto => {
+            if eligible.len() < 2 {
+                return false;
+            }
+            // groups partition the mask, so their areas sum to the kept
+            // pixel count — aggregate coverage needs no extra bookkeeping
+            let kept: u64 =
+                eligible.iter().map(|&c| groups[c].iter().map(|g| g.area()).sum::<u64>()).sum();
+            kept as f64 / (eligible.len() as u64 * frame_px) as f64
+                <= CONSOLIDATE_COVERAGE_FRACTION
+        }
+    }
+}
+
+/// Inflate `r` by `cells` detector cells per side, clipped to the
+/// `fw × fh` frame.  Tile-aligned input stays tile-aligned.
+pub fn inflate_clip(r: IRect, cells: u32, fw: u32, fh: u32) -> IRect {
+    let d = cells * CELL_PX;
+    let x0 = r.x.saturating_sub(d);
+    let y0 = r.y.saturating_sub(d);
+    let x1 = (r.x + r.w + d).min(fw);
+    let y1 = (r.y + r.h + d).min(fh);
+    IRect::new(x0, y0, x1 - x0, y1 - y0)
+}
+
+/// Copy the HWC pixels of `src` (frame coordinates) into the canvas at
+/// (`dst_x`, `dst_y`).  Row-wise `copy_from_slice` — no per-pixel math.
+pub fn gather_into(
+    canvas: &mut [f32],
+    canvas_w: usize,
+    frame: &[f32],
+    frame_w: usize,
+    src: IRect,
+    dst_x: u32,
+    dst_y: u32,
+) {
+    let (w, h) = (src.w as usize, src.h as usize);
+    let (sx, sy) = (src.x as usize, src.y as usize);
+    let (dx, dy) = (dst_x as usize, dst_y as usize);
+    for y in 0..h {
+        let from = ((sy + y) * frame_w + sx) * 3;
+        let to = ((dy + y) * canvas_w + dx) * 3;
+        canvas[to..to + w * 3].copy_from_slice(&frame[from..from + w * 3]);
+    }
+}
+
+/// Copy the cells of `scatter` (frame coordinates, restricted to
+/// `active` cells) from the canvas grid back into the camera grid.  The
+/// placement maps frame cell (cy, cx) to canvas cell
+/// `(cy − gather.y/16 + dst_y/16, cx − gather.x/16 + dst_x/16)`.
+/// Overlapping scatter regions write bit-identical values (each canvas
+/// reproduces the dense grid over its gather rect), so write order
+/// never matters.
+#[allow(clippy::too_many_arguments)]
+pub fn scatter_into(
+    cam_grid: &mut [f32],
+    canvas_grid: &[f32],
+    grid_w: usize,
+    scatter: IRect,
+    gather: IRect,
+    dst_x: u32,
+    dst_y: u32,
+    active: &[bool],
+) {
+    let c = CELL_PX;
+    debug_assert!(
+        scatter.x % c == 0
+            && scatter.y % c == 0
+            && scatter.w % c == 0
+            && scatter.h % c == 0
+            && gather.x % c == 0
+            && gather.y % c == 0
+            && dst_x % c == 0
+            && dst_y % c == 0,
+        "consolidation rects must stay cell-aligned"
+    );
+    let (cy0, cx0) = ((scatter.y / c) as usize, (scatter.x / c) as usize);
+    let (cy1, cx1) = (((scatter.y + scatter.h) / c) as usize, ((scatter.x + scatter.w) / c) as usize);
+    // frame cell → canvas cell offset (signed: dst may sit left of src)
+    let oy = (dst_y / c) as isize - (gather.y / c) as isize;
+    let ox = (dst_x / c) as isize - (gather.x / c) as isize;
+    for cy in cy0..cy1 {
+        for cx in cx0..cx1 {
+            if active[cy * grid_w + cx] {
+                let ccy = (cy as isize + oy) as usize;
+                let ccx = (cx as isize + ox) as usize;
+                cam_grid[cy * grid_w + cx] = canvas_grid[ccy * grid_w + ccx];
+            }
+        }
+    }
+}
+
+/// Expand a plan's active block ids into a per-cell bitmap (`out` is
+/// cleared and refilled — reusable, allocation-free once warm).
+pub fn active_cells(
+    blocks: &[i32],
+    grid_w: usize,
+    grid_h: usize,
+    cells_per_block: usize,
+    block_grid_w: usize,
+    out: &mut Vec<bool>,
+) {
+    out.clear();
+    out.resize(grid_w * grid_h, false);
+    for &b in blocks {
+        if b < 0 {
+            continue;
+        }
+        let by = b as usize / block_grid_w;
+        let bx = b as usize % block_grid_w;
+        for cy in 0..cells_per_block {
+            for cx in 0..cells_per_block {
+                let (gy, gx) = (by * cells_per_block + cy, bx * cells_per_block + cx);
+                if gy < grid_h && gx < grid_w {
+                    out[gy * grid_w + gx] = true;
+                }
+            }
+        }
+    }
+}
+
+/// Wall-clock-free consolidation diagnostics, accumulated across merged
+/// batches with relaxed atomics (exact values depend on batch
+/// composition, hence on scheduling — surfaced in `MethodReport` but
+/// excluded from its byte-compared JSON, like `ArenaStats`).
+#[derive(Debug, Default)]
+pub struct CanvasTally {
+    canvases: AtomicUsize,
+    batches: AtomicUsize,
+    jobs: AtomicUsize,
+    placed_px: AtomicU64,
+}
+
+impl CanvasTally {
+    pub fn record(&self, canvases: usize, jobs: usize, placed_px: u64) {
+        if canvases == 0 {
+            return;
+        }
+        self.canvases.fetch_add(canvases, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.jobs.fetch_add(jobs, Ordering::Relaxed);
+        self.placed_px.fetch_add(placed_px, Ordering::Relaxed);
+    }
+
+    /// Total canvases inferred across the run.
+    pub fn canvases(&self) -> usize {
+        self.canvases.load(Ordering::Relaxed)
+    }
+
+    /// Mean fraction of canvas pixels carrying gathered content.
+    pub fn mean_fill(&self, frame_px: u64) -> f64 {
+        let n = self.canvases() as u64;
+        if n == 0 {
+            return 0.0;
+        }
+        self.placed_px.load(Ordering::Relaxed) as f64 / (n * frame_px) as f64
+    }
+
+    /// Mean camera-jobs folded into each canvas (batch occupancy).
+    pub fn occupancy(&self) -> f64 {
+        let n = self.canvases();
+        if n == 0 {
+            return 0.0;
+        }
+        self.jobs.load(Ordering::Relaxed) as f64 / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::association::tiles::Tiling;
+    use crate::roi::masks::RoiMasks;
+    use crate::runtime::native::{detect_full_into, detect_roi_into, DetectScratch};
+    use crate::tilegroup::pack::{PackItem, Packer, Placement};
+    use crate::util::rng::Rng;
+    use std::collections::HashSet;
+
+    const W: usize = 320;
+    const H: usize = 192;
+
+    #[test]
+    fn inflate_clip_aligns_and_clips() {
+        let r = IRect::new(32, 16, 64, 32);
+        assert_eq!(inflate_clip(r, 2, 320, 192), IRect::new(0, 0, 128, 80));
+        assert_eq!(inflate_clip(r, 1, 320, 192), IRect::new(16, 0, 96, 64));
+        let edge = IRect::new(288, 160, 32, 32);
+        assert_eq!(inflate_clip(edge, 2, 320, 192), IRect::new(256, 128, 64, 64));
+    }
+
+    #[test]
+    fn auto_mode_needs_two_sparse_roi_cameras() {
+        let px = (W * H) as u64;
+        let small = vec![IRect::new(0, 0, 64, 48)]; // 3072 px ≈ 5 %
+        let big = vec![IRect::new(0, 0, 320, 96)]; // 50 %
+        let g2 = vec![small.clone(), small.clone()];
+        assert!(consolidation_active(ConsolidateMode::Auto, &[true, true], &g2, px));
+        assert!(!consolidation_active(ConsolidateMode::Auto, &[true, false], &g2, px));
+        let gb = vec![big.clone(), big];
+        assert!(!consolidation_active(ConsolidateMode::Auto, &[true, true], &gb, px));
+        assert!(!consolidation_active(ConsolidateMode::Off, &[true, true], &g2, px));
+        let g1 = [small];
+        assert!(consolidation_active(ConsolidateMode::On, &[true], &g1, px));
+        assert!(!consolidation_active(ConsolidateMode::On, &[false], &g1, px));
+    }
+
+    fn masks_from(tile_sets: Vec<Vec<(u32, u32)>>) -> RoiMasks {
+        let tiling = Tiling::new(tile_sets.len(), W as u32, H as u32, 16);
+        let tiles = tile_sets
+            .into_iter()
+            .map(|v| v.into_iter().collect::<HashSet<_>>())
+            .collect();
+        RoiMasks { tiling, tiles }
+    }
+
+    /// A frame whose mask tiles carry pseudo-random content and whose
+    /// background is zero — exactly what `masked_f32_into` produces.
+    fn masked_frame(masks: &RoiMasks, cam: usize, rng: &mut Rng) -> Vec<f32> {
+        let mut f = vec![0.0f32; W * H * 3];
+        let mut tiles: Vec<(u32, u32)> = masks.tiles[cam].iter().copied().collect();
+        tiles.sort_unstable();
+        for (tx, ty) in tiles {
+            for y in ty * 16..(ty + 1) * 16 {
+                for x in tx * 16..(tx + 1) * 16 {
+                    let i = (y as usize * W + x as usize) * 3;
+                    for c in 0..3 {
+                        f[i + c] = (rng.next_u64() % 1000) as f32 / 1000.0;
+                    }
+                }
+            }
+        }
+        f
+    }
+
+    /// The tentpole's correctness core: pack the groups of two cameras
+    /// into shared canvases, infer the canvases dense, scatter back —
+    /// every camera grid must be bit-identical to its per-camera RoI
+    /// inference, including groups flush against the frame border.
+    #[test]
+    fn round_trip_matches_roi_path() {
+        let masks = masks_from(vec![
+            // camera 0: a corner block (exercises frame-edge clipping),
+            // a mid-frame blob and an isolated tile
+            (0..3)
+                .flat_map(|x| (0..2).map(move |y| (x, y)))
+                .chain((8..12).flat_map(|x| (5..9).map(move |y| (x, y))))
+                .chain([(17, 10)])
+                .collect(),
+            // camera 1: a right-edge strip and a bottom-edge blob
+            (18..20)
+                .flat_map(|x| (2..8).map(move |y| (x, y)))
+                .chain((4..9).flat_map(|x| (9..12).map(move |y| (x, y))))
+                .collect(),
+        ]);
+        let mut rng = Rng::new(7);
+        let frames: Vec<Vec<f32>> =
+            (0..2).map(|c| masked_frame(&masks, c, &mut rng)).collect();
+        let groups: Vec<Vec<IRect>> =
+            (0..2).map(|c| crate::tilegroup::group_camera(&masks, c)).collect();
+        let blocks: Vec<Vec<i32>> =
+            (0..2).map(|c| masks.active_blocks(c, 32, W as u32)).collect();
+
+        // reference: the per-camera RoI path
+        let mut scratch = DetectScratch::new();
+        let mut want = Vec::new();
+        for c in 0..2 {
+            let mut g = Vec::new();
+            detect_roi_into(&frames[c], H, W, &blocks[c], 32, 10, &mut scratch, &mut g);
+            want.push(g);
+        }
+
+        // canvas path: one shared packing across both cameras
+        let mut items = Vec::new();
+        let mut info = Vec::new(); // (cam, gather, scatter)
+        for c in 0..2 {
+            for g in &groups[c] {
+                let gather = inflate_clip(*g, GATHER_INFLATE_CELLS, W as u32, H as u32);
+                let scatter = inflate_clip(*g, SCATTER_INFLATE_CELLS, W as u32, H as u32);
+                items.push(PackItem { id: info.len(), w: gather.w, h: gather.h });
+                info.push((c, gather, scatter));
+            }
+        }
+        let mut packer = Packer::new(W as u32, H as u32, GUTTER_PX);
+        let mut placements: Vec<Placement> = Vec::new();
+        let n_canvases = packer.pack(&items, &mut placements);
+        assert!(n_canvases >= 1);
+        let mut canvases = vec![vec![0.0f32; W * H * 3]; n_canvases];
+        for p in &placements {
+            let (cam, gather, _) = info[p.id];
+            gather_into(&mut canvases[p.canvas], W, &frames[cam], W, gather, p.x, p.y);
+        }
+        let mut canvas_grids = Vec::new();
+        for cv in &canvases {
+            let mut g = Vec::new();
+            detect_full_into(cv, H, W, &mut scratch, &mut g);
+            canvas_grids.push(g);
+        }
+        let mut active = Vec::new();
+        for c in 0..2 {
+            active_cells(&blocks[c], 20, 12, 2, 10, &mut active);
+            let mut got = vec![0.0f32; 12 * 20];
+            for p in &placements {
+                let (cam, gather, scatter) = info[p.id];
+                if cam != c {
+                    continue;
+                }
+                scatter_into(
+                    &mut got,
+                    &canvas_grids[p.canvas],
+                    20,
+                    scatter,
+                    gather,
+                    p.x,
+                    p.y,
+                    &active,
+                );
+            }
+            let want_bits: Vec<u32> = want[c].iter().map(|v| v.to_bits()).collect();
+            let got_bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(want_bits, got_bits, "camera {c} grid diverged from the RoI path");
+        }
+    }
+
+    #[test]
+    fn tally_ratios() {
+        let t = CanvasTally::default();
+        assert_eq!(t.canvases(), 0);
+        assert_eq!(t.mean_fill(100), 0.0);
+        assert_eq!(t.occupancy(), 0.0);
+        t.record(2, 6, 50);
+        t.record(0, 9, 999); // canvas-free batch: ignored
+        assert_eq!(t.canvases(), 2);
+        assert!((t.mean_fill(100) - 0.25).abs() < 1e-12);
+        assert!((t.occupancy() - 3.0).abs() < 1e-12);
+    }
+}

@@ -12,10 +12,16 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::pipeline::canvas::{
+    self, consolidation_active, CanvasTally, ConsolidateMode, GATHER_INFLATE_CELLS, GUTTER_PX,
+    SCATTER_INFLATE_CELLS,
+};
 use crate::pipeline::stage::CameraSegment;
 use crate::query;
 use crate::runtime::postproc::decode_objectness_into;
 use crate::sim::Scenario;
+use crate::tilegroup::pack::{PackItem, Packer, Placement};
+use crate::util::geometry::IRect;
 
 /// When the RoI covers at least this fraction of blocks, fall back to the
 /// dense detector (§4.4: "we load both RoI-YOLO and normal YOLO into GPU
@@ -39,6 +45,29 @@ pub fn use_roi_path(
 ) -> bool {
     method.uses_roi_inference()
         && (active_blocks as f64) < DENSE_FALLBACK_FRACTION * n_infer_blocks as f64
+}
+
+/// The three-way per-camera inference route under one plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InferRoute {
+    /// Full-frame inference (RoI off, coverage over the sbnet crossover,
+    /// or a fault-degraded segment streaming the whole frame).
+    Dense,
+    /// Per-camera sparse-block (sbnet) inference.
+    Blocks,
+    /// Cross-camera canvas consolidation ([`crate::pipeline::canvas`]).
+    Canvas,
+}
+
+/// Extend [`use_roi_path`] into the dense / blocks / canvas router:
+/// `use_roi` is the per-camera sbnet decision, `consolidated` the
+/// fleet-wide [`consolidation_active`] predicate of the same plan.
+pub fn infer_route(use_roi: bool, consolidated: bool) -> InferRoute {
+    match (use_roi, consolidated) {
+        (false, _) => InferRoute::Dense,
+        (true, true) => InferRoute::Canvas,
+        (true, false) => InferRoute::Blocks,
+    }
 }
 
 /// One detector invocation's inputs (borrowed from the pending jobs).
@@ -198,6 +227,15 @@ pub struct BatchedInfer<'a> {
     pub blocks: &'a [Vec<i32>],
     /// Whether each camera takes the SBNet RoI path.
     pub use_roi: &'a [bool],
+    /// Tile groups per camera (same epoch-0 convention as `blocks`) —
+    /// the rects the canvas route gathers and scatters through.
+    pub groups: &'a [Vec<IRect>],
+    /// Cross-camera consolidation policy; with `Auto`/`On` active, RoI
+    /// cameras route through packed canvases instead of per-camera
+    /// sparse-block inference ([`crate::pipeline::canvas`]).
+    pub consolidate: ConsolidateMode,
+    /// Consolidation diagnostics sink (`None` = don't tally).
+    pub canvas_tally: Option<&'a CanvasTally>,
     /// Re-profiling epoch schedule (`None` = static plan).
     pub schedule: Option<&'a crate::pipeline::replan::PlanSchedule>,
     /// Fault timeline (`None` = no faults): a degraded segment streamed
@@ -214,6 +252,11 @@ pub struct BatchedInfer<'a> {
 
 impl InferStage for BatchedInfer<'_> {
     fn infer_merged(&self, segments: &[CameraSegment]) -> Result<Vec<Vec<InferOutcome>>> {
+        const FRAME_H: usize = 192;
+        const FRAME_W: usize = 320;
+        const GRID_H: usize = 12;
+        const GRID_W: usize = 20;
+        let frame_px = (FRAME_W * FRAME_H) as u64;
         // resolve each segment's epoch plan first so the borrowed block
         // slices below live as long as the request batch; a segment only
         // reaches the server after its camera worker picked the epoch up,
@@ -229,21 +272,114 @@ impl InferStage for BatchedInfer<'_> {
                     })
                 })
                 .collect();
-        let mut requests = Vec::new();
+        // per-segment route: a pure function of the segment's plan —
+        // blocks, RoI policy and the fleet-wide consolidation predicate
+        // all come from the epoch (or static plan), never from what
+        // happens to be queued, so reports stay schedule-invariant
+        let mut seg_plan: Vec<(&[i32], &[IRect], InferRoute)> =
+            Vec::with_capacity(segments.len());
         for (s, epoch) in segments.iter().zip(&epoch_plans) {
-            let (blocks, mut use_roi): (&[i32], bool) = match epoch {
-                Some(p) => (p.blocks[s.cam].as_slice(), p.use_roi[s.cam]),
-                None => (self.blocks[s.cam].as_slice(), self.use_roi[s.cam]),
-            };
+            let (blocks, groups, mut use_roi, consolidated): (&[i32], &[IRect], bool, bool) =
+                match epoch {
+                    Some(p) => (
+                        p.blocks[s.cam].as_slice(),
+                        p.groups[s.cam].as_slice(),
+                        p.use_roi[s.cam],
+                        consolidation_active(self.consolidate, &p.use_roi, &p.groups, frame_px),
+                    ),
+                    None => (
+                        self.blocks[s.cam].as_slice(),
+                        self.groups[s.cam].as_slice(),
+                        self.use_roi[s.cam],
+                        consolidation_active(self.consolidate, self.use_roi, self.groups, frame_px),
+                    ),
+                };
             if self.fault.is_some_and(|t| t.degraded_seg(s.cam, s.seg)) {
+                // degraded segments stream the full frame: dense, never packed
                 use_roi = false;
             }
+            seg_plan.push((blocks, groups, infer_route(use_roi, consolidated)));
+        }
+        // flatten jobs; each canvas-routed job contributes one pack item
+        // per tile group (gather = group + 2 cells, scatter = group + 1
+        // cell — the byte-identity construction of pipeline/canvas.rs)
+        let mut flat: Vec<(usize, &crate::pipeline::stage::InferJob)> = Vec::new();
+        let mut items: Vec<PackItem> = Vec::new();
+        let mut item_info: Vec<(usize, IRect, IRect)> = Vec::new(); // (flat job, gather, scatter)
+        for (si, s) in segments.iter().enumerate() {
+            let (_, groups, route) = seg_plan[si];
             for job in &s.jobs {
-                requests.push(InferRequest {
-                    frame: &job.pixels,
-                    blocks: if use_roi { Some(blocks) } else { None },
-                });
+                let fj = flat.len();
+                flat.push((si, job));
+                if route == InferRoute::Canvas {
+                    for g in groups {
+                        let gather = canvas::inflate_clip(
+                            *g,
+                            GATHER_INFLATE_CELLS,
+                            FRAME_W as u32,
+                            FRAME_H as u32,
+                        );
+                        let scatter = canvas::inflate_clip(
+                            *g,
+                            SCATTER_INFLATE_CELLS,
+                            FRAME_W as u32,
+                            FRAME_H as u32,
+                        );
+                        items.push(PackItem { id: item_info.len(), w: gather.w, h: gather.h });
+                        item_info.push((fj, gather, scatter));
+                    }
+                }
             }
+        }
+        let mut packer = Packer::new(FRAME_W as u32, FRAME_H as u32, GUTTER_PX);
+        let mut placements: Vec<Placement> = Vec::new();
+        let n_canvases = packer.pack(&items, &mut placements);
+        // canvas pixel buffers recycle through the arena like the grids
+        let mut canvases: Vec<Vec<f32>> = (0..n_canvases)
+            .map(|_| match self.arena {
+                Some(a) => a.take_canvas(),
+                None => Vec::new(),
+            })
+            .collect();
+        for cv in canvases.iter_mut() {
+            cv.clear();
+            cv.resize(FRAME_W * FRAME_H * 3, 0.0);
+        }
+        let mut job_pl: Vec<Vec<usize>> = vec![Vec::new(); flat.len()];
+        for (pi, p) in placements.iter().enumerate() {
+            let (fj, gather, _) = item_info[p.id];
+            canvas::gather_into(
+                &mut canvases[p.canvas],
+                FRAME_W,
+                &flat[fj].1.pixels,
+                FRAME_W,
+                gather,
+                p.x,
+                p.y,
+            );
+            job_pl[fj].push(pi);
+        }
+        // one merged request batch: direct jobs first (in job order),
+        // then the packed canvases (always dense)
+        let mut requests = Vec::new();
+        let mut direct_idx: Vec<Option<usize>> = Vec::with_capacity(flat.len());
+        for &(si, job) in &flat {
+            let (blocks, _, route) = seg_plan[si];
+            match route {
+                InferRoute::Canvas => direct_idx.push(None),
+                InferRoute::Blocks => {
+                    direct_idx.push(Some(requests.len()));
+                    requests.push(InferRequest { frame: &job.pixels, blocks: Some(blocks) });
+                }
+                InferRoute::Dense => {
+                    direct_idx.push(Some(requests.len()));
+                    requests.push(InferRequest { frame: &job.pixels, blocks: None });
+                }
+            }
+        }
+        let n_direct = requests.len();
+        for cv in &canvases {
+            requests.push(InferRequest { frame: cv, blocks: None });
         }
         // grid outputs come from the arena's free list when one is
         // installed, so the steady-state server loop allocates nothing
@@ -264,46 +400,102 @@ impl InferStage for BatchedInfer<'_> {
             static DECODE: std::cell::RefCell<(
                 crate::runtime::postproc::DecodeScratch,
                 Vec<crate::runtime::postproc::Detection>,
+                Vec<f32>,  // reconstructed per-camera grid (canvas route)
+                Vec<bool>, // active-cell bitmap of the current segment
             )> = std::cell::RefCell::new((
                 crate::runtime::postproc::DecodeScratch::new(),
+                Vec::new(),
+                Vec::new(),
                 Vec::new(),
             ));
         }
         let out = DECODE.with(|cell| {
             let mut guard = cell.borrow_mut();
-            let (scratch, dets) = &mut *guard;
-            let mut idx = 0;
+            let (scratch, dets, recon, active) = &mut *guard;
+            let mut fj = 0;
             let mut out = Vec::with_capacity(segments.len());
-            for s in segments {
+            for (si, s) in segments.iter().enumerate() {
+                let (blocks, _, route) = seg_plan[si];
+                if route == InferRoute::Canvas && !s.jobs.is_empty() {
+                    canvas::active_cells(blocks, GRID_W, GRID_H, 2, 10, active);
+                }
                 let mut frames = Vec::with_capacity(s.jobs.len());
                 for job in &s.jobs {
-                    decode_objectness_into(
-                        &grids[idx],
-                        12,
-                        20,
-                        16,
-                        self.objectness_threshold,
-                        scratch,
-                        dets,
-                    );
+                    let secs = match direct_idx[fj] {
+                        Some(ri) => {
+                            decode_objectness_into(
+                                &grids[ri],
+                                GRID_H,
+                                GRID_W,
+                                16,
+                                self.objectness_threshold,
+                                scratch,
+                                dets,
+                            );
+                            times[ri]
+                        }
+                        None => {
+                            recon.clear();
+                            recon.resize(GRID_H * GRID_W, 0.0);
+                            let mut t = 0.0;
+                            for &pi in &job_pl[fj] {
+                                let p = placements[pi];
+                                let (_, gather, scatter) = item_info[p.id];
+                                canvas::scatter_into(
+                                    recon,
+                                    &grids[n_direct + p.canvas],
+                                    GRID_W,
+                                    scatter,
+                                    gather,
+                                    p.x,
+                                    p.y,
+                                    active,
+                                );
+                                // apportion the canvas's measured time by the
+                                // placement's pixel share — a pure function of
+                                // the plan under a fixed-cost backend, so
+                                // reports stay schedule-invariant
+                                t += times[n_direct + p.canvas]
+                                    * (gather.area() as f64 / frame_px as f64);
+                            }
+                            decode_objectness_into(
+                                recon,
+                                GRID_H,
+                                GRID_W,
+                                16,
+                                self.objectness_threshold,
+                                scratch,
+                                dets,
+                            );
+                            t
+                        }
+                    };
                     let abs = self.eval_start + job.local;
                     let matched =
                         query::match_detections(dets, self.scenario.detections(s.cam, abs));
                     frames.push(InferOutcome {
                         local: job.local,
                         capture_time: job.capture_time,
-                        secs: times[idx],
+                        secs,
                         matched,
                     });
-                    idx += 1;
+                    fj += 1;
                 }
                 out.push(frames);
             }
             out
         });
+        if let Some(t) = self.canvas_tally {
+            let jobs = direct_idx.iter().filter(|d| d.is_none()).count();
+            let placed: u64 = item_info.iter().map(|(_, g, _)| g.area()).sum();
+            t.record(n_canvases, jobs, placed);
+        }
         if let Some(a) = self.arena {
             for g in grids {
                 a.put_grid(g);
+            }
+            for cv in canvases {
+                a.put_canvas(cv);
             }
         }
         Ok(out)
@@ -347,11 +539,15 @@ mod tests {
         let arena = crate::pipeline::arena::Arena::new();
         let blocks: Vec<Vec<i32>> = vec![Vec::new(); sc.cameras.len()];
         let use_roi = vec![false; sc.cameras.len()];
+        let groups: Vec<Vec<IRect>> = vec![Vec::new(); sc.cameras.len()];
         let stage = BatchedInfer {
             infer: &backend,
             scenario: &sc,
             blocks: &blocks,
             use_roi: &use_roi,
+            groups: &groups,
+            consolidate: ConsolidateMode::Off,
+            canvas_tally: None,
             schedule: None,
             fault: None,
             objectness_threshold: 0.25,
@@ -397,5 +593,67 @@ mod tests {
         let s = arena.stats();
         assert_eq!(s.grid_allocs, 3, "second batch must reuse the free list");
         assert_eq!(s.grid_reuses, 3);
+    }
+
+    #[test]
+    fn canvas_route_folds_sparse_jobs_into_one_request() {
+        use crate::config::Config;
+        use crate::pipeline::stage::InferJob;
+
+        let cfg = Config::test_small();
+        let sc = Scenario::build(&cfg.scenario);
+        let backend = CountingInfer(std::sync::Mutex::new(Vec::new()));
+        let arena = crate::pipeline::arena::Arena::new();
+        let n = sc.cameras.len();
+        // every camera keeps one 32×32 group in its top-left block
+        let blocks: Vec<Vec<i32>> = vec![vec![0]; n];
+        let use_roi = vec![true; n];
+        let groups: Vec<Vec<IRect>> = vec![vec![IRect::new(0, 0, 32, 32)]; n];
+        let tally = CanvasTally::default();
+        let stage = BatchedInfer {
+            infer: &backend,
+            scenario: &sc,
+            blocks: &blocks,
+            use_roi: &use_roi,
+            groups: &groups,
+            consolidate: ConsolidateMode::On,
+            canvas_tally: Some(&tally),
+            schedule: None,
+            fault: None,
+            objectness_threshold: 0.25,
+            eval_start: sc.eval_range().start,
+            arena: Some(&arena),
+        };
+        let job = |local: usize| InferJob {
+            local,
+            capture_time: (local as f64 + 1.0) / 5.0,
+            pixels: vec![0.0f32; 320 * 192 * 3],
+        };
+        let seg = |cam: usize, jobs: Vec<InferJob>| CameraSegment {
+            cam,
+            seg: 0,
+            capture_end: 1.0,
+            bytes: 10,
+            encode_secs: 0.0,
+            dropped: 0,
+            jobs,
+        };
+        let segs = vec![seg(0, vec![job(0), job(1)]), seg(1, vec![job(0)])];
+        let out = stage.infer_merged(&segs).unwrap();
+        assert_eq!(out.len(), 2);
+        // three sparse jobs (one 64×64 gather each) pack into a single
+        // canvas, so the backend sees exactly one dense request
+        assert_eq!(*backend.0.lock().unwrap(), vec![1]);
+        assert_eq!(tally.canvases(), 1);
+        assert!((tally.occupancy() - 3.0).abs() < 1e-12);
+        // each job's service time is its pixel share of the one canvas
+        let share = 0.001 * (64.0 * 64.0) / (320.0 * 192.0);
+        assert!((out[0][0].secs - share).abs() < 1e-15);
+        // canvas buffers recycle like grids
+        assert_eq!(arena.stats().canvas_allocs, 1);
+        stage.infer_merged(&segs).unwrap();
+        let s = arena.stats();
+        assert_eq!(s.canvas_allocs, 1, "second batch must reuse the canvas");
+        assert_eq!(s.canvas_reuses, 1);
     }
 }

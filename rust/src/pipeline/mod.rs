@@ -40,6 +40,7 @@
 //! stalling the pipeline or breaking schedule determinism.
 
 pub mod arena;
+pub mod canvas;
 pub mod capture;
 pub mod encode;
 pub mod filter;
@@ -51,14 +52,15 @@ pub mod stage;
 pub mod transport;
 
 pub use arena::{Arena, ArenaStats, FramePool};
+pub use canvas::{consolidation_active, CanvasTally, ConsolidateMode};
 pub use capture::SimCapture;
 pub use encode::{CodecEncodeStage, EncodeCost};
 pub use filter::{PassThroughFilter, ReductoFilterStage};
 #[cfg(feature = "pjrt")]
 pub use infer::RuntimeInfer;
 pub use infer::{
-    use_roi_path, BatchedInfer, Infer, InferOutcome, InferRequest, InferStage, NativeInfer,
-    DENSE_FALLBACK_FRACTION,
+    infer_route, use_roi_path, BatchedInfer, Infer, InferOutcome, InferRequest, InferRoute,
+    InferStage, NativeInfer, DENSE_FALLBACK_FRACTION,
 };
 pub use query::{CarryOverQuery, QueryStage};
 pub use replan::{

@@ -16,6 +16,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use crate::pipeline::arena::{Arena, ArenaStats};
+use crate::pipeline::canvas::ConsolidateMode;
 use crate::pipeline::infer::{InferOutcome, InferStage};
 use crate::pipeline::replan::{
     EpochPlanner, FaultContext, PlanEpoch, PlanSchedule, ReplanPolicy, ReplanScope,
@@ -68,6 +69,10 @@ pub struct PipelineOptions {
     /// components fan out over this many shared pool workers.  `0`
     /// (default) inherits the offline planner's `effective_threads`.
     pub planner_threads: usize,
+    /// Cross-camera canvas consolidation (`--consolidate`): pack sparse
+    /// RoI cameras' kept tile groups into shared dense canvases on the
+    /// server side ([`crate::pipeline::canvas`], DESIGN.md §13).
+    pub consolidate: ConsolidateMode,
 }
 
 impl Default for PipelineOptions {
@@ -89,6 +94,7 @@ impl Default for PipelineOptions {
             replan: ReplanPolicy::Never,
             replan_scope: ReplanScope::default(),
             planner_threads: 0,
+            consolidate: ConsolidateMode::default(),
         }
     }
 }

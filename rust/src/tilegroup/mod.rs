@@ -8,6 +8,8 @@
 //! mask tile is covered.  Groups partition the mask exactly — no non-RoI
 //! tile is ever included.
 
+pub mod pack;
+
 use crate::roi::masks::RoiMasks;
 use crate::util::geometry::IRect;
 

@@ -1,0 +1,231 @@
+//! Deterministic 2-D rectangle packing for cross-camera RoI consolidation.
+//!
+//! Packs the kept tile groups of every camera in a batch window into a
+//! minimal set of detector-sized canvases (shelf first-fit over sorted
+//! items), so N mostly-empty inferences become a few dense ones — the
+//! object-level consolidation idea of arXiv 2111.15451 applied to
+//! CrossRoI's tile groups.
+//!
+//! Determinism contract: the output is a pure function of the item
+//! **set** — items are re-sorted internally by `(h desc, w desc, id
+//! asc)`, so callers may enumerate jobs in any order (worker count,
+//! batch arrival order) and still get byte-identical placements.  The
+//! shelf scan itself is first-fit in shelf creation order, which is
+//! itself determined by the sorted item sequence.
+//!
+//! Gutter: adjacent placements are separated by at least `gutter`
+//! pixels on both axes (canvas edges need none — the detector pads with
+//! zeros anyway).  The consumer relies on this to keep one placement's
+//! receptive field from reading another placement's pixels.
+
+/// One rectangle to place (dimensions in pixels, 16-px multiples in the
+/// consolidation path).  `id` is the caller's provenance key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PackItem {
+    pub id: usize,
+    pub w: u32,
+    pub h: u32,
+}
+
+/// Where one item landed: canvas index and top-left corner.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Placement {
+    pub id: usize,
+    pub canvas: usize,
+    pub x: u32,
+    pub y: u32,
+}
+
+/// An open shelf: a horizontal strip of one canvas with a fixed height,
+/// filled left to right.
+#[derive(Clone, Copy, Debug)]
+struct Shelf {
+    canvas: usize,
+    y: u32,
+    height: u32,
+    cursor_x: u32,
+}
+
+/// Reusable shelf packer.  All scratch lives in the struct so warm
+/// `pack` calls allocate nothing (the hot-path contract of
+/// `pipeline/arena.rs` extends through consolidation).
+pub struct Packer {
+    canvas_w: u32,
+    canvas_h: u32,
+    gutter: u32,
+    // scratch, cleared (not shrunk) every call
+    order: Vec<usize>,
+    shelves: Vec<Shelf>,
+    canvas_used_h: Vec<u32>,
+}
+
+impl Packer {
+    pub fn new(canvas_w: u32, canvas_h: u32, gutter: u32) -> Self {
+        assert!(canvas_w > 0 && canvas_h > 0);
+        Packer {
+            canvas_w,
+            canvas_h,
+            gutter,
+            order: Vec::new(),
+            shelves: Vec::new(),
+            canvas_used_h: Vec::new(),
+        }
+    }
+
+    /// Pack `items` into as few canvases as first-fit-decreasing finds;
+    /// placements (one per item, any order) are appended to
+    /// `placements` after it is cleared.  Returns the canvas count.
+    ///
+    /// Every item must fit a canvas on its own
+    /// (`w <= canvas_w && h <= canvas_h`); the consolidation caller
+    /// guarantees this because group rects are clipped to the frame,
+    /// whose dimensions are the canvas dimensions.
+    pub fn pack(&mut self, items: &[PackItem], placements: &mut Vec<Placement>) -> usize {
+        placements.clear();
+        self.order.clear();
+        self.shelves.clear();
+        self.canvas_used_h.clear();
+        self.order.extend(0..items.len());
+        // sort key makes the result input-order independent: tallest
+        // first (classic shelf FFD), ties by width then by caller id
+        self.order.sort_unstable_by(|&a, &b| {
+            let (ia, ib) = (&items[a], &items[b]);
+            ib.h.cmp(&ia.h).then(ib.w.cmp(&ia.w)).then(ia.id.cmp(&ib.id))
+        });
+        for &idx in &self.order {
+            let it = items[idx];
+            assert!(it.w > 0 && it.h > 0, "degenerate pack item {it:?}");
+            assert!(
+                it.w <= self.canvas_w && it.h <= self.canvas_h,
+                "item {it:?} exceeds canvas {}x{}",
+                self.canvas_w,
+                self.canvas_h
+            );
+            // first shelf (creation order) with enough height and width
+            let slot = self
+                .shelves
+                .iter_mut()
+                .find(|s| it.h <= s.height && s.cursor_x + it.w <= self.canvas_w);
+            let (canvas, x, y) = if let Some(s) = slot {
+                let at = (s.canvas, s.cursor_x, s.y);
+                s.cursor_x += it.w + self.gutter;
+                at
+            } else {
+                // first canvas with vertical room for a new shelf
+                let cv = self
+                    .canvas_used_h
+                    .iter()
+                    .position(|&used| used + it.h <= self.canvas_h)
+                    .unwrap_or_else(|| {
+                        self.canvas_used_h.push(0);
+                        self.canvas_used_h.len() - 1
+                    });
+                let y = self.canvas_used_h[cv];
+                self.canvas_used_h[cv] = y + it.h + self.gutter;
+                self.shelves.push(Shelf { canvas: cv, y, height: it.h, cursor_x: it.w + self.gutter });
+                (cv, 0, y)
+            };
+            placements.push(Placement { id: it.id, canvas, x, y });
+        }
+        self.canvas_used_h.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn packed(items: &[PackItem]) -> (usize, Vec<Placement>) {
+        let mut p = Packer::new(320, 192, 16);
+        let mut out = Vec::new();
+        let n = p.pack(items, &mut out);
+        (n, out)
+    }
+
+    /// Expand a placement by the gutter on the trailing edges; disjoint
+    /// expanded rects ⇒ at least `gutter` px between original rects.
+    fn overlaps(a: &Placement, wa: u32, ha: u32, b: &Placement, wb: u32, hb: u32, g: u32) -> bool {
+        a.canvas == b.canvas
+            && a.x < b.x + wb + g
+            && b.x < a.x + wa + g
+            && a.y < b.y + hb + g
+            && b.y < a.y + ha + g
+    }
+
+    #[test]
+    fn single_full_frame_item_fills_one_canvas() {
+        let (n, out) = packed(&[PackItem { id: 7, w: 320, h: 192 }]);
+        assert_eq!(n, 1);
+        assert_eq!(out, vec![Placement { id: 7, canvas: 0, x: 0, y: 0 }]);
+    }
+
+    #[test]
+    fn small_items_share_a_canvas() {
+        let items: Vec<PackItem> =
+            (0..6).map(|i| PackItem { id: i, w: 64, h: 48 }).collect();
+        let (n, out) = packed(&items);
+        assert_eq!(n, 1, "6 small groups must consolidate into one canvas");
+        assert_eq!(out.len(), 6);
+    }
+
+    #[test]
+    fn placements_stay_in_bounds_and_respect_gutter() {
+        let items: Vec<PackItem> = vec![
+            PackItem { id: 0, w: 320, h: 64 },
+            PackItem { id: 1, w: 160, h: 96 },
+            PackItem { id: 2, w: 160, h: 96 },
+            PackItem { id: 3, w: 48, h: 16 },
+            PackItem { id: 4, w: 16, h: 16 },
+            PackItem { id: 5, w: 128, h: 176 },
+        ];
+        let (n, out) = packed(&items);
+        assert!(n >= 2);
+        let dims = |id: usize| {
+            let it = items.iter().find(|i| i.id == id).unwrap();
+            (it.w, it.h)
+        };
+        for p in &out {
+            let (w, h) = dims(p.id);
+            assert!(p.x + w <= 320 && p.y + h <= 192, "{p:?} out of bounds");
+        }
+        for (i, a) in out.iter().enumerate() {
+            for b in &out[i + 1..] {
+                let (wa, ha) = dims(a.id);
+                let (wb, hb) = dims(b.id);
+                assert!(!overlaps(a, wa, ha, b, wb, hb, 16), "{a:?} too close to {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn output_is_input_order_independent() {
+        let items: Vec<PackItem> = vec![
+            PackItem { id: 0, w: 96, h: 64 },
+            PackItem { id: 1, w: 64, h: 64 },
+            PackItem { id: 2, w: 160, h: 96 },
+            PackItem { id: 3, w: 16, h: 16 },
+            PackItem { id: 4, w: 240, h: 112 },
+        ];
+        let (n1, mut a) = packed(&items);
+        let mut rev: Vec<PackItem> = items.iter().rev().copied().collect();
+        rev.swap(0, 2);
+        let (n2, mut b) = packed(&rev);
+        a.sort_by_key(|p| p.id);
+        b.sort_by_key(|p| p.id);
+        assert_eq!(n1, n2);
+        assert_eq!(a, b, "packing must not depend on item arrival order");
+    }
+
+    #[test]
+    fn warm_packer_reuses_scratch() {
+        let items: Vec<PackItem> =
+            (0..9).map(|i| PackItem { id: i, w: 80, h: 48 }).collect();
+        let mut p = Packer::new(320, 192, 16);
+        let mut out = Vec::new();
+        let n1 = p.pack(&items, &mut out);
+        let first = out.clone();
+        let n2 = p.pack(&items, &mut out);
+        assert_eq!(n1, n2);
+        assert_eq!(first, out, "repacking the same items must be idempotent");
+    }
+}

@@ -1,0 +1,153 @@
+//! Cross-camera canvas consolidation properties (DESIGN.md §13):
+//! packing sparse RoI cameras into shared dense canvases must be an
+//! *invisible* routing optimization.  On a 16-camera fleet the
+//! canvas-routed detections are byte-identical to the per-camera RoI
+//! route, the consolidated run's full report is byte-identical across
+//! camera schedules and `--offline-threads` counts, and a `--fail`
+//! dropout re-packs the surviving cameras' canvases without disturbing
+//! their detections.
+//!
+//! Wall-clock measurement is replaced by the same deterministic cost
+//! models as `rust/tests/pipeline_determinism.rs`.
+
+use anyhow::Result;
+use crossroi::config::{Config, FaultEvent};
+use crossroi::coordinator::{run_method_with, Infer, Method, MethodReport, NativeInfer};
+use crossroi::offline::OfflineOptions;
+use crossroi::pipeline::{ConsolidateMode, EncodeCost, Parallelism, PipelineOptions};
+use crossroi::sim::Scenario;
+
+/// Native reference detector with fixed, deterministic service times.
+struct FixedCostInfer;
+
+impl Infer for FixedCostInfer {
+    fn infer(&self, frame: &[f32], blocks: Option<&[i32]>) -> Result<(Vec<f32>, f64)> {
+        let (grid, _) = NativeInfer.infer(frame, blocks)?;
+        let secs = match blocks {
+            None => 0.004,
+            Some(b) => 0.001 + 0.00004 * b.len() as f64,
+        };
+        Ok((grid, secs))
+    }
+}
+
+/// The acceptance fleet: 16 cameras around one intersection, shortened
+/// windows so the nine full runs below stay test-suite friendly.
+fn fleet16(faults: Vec<FaultEvent>) -> (Scenario, Config) {
+    let mut cfg = Config::test_small();
+    cfg.scenario.n_cameras = 16;
+    cfg.scenario.profile_secs = 10.0;
+    cfg.scenario.eval_secs = 4.0;
+    cfg.scenario.faults = faults;
+    cfg.scenario.validate().unwrap();
+    (Scenario::build(&cfg.scenario), cfg)
+}
+
+fn run(
+    scenario: &Scenario,
+    cfg: &Config,
+    consolidate: ConsolidateMode,
+    par: Parallelism,
+    offline_threads: usize,
+) -> MethodReport {
+    let opts = PipelineOptions {
+        parallelism: par,
+        encode_cost: EncodeCost::PerFrame(0.02),
+        offline: OfflineOptions { threads: offline_threads, ..OfflineOptions::default() },
+        consolidate,
+        ..PipelineOptions::default()
+    };
+    let (report, _) =
+        run_method_with(scenario, &cfg.system, &FixedCostInfer, &Method::CrossRoi, None, &opts)
+            .unwrap();
+    report
+}
+
+/// Everything detection-derived must match between the canvas route and
+/// the per-camera RoI route (service times legitimately differ — the
+/// whole point — so latency fields are not compared here).
+fn detections_match(on: &MethodReport, off: &MethodReport, what: &str) {
+    assert_eq!(on.accuracy, off.accuracy, "{what}: accuracy diverged");
+    assert_eq!(on.missed_per_frame, off.missed_per_frame, "{what}: misses diverged");
+    assert_eq!(on.frames_total, off.frames_total, "{what}: frame count diverged");
+    assert_eq!(on.frames_reduced, off.frames_reduced, "{what}: filter decisions diverged");
+    assert_eq!(on.bytes_total, off.bytes_total, "{what}: encoded bytes diverged");
+    assert_eq!(on.mask_tiles, off.mask_tiles, "{what}: plan diverged");
+    assert_eq!(on.regions_per_cam, off.regions_per_cam, "{what}: groups diverged");
+}
+
+/// Canvas route on vs off: byte-identical detections on the 16-camera
+/// fleet, with the consolidated run actually exercising canvases.
+#[test]
+fn canvas_route_matches_roi_route_detections() {
+    let (scenario, cfg) = fleet16(Vec::new());
+    let on = run(&scenario, &cfg, ConsolidateMode::On, Parallelism::PerCamera, 1);
+    let off = run(&scenario, &cfg, ConsolidateMode::Off, Parallelism::PerCamera, 1);
+    assert!(
+        on.canvas_cams >= 2,
+        "fleet too dense to consolidate ({} canvas cams) — the test proves nothing",
+        on.canvas_cams
+    );
+    assert!(on.canvas_count > 0, "no canvases were packed");
+    assert!(
+        on.canvas_count < on.frames_total,
+        "consolidation must fold jobs: {} canvases for {} frames",
+        on.canvas_count,
+        on.frames_total
+    );
+    assert_eq!(off.canvas_cams, 0, "the off run must not consolidate");
+    assert_eq!(off.canvas_count, 0, "the off run must not pack canvases");
+    detections_match(&on, &off, "consolidate on vs off");
+}
+
+/// The consolidated run's full serialized report is a pure function of
+/// the scenario: byte-identical across camera-side schedules and
+/// `--offline-threads 1|2|8` (packing is input-order independent, and
+/// per-job service times never depend on batch composition).
+#[test]
+fn canvas_route_is_byte_identical_across_schedules_and_threads() {
+    let (scenario, cfg) = fleet16(Vec::new());
+    let json_of = |par: Parallelism, threads: usize| -> String {
+        let mut r = run(&scenario, &cfg, ConsolidateMode::On, par, threads);
+        assert!(r.canvas_count > 0, "{par:?}/{threads}: no canvases were packed");
+        r.zero_wall_clock();
+        r.to_json().to_string_pretty(2)
+    };
+    let reference = json_of(Parallelism::Sequential, 1);
+    for (par, threads) in [
+        (Parallelism::PerCamera, 1),
+        (Parallelism::Workers(3), 1),
+        (Parallelism::PerCamera, 2),
+        (Parallelism::PerCamera, 8),
+    ] {
+        assert_eq!(
+            reference,
+            json_of(par, threads),
+            "{par:?} with --offline-threads {threads} diverged from the sequential reference"
+        );
+    }
+}
+
+/// A camera dropout mid-window (`--fail 0@1.5`) removes its jobs from
+/// the batches; the survivors' canvases re-pack and their detections
+/// still match the per-camera RoI route exactly.
+#[test]
+fn canvases_repack_around_a_dropout() {
+    let faults = vec![FaultEvent { cam: 0, start_secs: 1.5, end_secs: None }];
+    let (scenario, cfg) = fleet16(faults);
+    let on = run(&scenario, &cfg, ConsolidateMode::On, Parallelism::PerCamera, 1);
+    let off = run(&scenario, &cfg, ConsolidateMode::Off, Parallelism::PerCamera, 1);
+    assert!(on.canvas_count > 0, "survivors must still consolidate");
+    detections_match(&on, &off, "faulted consolidate on vs off");
+    // the dead camera's segments after 1.5 s are never produced, so the
+    // faulted run streams fewer bytes — the canvas route really saw a
+    // different job set and re-packed, not a replayed fault-free batch
+    let (clean, _) = fleet16(Vec::new());
+    let fault_free = run(&clean, &cfg, ConsolidateMode::On, Parallelism::PerCamera, 1);
+    assert!(
+        on.bytes_total < fault_free.bytes_total,
+        "the dropout must cost streamed bytes: {} vs {}",
+        on.bytes_total,
+        fault_free.bytes_total
+    );
+}

@@ -1,20 +1,26 @@
 //! Steady-state allocation audit for the per-frame hot path (DESIGN.md
 //! §9): after warm-up, render → Reducto filter → masked convert → encode
-//! → RoI inference → objectness decode must perform ZERO heap
-//! allocations per frame.  A counting global allocator wraps the system
-//! allocator; this file holds exactly one test so no concurrent test can
-//! pollute the counter.
+//! → RoI inference → objectness decode — plus the consolidated canvas
+//! route (pack → gather → dense inference → scatter, DESIGN.md §13) —
+//! must perform ZERO heap allocations per frame.  A counting global
+//! allocator wraps the system allocator; this file holds exactly one
+//! test so no concurrent test can pollute the counter.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crossroi::codec::RegionStream;
 use crossroi::config::Config;
+use crossroi::pipeline::canvas::{
+    active_cells, gather_into, inflate_clip, scatter_into, GATHER_INFLATE_CELLS, GUTTER_PX,
+    SCATTER_INFLATE_CELLS,
+};
 use crossroi::pipeline::{FilterStage, ReductoFilterStage};
-use crossroi::runtime::native::{detect_roi_into, DetectScratch};
+use crossroi::runtime::native::{detect_full_into, detect_roi_into, DetectScratch};
 use crossroi::runtime::postproc::{decode_objectness_into, DecodeScratch, Detection};
 use crossroi::sim::render::Frame;
 use crossroi::sim::{Scenario, FRAME_H, FRAME_W};
+use crossroi::tilegroup::pack::{PackItem, Packer, Placement};
 use crossroi::util::geometry::IRect;
 
 static ALLOCATIONS: AtomicUsize = AtomicUsize::new(0);
@@ -84,6 +90,19 @@ fn steady_state_frame_loop_is_allocation_free() {
     // the detection count whatever the scene does per frame
     let mut dets: Vec<Detection> = Vec::with_capacity(16);
 
+    // the consolidated canvas route (DESIGN.md §13): the kept group's
+    // gather rect packed onto a canvas, inferred densely, scattered back
+    // — every buffer reused, like `BatchedInfer`'s arena-backed path
+    let gather = inflate_clip(mask[0], GATHER_INFLATE_CELLS, FRAME_W, FRAME_H);
+    let scatter = inflate_clip(mask[0], SCATTER_INFLATE_CELLS, FRAME_W, FRAME_H);
+    let items = [PackItem { id: 0, w: gather.w, h: gather.h }];
+    let mut packer = Packer::new(FRAME_W, FRAME_H, GUTTER_PX);
+    let mut placements: Vec<Placement> = Vec::new();
+    let mut canvas: Vec<f32> = Vec::new();
+    let mut canvas_grid: Vec<f32> = Vec::new();
+    let mut cam_grid: Vec<f32> = Vec::new();
+    let mut active: Vec<bool> = Vec::new();
+
     let mut step = |i: usize,
                     frame: &mut Frame,
                     pixels: &mut Vec<f32>,
@@ -107,6 +126,26 @@ fn steady_state_frame_loop_is_allocation_free() {
             grid,
         );
         decode_objectness_into(grid, 12, 20, 16, 0.25, dec_scratch, dets);
+        // consolidated route over the same frame: re-pack (idempotent,
+        // scratch-reusing), gather into the recycled canvas, dense
+        // inference, scatter into the recycled camera grid, decode
+        packer.pack(&items, &mut placements);
+        let p = placements[0];
+        canvas.clear();
+        canvas.resize((FRAME_W * FRAME_H * 3) as usize, 0.0);
+        gather_into(&mut canvas, FRAME_W as usize, pixels, FRAME_W as usize, gather, p.x, p.y);
+        detect_full_into(
+            &canvas,
+            FRAME_H as usize,
+            FRAME_W as usize,
+            det_scratch,
+            &mut canvas_grid,
+        );
+        active_cells(&blocks, 20, 12, 2, 10, &mut active);
+        cam_grid.clear();
+        cam_grid.resize(240, 0.0);
+        scatter_into(&mut cam_grid, &canvas_grid, 20, scatter, gather, p.x, p.y, &active);
+        decode_objectness_into(&cam_grid, 12, 20, 16, 0.25, dec_scratch, dets);
         kept
     };
 

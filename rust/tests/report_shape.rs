@@ -94,6 +94,8 @@ fn method_report_inventory_is_classified() {
     r.mask_tiles = 40;
     r.mask_coverage = 0.33;
     r.regions_per_cam = vec![2, 3];
+    r.consolidate_mode = "auto".to_string();
+    r.canvas_cams = 2;
     r.offline_seconds = 7.5;
     r.replan_count = 1;
     r.replan_warm_count = 1;
@@ -110,10 +112,15 @@ fn method_report_inventory_is_classified() {
     r.arena_pixel_reuses = 32;
     r.arena_grid_allocs = 2;
     r.arena_grid_reuses = 10;
+    r.arena_canvas_allocs = 1;
+    r.arena_canvas_reuses = 4;
     r.planner_epochs_computed = 1;
     r.planner_components_solved = 1;
     r.planner_max_concurrent = 1;
     r.planner_queue_wait_secs = 0.05;
+    r.canvas_count = 6;
+    r.canvas_fill_ratio = 0.4;
+    r.canvas_occupancy = 2.0;
     r.zero_wall_clock();
 
     let MethodReport {
@@ -133,6 +140,8 @@ fn method_report_inventory_is_classified() {
         mask_tiles,
         mask_coverage,
         regions_per_cam,
+        consolidate_mode,
+        canvas_cams,
         offline_seconds,
         replan_count,
         replan_warm_count,
@@ -149,10 +158,15 @@ fn method_report_inventory_is_classified() {
         arena_pixel_reuses,
         arena_grid_allocs,
         arena_grid_reuses,
+        arena_canvas_allocs,
+        arena_canvas_reuses,
         planner_epochs_computed,
         planner_components_solved,
         planner_max_concurrent,
         planner_queue_wait_secs,
+        canvas_count,
+        canvas_fill_ratio,
+        canvas_occupancy,
     } = r;
 
     // wall-clock families: zeroed (the xtask manifest mirrors this list)
@@ -164,10 +178,15 @@ fn method_report_inventory_is_classified() {
     assert_eq!(arena_pixel_reuses, 0);
     assert_eq!(arena_grid_allocs, 0);
     assert_eq!(arena_grid_reuses, 0);
+    assert_eq!(arena_canvas_allocs, 0);
+    assert_eq!(arena_canvas_reuses, 0);
     assert_eq!(planner_epochs_computed, 0);
     assert_eq!(planner_components_solved, 0);
     assert_eq!(planner_max_concurrent, 0);
     assert_eq!(planner_queue_wait_secs, 0.0);
+    assert_eq!(canvas_count, 0);
+    assert_eq!(canvas_fill_ratio, 0.0);
+    assert_eq!(canvas_occupancy, 0.0);
 
     // deterministic fields: survive untouched
     assert_eq!(method, "CrossRoI");
@@ -186,6 +205,8 @@ fn method_report_inventory_is_classified() {
     assert_eq!(mask_tiles, 40);
     assert_eq!(mask_coverage, 0.33);
     assert_eq!(regions_per_cam, vec![2, 3]);
+    assert_eq!(consolidate_mode, "auto", "routing policy is plan-derived");
+    assert_eq!(canvas_cams, 2);
     assert_eq!(replan_count, 1);
     assert_eq!(replan_warm_count, 1);
     assert_eq!(replan_carried_components, 2);

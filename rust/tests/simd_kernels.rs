@@ -81,6 +81,34 @@ fn sad_identity_on_random_planes_with_odd_strides() {
     }
 }
 
+/// Intra-activity scan kernels (the encoder's `mb_mean`/`mb_sad_to`
+/// mode-decision inputs): the dispatched path and the scalar reference
+/// must agree bit-for-bit over odd strides and odd macroblock offsets.
+#[test]
+fn intra_scan_identity_on_random_planes() {
+    use crossroi::codec::kernels;
+    let mut rng = Rng::new(0x1A7);
+    for (w, h) in [(37usize, 25usize), (48, 31), (320, 192)] {
+        let plane: Vec<f32> = (0..w * h).map(|_| rand_f32(&mut rng, 255.0)).collect();
+        for bx in [0usize, 5, w - 16] {
+            for by in [0usize, 3, h - 16] {
+                let mean = kernels::intra_mean_16x16(&plane, w, bx, by);
+                let mean_ref = kernels::intra_mean_16x16_scalar(&plane, w, bx, by);
+                assert_eq!(mean.to_bits(), mean_ref.to_bits(), "mean w={w} bx={bx} by={by}");
+                for target in [mean, 0.0, -17.25] {
+                    let a = kernels::intra_sad_16x16(&plane, w, bx, by, target);
+                    let b = kernels::intra_sad_16x16_scalar(&plane, w, bx, by, target);
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "sad w={w} bx={bx} by={by} target={target}"
+                    );
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn block_bits_identity_on_random_levels() {
     let mut rng = Rng::new(0xB17);

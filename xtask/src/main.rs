@@ -76,10 +76,15 @@ const ZERO_WALL_CLOCK_MANIFEST: &[&str] = &[
     "arena_pixel_reuses",
     "arena_grid_allocs",
     "arena_grid_reuses",
+    "arena_canvas_allocs",
+    "arena_canvas_reuses",
     "planner_epochs_computed",
     "planner_components_solved",
     "planner_max_concurrent",
     "planner_queue_wait_secs",
+    "canvas_count",
+    "canvas_fill_ratio",
+    "canvas_occupancy",
 ];
 
 /// Lines of sort-following-iteration tolerated by pass 1 (the common
